@@ -1,0 +1,79 @@
+//! End-to-end driver: exercises the FULL stack on a real (small) workload
+//! suite and reports every headline metric of the paper in one run —
+//! circuit layer (PJRT-loaded Pallas/JAX artifacts) -> timing tables ->
+//! cycle-accurate simulation -> energy/area models.
+//!
+//! This is the repo's "proof all layers compose" run (recorded in
+//! EXPERIMENTS.md):
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_paper_repro
+//! ```
+
+use chargecache::coordinator::experiments::{fig1, run_suite, ExperimentScale};
+use chargecache::energy::HcracCost;
+use chargecache::runtime::charge_model::timing_table_or_analytic;
+use chargecache::config::SystemConfig;
+
+fn main() {
+    let scale = ExperimentScale { insts_per_core: 150_000, warmup_cycles: 75_000, mixes: 6 };
+
+    // --- Circuit layer (L1/L2 via PJRT) ------------------------------
+    let (table, from_hlo) = timing_table_or_analytic(85.0, 1.25);
+    let (rcd, ras) = table.reduction_cycles(1e-3);
+    println!("== Circuit layer ({}) ==", if from_hlo { "AOT HLO via PJRT" } else { "analytic fallback" });
+    let (rcd_ns, ras_ns) = table.reduction_ns(1e-3);
+    println!("1 ms-old row: tRCD -{rcd_ns:.2} ns / tRAS -{ras_ns:.2} ns -> -{rcd}/-{ras} cycles");
+    println!("paper Sec. 6.2: -4.5 ns / -9.6 ns -> -4/-8 cycles\n");
+
+    // --- Fig. 1 -------------------------------------------------------
+    println!("== Fig. 1: RLTL ==");
+    for (ms, single, eight) in fig1(scale) {
+        if [0.125, 1.0, 8.0, 32.0].contains(&ms) {
+            println!("t={ms:>6} ms: single {:>5.1}%  eight {:>5.1}%", single * 100.0, eight * 100.0);
+        }
+    }
+    println!("paper: 83% / 89% at 1 ms\n");
+
+    // --- Fig. 4 + Fig. 5 ----------------------------------------------
+    println!("== Fig. 4/5: performance and energy ==");
+    let suite = run_suite(scale, true);
+    let rows_a = suite.fig4a();
+    let avg_a = |i: usize| {
+        rows_a.iter().map(|r| r.speedups[i].1 - 1.0).sum::<f64>() / rows_a.len() as f64
+    };
+    let max_a =
+        |i: usize| rows_a.iter().map(|r| r.speedups[i].1 - 1.0).fold(f64::MIN, f64::max);
+    println!(
+        "single-core: CC avg {:.1}% (paper 2.1%) max {:.1}% (paper 9.3%); NUAT avg {:.1}%; LL-DRAM avg {:.1}%",
+        avg_a(0) * 100.0, max_a(0) * 100.0, avg_a(1) * 100.0, avg_a(3) * 100.0
+    );
+    let rows_b = suite.fig4b();
+    let avg_b = |i: usize| {
+        rows_b.iter().map(|r| r.speedups[i].1 - 1.0).sum::<f64>() / rows_b.len() as f64
+    };
+    println!(
+        "eight-core : CC avg {:.1}% (paper 8.6%); NUAT {:.1}% (paper 2.5%); CC+NUAT {:.1}% (paper 9.6%); LL-DRAM {:.1}% (paper ~13.4%)",
+        avg_b(0) * 100.0, avg_b(1) * 100.0, avg_b(2) * 100.0, avg_b(3) * 100.0
+    );
+    let hit = rows_b.iter().map(|r| r.speedups[0].2).sum::<f64>() / rows_b.len() as f64;
+    println!("reduced-latency activations (8-core CC): {:.0}% (paper 67%)", hit * 100.0);
+
+    let fig5 = suite.fig5(true);
+    let cc_e: Vec<f64> = fig5.iter().map(|(_, pm)| pm[0].1).collect();
+    let avg_e = cc_e.iter().sum::<f64>() / cc_e.len() as f64;
+    let max_e = cc_e.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "DRAM energy (8-core CC): avg -{:.1}% max -{:.1}% (paper 7.9% / 14.1%)\n",
+        avg_e * 100.0,
+        max_e * 100.0
+    );
+
+    // --- Sec. 6.5 ------------------------------------------------------
+    println!("== Sec. 6.5: overhead ==");
+    let cost = HcracCost::of(&SystemConfig::eight_core(), 170e6);
+    println!(
+        "storage {} B (paper 5376 B), area {:.3} mm^2 (paper 0.022), power {:.3} mW (paper 0.149)",
+        cost.storage_bytes, cost.area_mm2, cost.total_mw()
+    );
+}

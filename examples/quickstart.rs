@@ -1,0 +1,49 @@
+//! Quickstart: simulate one workload under Baseline vs ChargeCache and
+//! print the headline comparison.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use chargecache::config::SystemConfig;
+use chargecache::latency::MechanismKind;
+use chargecache::sim::System;
+use chargecache::trace::Profile;
+
+fn main() {
+    // The paper's single-core configuration (Table 1), scaled-down horizon.
+    let mut cfg = SystemConfig::single_core();
+    cfg.insts_per_core = 300_000;
+    cfg.warmup_cpu_cycles = 150_000;
+
+    let workload = Profile::by_name("tpcc64").expect("known workload");
+    println!("workload: {} (working set {} MiB)", workload.name, workload.ws_bytes() >> 20);
+
+    let base = System::new(&cfg, MechanismKind::Baseline, &[workload]).run();
+    let cc = System::new(&cfg, MechanismKind::ChargeCache, &[workload]).run();
+
+    println!("\n              {:>12} {:>12}", "Baseline", "ChargeCache");
+    println!("IPC           {:>12.4} {:>12.4}", base.ipc(), cc.ipc());
+    println!("cycles        {:>12} {:>12}", base.cpu_cycles, cc.cpu_cycles);
+    println!("activations   {:>12} {:>12}", base.acts(), cc.acts());
+    println!(
+        "reduced ACTs  {:>11.1}% {:>11.1}%",
+        base.reduced_act_fraction() * 100.0,
+        cc.reduced_act_fraction() * 100.0
+    );
+    println!(
+        "read latency  {:>12.1} {:>12.1}  (bus cycles)",
+        base.avg_read_latency(),
+        cc.avg_read_latency()
+    );
+    println!(
+        "DRAM energy   {:>11.1}uJ {:>11.1}uJ",
+        base.energy.total_nj() / 1000.0,
+        cc.energy.total_nj() / 1000.0
+    );
+    println!("\nspeedup: {:.2}%", (cc.ipc() / base.ipc() - 1.0) * 100.0);
+    println!(
+        "1ms-RLTL: {:.0}% of activations re-open a recently-precharged row",
+        cc.rltl_at_ms(1.0) * 100.0
+    );
+}

@@ -1,0 +1,53 @@
+//! Row-Level Temporal Locality analysis (the paper's Sec. 3 observation):
+//! measure t-RLTL per workload and show how bank conflicts create it.
+//!
+//! ```sh
+//! cargo run --release --example rltl_analysis
+//! ```
+
+use chargecache::analysis::rltl::RLTL_INTERVALS_MS;
+use chargecache::config::SystemConfig;
+use chargecache::coordinator::parallel_map;
+use chargecache::latency::MechanismKind;
+use chargecache::sim::System;
+use chargecache::trace::PROFILES;
+
+fn main() {
+    let mut cfg = SystemConfig::single_core();
+    cfg.insts_per_core = 200_000;
+    cfg.warmup_cpu_cycles = 100_000;
+
+    println!("t-RLTL per workload (fraction of activations that re-open a");
+    println!("row precharged less than t ago) — paper Fig. 1 companion\n");
+
+    let results = parallel_map(PROFILES.len(), |i| {
+        let r = System::new(&cfg, MechanismKind::Baseline, &[&PROFILES[i]]).run();
+        (PROFILES[i].name, r)
+    });
+
+    print!("{:>12} {:>8}", "workload", "RMPKC");
+    for ms in [0.125, 1.0, 8.0, 32.0] {
+        print!(" {:>8}", format!("{ms}ms"));
+    }
+    println!("  reuse-dist");
+    for (name, r) in &results {
+        print!("{:>12} {:>8.2}", name, r.rmpkc());
+        for ms in [0.125, 1.0, 8.0, 32.0] {
+            print!(" {:>7.1}%", r.rltl_at_ms(ms) * 100.0);
+        }
+        println!();
+    }
+
+    // Aggregate like the paper: activation-weighted average.
+    let acts: u64 = results.iter().map(|(_, r)| r.acts()).sum();
+    println!("\nactivation-weighted average RLTL:");
+    for (i, &ms) in RLTL_INTERVALS_MS.iter().enumerate() {
+        let avg: f64 = results
+            .iter()
+            .map(|(_, r)| r.rltl[i] * r.acts() as f64)
+            .sum::<f64>()
+            / acts.max(1) as f64;
+        println!("  t = {ms:>7} ms : {:>5.1}%", avg * 100.0);
+    }
+    println!("\npaper: 83% at 1 ms (single-core average)");
+}

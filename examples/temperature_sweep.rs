@@ -1,0 +1,28 @@
+//! Temperature sensitivity (paper Sec. 8.3): ChargeCache is calibrated at
+//! the worst-case 85 C, so its grants are safe at any temperature — and
+//! colder devices leak slower, so the circuit layer *allows* bigger
+//! reductions at low temperature (the AL-DRAM comparison point).
+//!
+//! ```sh
+//! cargo run --release --example temperature_sweep
+//! ```
+
+use chargecache::runtime::charge_model::timing_table_or_analytic;
+
+fn main() {
+    println!("Legal tRCD/tRAS reduction vs temperature (from the circuit");
+    println!("layer: JAX/Pallas AOT artifacts via PJRT when built)\n");
+    println!("temp    age=0.125ms      age=1ms        age=8ms        age=64ms");
+    for temp in [25.0, 45.0, 55.0, 65.0, 75.0, 85.0] {
+        let (table, from_hlo) = timing_table_or_analytic(temp, 1.25);
+        print!("{temp:>4}C");
+        for age in [0.125e-3, 1e-3, 8e-3, 64e-3] {
+            let (rcd, ras) = table.reduction_cycles(age);
+            print!("   [-{rcd:>2}/-{ras:>2}] cyc");
+        }
+        println!("{}", if from_hlo { "" } else { "  (analytic)" });
+    }
+    println!("\nreading: at the paper's 1 ms duration the grant is -4/-8 at");
+    println!("85 C — and remains valid (or grows) at every lower temperature,");
+    println!("unlike AL-DRAM which loses its margin as devices heat up.");
+}

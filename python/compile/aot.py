@@ -1,0 +1,118 @@
+"""AOT bridge: lower the L2 charge model to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and executes it on the PJRT
+CPU client.  HLO text (NOT ``lowered.compile()`` / serialized protos) is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Also emits ``charge_meta.json`` describing shapes/constants so the Rust
+side never hardcodes them.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import circuit as ck
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+ENTRY_POINTS = {
+    # name -> (fn, arg shapes)
+    "decay_curve": (
+        model.decay_curve,
+        [
+            jax.ShapeDtypeStruct((ck.TABLE_N,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        ],
+    ),
+    "latency_table": (
+        model.latency_table,
+        [
+            jax.ShapeDtypeStruct((ck.TABLE_N,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        ],
+    ),
+    "bitline_sweep": (
+        model.bitline_sweep,
+        [jax.ShapeDtypeStruct((ck.TRAJ_BATCH,), jnp.float32)],
+    ),
+    "sense_latency": (
+        model.sense_latency,
+        [jax.ShapeDtypeStruct((ck.LATENCY_BATCH,), jnp.float32)],
+    ),
+}
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, (fn, specs) in ENTRY_POINTS.items():
+        text = _lower(fn, *specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "vdd": ck.VDD,
+        "vbl_pre": ck.VBL_PRE,
+        "v_ready": ck.V_READY,
+        "v_restore": ck.V_RESTORE,
+        "cs_ratio": ck.CS_RATIO,
+        "a_per_ns": ck.A_PER_NS,
+        "tau_leak_ms": ck.TAU_LEAK_MS,
+        "t_cs_ns": ck.T_CS_NS,
+        "tau_r0_ns": ck.TAU_R0_NS,
+        "beta_restore": ck.BETA_RESTORE,
+        "t_cal_celsius": ck.T_CAL_CELSIUS,
+        "t_refresh_ms": ck.T_REFRESH_MS,
+        "dt_ns": ck.DT_NS,
+        "n_steps": ck.N_STEPS,
+        "traj_stride": ck.TRAJ_STRIDE,
+        "traj_samples": ck.TRAJ_SAMPLES,
+        "table_n": ck.TABLE_N,
+        "traj_batch": ck.TRAJ_BATCH,
+        "latency_batch": ck.LATENCY_BATCH,
+        "t_ready_full_ns": ck.T_READY_FULL_NS,
+        "t_ready_worst_ns": ck.T_READY_WORST_NS,
+        "entry_points": sorted(ENTRY_POINTS.keys()),
+    }
+    meta_path = os.path.join(out_dir, "charge_meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="output path marker; artifacts go to its directory")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    build(out_dir)
+    # Touch the marker the Makefile tracks (the set of real artifacts is
+    # ENTRY_POINTS — the marker exists only for make's dependency graph).
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write("# see *.hlo.txt entry points; marker for make\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""L1 Pallas kernels: batched transient simulation of DRAM sensing.
+
+These kernels are the repo's replacement for the paper's SPICE simulations.
+Each lane of the batch integrates one (initial cell voltage) trajectory of
+the coupled bitline / cell system described in `circuit.py`:
+
+    charge share -> dead time -> regenerative sensing + cell restore
+
+Two kernels:
+
+  * ``sense_latency``  — returns, per lane, the time for the bitline to reach
+    the ready-to-access voltage (tRCD proxy) and the time for the cell to be
+    restored (tRAS proxy).  First-crossing times are computed with the
+    *count-below-threshold* trick (trajectories are monotone after sensing
+    starts), which keeps the kernel free of data-dependent control flow.
+  * ``trajectory``     — returns the sub-sampled bitline voltage trajectory
+    (Fig. 3 of the paper).
+
+Pallas notes: ``interpret=True`` is mandatory here — the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness (not TPU wallclock) is
+what the AOT artifacts carry.  The grid tiles the batch so each block's
+state (v_bl, v_cell, two crossing counters) lives in VMEM; the time loop is
+a ``fori_loop`` with *no* HBM traffic per step.  On a real TPU this kernel
+is VPU-bound (element-wise FMA chain); see DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import circuit as ck
+
+# Block size for the batch dimension. All AOT batch sizes here are small
+# multiples of 8; 64 keeps a whole entry-point batch in one block while
+# still exercising the grid path for larger test batches.
+BLOCK_B = 64
+
+
+def _step_fields(v_bl, v_c, tau_r, sense_on):
+    """One Euler step of the sensing + restore dynamics. Returns deltas."""
+    x = v_bl - ck.VBL_PRE
+    xm = ck.VDD / 2.0
+    dx = ck.A_PER_NS * x * (1.0 - (x / xm) ** 2) * sense_on
+    dv_c = (v_bl - v_c) / tau_r * sense_on
+    return dx * ck.DT_NS, dv_c * ck.DT_NS
+
+
+def _sense_latency_kernel(v0_ref, t_ready_ref, t_restore_ref):
+    """Per-lane first-crossing times of V_READY (bitline) / V_RESTORE (cell)."""
+    v_cell0 = v0_ref[...]
+    # Instantaneous charge sharing onto the half-VDD bitline.
+    v_bl0 = ck.VBL_PRE + (v_cell0 - ck.VBL_PRE) * ck.CS_RATIO
+    # The cell equalizes with the bitline during charge sharing.
+    v_c0 = v_bl0
+    tau_r = ck.tau_r_ns(v_cell0, ck.BETA_RESTORE)
+
+    dead_steps = jnp.float32(ck.T_CS_NS / ck.DT_NS)
+
+    def body(i, carry):
+        v_bl, v_c, below_ready, below_restore = carry
+        sense_on = (jnp.float32(i) >= dead_steps).astype(jnp.float32)
+        d_bl, d_c = _step_fields(v_bl, v_c, tau_r, sense_on)
+        v_bl = v_bl + d_bl
+        v_c = v_c + d_c
+        below_ready = below_ready + (v_bl < ck.V_READY).astype(jnp.float32)
+        below_restore = below_restore + (v_c < ck.V_RESTORE).astype(jnp.float32)
+        return v_bl, v_c, below_ready, below_restore
+
+    zeros = jnp.zeros_like(v_cell0)
+    _, _, below_ready, below_restore = jax.lax.fori_loop(
+        0, ck.N_STEPS, body, (v_bl0, v_c0, zeros, zeros)
+    )
+    # Monotone trajectories: #steps below threshold == first-crossing index.
+    t_ready_ref[...] = below_ready * ck.DT_NS
+    t_restore_ref[...] = below_restore * ck.DT_NS
+
+
+def _trajectory_kernel(v0_ref, traj_ref):
+    """Sub-sampled bitline voltage trajectory per lane (Fig. 3)."""
+    v_cell0 = v0_ref[...]
+    v_bl0 = ck.VBL_PRE + (v_cell0 - ck.VBL_PRE) * ck.CS_RATIO
+    v_c0 = v_bl0
+    tau_r = ck.tau_r_ns(v_cell0, ck.BETA_RESTORE)
+    dead_steps = jnp.float32(ck.T_CS_NS / ck.DT_NS)
+
+    def body(i, carry):
+        v_bl, v_c = carry
+        sense_on = (jnp.float32(i) >= dead_steps).astype(jnp.float32)
+        d_bl, d_c = _step_fields(v_bl, v_c, tau_r, sense_on)
+        v_bl = v_bl + d_bl
+        v_c = v_c + d_c
+
+        def store(_):
+            pl.store(
+                traj_ref,
+                (slice(None), pl.dslice(i // ck.TRAJ_STRIDE, 1)),
+                v_bl[:, None],
+            )
+            return 0
+
+        # Store every TRAJ_STRIDE-th sample.
+        jax.lax.cond(i % ck.TRAJ_STRIDE == 0, store, lambda _: 0, 0)
+        return v_bl, v_c
+
+    jax.lax.fori_loop(0, ck.N_STEPS, body, (v_bl0, v_c0))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sense_latency(v_cell0):
+    """Pallas sense-latency sweep.
+
+    Args:
+      v_cell0: f32[B] initial cell voltages (B a multiple of BLOCK_B or < it).
+    Returns:
+      (t_ready_ns, t_restore_ns): two f32[B] arrays.
+    """
+    b = v_cell0.shape[0]
+    block = min(BLOCK_B, b)
+    grid = (b // block,) if b % block == 0 else ((b + block - 1) // block,)
+    return pl.pallas_call(
+        _sense_latency_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(v_cell0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def trajectory(v_cell0):
+    """Pallas bitline-trajectory sweep.
+
+    Args:
+      v_cell0: f32[B] initial cell voltages.
+    Returns:
+      f32[B, TRAJ_SAMPLES] bitline voltage, sampled every TRAJ_STRIDE steps.
+    """
+    b = v_cell0.shape[0]
+    return pl.pallas_call(
+        _trajectory_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b, ck.TRAJ_SAMPLES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ck.TRAJ_SAMPLES), jnp.float32),
+        interpret=True,
+    )(v_cell0)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the Pallas bitline kernels.
+
+Implements the *same* discretization (explicit Euler, same dt / step count /
+threshold-counting) without Pallas, plus the closed-form sensing-time
+solution used for calibration. pytest checks kernel-vs-ref allclose; the
+closed form bounds the discretization error independently.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import circuit as ck
+
+
+def _integrate(v_cell0):
+    """Euler-integrate the sensing dynamics; returns full state history.
+
+    Args:
+      v_cell0: f32[B] initial cell voltages.
+    Returns:
+      (v_bl_hist, v_c_hist): f32[N_STEPS, B] — state *after* each step.
+    """
+    v_bl0 = ck.VBL_PRE + (v_cell0 - ck.VBL_PRE) * ck.CS_RATIO
+    v_c0 = v_bl0
+    tau_r = ck.tau_r_ns(v_cell0, ck.BETA_RESTORE)
+    dead_steps = ck.T_CS_NS / ck.DT_NS
+    xm = ck.VDD / 2.0
+
+    def step(carry, i):
+        v_bl, v_c = carry
+        sense_on = (i >= dead_steps).astype(jnp.float32)
+        x = v_bl - ck.VBL_PRE
+        dx = ck.A_PER_NS * x * (1.0 - (x / xm) ** 2) * sense_on
+        dv_c = (v_bl - v_c) / tau_r * sense_on
+        v_bl = v_bl + dx * ck.DT_NS
+        v_c = v_c + dv_c * ck.DT_NS
+        return (v_bl, v_c), (v_bl, v_c)
+
+    _, (bl_hist, c_hist) = jax.lax.scan(
+        step, (v_bl0, v_c0), jnp.arange(ck.N_STEPS, dtype=jnp.float32)
+    )
+    return bl_hist, c_hist
+
+
+def sense_latency(v_cell0):
+    """Reference first-crossing times; mirrors the Pallas kernel exactly."""
+    bl_hist, c_hist = _integrate(v_cell0)
+    t_ready = jnp.sum((bl_hist < ck.V_READY).astype(jnp.float32), axis=0) * ck.DT_NS
+    t_restore = (
+        jnp.sum((c_hist < ck.V_RESTORE).astype(jnp.float32), axis=0) * ck.DT_NS
+    )
+    return t_ready, t_restore
+
+
+def trajectory(v_cell0):
+    """Reference sub-sampled bitline trajectory; mirrors the Pallas kernel.
+
+    The kernel stores the post-step state of step i at sample slot i/STRIDE
+    (for i % STRIDE == 0), so sample j == history entry at step j*STRIDE.
+    """
+    bl_hist, _ = _integrate(v_cell0)
+    idx = jnp.arange(ck.TRAJ_SAMPLES) * ck.TRAJ_STRIDE
+    return bl_hist[idx, :].T

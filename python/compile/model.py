@@ -1,0 +1,67 @@
+"""L2 — JAX charge model for ChargeCache.
+
+Composes the L1 Pallas sensing kernels with the cell-leakage model into the
+three computations the Rust architecture layer consumes (AOT-lowered to HLO
+text by ``aot.py``; Python never runs at simulation time):
+
+  * ``decay_curve(t_ret_s, temp_c)``   — cell voltage after leaking.
+  * ``latency_table(t_ret_s, temp_c)`` — per retention time: achievable
+    tRCD / tRAS *reduction* in ns relative to the worst-case (refresh-window)
+    timing the DRAM standard is provisioned for.  The Rust controller rounds
+    these to DRAM bus cycles to obtain the ChargeCache timing parameters
+    (paper: -4.5 ns -> -4 cycles tRCD, -9.6 ns -> -8 cycles tRAS).
+  * ``bitline_sweep(v_cell0)``         — Fig. 3 trajectory family.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bitline, circuit as ck
+
+
+def v_cell_after(t_ret_s, temp_c):
+    """Cell voltage after leaking for ``t_ret_s`` seconds at ``temp_c`` [C].
+
+    Exponential decay toward VDD/2 with the retention time constant halving
+    per +10 C above the 85 C calibration point.
+    """
+    tau_s = (
+        ck.TAU_LEAK_MS
+        * 1e-3
+        * jnp.exp2((ck.T_CAL_CELSIUS - temp_c) / 10.0)
+    )
+    return ck.VBL_PRE + (ck.VDD - ck.VBL_PRE) * jnp.exp(-t_ret_s / tau_s)
+
+
+def decay_curve(t_ret_s, temp_c):
+    """Entry point: f32[N], f32[] -> f32[N] cell voltage."""
+    return (v_cell_after(t_ret_s, temp_c),)
+
+
+def latency_table(t_ret_s, temp_c):
+    """Entry point: f32[N], f32[] -> f32[N, 2] (tRCD, tRAS) reduction [ns].
+
+    Reduction is measured against the worst case the standard provisions
+    for: a cell that decayed for the full refresh window at 85 C. Negative
+    values are clamped to zero (a row older than the refresh window never
+    happens; refresh replenishes it).
+    """
+    v = v_cell_after(t_ret_s, temp_c)
+    # Worst-case (standard-provisioned) cell, appended to the same batch so
+    # the whole table is one kernel launch.
+    v_worst = v_cell_after(jnp.float32(ck.T_REFRESH_MS * 1e-3), jnp.float32(ck.T_CAL_CELSIUS))
+    batch = jnp.concatenate([v, v_worst[None]])
+    t_ready, t_restore = bitline.sense_latency(batch)
+    red_rcd = jnp.maximum(t_ready[-1] - t_ready[:-1], 0.0)
+    red_ras = jnp.maximum(t_restore[-1] - t_restore[:-1], 0.0)
+    return (jnp.stack([red_rcd, red_ras], axis=-1),)
+
+
+def bitline_sweep(v_cell0):
+    """Entry point: f32[B] -> f32[B, TRAJ_SAMPLES] bitline voltage (Fig. 3)."""
+    return (bitline.trajectory(v_cell0),)
+
+
+def sense_latency(v_cell0):
+    """Entry point: f32[B] -> (f32[B], f32[B]) raw (t_ready, t_restore) ns."""
+    t_ready, t_restore = bitline.sense_latency(v_cell0)
+    return (t_ready, t_restore)

@@ -1,0 +1,108 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the circuit layer: the Pallas
+kernels must match the reference discretization bit-for-bit-ish (same Euler
+scheme), and both must respect the closed-form solution of the sensing
+phase and the paper's calibration endpoints.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitline, circuit as ck, ref
+
+# Voltage domain with sensing still functional (positive differential).
+V_LO = ck.VBL_PRE + 0.05
+V_HI = ck.VDD
+
+
+def _voltages(n, lo=V_LO, hi=V_HI, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, n), jnp.float32)
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("n", [1, 4, 8, 64, 128, 192])
+    def test_sense_latency_matches_ref(self, n):
+        v = _voltages(n, seed=n)
+        tr_k, ts_k = bitline.sense_latency(v)
+        tr_r, ts_r = ref.sense_latency(v)
+        np.testing.assert_allclose(tr_k, tr_r, atol=1e-4)
+        np.testing.assert_allclose(ts_k, ts_r, atol=1e-4)
+
+    @pytest.mark.parametrize("n", [1, 4, 8])
+    def test_trajectory_matches_ref(self, n):
+        v = _voltages(n, seed=100 + n)
+        np.testing.assert_allclose(
+            bitline.trajectory(v), ref.trajectory(v), atol=1e-5
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.lists(
+            st.floats(min_value=float(V_LO), max_value=float(V_HI)),
+            min_size=1,
+            max_size=96,
+        )
+    )
+    def test_sense_latency_matches_ref_hypothesis(self, vs):
+        v = jnp.asarray(vs, jnp.float32)
+        tr_k, ts_k = bitline.sense_latency(v)
+        tr_r, ts_r = ref.sense_latency(v)
+        np.testing.assert_allclose(tr_k, tr_r, atol=1e-4)
+        np.testing.assert_allclose(ts_k, ts_r, atol=1e-4)
+
+
+class TestPhysics:
+    def test_calibration_endpoints(self):
+        """The two published Fig. 3 endpoints and both Sec. 6.2 deltas."""
+        v = jnp.asarray(
+            [ck.VDD, ck.v_cell_after(ck.T_REFRESH_MS * 1e-3)], jnp.float32
+        )
+        t_ready, t_restore = bitline.sense_latency(v)
+        assert abs(float(t_ready[0]) - ck.T_READY_FULL_NS) < 0.05
+        assert abs(float(t_ready[1]) - ck.T_READY_WORST_NS) < 0.05
+        # tRCD reduction 4.5 ns, tRAS reduction 9.6 ns.
+        assert abs(float(t_ready[1] - t_ready[0]) - 4.5) < 0.1
+        assert abs(float(t_restore[1] - t_restore[0]) - ck.T_RESTORE_DELTA_NS) < 0.1
+
+    def test_first_command_44pct_faster(self):
+        """Paper Sec. 3: first command ~44% faster to a highly-charged row
+        ((14.5 - 10) / 10 = 45% earlier issue relative to charged case)."""
+        v = jnp.asarray(
+            [ck.VDD, ck.v_cell_after(ck.T_REFRESH_MS * 1e-3)], jnp.float32
+        )
+        t_ready, _ = bitline.sense_latency(v)
+        speedup = float(t_ready[1] - t_ready[0]) / float(t_ready[0])
+        assert 0.40 < speedup < 0.50
+
+    def test_t_ready_monotone_in_voltage(self):
+        """More charge -> faster sensing, strictly (up to grid quantization)."""
+        v = jnp.linspace(V_LO, V_HI, 64).astype(jnp.float32)
+        t_ready, t_restore = bitline.sense_latency(v)
+        assert np.all(np.diff(np.asarray(t_ready)) <= 0.0)
+        assert np.all(np.diff(np.asarray(t_restore)) <= 0.0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(min_value=float(V_LO), max_value=float(V_HI) - 1e-3))
+    def test_matches_analytic_solution(self, v0):
+        """Euler first-crossing within a few grid steps of the closed form."""
+        v0 = float(jnp.float32(v0))
+        t_k, _ = bitline.sense_latency(jnp.asarray([v0], jnp.float32))
+        t_analytic = ck.analytic_t_ready_ns(v0)
+        assert abs(float(t_k[0]) - t_analytic) < max(3 * ck.DT_NS, 5e-3 * t_analytic)
+
+    def test_trajectory_saturates_at_vdd(self):
+        v = _voltages(8, lo=1.0, seed=7)
+        traj = np.asarray(bitline.trajectory(v))
+        assert traj.shape == (8, ck.TRAJ_SAMPLES)
+        # Bitline never exceeds VDD and ends near VDD for charged cells.
+        assert traj.max() <= ck.VDD + 1e-3
+        assert np.all(traj[:, -1] > 0.98 * ck.VDD)
+
+    def test_restore_slower_than_ready(self):
+        v = _voltages(32, seed=3)
+        t_ready, t_restore = bitline.sense_latency(v)
+        assert np.all(np.asarray(t_restore) > np.asarray(t_ready))

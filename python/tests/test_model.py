@@ -1,0 +1,102 @@
+"""L2 correctness: charge model shapes, leakage physics, latency table."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import circuit as ck
+
+
+class TestDecay:
+    def test_decay_at_zero_is_full(self):
+        (v,) = model.decay_curve(jnp.zeros(4, jnp.float32), jnp.float32(85.0))
+        np.testing.assert_allclose(v, ck.VDD, rtol=1e-6)
+
+    def test_decay_monotone_in_time(self):
+        t = jnp.logspace(-5, 0, ck.TABLE_N).astype(jnp.float32)
+        (v,) = model.decay_curve(t, jnp.float32(85.0))
+        assert np.all(np.diff(np.asarray(v)) < 0.0)
+
+    def test_hotter_leaks_faster(self):
+        t = jnp.full((4,), 0.01, jnp.float32)
+        (v85,) = model.decay_curve(t, jnp.float32(85.0))
+        (v55,) = model.decay_curve(t, jnp.float32(55.0))
+        assert np.all(np.asarray(v55) > np.asarray(v85))
+
+    def test_leak_rate_doubles_per_10c(self):
+        """tau(T) halves per +10 C: decay at (t, T) == decay at (2t, T-10)."""
+        t = jnp.asarray([0.004, 0.016], jnp.float32)
+        (a,) = model.decay_curve(t, jnp.float32(75.0))
+        (b,) = model.decay_curve(2 * t, jnp.float32(65.0))
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.floats(min_value=1e-5, max_value=1.0),
+        st.floats(min_value=25.0, max_value=95.0),
+    )
+    def test_matches_scalar_oracle(self, t_ret, temp):
+        (v,) = model.decay_curve(
+            jnp.full((2,), t_ret, jnp.float32), jnp.float32(temp)
+        )
+        expect = ck.v_cell_after(t_ret, temp)
+        np.testing.assert_allclose(np.asarray(v), expect, rtol=1e-4)
+
+
+class TestLatencyTable:
+    def _table(self, temp=85.0):
+        t = jnp.logspace(-5, jnp.log10(0.064), ck.TABLE_N).astype(jnp.float32)
+        (tab,) = model.latency_table(t, jnp.float32(temp))
+        return np.asarray(t), np.asarray(tab)
+
+    def test_shape(self):
+        _, tab = self._table()
+        assert tab.shape == (ck.TABLE_N, 2)
+
+    def test_reductions_shrink_with_age(self):
+        """Older rows leak more -> smaller legal reduction (monotone)."""
+        _, tab = self._table()
+        assert np.all(np.diff(tab[:, 0]) <= 1e-4)
+        assert np.all(np.diff(tab[:, 1]) <= 1e-4)
+
+    def test_paper_endpoints(self):
+        """Fresh row: ~4.5 ns tRCD / ~9.6 ns tRAS; refresh-window-old: ~0."""
+        _, tab = self._table()
+        assert abs(tab[0, 0] - 4.5) < 0.1
+        assert abs(tab[0, 1] - 9.6) < 0.15
+        assert tab[-1, 0] < 0.1 and tab[-1, 1] < 0.2
+
+    def test_one_ms_duration_grants_4_and_8_cycles(self):
+        """The Table 1 operating point: at a 1 ms caching duration the
+        reduction rounds to 4 tRCD / 8 tRAS cycles at 800 MHz (1.25 ns)."""
+        t, tab = self._table()
+        i = int(np.searchsorted(t, 1e-3))
+        rcd_cyc = round(float(tab[i, 0]) / 1.25)
+        ras_cyc = round(float(tab[i, 1]) / 1.25)
+        assert rcd_cyc == 4, f"got {tab[i, 0]} ns -> {rcd_cyc} cycles"
+        assert ras_cyc == 8, f"got {tab[i, 1]} ns -> {ras_cyc} cycles"
+
+    def test_nonnegative(self):
+        _, tab = self._table()
+        assert np.all(tab >= 0.0)
+
+    def test_cold_temperature_keeps_reductions(self):
+        """At lower temperature rows leak slower, so reductions at a given
+        age are at least as large as at 85 C (paper Sec. 8.3.3)."""
+        _, hot = self._table(85.0)
+        _, cold = self._table(45.0)
+        assert np.all(cold + 1e-4 >= hot)
+
+
+class TestSweep:
+    def test_bitline_sweep_shape_and_order(self):
+        v = jnp.linspace(ck.VBL_PRE + 0.1, ck.VDD, ck.TRAJ_BATCH).astype(jnp.float32)
+        (traj,) = model.bitline_sweep(v)
+        traj = np.asarray(traj)
+        assert traj.shape == (ck.TRAJ_BATCH, ck.TRAJ_SAMPLES)
+        # Higher initial charge -> earlier arrival at V_READY everywhere
+        # after sensing starts: crossing index must be non-increasing in v0.
+        cross = (traj < ck.V_READY).sum(axis=1)
+        assert np.all(np.diff(cross) <= 0)

@@ -1,0 +1,27 @@
+//! Fig. 1 bench: regenerate the average t-RLTL series (single- and
+//! eight-core) and time the analysis pipeline.
+
+#[path = "harness.rs"]
+mod harness;
+
+use chargecache::coordinator::experiments::{fig1, ExperimentScale};
+
+fn main() {
+    let scale = if harness::is_quick() {
+        ExperimentScale { insts_per_core: 20_000, warmup_cycles: 8_000, mixes: 2 }
+    } else {
+        ExperimentScale { insts_per_core: 120_000, warmup_cycles: 60_000, mixes: 8 }
+    };
+
+    let mut rows = Vec::new();
+    let r = harness::bench("fig1/rltl_suite", 0, 1, || {
+        rows = fig1(scale);
+    });
+    r.report();
+
+    println!("\nFig. 1 — average t-RLTL (paper: 83%/89% at 1 ms)");
+    println!("{:>8} {:>9} {:>9}", "t(ms)", "1-core", "8-core");
+    for (ms, s, e) in &rows {
+        println!("{:>8} {:>8.1}% {:>8.1}%", ms, s * 100.0, e * 100.0);
+    }
+}

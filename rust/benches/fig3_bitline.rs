@@ -1,0 +1,69 @@
+//! Fig. 3 bench: the circuit layer. Times both paths — the pure-Rust
+//! analytic port and (when artifacts exist) the AOT HLO executed via
+//! PJRT — and regenerates the Fig. 3 ready-time family + Sec. 6.2 deltas.
+
+#[path = "harness.rs"]
+mod harness;
+
+use chargecache::latency::timing_table::{circuit, TimingTable};
+use chargecache::runtime::{ChargeModelRuntime, Runtime};
+
+fn main() {
+    // Rust analytic path.
+    let r = harness::bench("fig3/analytic_table_64pt", 1, 5, || {
+        TimingTable::analytic(64, 85.0, 1.25)
+    });
+    r.report();
+
+    let (a, tau) = circuit::calibrate();
+    let beta = circuit::calibrate_restore(a, tau);
+    let r = harness::bench("fig3/sense_latency_single_lane", 2, 10, || {
+        circuit::sense_latency(1.45, a, beta)
+    });
+    r.report_throughput(circuit::N_STEPS as f64, "euler-steps");
+
+    // PJRT path (the production artifact).
+    match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) if rt.artifacts_present() => {
+            let cm = ChargeModelRuntime::load(&rt).expect("artifacts load");
+            let r = harness::bench("fig3/hlo_latency_table_via_pjrt", 1, 5, || {
+                cm.timing_table(85.0, 1.25).unwrap()
+            });
+            r.report();
+
+            let b = cm.meta.get_usize("traj_batch").unwrap();
+            let vdd = cm.meta.get("vdd").unwrap();
+            let tau_ms = cm.meta.get("tau_leak_ms").unwrap();
+            let ages = [0.0f64, 1.0, 8.0, 32.0, 64.0];
+            let mut v0: Vec<f32> = ages
+                .iter()
+                .map(|&ms| (vdd / 2.0 + vdd / 2.0 * (-ms / tau_ms).exp()) as f32)
+                .collect();
+            v0.resize(b, v0[0]);
+            let mut sweep = (0usize, Vec::new());
+            let r = harness::bench("fig3/hlo_bitline_sweep", 1, 5, || {
+                sweep = cm.bitline_sweep(&v0).unwrap();
+            });
+            r.report();
+
+            let (samples, data) = sweep;
+            let v_ready = cm.meta.get("v_ready").unwrap() as f32;
+            let dt = cm.meta.get("dt_ns").unwrap() * cm.meta.get("traj_stride").unwrap();
+            println!("\nFig. 3 — time to ready-to-access voltage (PJRT):");
+            for (lane, &ms) in ages.iter().enumerate() {
+                let cross = data[lane * samples..(lane + 1) * samples]
+                    .iter()
+                    .position(|&v| v >= v_ready)
+                    .unwrap_or(samples);
+                println!("  age {ms:>5} ms -> t_ready {:>6.2} ns", cross as f64 * dt);
+            }
+            println!("paper: 10 ns (fresh) .. 14.5 ns (64 ms old)");
+        }
+        _ => println!("(artifacts not built; PJRT benches skipped — run `make artifacts`)"),
+    }
+
+    // Sec. 6.2 deltas from the analytic table.
+    let table = TimingTable::analytic(64, 85.0, 1.25);
+    let (rcd_ns, ras_ns) = table.reduction_ns(1e-3);
+    println!("\nSec. 6.2 @1ms: tRCD -{rcd_ns:.2} ns, tRAS -{ras_ns:.2} ns (paper 4.5/9.6)");
+}

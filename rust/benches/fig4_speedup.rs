@@ -1,0 +1,50 @@
+//! Fig. 4 bench: regenerate the speedup comparison (ChargeCache / NUAT /
+//! CC+NUAT / LL-DRAM) for single-core and eight-core workloads.
+
+#[path = "harness.rs"]
+mod harness;
+
+use chargecache::coordinator::experiments::{run_suite, ExperimentScale, SuiteResults};
+
+fn main() {
+    let scale = if harness::is_quick() {
+        ExperimentScale { insts_per_core: 15_000, warmup_cycles: 6_000, mixes: 2 }
+    } else {
+        ExperimentScale { insts_per_core: 100_000, warmup_cycles: 50_000, mixes: 8 }
+    };
+
+    let mut suite: Option<SuiteResults> = None;
+    let r = harness::bench("fig4/full_suite", 0, 1, || {
+        suite = Some(run_suite(scale, true));
+    });
+    r.report();
+    let suite = suite.unwrap();
+
+    println!("\nFig. 4a — single-core speedup (sorted by RMPKC):");
+    println!("{:>12} {:>8} {:>7} {:>7} {:>8} {:>8}", "workload", "RMPKC", "CC", "NUAT", "CC+NUAT", "LL-DRAM");
+    for row in suite.fig4a() {
+        print!("{:>12} {:>8.2}", row.workload, row.rmpkc);
+        for (_, s, _) in &row.speedups {
+            print!(" {:>6.2}%", (s - 1.0) * 100.0);
+        }
+        println!();
+    }
+
+    println!("\nFig. 4b — eight-core weighted speedup:");
+    for row in suite.fig4b() {
+        print!("{:>12} {:>8.2}", row.workload, row.rmpkc);
+        for (_, s, _) in &row.speedups {
+            print!(" {:>6.2}%", (s - 1.0) * 100.0);
+        }
+        println!();
+    }
+
+    let rows = suite.fig4b();
+    let avg = |i: usize| {
+        rows.iter().map(|r| r.speedups[i].1 - 1.0).sum::<f64>() / rows.len() as f64 * 100.0
+    };
+    println!(
+        "\n8-core averages: CC {:.1}% (paper 8.6) NUAT {:.1}% (2.5) CC+NUAT {:.1}% (9.6) LL {:.1}% (13.4)",
+        avg(0), avg(1), avg(2), avg(3)
+    );
+}

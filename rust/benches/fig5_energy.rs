@@ -1,0 +1,34 @@
+//! Fig. 5 bench: regenerate the DRAM energy-reduction comparison.
+
+#[path = "harness.rs"]
+mod harness;
+
+use chargecache::coordinator::experiments::{run_suite, ExperimentScale, SuiteResults};
+
+fn main() {
+    let scale = if harness::is_quick() {
+        ExperimentScale { insts_per_core: 15_000, warmup_cycles: 6_000, mixes: 2 }
+    } else {
+        ExperimentScale { insts_per_core: 80_000, warmup_cycles: 40_000, mixes: 8 }
+    };
+
+    let mut suite: Option<SuiteResults> = None;
+    let r = harness::bench("fig5/energy_suite", 0, 1, || {
+        suite = Some(run_suite(scale, true));
+    });
+    r.report();
+    let suite = suite.unwrap();
+
+    for (label, eight) in [("single-core", false), ("eight-core", true)] {
+        let data = suite.fig5(eight);
+        println!("\nFig. 5 — DRAM energy reduction, {label}:");
+        let mechs = ["CC", "NUAT", "CC+NUAT", "LL-DRAM"];
+        for (i, m) in mechs.iter().enumerate() {
+            let vals: Vec<f64> = data.iter().map(|(_, pm)| pm[i].1).collect();
+            let avg = vals.iter().sum::<f64>() / vals.len() as f64 * 100.0;
+            let max = vals.iter().cloned().fold(f64::MIN, f64::max) * 100.0;
+            println!("  {m:>8}: avg {avg:>5.1}%  max {max:>5.1}%");
+        }
+    }
+    println!("\npaper (CC): 1-core avg 1.8% max 6.9%; 8-core avg 7.9% max 14.1%");
+}

@@ -1,0 +1,59 @@
+//! Minimal benchmark harness (offline build — no criterion): warmup +
+//! timed iterations, reporting mean/min/throughput. Each `[[bench]]`
+//! target is a plain `main()` that both *times* its figure's pipeline and
+//! *prints* the regenerated figure rows, so `cargo bench` doubles as the
+//! reproduction driver.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} iters={:<3} mean={:>12.3?} min={:>12.3?}",
+            self.name, self.iters, self.mean, self.min
+        );
+    }
+
+    /// Report with a derived throughput figure.
+    pub fn report_throughput(&self, units: f64, unit_name: &str) {
+        let per_sec = units / self.mean.as_secs_f64();
+        println!(
+            "bench {:<40} iters={:<3} mean={:>12.3?} min={:>12.3?}  {:>12.0} {unit_name}/s",
+            self.name, self.iters, self.mean, self.min, per_sec
+        );
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut total = Duration::ZERO;
+    let mut min = Duration::MAX;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed();
+        total += dt;
+        min = min.min(dt);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters.max(1),
+        min,
+    }
+}
+
+/// `--quick` support for CI-speed runs.
+pub fn is_quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok()
+}

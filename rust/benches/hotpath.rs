@@ -1,0 +1,143 @@
+//! Hot-path micro-benchmarks — the §Perf instrumentation (DESIGN.md §9).
+//!
+//! Measures the simulator's inner loops in isolation (bank FSM, HCRAC,
+//! LLC, scheduler tick, trace generation) plus the end-to-end simulated
+//! cycles/second figure that bounds every experiment's wall time.
+
+#[path = "harness.rs"]
+mod harness;
+
+use chargecache::config::SystemConfig;
+use chargecache::controller::{MemController, Request};
+use chargecache::cpu::Llc;
+use chargecache::dram::command::Loc;
+use chargecache::latency::chargecache::ChargeCache;
+use chargecache::latency::{Mechanism, MechanismKind, RowKey};
+use chargecache::sim::System;
+use chargecache::trace::{Profile, SynthTrace, TraceSource, XorShift64};
+
+fn main() {
+    let cfg = SystemConfig::default();
+
+    // HCRAC ops.
+    {
+        let mut cc = ChargeCache::new(&cfg);
+        let mut rng = XorShift64::new(1);
+        let n = 1_000_000u64;
+        harness::bench("hotpath/hcrac_insert_lookup_1M", 1, 3, || {
+            for i in 0..n {
+                let key = RowKey::new(0, (i % 8) as u32, rng.below(4096) as u32);
+                if i % 2 == 0 {
+                    cc.on_precharge(i, 0, key);
+                } else {
+                    std::hint::black_box(cc.on_activate(i, 0, key));
+                }
+            }
+        })
+        .report_throughput(n as f64, "ops");
+    }
+
+    // LLC accesses.
+    {
+        let mut llc = Llc::new(cfg.cpu.llc_bytes, cfg.cpu.llc_ways, 64);
+        let mut rng = XorShift64::new(2);
+        let n = 1_000_000u64;
+        harness::bench("hotpath/llc_access_1M", 1, 3, || {
+            for _ in 0..n {
+                std::hint::black_box(llc.access(rng.below(1 << 20), false));
+            }
+        })
+        .report_throughput(n as f64, "ops");
+    }
+
+    // Trace generation.
+    {
+        let p = Profile::by_name("mcf").unwrap();
+        let mut t = SynthTrace::new(p, 3, 0);
+        let n = 1_000_000u64;
+        harness::bench("hotpath/synth_trace_1M", 1, 3, || {
+            for _ in 0..n {
+                std::hint::black_box(t.next_entry());
+            }
+        })
+        .report_throughput(n as f64, "entries");
+    }
+
+    // Controller tick under load (the simulator's dominant loop).
+    {
+        let n_cycles = 200_000u64;
+        harness::bench("hotpath/controller_tick_200k_loaded", 1, 3, || {
+            let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache);
+            let mut rng = XorShift64::new(4);
+            let mut done = Vec::new();
+            let mut id = 0u64;
+            for now in 0..n_cycles {
+                if now % 4 == 0 {
+                    let _ = mc.enqueue(
+                        Request {
+                            id,
+                            core: 0,
+                            loc: Loc {
+                                channel: 0,
+                                rank: 0,
+                                bank: rng.below(8) as u32,
+                                row: rng.below(256) as u32,
+                                col: rng.below(128) as u32,
+                            },
+                            is_write: rng.below(4) == 0,
+                            arrived: now,
+                        },
+                        now,
+                    );
+                    id += 1;
+                }
+                done.clear();
+                mc.tick(now, &mut done);
+            }
+        })
+        .report_throughput(n_cycles as f64, "bus-cycles");
+    }
+
+    // Idle controller tick (common case in low-RMPKC phases).
+    {
+        let n_cycles = 2_000_000u64;
+        harness::bench("hotpath/controller_tick_2M_idle", 1, 3, || {
+            let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache);
+            let mut done = Vec::new();
+            for now in 0..n_cycles {
+                done.clear();
+                mc.tick(now, &mut done);
+            }
+        })
+        .report_throughput(n_cycles as f64, "bus-cycles");
+    }
+
+    // End-to-end simulated CPU cycles per second — the headline perf
+    // number that bounds the experiment suite's wall time.
+    {
+        let mut scfg = SystemConfig::default();
+        scfg.insts_per_core = 100_000;
+        scfg.warmup_cpu_cycles = 10_000;
+        let p = Profile::by_name("tpcc64").unwrap();
+        let mut cycles = 0u64;
+        let r = harness::bench("hotpath/end_to_end_single_core", 1, 3, || {
+            let res = System::new(&scfg, MechanismKind::ChargeCache, &[p]).run();
+            cycles = res.cpu_cycles;
+        });
+        r.report_throughput(cycles as f64, "cpu-cycles");
+    }
+
+    // End-to-end multiprogrammed.
+    {
+        let mut scfg = SystemConfig::eight_core();
+        scfg.cpu.cores = 8;
+        scfg.insts_per_core = 25_000;
+        scfg.warmup_cpu_cycles = 5_000;
+        let mut cycles = 0u64;
+        let r = harness::bench("hotpath/end_to_end_eight_core", 1, 2, || {
+            let res = System::new_mix(&scfg, MechanismKind::ChargeCache, 0).run();
+            cycles = res.cpu_cycles;
+        });
+        r.report_throughput(cycles as f64, "cpu-cycles");
+    }
+}

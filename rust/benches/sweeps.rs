@@ -1,0 +1,96 @@
+//! Sensitivity-study benches (HPCA'16 Sec. 6.4/7.1): HCRAC capacity,
+//! caching duration (with circuit-layer-derived reductions), temperature.
+
+#[path = "harness.rs"]
+mod harness;
+
+use chargecache::coordinator::experiments::{
+    sweep_capacity, sweep_duration, sweep_temperature, ExperimentScale,
+};
+
+fn main() {
+    let scale = if harness::is_quick() {
+        ExperimentScale { insts_per_core: 12_000, warmup_cycles: 5_000, mixes: 1 }
+    } else {
+        ExperimentScale { insts_per_core: 60_000, warmup_cycles: 30_000, mixes: 4 }
+    };
+
+    let mut cap = Vec::new();
+    harness::bench("sweeps/capacity", 0, 1, || {
+        cap = sweep_capacity(scale, &[32, 64, 128, 256, 512]);
+    })
+    .report();
+    println!("capacity (entries/core) -> CC speedup:");
+    for (e, s) in &cap {
+        println!("  {e:>5} entries: {:+.2}%", (s - 1.0) * 100.0);
+    }
+
+    let mut dur = Vec::new();
+    harness::bench("sweeps/duration", 0, 1, || {
+        dur = sweep_duration(scale, &[0.125, 0.5, 1.0, 4.0, 16.0]);
+    })
+    .report();
+    println!("caching duration -> CC speedup (reductions from circuit layer):");
+    for (d, s) in &dur {
+        println!("  {d:>6} ms: {:+.2}%", (s - 1.0) * 100.0);
+    }
+
+    let mut temp = Vec::new();
+    harness::bench("sweeps/temperature", 0, 1, || {
+        temp = sweep_temperature(scale, &[45.0, 65.0, 85.0]);
+    })
+    .report();
+    println!("temperature -> CC speedup (fixed 1 ms duration):");
+    for (t, s) in &temp {
+        println!("  {t:>4} C: {:+.2}%", (s - 1.0) * 100.0);
+    }
+    println!("\npaper: benefits hold at worst-case temperature (Sec. 8.3)");
+
+    // Ablation: the paper's future-work designs (footnote 3 + Sec. 6.3).
+    ablation_hcrac_designs(scale);
+}
+
+/// Per-core vs shared HCRAC and LRU vs BIP insertion — the design points
+/// the paper explicitly leaves to future work.
+fn ablation_hcrac_designs(scale: ExperimentScale) {
+    use chargecache::config::{HcracPolicy, HcracSharing, SystemConfig};
+    use chargecache::coordinator::parallel_map;
+    use chargecache::latency::MechanismKind;
+    use chargecache::sim::System;
+
+    let variants: [(&str, HcracSharing, HcracPolicy); 3] = [
+        ("per-core LRU (paper)", HcracSharing::PerCore, HcracPolicy::Lru),
+        ("shared LRU (fn.3)", HcracSharing::Shared, HcracPolicy::Lru),
+        ("per-core BIP", HcracSharing::PerCore, HcracPolicy::Bip),
+    ];
+    let mut rows = Vec::new();
+    harness::bench("sweeps/ablation_hcrac_designs", 0, 1, || {
+        rows = variants
+            .iter()
+            .map(|(name, sharing, policy)| {
+                let gains = parallel_map(scale.mixes, |mix| {
+                    let mut cfg: SystemConfig = scale.eight_cfg();
+                    cfg.chargecache.sharing = *sharing;
+                    cfg.chargecache.policy = *policy;
+                    let b: f64 = System::new_mix(&cfg, MechanismKind::Baseline, mix)
+                        .run()
+                        .core_ipc
+                        .iter()
+                        .sum();
+                    let c = System::new_mix(&cfg, MechanismKind::ChargeCache, mix).run();
+                    let ct: f64 = c.core_ipc.iter().sum();
+                    (ct / b, c.reduced_act_fraction())
+                });
+                let speedup =
+                    gains.iter().map(|g| g.0).sum::<f64>() / gains.len() as f64;
+                let hits = gains.iter().map(|g| g.1).sum::<f64>() / gains.len() as f64;
+                (*name, speedup, hits)
+            })
+            .collect();
+    })
+    .report();
+    println!("\nHCRAC design ablation (8-core, CC speedup / hit fraction):");
+    for (name, s, h) in &rows {
+        println!("  {name:<22} {:+.2}%  hits {:.0}%", (s - 1.0) * 100.0, h * 100.0);
+    }
+}

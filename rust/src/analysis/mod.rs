@@ -1,0 +1,8 @@
+//! Access-stream analyses: row-level temporal locality (Fig. 1) and
+//! row-reuse distance (Sec. 8.3.2 distinguishes the two).
+
+pub mod reuse;
+pub mod rltl;
+
+pub use reuse::ReuseTracker;
+pub use rltl::RltlTracker;

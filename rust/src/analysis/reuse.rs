@@ -1,0 +1,105 @@
+//! Row-reuse distance (Kandemir et al., SIGMETRICS'15), referenced by the
+//! paper to explain where ChargeCache trails LL-DRAM (mcf/omnetpp-class
+//! workloads have high reuse distance, so HCRAC entries are evicted or
+//! expire before the row returns).
+//!
+//! Reuse distance of an activation = number of *other-row* activations in
+//! the same bank since the previous activation of this row.
+
+use std::collections::HashMap;
+
+use crate::latency::RowKey;
+
+#[derive(Debug, Clone, Default)]
+pub struct ReuseTracker {
+    /// Per-bank activation counter.
+    bank_acts: HashMap<u64, u64>,
+    /// Bank counter value at each row's previous activation.
+    last_act: HashMap<RowKey, u64>,
+    /// Histogram buckets: <16, <64, <256, <1024, >=1024.
+    pub hist: [u64; 5],
+    pub samples: u64,
+}
+
+impl ReuseTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bank_of(key: RowKey) -> u64 {
+        key.0 >> 32 // (rank, bank) bits
+    }
+
+    pub fn on_activate(&mut self, key: RowKey) {
+        let bank = Self::bank_of(key);
+        let counter = self.bank_acts.entry(bank).or_insert(0);
+        *counter += 1;
+        let now = *counter;
+        if let Some(prev) = self.last_act.insert(key, now) {
+            let dist = now - prev - 1;
+            let bucket = match dist {
+                0..=15 => 0,
+                16..=63 => 1,
+                64..=255 => 2,
+                256..=1023 => 3,
+                _ => 4,
+            };
+            self.hist[bucket] += 1;
+            self.samples += 1;
+        }
+    }
+
+    /// Mean reuse-distance bucket midpoint (coarse scalar for reporting).
+    pub fn mean_bucket(&self) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        let mids = [8.0, 40.0, 160.0, 640.0, 2048.0];
+        self.hist
+            .iter()
+            .zip(mids)
+            .map(|(&c, m)| c as f64 * m)
+            .sum::<f64>()
+            / self.samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(bank: u32, row: u32) -> RowKey {
+        RowKey::new(0, bank, row)
+    }
+
+    #[test]
+    fn immediate_reuse_is_distance_zero() {
+        let mut t = ReuseTracker::new();
+        t.on_activate(key(0, 1));
+        t.on_activate(key(0, 1));
+        assert_eq!(t.samples, 1);
+        assert_eq!(t.hist[0], 1);
+    }
+
+    #[test]
+    fn interleaved_rows_increase_distance() {
+        let mut t = ReuseTracker::new();
+        t.on_activate(key(0, 1));
+        for r in 2..20 {
+            t.on_activate(key(0, r));
+        }
+        t.on_activate(key(0, 1)); // 18 other activations in between
+        assert_eq!(t.hist[1], 1);
+    }
+
+    #[test]
+    fn distances_are_per_bank() {
+        let mut t = ReuseTracker::new();
+        t.on_activate(key(0, 1));
+        for r in 0..100 {
+            t.on_activate(key(1, r)); // other bank: must not count
+        }
+        t.on_activate(key(0, 1));
+        assert_eq!(t.hist[0], 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Row-Level Temporal Locality (RLTL) measurement — the paper's Sec. 3
+//! observation and Fig. 1.
+//!
+//! *t-RLTL* = fraction of row activations that occur within time `t` after
+//! the **previous precharge of the same row**. The tracker records the last
+//! precharge cycle per (rank, bank, row) and buckets each activation's
+//! re-open interval.
+
+use std::collections::HashMap;
+
+use crate::latency::RowKey;
+
+/// Fig. 1 time intervals in milliseconds.
+pub const RLTL_INTERVALS_MS: [f64; 9] = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+
+#[derive(Debug, Clone)]
+pub struct RltlTracker {
+    /// Last precharge cycle per row.
+    last_pre: HashMap<RowKey, u64>,
+    /// Interval bounds in bus cycles (ascending), matching RLTL_INTERVALS_MS.
+    bounds: Vec<u64>,
+    /// Activations whose re-open interval fell within each bound.
+    pub counts: Vec<u64>,
+    /// Total activations observed (incl. first-touch activations).
+    pub activations: u64,
+}
+
+impl RltlTracker {
+    pub fn new(tck_ns: f64) -> Self {
+        let bounds = RLTL_INTERVALS_MS
+            .iter()
+            .map(|ms| (ms * 1e6 / tck_ns) as u64)
+            .collect::<Vec<_>>();
+        let n = bounds.len();
+        Self { last_pre: HashMap::new(), bounds, counts: vec![0; n], activations: 0 }
+    }
+
+    /// Record an activation of `key` at bus cycle `now`.
+    pub fn on_activate(&mut self, now: u64, key: RowKey) {
+        self.activations += 1;
+        if let Some(&pre) = self.last_pre.get(&key) {
+            let delta = now.saturating_sub(pre);
+            for (i, &b) in self.bounds.iter().enumerate() {
+                if delta <= b {
+                    self.counts[i] += 1;
+                }
+            }
+        }
+    }
+
+    /// Record a precharge of `key` at bus cycle `now`.
+    pub fn on_precharge(&mut self, now: u64, key: RowKey) {
+        self.last_pre.insert(key, now);
+    }
+
+    /// t-RLTL fractions aligned with [`RLTL_INTERVALS_MS`].
+    pub fn fractions(&self) -> Vec<f64> {
+        self.counts
+            .iter()
+            .map(|&c| if self.activations == 0 { 0.0 } else { c as f64 / self.activations as f64 })
+            .collect()
+    }
+
+    /// t-RLTL for one interval (ms must be one of RLTL_INTERVALS_MS).
+    pub fn fraction_at_ms(&self, ms: f64) -> f64 {
+        let idx = RLTL_INTERVALS_MS
+            .iter()
+            .position(|&m| (m - ms).abs() < 1e-12)
+            .expect("interval not tracked");
+        self.fractions()[idx]
+    }
+
+    /// Merge another tracker's counts (for multi-channel aggregation).
+    pub fn merge(&mut self, other: &RltlTracker) {
+        assert_eq!(self.bounds, other.bounds);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.activations += other.activations;
+    }
+
+    pub fn reset_counts(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.activations = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(row: u32) -> RowKey {
+        RowKey::new(0, 0, row)
+    }
+
+    fn tracker() -> RltlTracker {
+        RltlTracker::new(1.25) // 800 MHz: 1 ms = 800_000 cycles
+    }
+
+    #[test]
+    fn first_activation_counts_in_denominator_only() {
+        let mut t = tracker();
+        t.on_activate(0, key(1));
+        assert_eq!(t.activations, 1);
+        assert!(t.fractions().iter().all(|&f| f == 0.0));
+    }
+
+    #[test]
+    fn reopen_within_interval_counts() {
+        let mut t = tracker();
+        t.on_activate(0, key(1));
+        t.on_precharge(100, key(1));
+        t.on_activate(200, key(1)); // 100 cycles later: within every bucket
+        assert_eq!(t.activations, 2);
+        let f = t.fractions();
+        assert!(f.iter().all(|&x| (x - 0.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn bucket_boundaries_are_respected() {
+        let mut t = tracker();
+        let ms = 800_000u64; // 1 ms in cycles
+        t.on_precharge(0, key(2));
+        t.on_activate(ms * 3, key(2)); // 3 ms: misses 0.125-2 ms, hits 4-32
+        let f = t.fractions();
+        assert_eq!(f[..5], [0.0; 5]); // 0.125, 0.25, 0.5, 1, 2 ms
+        assert!(f[5] > 0.0); // 4 ms
+        assert!(f[8] > 0.0); // 32 ms
+    }
+
+    #[test]
+    fn cumulative_over_intervals() {
+        // Larger t always captures at least as many activations.
+        let mut t = tracker();
+        for i in 0..10u64 {
+            let k = key(i as u32);
+            t.on_precharge(i * 200_000, k);
+            t.on_activate(i * 200_000 + i * 150_000, k);
+        }
+        let f = t.fractions();
+        for w in f.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = tracker();
+        let mut b = tracker();
+        a.on_precharge(0, key(1));
+        a.on_activate(10, key(1));
+        b.on_precharge(0, key(2));
+        b.on_activate(10, key(2));
+        a.merge(&b);
+        assert_eq!(a.activations, 2);
+        assert!((a.fractions()[0] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,388 @@
+//! Typed simulation configuration (Table 1 of the paper as defaults).
+//!
+//! Every experiment is a [`SystemConfig`]; presets mirror the paper's
+//! simulated system and the CLI layers overrides on top.
+
+use crate::latency::MechanismKind;
+
+/// DRAM organization (DDR3-1600, Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramOrg {
+    /// Independent memory channels (1 for single-core, 2 for 8-core runs).
+    pub channels: usize,
+    /// Ranks per channel.
+    pub ranks: usize,
+    /// Banks per rank.
+    pub banks: usize,
+    /// Rows per bank.
+    pub rows: usize,
+    /// Row buffer (page) size in bytes.
+    pub row_bytes: usize,
+    /// Cache-line size in bytes (column granularity of requests).
+    pub line_bytes: usize,
+}
+
+impl DramOrg {
+    /// Columns (cache lines) per row.
+    pub fn cols(&self) -> usize {
+        self.row_bytes / self.line_bytes
+    }
+    /// Total banks across the whole system.
+    pub fn total_banks(&self) -> usize {
+        self.channels * self.ranks * self.banks
+    }
+}
+
+impl Default for DramOrg {
+    fn default() -> Self {
+        // Table 1: 1 rank/channel, 8 banks/rank, 64K rows/bank, 8KB rows.
+        Self {
+            channels: 1,
+            ranks: 1,
+            banks: 8,
+            rows: 64 * 1024,
+            row_bytes: 8 * 1024,
+            line_bytes: 64,
+        }
+    }
+}
+
+/// DDR3-1600 timing parameters in DRAM bus cycles (800 MHz, tCK = 1.25 ns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timing {
+    /// Bus clock period in nanoseconds.
+    pub tck_ns: f64,
+    pub trcd: u64,
+    pub trp: u64,
+    pub tras: u64,
+    /// CAS latency (read).
+    pub cl: u64,
+    /// CAS write latency.
+    pub cwl: u64,
+    /// Burst length in bus cycles (BL8 over DDR = 4).
+    pub tbl: u64,
+    /// Column-to-column delay.
+    pub tccd: u64,
+    /// Read-to-precharge.
+    pub trtp: u64,
+    /// Write recovery.
+    pub twr: u64,
+    /// Write-to-read turnaround (rank).
+    pub twtr: u64,
+    /// Activate-to-activate, different banks same rank.
+    pub trrd: u64,
+    /// Four-activate window.
+    pub tfaw: u64,
+    /// Refresh cycle time (all-bank REF duration).
+    pub trfc: u64,
+    /// Average refresh interval.
+    pub trefi: u64,
+}
+
+impl Timing {
+    /// tRC — activate-to-activate, same bank.
+    pub fn trc(&self) -> u64 {
+        self.tras + self.trp
+    }
+    /// Convert a duration in milliseconds to bus cycles.
+    pub fn ms_to_cycles(&self, ms: f64) -> u64 {
+        (ms * 1e6 / self.tck_ns) as u64
+    }
+    /// Convert bus cycles to nanoseconds.
+    pub fn cycles_to_ns(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.tck_ns
+    }
+}
+
+impl Default for Timing {
+    fn default() -> Self {
+        // DDR3-1600K (11-11-11-28), 4Gb-class tRFC.
+        Self {
+            tck_ns: 1.25,
+            trcd: 11,
+            trp: 11,
+            tras: 28,
+            cl: 11,
+            cwl: 8,
+            tbl: 4,
+            tccd: 4,
+            trtp: 6,
+            twr: 12,
+            twtr: 6,
+            trrd: 5,
+            tfaw: 24,
+            trfc: 208, // 260 ns
+            trefi: 6240, // 7.8 us
+        }
+    }
+}
+
+/// Row-buffer management policy (Table 1: open for 1-core, closed for MP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowPolicy {
+    /// Leave the row open after column accesses (FR-FCFS exploits hits).
+    Open,
+    /// Auto-precharge after the last queued hit to the open row.
+    Closed,
+}
+
+/// Memory-controller parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct McConfig {
+    /// Read queue capacity per channel.
+    pub read_queue: usize,
+    /// Write queue capacity per channel.
+    pub write_queue: usize,
+    /// Start draining writes above this occupancy.
+    pub write_hi_watermark: usize,
+    /// Stop draining writes below this occupancy.
+    pub write_lo_watermark: usize,
+    pub row_policy: RowPolicy,
+}
+
+impl Default for McConfig {
+    fn default() -> Self {
+        Self {
+            read_queue: 64,
+            write_queue: 64,
+            write_hi_watermark: 48,
+            write_lo_watermark: 16,
+            row_policy: RowPolicy::Open,
+        }
+    }
+}
+
+/// CPU core / cache parameters (Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuConfig {
+    pub cores: usize,
+    /// CPU cycles per DRAM bus cycle (4 GHz / 800 MHz = 5).
+    pub cpu_per_bus: u64,
+    /// Issue width (instructions per CPU cycle).
+    pub issue_width: usize,
+    /// Reorder window entries.
+    pub window: usize,
+    /// MSHRs per core.
+    pub mshrs: usize,
+    /// Shared LLC size in bytes.
+    pub llc_bytes: usize,
+    pub llc_ways: usize,
+    /// LLC hit latency in CPU cycles.
+    pub llc_hit_cycles: u64,
+}
+
+impl Default for CpuConfig {
+    fn default() -> Self {
+        Self {
+            cores: 1,
+            cpu_per_bus: 5,
+            issue_width: 3,
+            window: 128,
+            mshrs: 8,
+            llc_bytes: 4 * 1024 * 1024,
+            llc_ways: 16,
+            llc_hit_cycles: 33,
+        }
+    }
+}
+
+/// HCRAC organization: the paper's per-core replicas, or the shared
+/// single-table design its footnote 3 leaves to future work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HcracSharing {
+    /// One private table per core (paper default).
+    PerCore,
+    /// One table shared by all cores (same total capacity): any core's
+    /// precharge benefits every core's later activation.
+    Shared,
+}
+
+/// HCRAC insertion/replacement policy (the paper points at reuse-aware
+/// policies [35,117,130,148] as future work for thrashing workloads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HcracPolicy {
+    /// Plain LRU (paper default).
+    Lru,
+    /// Bimodal insertion (BIP): most insertions land in the LRU way
+    /// without promotion, protecting the table from thrashing row streams
+    /// (mcf/omnetpp-class reuse distances).
+    Bip,
+}
+
+/// ChargeCache (HCRAC) parameters (Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChargeCacheConfig {
+    /// Entries per core (per channel replica).
+    pub entries_per_core: usize,
+    pub ways: usize,
+    /// Caching duration in milliseconds.
+    pub duration_ms: f64,
+    /// tRCD reduction in bus cycles on an HCRAC hit.
+    pub trcd_reduction: u64,
+    /// tRAS reduction in bus cycles on an HCRAC hit.
+    pub tras_reduction: u64,
+    pub sharing: HcracSharing,
+    pub policy: HcracPolicy,
+}
+
+impl Default for ChargeCacheConfig {
+    fn default() -> Self {
+        Self {
+            entries_per_core: 128,
+            ways: 2,
+            duration_ms: 1.0,
+            trcd_reduction: 4,
+            tras_reduction: 8,
+            sharing: HcracSharing::PerCore,
+            policy: HcracPolicy::Lru,
+        }
+    }
+}
+
+/// NUAT comparison mechanism parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NuatConfig {
+    /// Window after a refresh during which a row counts as highly charged.
+    pub window_ms: f64,
+    pub trcd_reduction: u64,
+    pub tras_reduction: u64,
+}
+
+impl Default for NuatConfig {
+    fn default() -> Self {
+        Self {
+            window_ms: 1.0,
+            trcd_reduction: 4,
+            tras_reduction: 8,
+        }
+    }
+}
+
+/// Full system configuration for one simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub dram: DramOrg,
+    pub timing: Timing,
+    pub mc: McConfig,
+    pub cpu: CpuConfig,
+    pub chargecache: ChargeCacheConfig,
+    pub nuat: NuatConfig,
+    pub mechanism: MechanismKind,
+    /// DRAM operating temperature in Celsius (sensitivity studies).
+    pub temperature_c: f64,
+    /// Instructions to simulate per core (after warmup).
+    pub insts_per_core: u64,
+    /// Warmup CPU cycles (caches + HCRAC warm; stats reset afterwards).
+    pub warmup_cpu_cycles: u64,
+    /// Fixed-time measurement: run exactly this many CPU cycles after
+    /// warmup and report IPC = retired / cycles per core. `None` = run to
+    /// the per-core instruction target (fixed-work). Fixed-time is the
+    /// stable methodology for scaled-down multiprogrammed runs, where
+    /// fixed-work windows diverge chaotically between mechanisms.
+    pub measure_cycles: Option<u64>,
+    /// RNG seed for trace generation.
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            dram: DramOrg::default(),
+            timing: Timing::default(),
+            mc: McConfig::default(),
+            cpu: CpuConfig::default(),
+            chargecache: ChargeCacheConfig::default(),
+            nuat: NuatConfig::default(),
+            mechanism: MechanismKind::Baseline,
+            temperature_c: 85.0,
+            insts_per_core: 2_000_000,
+            warmup_cpu_cycles: 1_000_000,
+            measure_cycles: None,
+            seed: 42,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// The paper's single-core configuration (Table 1): 1 channel, open-row.
+    pub fn single_core() -> Self {
+        Self::default()
+    }
+
+    /// The paper's eight-core configuration: 2 channels, closed-row policy.
+    pub fn eight_core() -> Self {
+        let mut c = Self::default();
+        c.cpu.cores = 8;
+        c.dram.channels = 2;
+        c.mc.row_policy = RowPolicy::Closed;
+        c
+    }
+
+    /// Multi-core with `n` cores (paper scales 1-8).
+    pub fn multi_core(n: usize) -> Self {
+        if n == 1 {
+            Self::single_core()
+        } else {
+            let mut c = Self::eight_core();
+            c.cpu.cores = n;
+            c
+        }
+    }
+
+    /// Total HCRAC storage in bits — Eq. (1)/(2) of the paper.
+    pub fn hcrac_storage_bits(&self) -> u64 {
+        let entry_bits = (self.dram.ranks as f64).log2().ceil() as u64
+            + (self.dram.banks as f64).log2().ceil() as u64
+            + (self.dram.rows as f64).log2().ceil() as u64
+            + 1;
+        // LRU bits per entry for a `ways`-way set (1 bit suffices for 2-way).
+        let lru_bits = ((self.chargecache.ways as f64).log2().ceil() as u64).max(1);
+        (self.cpu.cores as u64)
+            * (self.dram.channels as u64)
+            * (self.chargecache.entries_per_core as u64)
+            * (entry_bits + lru_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let c = SystemConfig::default();
+        assert_eq!(c.timing.trcd, 11);
+        assert_eq!(c.timing.tras, 28);
+        assert_eq!(c.dram.cols(), 128);
+        assert_eq!(c.cpu.cpu_per_bus, 5);
+        assert_eq!(c.timing.trc(), 39);
+    }
+
+    #[test]
+    fn eq1_storage_matches_paper() {
+        // Paper Sec. 6.5: 128-entry HCRAC, 1 rank, 8 banks, 64K rows
+        // -> EntrySize = 0 + 3 + 16 + 1 = 20 bits, +1 LRU bit = 21.
+        // Per core, 2 channels: 2 * 128 * 21 = 5376 bits = 672 bytes.
+        let mut c = SystemConfig::eight_core();
+        c.cpu.cores = 1;
+        assert_eq!(c.hcrac_storage_bits(), 5376);
+        assert_eq!(c.hcrac_storage_bits() / 8, 672);
+        // Full 8-core, 2-channel system: 5376 bytes (paper Sec. 6.5).
+        let c8 = SystemConfig::eight_core();
+        assert_eq!(c8.hcrac_storage_bits() / 8, 5376);
+    }
+
+    #[test]
+    fn ms_to_cycles_round_trip() {
+        let t = Timing::default();
+        assert_eq!(t.ms_to_cycles(1.0), 800_000);
+        assert_eq!(t.cycles_to_ns(800_000) as u64, 1_000_000);
+    }
+
+    #[test]
+    fn preset_policies() {
+        assert_eq!(SystemConfig::single_core().mc.row_policy, RowPolicy::Open);
+        assert_eq!(SystemConfig::eight_core().mc.row_policy, RowPolicy::Closed);
+        assert_eq!(SystemConfig::eight_core().dram.channels, 2);
+    }
+}

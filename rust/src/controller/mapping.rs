@@ -1,0 +1,149 @@
+//! Physical-address → DRAM-location mapping.
+//!
+//! Default scheme is Ramulator-style `Row:Rank:Bank:Col:Channel` (channel
+//! interleave at cache-line granularity, banks striped above columns so
+//! sequential rows of different arrays collide in banks — the bank-conflict
+//! behaviour the paper's RLTL observation rests on).
+
+
+use crate::config::DramOrg;
+use crate::dram::command::Loc;
+
+/// Address interleave scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapScheme {
+    /// row : rank : bank : col : channel  (default; line-interleaved channels)
+    RoRaBaColCh,
+    /// row : col : rank : bank : channel  (bank-interleaved lines)
+    RoColRaBaCh,
+}
+
+/// Decodes line-granularity physical addresses into DRAM locations.
+#[derive(Debug, Clone)]
+pub struct AddressMapper {
+    org: DramOrg,
+    scheme: MapScheme,
+}
+
+impl AddressMapper {
+    pub fn new(org: &DramOrg, scheme: MapScheme) -> Self {
+        assert!(org.channels.is_power_of_two());
+        assert!(org.ranks.is_power_of_two());
+        assert!(org.banks.is_power_of_two());
+        assert!(org.rows.is_power_of_two());
+        assert!(org.cols().is_power_of_two());
+        Self { org: org.clone(), scheme }
+    }
+
+    /// Map a byte address. Only the line-index bits participate.
+    pub fn map(&self, byte_addr: u64) -> Loc {
+        let line = byte_addr / self.org.line_bytes as u64;
+        self.map_line(line)
+    }
+
+    /// Map a cache-line index.
+    pub fn map_line(&self, line: u64) -> Loc {
+        let ch_bits = self.org.channels.trailing_zeros();
+        let ra_bits = self.org.ranks.trailing_zeros();
+        let ba_bits = self.org.banks.trailing_zeros();
+        let ro_bits = self.org.rows.trailing_zeros();
+        let co_bits = self.org.cols().trailing_zeros();
+        let mut a = line;
+        let mut take = |bits: u32| -> u64 {
+            let v = a & ((1u64 << bits) - 1);
+            a >>= bits;
+            v
+        };
+        match self.scheme {
+            MapScheme::RoRaBaColCh => {
+                let channel = take(ch_bits) as u32;
+                let col = take(co_bits) as u32;
+                let bank = take(ba_bits) as u32;
+                let rank = take(ra_bits) as u32;
+                let row = (take(ro_bits) as u32) % self.org.rows as u32;
+                Loc { channel, rank, bank, row, col }
+            }
+            MapScheme::RoColRaBaCh => {
+                let channel = take(ch_bits) as u32;
+                let bank = take(ba_bits) as u32;
+                let rank = take(ra_bits) as u32;
+                let col = take(co_bits) as u32;
+                let row = (take(ro_bits) as u32) % self.org.rows as u32;
+                Loc { channel, rank, bank, row, col }
+            }
+        }
+    }
+
+    pub fn org(&self) -> &DramOrg {
+        &self.org
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mapper() -> AddressMapper {
+        AddressMapper::new(&DramOrg::default(), MapScheme::RoRaBaColCh)
+    }
+
+    #[test]
+    fn sequential_lines_share_a_row() {
+        let m = mapper();
+        // 1 channel: consecutive lines walk the columns of one row.
+        let a = m.map_line(0);
+        let b = m.map_line(1);
+        assert_eq!(a.row, b.row);
+        assert_eq!(a.bank, b.bank);
+        assert_eq!(b.col, a.col + 1);
+    }
+
+    #[test]
+    fn crossing_the_row_boundary_switches_bank() {
+        let m = mapper();
+        let cols = 128u64;
+        let a = m.map_line(cols - 1);
+        let b = m.map_line(cols);
+        assert_eq!(b.col, 0);
+        assert_eq!(b.bank, a.bank + 1);
+        assert_eq!(a.row, b.row);
+    }
+
+    #[test]
+    fn full_bank_sweep_increments_row() {
+        let m = mapper();
+        let lines_per_row_group = 128u64 * 8; // cols * banks (1 rank)
+        let a = m.map_line(0);
+        let b = m.map_line(lines_per_row_group);
+        assert_eq!(b.row, a.row + 1);
+        assert_eq!(b.bank, 0);
+    }
+
+    #[test]
+    fn two_channels_interleave_lines() {
+        let mut org = DramOrg::default();
+        org.channels = 2;
+        let m = AddressMapper::new(&org, MapScheme::RoRaBaColCh);
+        assert_eq!(m.map_line(0).channel, 0);
+        assert_eq!(m.map_line(1).channel, 1);
+        assert_eq!(m.map_line(2).channel, 0);
+    }
+
+    #[test]
+    fn mapping_is_injective_over_a_window() {
+        use std::collections::HashSet;
+        let m = mapper();
+        let mut seen = HashSet::new();
+        for line in 0..100_000u64 {
+            let l = m.map_line(line);
+            assert!(seen.insert((l.channel, l.rank, l.bank, l.row, l.col)));
+        }
+    }
+
+    #[test]
+    fn byte_addresses_quantize_to_lines() {
+        let m = mapper();
+        assert_eq!(m.map(0), m.map(63));
+        assert_ne!(m.map(63), m.map(64));
+    }
+}

@@ -1,0 +1,717 @@
+//! Memory controller: request queues, FR-FCFS scheduling, row-buffer
+//! policy, refresh engine, and the latency-mechanism hook points.
+//!
+//! One controller instance drives one channel. Each bus cycle it issues at
+//! most one DRAM command, chosen by priority:
+//!
+//! 1. refresh drain (PREs, then the all-bank REF at the tREFI deadline),
+//! 2. FR-FCFS pass 1 — ready **column** commands (row hits), oldest first,
+//! 3. FR-FCFS pass 2 — ready ACT/PRE commands, oldest first.
+//!
+//! ChargeCache/NUAT hooks (`Mechanism`) fire on every ACT (lookup → timing
+//! grant) and every PRE (insert), exactly as in Fig. 2 of the paper.
+
+pub mod mapping;
+pub mod queue;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::analysis::{ReuseTracker, RltlTracker};
+use crate::config::{RowPolicy, SystemConfig};
+use crate::dram::command::{Command, CommandKind, Loc};
+use crate::dram::device::Channel;
+use crate::latency::{build_mechanism, Mechanism, MechanismKind, RowKey};
+
+pub use mapping::{AddressMapper, MapScheme};
+pub use queue::{Request, RequestQueue};
+
+/// How a request's first DRAM command classified it (row-buffer outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqClass {
+    Hit,
+    Miss,
+    Conflict,
+}
+
+/// Row-hysteresis: a conflicting request must have waited this many bus
+/// cycles before it may close an open row (see the scheduler's pass 2).
+const CONFLICT_AGE_CYCLES: u64 = 16;
+
+/// FR-FCFS starvation cap: once a request has waited this long, it may
+/// close an open row even while younger row hits keep arriving (the
+/// classic FR-FCFS+cap fix — without it, a streaming core can starve a
+/// conflicting one indefinitely).
+const STARVE_CAP_CYCLES: u64 = 256;
+
+/// A finished read (the core's MSHR is released at `ready` bus cycle).
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub req_id: u64,
+    pub core: u32,
+    pub ready: u64,
+}
+
+/// Controller statistics (reset after warmup).
+#[derive(Debug, Clone, Default)]
+pub struct McStats {
+    pub acts: u64,
+    pub acts_reduced: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub precharges: u64,
+    pub refreshes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    pub read_latency_sum: u64,
+    pub read_latency_cnt: u64,
+    /// Aggregate bank-open time (for active-standby energy).
+    pub bank_open_cycles: u64,
+    /// Forwarded from the write queue (no DRAM access).
+    pub wq_forwards: u64,
+    /// Enqueue rejections (queue full) — backpressure signal.
+    pub rejects: u64,
+}
+
+/// One-channel memory controller.
+pub struct MemController {
+    pub dev: Channel,
+    rq: RequestQueue,
+    wq: RequestQueue,
+    mech: Box<dyn Mechanism>,
+    pub rltl: RltlTracker,
+    pub reuse: ReuseTracker,
+    pub stats: McStats,
+    row_policy: RowPolicy,
+    write_drain: bool,
+    wq_hi: usize,
+    wq_lo: usize,
+    /// Per-rank refresh drain flag.
+    ref_drain: Vec<bool>,
+    completions: BinaryHeap<Reverse<(u64, u64, u32)>>,
+    /// Request classification (parallel to queue entries by id).
+    class_of: std::collections::HashMap<u64, ReqClass>,
+    /// Per-rank open-bank count (active-standby energy accounting).
+    rank_open: Vec<u32>,
+    rank_active_since: Vec<u64>,
+    /// Cycles each rank spent with >= 1 bank open.
+    pub rank_active_cycles: Vec<u64>,
+    /// Scratch: per (rank, bank), does any queued request hit the open
+    /// row? Recomputed once per scheduling tick (collapses the O(n^2)
+    /// per-candidate row-hit scans to a single O(n) pass).
+    open_hit: Vec<bool>,
+    banks_per_rank: usize,
+}
+
+impl MemController {
+    pub fn new(cfg: &SystemConfig, kind: MechanismKind) -> Self {
+        Self {
+            dev: Channel::new(&cfg.dram, &cfg.timing),
+            rq: RequestQueue::new(cfg.mc.read_queue),
+            wq: RequestQueue::new(cfg.mc.write_queue),
+            mech: build_mechanism(kind, cfg),
+            rltl: RltlTracker::new(cfg.timing.tck_ns),
+            reuse: ReuseTracker::new(),
+            stats: McStats::default(),
+            row_policy: cfg.mc.row_policy,
+            write_drain: false,
+            wq_hi: cfg.mc.write_hi_watermark,
+            wq_lo: cfg.mc.write_lo_watermark,
+            ref_drain: vec![false; cfg.dram.ranks],
+            completions: BinaryHeap::new(),
+            class_of: std::collections::HashMap::new(),
+            rank_open: vec![0; cfg.dram.ranks],
+            rank_active_since: vec![0; cfg.dram.ranks],
+            rank_active_cycles: vec![0; cfg.dram.ranks],
+            open_hit: vec![false; cfg.dram.ranks * cfg.dram.banks],
+            banks_per_rank: cfg.dram.banks,
+        }
+    }
+
+    /// Recompute the open-row-hit bitmap (one O(queues) pass). Called
+    /// lazily: only the first time a scheduling tick actually needs a
+    /// conflict/eager-PRE decision (most ticks resolve in pass 1).
+    fn refresh_open_hit(&mut self) {
+        self.open_hit.iter_mut().for_each(|b| *b = false);
+        let bpr = self.banks_per_rank;
+        for req in self.rq.iter().chain(self.wq.iter()) {
+            let idx = req.loc.rank as usize * bpr + req.loc.bank as usize;
+            if !self.open_hit[idx]
+                && self.dev.bank(&req.loc).open_row() == Some(req.loc.row)
+            {
+                self.open_hit[idx] = true;
+            }
+        }
+    }
+
+    #[inline]
+    fn open_row_has_hit(&mut self, rank: u32, bank: u32, fresh: &mut bool) -> bool {
+        if !*fresh {
+            self.refresh_open_hit();
+            *fresh = true;
+        }
+        self.open_hit[rank as usize * self.banks_per_rank + bank as usize]
+    }
+
+    fn rank_opened(&mut self, rank: usize, now: u64) {
+        if self.rank_open[rank] == 0 {
+            self.rank_active_since[rank] = now;
+        }
+        self.rank_open[rank] += 1;
+    }
+
+    fn rank_closed(&mut self, rank: usize, now: u64) {
+        debug_assert!(self.rank_open[rank] > 0);
+        self.rank_open[rank] -= 1;
+        if self.rank_open[rank] == 0 {
+            self.rank_active_cycles[rank] +=
+                now.saturating_sub(self.rank_active_since[rank]);
+        }
+    }
+
+    /// Replace the mechanism (coordinator sweeps reuse a controller).
+    pub fn set_mechanism(&mut self, mech: Box<dyn Mechanism>) {
+        self.mech = mech;
+    }
+
+    /// Queue occupancy (reads, writes).
+    pub fn occupancy(&self) -> (usize, usize) {
+        (self.rq.len(), self.wq.len())
+    }
+
+    /// True if a read can be accepted right now.
+    pub fn can_accept_read(&self) -> bool {
+        !self.rq.is_full()
+    }
+
+    pub fn can_accept_write(&self) -> bool {
+        !self.wq.is_full()
+    }
+
+    /// Enqueue a request. Returns false (and counts a reject) if full.
+    /// Reads that match a queued write are forwarded without DRAM access.
+    pub fn enqueue(&mut self, req: Request, now: u64) -> bool {
+        if req.is_write {
+            if self.wq.is_full() {
+                self.stats.rejects += 1;
+                return false;
+            }
+            self.wq.push(req);
+            true
+        } else {
+            // Write-to-read forwarding at line granularity.
+            let fwd = self.wq.iter().any(|w| {
+                w.loc.rank == req.loc.rank
+                    && w.loc.bank == req.loc.bank
+                    && w.loc.row == req.loc.row
+                    && w.loc.col == req.loc.col
+            });
+            if fwd {
+                self.stats.wq_forwards += 1;
+                self.completions.push(Reverse((now + 1, req.id, req.core)));
+                return true;
+            }
+            if self.rq.is_full() {
+                self.stats.rejects += 1;
+                return false;
+            }
+            self.rq.push(req);
+            true
+        }
+    }
+
+    /// Advance one bus cycle: resolve auto-precharges, run the refresh
+    /// engine, issue at most one command, then drain due completions into
+    /// `out`.
+    pub fn tick(&mut self, now: u64, out: &mut Vec<Completion>) {
+        self.resolve_autopre(now);
+        if !self.refresh_engine(now) {
+            self.schedule(now);
+        }
+        while let Some(&Reverse((ready, id, core))) = self.completions.peek() {
+            if ready > now {
+                break;
+            }
+            self.completions.pop();
+            out.push(Completion { req_id: id, core, ready });
+        }
+    }
+
+    /// The cycle at which the earliest pending completion becomes ready
+    /// (fast-forward hint for the system loop).
+    pub fn next_completion_at(&self) -> Option<u64> {
+        self.completions.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.rq.is_empty() || !self.wq.is_empty() || !self.completions.is_empty()
+    }
+
+    fn resolve_autopre(&mut self, now: u64) {
+        let rltl = &mut self.rltl;
+        let mech = &mut self.mech;
+        let stats = &mut self.stats;
+        let mut closed: Vec<u32> = Vec::new();
+        self.dev.tick_autopre(now, |rank, bank, row, owner, cycle, act_cycle| {
+            let key = RowKey::new(rank, bank, row);
+            mech.on_precharge(cycle, owner, key);
+            rltl.on_precharge(cycle, key);
+            stats.precharges += 1;
+            stats.bank_open_cycles += cycle.saturating_sub(act_cycle);
+            closed.push(rank);
+        });
+        for rank in closed {
+            self.rank_closed(rank as usize, now);
+        }
+    }
+
+    /// Refresh engine. Returns true if it consumed the command slot.
+    fn refresh_engine(&mut self, now: u64) -> bool {
+        for rank_idx in 0..self.dev.ranks.len() {
+            if self.dev.ranks[rank_idx].refresh_due(now) {
+                self.ref_drain[rank_idx] = true;
+            }
+            if !self.ref_drain[rank_idx] {
+                continue;
+            }
+            let rank = &self.dev.ranks[rank_idx];
+            if rank.all_closed() {
+                let loc = Loc { channel: 0, rank: rank_idx as u32, bank: 0, row: 0, col: 0 };
+                if self.dev.can_issue(CommandKind::Refresh, &loc, now) {
+                    self.dev.issue(
+                        Command { kind: CommandKind::Refresh, loc },
+                        now,
+                        0,
+                        0,
+                        0,
+                    );
+                    let count = self.dev.ranks[rank_idx].refresh_count;
+                    self.mech.on_refresh(now, rank_idx as u32, count);
+                    self.stats.refreshes += 1;
+                    self.ref_drain[rank_idx] = false;
+                    return true;
+                }
+                continue;
+            }
+            // Precharge one open bank (oldest activation first).
+            let mut best: Option<(u64, usize)> = None;
+            for (bi, b) in rank.banks.iter().enumerate() {
+                if b.open_row().is_some() {
+                    let cand = (b.act_cycle, bi);
+                    if best.map_or(true, |x| cand < x) {
+                        best = Some(cand);
+                    }
+                }
+            }
+            if let Some((_, bi)) = best {
+                let bank = &self.dev.ranks[rank_idx].banks[bi];
+                let row = bank.open_row().unwrap();
+                let loc = Loc { channel: 0, rank: rank_idx as u32, bank: bi as u32, row, col: 0 };
+                if self.dev.can_issue(CommandKind::Precharge, &loc, now) {
+                    self.issue_precharge(now, loc);
+                    return true;
+                }
+            }
+            // Drain in progress but nothing legal: hold the slot so ACTs
+            // cannot sneak in and extend the drain indefinitely.
+            return true;
+        }
+        false
+    }
+
+    fn issue_precharge(&mut self, now: u64, loc: Loc) {
+        let owner = self.dev.bank(&loc).open_owner;
+        let act_cycle = self.dev.bank(&loc).act_cycle;
+        self.dev.issue(Command { kind: CommandKind::Precharge, loc }, now, 0, 0, owner);
+        let key = RowKey::new(loc.rank, loc.bank, loc.row);
+        self.mech.on_precharge(now, owner, key);
+        self.rltl.on_precharge(now, key);
+        self.stats.precharges += 1;
+        self.stats.bank_open_cycles += now - act_cycle;
+        self.rank_closed(loc.rank as usize, now);
+    }
+
+    /// FR-FCFS scheduling; issues at most one command.
+    fn schedule(&mut self, now: u64) {
+        // Write drain mode hysteresis with read priority: drain when the
+        // write queue is critically full (forced) or when there are no
+        // reads to serve (opportunistic); yield back to reads as soon as
+        // they arrive unless the forced condition still holds. This
+        // prevents write bursts from starving the read path.
+        if !self.write_drain {
+            if self.wq.len() >= self.wq_hi || (self.rq.is_empty() && !self.wq.is_empty()) {
+                self.write_drain = true;
+            }
+        } else if self.wq.is_empty()
+            || self.wq.len() <= self.wq_lo
+            || (!self.rq.is_empty() && self.wq.len() < self.wq_hi)
+        {
+            self.write_drain = false;
+        }
+        let serving_writes = self.write_drain && !self.wq.is_empty();
+        // Lazily-computed open-row-hit bitmap (valid for this tick).
+        let mut hit_map_fresh = false;
+        if self.rq.is_empty() && self.wq.is_empty() {
+            // Idle fast path; the closed policy still parks open banks.
+            if self.row_policy == RowPolicy::Closed {
+                self.eager_precharge(now, &mut hit_map_fresh);
+            }
+            return;
+        }
+
+        // Pass 1: ready column command, oldest first.
+        let queue = if serving_writes { &self.wq } else { &self.rq };
+        let mut issue_col: Option<(usize, Request, CommandKind)> = None;
+        for (i, req) in queue.iter().enumerate() {
+            if self.ref_drain[req.loc.rank as usize] {
+                continue;
+            }
+            if self.dev.bank(&req.loc).open_row() != Some(req.loc.row) {
+                continue;
+            }
+            // The closed-row policy precharges via the eager-idle pass
+            // (pass 3) rather than auto-precharge: deciding at PRE time
+            // with live queue knowledge avoids closing a row whose next
+            // hit is still in flight (DDR3 RDA cannot be cancelled).
+            let kind = if req.is_write { CommandKind::Write } else { CommandKind::Read };
+            if self.dev.can_issue(kind, &req.loc, now) {
+                issue_col = Some((i, *req, kind));
+                break;
+            }
+        }
+        if let Some((i, req, kind)) = issue_col {
+            let ready = self.dev.issue(Command { kind, loc: req.loc }, now, 0, 0, req.core);
+            let class = self
+                .class_of
+                .remove(&req.id)
+                .unwrap_or(ReqClass::Hit);
+            match class {
+                ReqClass::Hit => self.stats.row_hits += 1,
+                ReqClass::Miss => self.stats.row_misses += 1,
+                ReqClass::Conflict => self.stats.row_conflicts += 1,
+            }
+            if req.is_write {
+                self.stats.writes += 1;
+                self.wq.remove(i);
+            } else {
+                self.stats.reads += 1;
+                let ready = ready.expect("read returns data-ready cycle");
+                self.completions.push(Reverse((ready, req.id, req.core)));
+                self.stats.read_latency_sum += ready - req.arrived;
+                self.stats.read_latency_cnt += 1;
+                self.rq.remove(i);
+            }
+            return;
+        }
+
+        // Pass 2: ready ACT or PRE, oldest first (index scan: the lazy
+        // hit-map computation needs &mut self mid-loop).
+        let queue_len = if serving_writes { self.wq.len() } else { self.rq.len() };
+        let mut action: Option<(u64, Request, CommandKind)> = None;
+        for i in 0..queue_len {
+            let req = if serving_writes { self.wq.get(i) } else { self.rq.get(i) };
+            if self.ref_drain[req.loc.rank as usize] {
+                continue;
+            }
+            match self.dev.bank(&req.loc).open_row() {
+                None => {
+                    if self.dev.can_issue(CommandKind::Activate, &req.loc, now) {
+                        action = Some((req.id, req, CommandKind::Activate));
+                        break;
+                    }
+                }
+                Some(open) if open != req.loc.row => {
+                    // Precharge only when no queued request still hits the
+                    // open row (in either queue) — FR-FCFS row-hit-first —
+                    // and the conflicting request has aged past the
+                    // hysteresis window. The aging guard keeps a stream's
+                    // in-flight same-row access (trickling in through the
+                    // MSHRs) from losing its open row to a premature
+                    // conflict precharge. Requests older than the
+                    // starvation cap override the row-hit priority.
+                    let age = now.saturating_sub(req.arrived);
+                    let starving = age >= STARVE_CAP_CYCLES;
+                    if age >= CONFLICT_AGE_CYCLES
+                        && (starving
+                            || !self.open_row_has_hit(
+                                req.loc.rank,
+                                req.loc.bank,
+                                &mut hit_map_fresh,
+                            ))
+                        && self.dev.can_issue(CommandKind::Precharge, &req.loc, now)
+                    {
+                        action = Some((req.id, req, CommandKind::Precharge));
+                        self.class_of.entry(req.id).or_insert(ReqClass::Conflict);
+                        break;
+                    }
+                }
+                Some(_) => {} // row hit, column not ready yet
+            }
+        }
+        if action.is_none() && self.row_policy == RowPolicy::Closed {
+            self.eager_precharge(now, &mut hit_map_fresh);
+            return;
+        }
+        if let Some((id, req, kind)) = action {
+            match kind {
+                CommandKind::Activate => {
+                    let key = RowKey::new(req.loc.rank, req.loc.bank, req.loc.row);
+                    let grant = self.mech.on_activate(now, req.core, key);
+                    self.rltl.on_activate(now, key);
+                    self.reuse.on_activate(key);
+                    self.dev.issue(
+                        Command { kind, loc: req.loc },
+                        now,
+                        grant.trcd,
+                        grant.tras,
+                        req.core,
+                    );
+                    self.stats.acts += 1;
+                    if grant.reduced {
+                        self.stats.acts_reduced += 1;
+                    }
+                    self.rank_opened(req.loc.rank as usize, now);
+                    self.class_of.entry(id).or_insert(ReqClass::Miss);
+                }
+                CommandKind::Precharge => {
+                    let mut loc = req.loc;
+                    loc.row = self.dev.bank(&req.loc).open_row().unwrap();
+                    self.issue_precharge(now, loc);
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    /// Pass 3 (closed-row policy): eager precharge of any open bank with
+    /// no pending hits, using the spare command slot. tRAS reductions make
+    /// this PRE legal earlier — ChargeCache's tRAS benefit under the
+    /// closed policy.
+    fn eager_precharge(&mut self, now: u64, hit_map_fresh: &mut bool) {
+        let (nranks, nbanks) = (self.dev.ranks.len(), self.banks_per_rank);
+        for ri in 0..nranks {
+            if self.ref_drain[ri] {
+                continue;
+            }
+            for bi in 0..nbanks {
+                let open = self.dev.ranks[ri].banks[bi].open_row();
+                if let Some(open) = open {
+                    let loc = Loc {
+                        channel: 0,
+                        rank: ri as u32,
+                        bank: bi as u32,
+                        row: open,
+                        col: 0,
+                    };
+                    if !self.open_row_has_hit(ri as u32, bi as u32, hit_map_fresh)
+                        && self.dev.can_issue(CommandKind::Precharge, &loc, now)
+                    {
+                        self.issue_precharge(now, loc);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Finalize open-bank accounting at end of simulation.
+    pub fn finalize(&mut self, now: u64) {
+        for rank in &self.dev.ranks {
+            for b in &rank.banks {
+                if b.open_row().is_some() {
+                    self.stats.bank_open_cycles += now.saturating_sub(b.act_cycle);
+                }
+            }
+        }
+        for r in 0..self.rank_open.len() {
+            if self.rank_open[r] > 0 {
+                self.rank_active_cycles[r] +=
+                    now.saturating_sub(self.rank_active_since[r]);
+                self.rank_active_since[r] = now;
+            }
+        }
+    }
+
+    /// Reset statistics (end of warmup). Mechanism state is retained —
+    /// that is the point of warmup.
+    pub fn reset_stats(&mut self) {
+        self.stats = McStats::default();
+        self.rltl.reset_counts();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn req(id: u64, bank: u32, row: u32, col: u32, write: bool) -> Request {
+        Request {
+            id,
+            core: 0,
+            loc: Loc { channel: 0, rank: 0, bank, row, col },
+            is_write: write,
+            arrived: 0,
+        }
+    }
+
+    fn run_until_complete(mc: &mut MemController, mut now: u64, deadline: u64) -> Vec<Completion> {
+        let mut done = Vec::new();
+        while now < deadline {
+            mc.tick(now, &mut done);
+            now += 1;
+        }
+        done
+    }
+
+    #[test]
+    fn single_read_completes_with_expected_latency() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        assert!(mc.enqueue(req(1, 0, 5, 3, false), 0));
+        let done = run_until_complete(&mut mc, 0, 200);
+        assert_eq!(done.len(), 1);
+        // ACT@0 -> RD@tRCD(11) -> data at 11 + CL(11) + BL(4) = 26.
+        assert_eq!(done[0].ready, 26);
+        assert_eq!(mc.stats.acts, 1);
+        assert_eq!(mc.stats.row_misses, 1);
+    }
+
+    #[test]
+    fn row_hits_are_prioritized_and_counted() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        mc.enqueue(req(1, 0, 5, 0, false), 0);
+        mc.enqueue(req(2, 0, 5, 1, false), 0);
+        mc.enqueue(req(3, 0, 9, 0, false), 0); // conflicting row
+        let done = run_until_complete(&mut mc, 0, 400);
+        assert_eq!(done.len(), 3);
+        assert_eq!(mc.stats.row_hits, 1);
+        assert_eq!(mc.stats.row_misses, 1);
+        assert_eq!(mc.stats.row_conflicts, 1);
+        // Hit (id 2) must finish before the conflicting row 9 (id 3).
+        let pos =
+            |id: u64| done.iter().position(|c| c.req_id == id).unwrap();
+        assert!(pos(2) < pos(3));
+    }
+
+    #[test]
+    fn chargecache_speeds_up_reopened_row() {
+        let c = cfg();
+        // Baseline: open row 5, conflict to row 9, re-open row 5.
+        let mut run = |kind: MechanismKind| -> u64 {
+            let mut mc = MemController::new(&c, kind);
+            mc.enqueue(req(1, 0, 5, 0, false), 0);
+            let _ = run_until_complete(&mut mc, 0, 400);
+            mc.enqueue(req(2, 0, 9, 0, false), 400);
+            let _ = run_until_complete(&mut mc, 400, 800);
+            mc.enqueue(req(3, 0, 5, 1, false), 800);
+            let done = run_until_complete(&mut mc, 800, 1600);
+            assert_eq!(done.len(), 1);
+            done[0].ready
+        };
+        let base = run(MechanismKind::Baseline);
+        let cc = run(MechanismKind::ChargeCache);
+        // Request 3 re-activates row 5, which ChargeCache has cached
+        // (inserted at its precharge) -> 4 cycles faster tRCD.
+        assert_eq!(base - cc, 4);
+    }
+
+    #[test]
+    fn write_drain_hysteresis() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        // Fill write queue past the high watermark.
+        for i in 0..49 {
+            assert!(mc.enqueue(req(i, (i % 8) as u32, (i / 8) as u32, 0, true), 0));
+        }
+        let _ = run_until_complete(&mut mc, 0, 4000);
+        assert!(mc.stats.writes > 0, "drain must have issued writes");
+        assert!(mc.occupancy().1 <= c.mc.write_lo_watermark);
+    }
+
+    #[test]
+    fn read_forwarded_from_write_queue() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        mc.enqueue(req(1, 0, 5, 3, true), 0);
+        mc.enqueue(req(2, 0, 5, 3, false), 0);
+        let mut done = Vec::new();
+        mc.tick(0, &mut done);
+        mc.tick(1, &mut done);
+        assert!(done.iter().any(|c| c.req_id == 2));
+        assert_eq!(mc.stats.wq_forwards, 1);
+    }
+
+    #[test]
+    fn refresh_happens_on_schedule() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut done = Vec::new();
+        for now in 0..(c.timing.trefi * 3 + 100) {
+            mc.tick(now, &mut done);
+        }
+        assert_eq!(mc.stats.refreshes, 3);
+    }
+
+    #[test]
+    fn refresh_drains_open_banks_first() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        mc.enqueue(req(1, 0, 5, 0, false), 0);
+        let mut done = Vec::new();
+        for now in 0..(c.timing.trefi + c.timing.trfc + 200) {
+            mc.tick(now, &mut done);
+        }
+        assert_eq!(mc.stats.refreshes, 1);
+        assert!(mc.stats.precharges >= 1);
+    }
+
+    #[test]
+    fn closed_policy_precharges_idle_banks_eagerly() {
+        let mut c = cfg();
+        c.mc.row_policy = RowPolicy::Closed;
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        mc.enqueue(req(1, 0, 5, 0, false), 0);
+        let _ = run_until_complete(&mut mc, 0, 200);
+        // The eager-idle pass closed the bank once no hits were pending.
+        assert!(mc.dev.bank(&Loc { channel: 0, rank: 0, bank: 0, row: 5, col: 0 })
+            .is_idle_closed());
+        assert_eq!(mc.stats.precharges, 1);
+    }
+
+    #[test]
+    fn closed_policy_keeps_row_open_while_hits_pending() {
+        let mut c = cfg();
+        c.mc.row_policy = RowPolicy::Closed;
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        mc.enqueue(req(1, 0, 5, 0, false), 0);
+        mc.enqueue(req(2, 0, 5, 1, false), 0);
+        let mut done = Vec::new();
+        for now in 0..18 {
+            mc.tick(now, &mut done);
+        }
+        // Second hit still queued or just served: row must not have been
+        // precharged between the two column commands.
+        assert_eq!(mc.stats.precharges, 0);
+        assert_eq!(mc.stats.row_hits + mc.stats.row_misses, 2);
+    }
+
+    #[test]
+    fn rltl_tracks_reopens_through_controller() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        mc.enqueue(req(1, 0, 5, 0, false), 0);
+        let _ = run_until_complete(&mut mc, 0, 300);
+        mc.enqueue(req(2, 0, 9, 0, false), 300); // forces PRE of row 5
+        let _ = run_until_complete(&mut mc, 300, 600);
+        mc.enqueue(req(3, 0, 5, 0, false), 600); // re-open row 5
+        let _ = run_until_complete(&mut mc, 600, 900);
+        assert_eq!(mc.rltl.activations, 3);
+        assert!(mc.rltl.fraction_at_ms(1.0) > 0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Memory request queues (64-entry read + write queues per channel).
+
+use crate::dram::command::Loc;
+
+/// A memory request as seen by the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    /// Globally unique id (completion matching).
+    pub id: u64,
+    /// Issuing core.
+    pub core: u32,
+    pub loc: Loc,
+    pub is_write: bool,
+    /// Bus cycle the request entered the controller.
+    pub arrived: u64,
+}
+
+/// FIFO-ordered request queue with capacity; FR-FCFS scans it in arrival
+/// order so "oldest first" falls out of iteration order.
+#[derive(Debug, Clone)]
+pub struct RequestQueue {
+    items: Vec<Request>,
+    cap: usize,
+}
+
+impl RequestQueue {
+    pub fn new(cap: usize) -> Self {
+        Self { items: Vec::with_capacity(cap), cap }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.cap
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.is_full() {
+            return false;
+        }
+        self.items.push(req);
+        true
+    }
+
+    /// Remove by position (after the scheduler issued its column command).
+    pub fn remove(&mut self, idx: usize) -> Request {
+        self.items.remove(idx)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.items.iter()
+    }
+
+    /// Index access in arrival order (scheduler scans by position).
+    pub fn get(&self, idx: usize) -> Request {
+        self.items[idx]
+    }
+
+    /// Any queued request that hits `row` open in the same bank?
+    pub fn has_row_hit(&self, loc: &Loc, row: u32) -> bool {
+        self.items
+            .iter()
+            .any(|r| r.loc.rank == loc.rank && r.loc.bank == loc.bank && r.loc.row == row)
+    }
+
+    /// Any queued request (other than index `skip`) targeting the same
+    /// bank and row? Used by the closed-row policy to pick RDA vs RD.
+    pub fn another_hit_exists(&self, skip: usize, loc: &Loc) -> bool {
+        self.items.iter().enumerate().any(|(i, r)| {
+            i != skip
+                && r.loc.rank == loc.rank
+                && r.loc.bank == loc.bank
+                && r.loc.row == loc.row
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, bank: u32, row: u32) -> Request {
+        Request {
+            id,
+            core: 0,
+            loc: Loc { channel: 0, rank: 0, bank, row, col: 0 },
+            is_write: false,
+            arrived: id,
+        }
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut q = RequestQueue::new(2);
+        assert!(q.push(req(0, 0, 0)));
+        assert!(q.push(req(1, 0, 0)));
+        assert!(!q.push(req(2, 0, 0)));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn row_hit_detection() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(0, 1, 10));
+        q.push(req(1, 1, 11));
+        let probe = Loc { channel: 0, rank: 0, bank: 1, row: 0, col: 0 };
+        assert!(q.has_row_hit(&probe, 10));
+        assert!(q.has_row_hit(&probe, 11));
+        assert!(!q.has_row_hit(&probe, 12));
+    }
+
+    #[test]
+    fn another_hit_skips_self() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(0, 1, 10));
+        q.push(req(1, 1, 10));
+        let loc = Loc { channel: 0, rank: 0, bank: 1, row: 10, col: 0 };
+        assert!(q.another_hit_exists(0, &loc));
+        let mut q2 = RequestQueue::new(8);
+        q2.push(req(0, 1, 10));
+        assert!(!q2.another_hit_exists(0, &loc));
+    }
+
+    #[test]
+    fn fifo_order_preserved_on_remove() {
+        let mut q = RequestQueue::new(8);
+        for i in 0..4 {
+            q.push(req(i, 0, i as u32));
+        }
+        let r = q.remove(1);
+        assert_eq!(r.id, 1);
+        let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 3]);
+    }
+}

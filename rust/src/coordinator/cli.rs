@@ -1,0 +1,134 @@
+//! Minimal CLI argument parser (offline build — no clap): a subcommand
+//! followed by `--key value` / `--flag` options.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut opts = HashMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("expected --option, got {a:?}"))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    opts.insert(key, it.next().unwrap());
+                }
+                _ => flags.push(key),
+            }
+        }
+        Ok(Self { command, opts, flags })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(name, default as u64)? as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Parse a mechanism name.
+    pub fn mechanism(&self, default: crate::latency::MechanismKind) -> Result<crate::latency::MechanismKind> {
+        use crate::latency::MechanismKind as M;
+        match self.get("mechanism") {
+            None => Ok(default),
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "baseline" | "base" => Ok(M::Baseline),
+                "chargecache" | "cc" => Ok(M::ChargeCache),
+                "nuat" => Ok(M::Nuat),
+                "cc+nuat" | "chargecachenuat" | "combined" => Ok(M::ChargeCacheNuat),
+                "lldram" | "ll-dram" | "ll" => Ok(M::LlDram),
+                other => bail!("unknown mechanism {other:?}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::MechanismKind;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_opts_flags() {
+        let a = args("fig4 --cores 8 --insts 100000 --quick");
+        assert_eq!(a.command, "fig4");
+        assert_eq!(a.get_u64("cores", 1).unwrap(), 8);
+        assert_eq!(a.get_u64("insts", 0).unwrap(), 100000);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("simulate");
+        assert_eq!(a.get_u64("cores", 1).unwrap(), 1);
+        assert_eq!(a.get_str("workload", "mcf"), "mcf");
+        assert_eq!(a.get_f64("duration", 1.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn mechanism_aliases() {
+        assert_eq!(
+            args("x --mechanism cc").mechanism(MechanismKind::Baseline).unwrap(),
+            MechanismKind::ChargeCache
+        );
+        assert_eq!(
+            args("x --mechanism ll-dram").mechanism(MechanismKind::Baseline).unwrap(),
+            MechanismKind::LlDram
+        );
+        assert!(args("x --mechanism bogus").mechanism(MechanismKind::Baseline).is_err());
+    }
+
+    #[test]
+    fn bad_option_errors() {
+        assert!(Args::parse(vec!["cmd".into(), "oops".into()]).is_err());
+        assert!(args("x --insts abc").get_u64("insts", 0).is_err());
+    }
+}

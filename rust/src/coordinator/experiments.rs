@@ -1,0 +1,349 @@
+//! The paper's experiments, each mapped to a function that produces the
+//! rows of the corresponding figure/table (DESIGN.md §5 index).
+
+use std::collections::HashMap;
+
+use crate::analysis::rltl::RLTL_INTERVALS_MS;
+use crate::config::SystemConfig;
+use crate::latency::MechanismKind;
+use crate::sim::stats::weighted_speedup;
+use crate::sim::{SimResult, System};
+use crate::trace::{profile::multicore_mix, PROFILES};
+
+use super::runner::parallel_map;
+
+/// Simulation horizon knobs (the paper runs 1 B instructions; we scale
+/// down — RLTL/RMPKC are stationary properties of the generators).
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentScale {
+    /// Instructions per core in the measured region.
+    pub insts_per_core: u64,
+    /// Warmup CPU cycles.
+    pub warmup_cycles: u64,
+    /// Number of eight-core mixes (paper: 20).
+    pub mixes: usize,
+}
+
+impl Default for ExperimentScale {
+    fn default() -> Self {
+        Self { insts_per_core: 500_000, warmup_cycles: 250_000, mixes: 20 }
+    }
+}
+
+impl ExperimentScale {
+    pub fn quick() -> Self {
+        Self { insts_per_core: 60_000, warmup_cycles: 30_000, mixes: 4 }
+    }
+
+    pub fn single_cfg(&self) -> SystemConfig {
+        let mut cfg = SystemConfig::single_core();
+        cfg.insts_per_core = self.insts_per_core;
+        cfg.warmup_cpu_cycles = self.warmup_cycles;
+        cfg
+    }
+
+    pub fn eight_cfg(&self) -> SystemConfig {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.insts_per_core = self.insts_per_core;
+        cfg.warmup_cpu_cycles = self.warmup_cycles;
+        // Multiprogrammed runs measure over a fixed time window (see
+        // SystemConfig::measure_cycles): ~10 cycles per target instruction
+        // gives every core a deep window at typical shared-system IPCs.
+        cfg.measure_cycles = Some(self.insts_per_core * 10);
+        cfg
+    }
+}
+
+/// One row of Fig. 4: per-mechanism speedup over baseline.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub workload: String,
+    pub rmpkc: f64,
+    /// (mechanism label, speedup, reduced-activation fraction).
+    pub speedups: Vec<(&'static str, f64, f64)>,
+}
+
+/// Results of the full evaluation suite (single + eight core, all
+/// mechanisms). Fig. 4 and Fig. 5 are both views over this.
+pub struct SuiteResults {
+    /// (workload, mechanism) -> result, single-core.
+    pub single: HashMap<(String, &'static str), SimResult>,
+    /// (mix, mechanism) -> result, eight-core.
+    pub eight: HashMap<(usize, &'static str), SimResult>,
+    /// Per-profile alone IPC (single-core baseline), for weighted speedup.
+    pub alone_ipc: HashMap<String, f64>,
+    pub scale: ExperimentScale,
+}
+
+const MECHS: [MechanismKind; 5] = [
+    MechanismKind::Baseline,
+    MechanismKind::ChargeCache,
+    MechanismKind::Nuat,
+    MechanismKind::ChargeCacheNuat,
+    MechanismKind::LlDram,
+];
+
+/// Run every single-core (workload x mechanism) combination in parallel.
+pub fn run_single_suite(scale: ExperimentScale) -> HashMap<(String, &'static str), SimResult> {
+    let jobs: Vec<(usize, MechanismKind)> = (0..PROFILES.len())
+        .flat_map(|w| MECHS.iter().map(move |&m| (w, m)))
+        .collect();
+    let results = parallel_map(jobs.len(), |i| {
+        let (w, mech) = jobs[i];
+        let cfg = scale.single_cfg();
+        System::new(&cfg, mech, &[&PROFILES[w]]).run()
+    });
+    jobs.iter()
+        .zip(results)
+        .map(|((w, m), r)| ((PROFILES[*w].name.to_string(), m.label()), r))
+        .collect()
+}
+
+/// Run every eight-core (mix x mechanism) combination in parallel.
+pub fn run_eight_suite(scale: ExperimentScale) -> HashMap<(usize, &'static str), SimResult> {
+    let jobs: Vec<(usize, MechanismKind)> = (0..scale.mixes)
+        .flat_map(|mix| MECHS.iter().map(move |&m| (mix, m)))
+        .collect();
+    let results = parallel_map(jobs.len(), |i| {
+        let (mix, mech) = jobs[i];
+        let cfg = scale.eight_cfg();
+        System::new_mix(&cfg, mech, mix).run()
+    });
+    jobs.iter().zip(results).map(|((mix, m), r)| ((*mix, m.label()), r)).collect()
+}
+
+/// Full suite (single + eight core + alone-IPC table).
+pub fn run_suite(scale: ExperimentScale, eight: bool) -> SuiteResults {
+    let single = run_single_suite(scale);
+    let alone_ipc = single
+        .iter()
+        .filter(|((_, m), _)| *m == MechanismKind::Baseline.label())
+        .map(|((w, _), r)| (w.clone(), r.ipc()))
+        .collect();
+    let eight_map = if eight { run_eight_suite(scale) } else { HashMap::new() };
+    SuiteResults { single, eight: eight_map, alone_ipc, scale }
+}
+
+impl SuiteResults {
+    /// Fig. 4a rows, sorted ascending by baseline RMPKC (paper's x-axis).
+    pub fn fig4a(&self) -> Vec<Fig4Row> {
+        let mut rows: Vec<Fig4Row> = PROFILES
+            .iter()
+            .map(|p| {
+                let base = &self.single[&(p.name.to_string(), "Baseline")];
+                let speedups = MECHS[1..]
+                    .iter()
+                    .map(|m| {
+                        let r = &self.single[&(p.name.to_string(), m.label())];
+                        (m.label(), r.ipc() / base.ipc(), r.reduced_act_fraction())
+                    })
+                    .collect();
+                Fig4Row {
+                    workload: p.name.to_string(),
+                    rmpkc: base.rmpkc(),
+                    speedups,
+                }
+            })
+            .collect();
+        rows.sort_by(|a, b| a.rmpkc.partial_cmp(&b.rmpkc).unwrap());
+        rows
+    }
+
+    /// Fig. 4b rows per mix: weighted-speedup ratio vs baseline.
+    pub fn fig4b(&self) -> Vec<Fig4Row> {
+        let mut rows = Vec::new();
+        for mix in 0..self.scale.mixes {
+            let profiles = multicore_mix(mix, 8);
+            let alone: Vec<f64> = profiles
+                .iter()
+                .map(|p| self.alone_ipc[&p.name.to_string()])
+                .collect();
+            let base = &self.eight[&(mix, "Baseline")];
+            let ws_base = weighted_speedup(&base.core_ipc, &alone);
+            let speedups = MECHS[1..]
+                .iter()
+                .map(|m| {
+                    let r = &self.eight[&(mix, m.label())];
+                    (
+                        m.label(),
+                        weighted_speedup(&r.core_ipc, &alone) / ws_base,
+                        r.reduced_act_fraction(),
+                    )
+                })
+                .collect();
+            rows.push(Fig4Row {
+                workload: format!("mix{mix:02}"),
+                rmpkc: base.rmpkc(),
+                speedups,
+            });
+        }
+        rows.sort_by(|a, b| a.rmpkc.partial_cmp(&b.rmpkc).unwrap());
+        rows
+    }
+
+    /// Fig. 5: DRAM energy reduction vs baseline: (workload, mech, frac).
+    pub fn fig5(&self, eight: bool) -> Vec<(String, Vec<(&'static str, f64)>)> {
+        let mut out = Vec::new();
+        if eight {
+            for mix in 0..self.scale.mixes {
+                let base = self.eight[&(mix, "Baseline")].energy_per_inst();
+                let rows = MECHS[1..]
+                    .iter()
+                    .map(|m| {
+                        let e = self.eight[&(mix, m.label())].energy_per_inst();
+                        (m.label(), 1.0 - e / base)
+                    })
+                    .collect();
+                out.push((format!("mix{mix:02}"), rows));
+            }
+        } else {
+            for p in PROFILES.iter() {
+                let base = self.single[&(p.name.to_string(), "Baseline")].energy_per_inst();
+                let rows = MECHS[1..]
+                    .iter()
+                    .map(|m| {
+                        let e = self.single[&(p.name.to_string(), m.label())].energy_per_inst();
+                        (m.label(), 1.0 - e / base)
+                    })
+                    .collect();
+                out.push((p.name.to_string(), rows));
+            }
+        }
+        out
+    }
+}
+
+/// Fig. 1: average t-RLTL over the tracked intervals.
+/// Returns (interval_ms, avg_single, avg_eight).
+pub fn fig1(scale: ExperimentScale) -> Vec<(f64, f64, f64)> {
+    // Single-core: baseline runs of all 22 workloads.
+    let single = parallel_map(PROFILES.len(), |w| {
+        let cfg = scale.single_cfg();
+        System::new(&cfg, MechanismKind::Baseline, &[&PROFILES[w]]).run()
+    });
+    let eight = parallel_map(scale.mixes, |mix| {
+        let cfg = scale.eight_cfg();
+        System::new_mix(&cfg, MechanismKind::Baseline, mix).run()
+    });
+    let avg = |rs: &[SimResult], i: usize| -> f64 {
+        // Activation-weighted mean across workloads (matches the paper's
+        // aggregate counting).
+        let acts: u64 = rs.iter().map(|r| r.acts()).sum();
+        if acts == 0 {
+            return 0.0;
+        }
+        rs.iter().map(|r| r.rltl[i] * r.acts() as f64).sum::<f64>() / acts as f64
+    };
+    RLTL_INTERVALS_MS
+        .iter()
+        .enumerate()
+        .map(|(i, &ms)| (ms, avg(&single, i), avg(&eight, i)))
+        .collect()
+}
+
+/// Sensitivity: ChargeCache capacity sweep (entries per core).
+pub fn sweep_capacity(scale: ExperimentScale, entries: &[usize]) -> Vec<(usize, f64)> {
+    sweep_eight(scale, entries, |cfg, &e| cfg.chargecache.entries_per_core = e)
+}
+
+/// Sensitivity: caching duration sweep. The legal tRCD/tRAS reduction at
+/// each duration comes from the circuit layer (timing table) — longer
+/// durations keep rows cached longer but must assume more leakage.
+pub fn sweep_duration(scale: ExperimentScale, durations_ms: &[f64]) -> Vec<(f64, f64)> {
+    let (table, _) = crate::runtime::charge_model::timing_table_or_analytic(85.0, 1.25);
+    sweep_eight(scale, durations_ms, |cfg, &d| {
+        let (rcd, ras) = table.reduction_cycles(d * 1e-3);
+        cfg.chargecache.duration_ms = d;
+        cfg.chargecache.trcd_reduction = rcd.min(cfg.timing.trcd - 2);
+        cfg.chargecache.tras_reduction = ras.min(cfg.timing.tras - 2);
+    })
+}
+
+/// Sensitivity: temperature sweep at fixed 1 ms duration (paper Sec. 8.3:
+/// ChargeCache works even at worst-case temperature).
+pub fn sweep_temperature(scale: ExperimentScale, temps_c: &[f64]) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    for &t in temps_c {
+        let (table, _) = crate::runtime::charge_model::timing_table_or_analytic(t, 1.25);
+        let rows = sweep_eight(scale, &[t], |cfg, &temp| {
+            let (rcd, ras) = table.reduction_cycles(1e-3);
+            cfg.temperature_c = temp;
+            cfg.chargecache.trcd_reduction = rcd.min(cfg.timing.trcd - 2);
+            cfg.chargecache.tras_reduction = ras.min(cfg.timing.tras - 2);
+        });
+        out.push(rows[0]);
+    }
+    out
+}
+
+/// Shared sweep machinery: average eight-core CC speedup per point.
+fn sweep_eight<P: Sync + Copy>(
+    scale: ExperimentScale,
+    points: &[P],
+    apply: impl Fn(&mut SystemConfig, &P) + Sync,
+) -> Vec<(P, f64)>
+where
+    Vec<(P, f64)>: FromIterator<(P, f64)>,
+{
+    let jobs: Vec<(usize, usize, bool)> = (0..points.len())
+        .flat_map(|p| (0..scale.mixes).flat_map(move |m| [(p, m, false), (p, m, true)]))
+        .collect();
+    let results = parallel_map(jobs.len(), |i| {
+        let (p, mix, cc) = jobs[i];
+        let mut cfg = scale.eight_cfg();
+        apply(&mut cfg, &points[p]);
+        let kind = if cc { MechanismKind::ChargeCache } else { MechanismKind::Baseline };
+        System::new_mix(&cfg, kind, mix).run()
+    });
+    let mut by_job: HashMap<(usize, usize, bool), SimResult> = HashMap::new();
+    for (j, r) in jobs.iter().zip(results) {
+        by_job.insert(*j, r);
+    }
+    points
+        .iter()
+        .enumerate()
+        .map(|(p, &point)| {
+            let mut speedups = Vec::new();
+            for mix in 0..scale.mixes {
+                let base = &by_job[&(p, mix, false)];
+                let cc = &by_job[&(p, mix, true)];
+                // Sum of per-core IPCs over same alone-set cancels into
+                // throughput ratio; adequate for sweep *trends*.
+                let tb: f64 = base.core_ipc.iter().sum();
+                let tc: f64 = cc.core_ipc.iter().sum();
+                speedups.push(tc / tb);
+            }
+            let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+            (point, avg)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_scale_configs() {
+        let s = ExperimentScale::quick();
+        assert_eq!(s.single_cfg().cpu.cores, 1);
+        assert_eq!(s.eight_cfg().cpu.cores, 8);
+        assert_eq!(s.eight_cfg().dram.channels, 2);
+    }
+
+    #[test]
+    fn mini_suite_has_sane_shape() {
+        // Tiny horizon: structural test, not a results test.
+        let scale = ExperimentScale { insts_per_core: 5_000, warmup_cycles: 2_000, mixes: 1 };
+        let suite = run_suite(scale, false);
+        assert_eq!(suite.single.len(), PROFILES.len() * 5);
+        let rows = suite.fig4a();
+        assert_eq!(rows.len(), PROFILES.len());
+        // Sorted by RMPKC.
+        for w in rows.windows(2) {
+            assert!(w[0].rmpkc <= w[1].rmpkc);
+        }
+        // All four non-baseline mechanisms present per row.
+        assert_eq!(rows[0].speedups.len(), 4);
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment coordinator: runs the paper's evaluation matrix (workload x
+//! mechanism x configuration) in parallel worker threads and renders each
+//! figure/table of the paper.
+
+pub mod cli;
+pub mod experiments;
+pub mod figures;
+pub mod runner;
+
+pub use experiments::{ExperimentScale, Fig4Row, SuiteResults};
+pub use runner::parallel_map;

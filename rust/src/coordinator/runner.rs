@@ -1,0 +1,74 @@
+//! Minimal parallel runner (std::thread::scope work queue; the build is
+//! offline so no rayon/tokio — simulations are embarrassingly parallel and
+//! coarse-grained, so a simple atomic work index is optimal anyway).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(0..n)` across `threads` workers, preserving index order in the
+/// returned Vec. `f` must be pure w.r.t. the index.
+pub fn parallel_map_threads<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *out[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// [`parallel_map_threads`] with the machine's available parallelism.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    parallel_map_threads(n, threads, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let v = parallel_map_threads(100, 8, |i| i * 3);
+        assert_eq!(v, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn works_single_threaded_and_empty() {
+        assert_eq!(parallel_map_threads(3, 1, |i| i), vec![0, 1, 2]);
+        let empty: Vec<usize> = parallel_map_threads(0, 4, |i| i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn heavy_fanout() {
+        let v = parallel_map(64, |i| {
+            // Small CPU-bound task.
+            (0..1000u64).fold(i as u64, |a, b| a.wrapping_add(b * b))
+        });
+        assert_eq!(v.len(), 64);
+        let expect = (0..1000u64).fold(7u64, |a, b| a.wrapping_add(b * b));
+        assert_eq!(v[7], expect);
+    }
+}

@@ -1,0 +1,15 @@
+//! Trace-driven CPU front-end: out-of-order core model (128-entry window,
+//! 3-wide, 8 MSHRs/core), shared LLC (4 MB, 16-way), and the MSHR file.
+//!
+//! The core model mirrors Ramulator's trace-driven O3 core: non-memory
+//! instructions retire at full width; loads occupy a window slot until
+//! their data returns (LLC hit latency or DRAM round trip); stores are
+//! posted (retire immediately, dirty evictions generate DRAM writes).
+
+pub mod cache;
+pub mod core_model;
+pub mod mshr;
+
+pub use cache::Llc;
+pub use core_model::{Core, CoreStats};
+pub use mshr::MshrFile;

@@ -1,0 +1,93 @@
+//! Miss-status holding registers: track outstanding LLC misses per core,
+//! merging secondary misses to the same line.
+
+use std::collections::HashMap;
+
+/// MSHR file for one core (Table 1: 8 MSHRs/core).
+#[derive(Debug, Clone)]
+pub struct MshrFile {
+    /// line address -> window slots (inst sequence numbers) waiting on it.
+    entries: HashMap<u64, Vec<u64>>,
+    cap: usize,
+    pub merges: u64,
+}
+
+impl MshrFile {
+    pub fn new(cap: usize) -> Self {
+        Self { entries: HashMap::new(), cap, merges: 0 }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True if a miss to `line` is already outstanding.
+    pub fn contains(&self, line: u64) -> bool {
+        self.entries.contains_key(&line)
+    }
+
+    /// Allocate (primary miss) or merge (secondary). Returns:
+    /// * `Some(true)`  — primary miss: caller must send a memory request.
+    /// * `Some(false)` — merged into an existing entry.
+    /// * `None`        — MSHR file full; caller must stall.
+    pub fn allocate(&mut self, line: u64, seq: u64) -> Option<bool> {
+        if let Some(waiters) = self.entries.get_mut(&line) {
+            waiters.push(seq);
+            self.merges += 1;
+            return Some(false);
+        }
+        if self.is_full() {
+            return None;
+        }
+        self.entries.insert(line, vec![seq]);
+        Some(true)
+    }
+
+    /// Fill: release the entry, returning every waiting window slot.
+    pub fn fill(&mut self, line: u64) -> Vec<u64> {
+        self.entries.remove(&line).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primary_and_secondary_misses() {
+        let mut m = MshrFile::new(2);
+        assert_eq!(m.allocate(100, 1), Some(true));
+        assert_eq!(m.allocate(100, 2), Some(false)); // merged
+        assert_eq!(m.merges, 1);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn capacity_blocks_new_lines_but_not_merges() {
+        let mut m = MshrFile::new(2);
+        assert_eq!(m.allocate(1, 1), Some(true));
+        assert_eq!(m.allocate(2, 2), Some(true));
+        assert_eq!(m.allocate(3, 3), None); // full
+        assert_eq!(m.allocate(1, 4), Some(false)); // merge still fine
+    }
+
+    #[test]
+    fn fill_wakes_all_waiters() {
+        let mut m = MshrFile::new(2);
+        m.allocate(9, 1);
+        m.allocate(9, 2);
+        m.allocate(9, 3);
+        let mut w = m.fill(9);
+        w.sort_unstable();
+        assert_eq!(w, vec![1, 2, 3]);
+        assert!(m.is_empty());
+    }
+}

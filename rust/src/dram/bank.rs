@@ -1,0 +1,207 @@
+//! Per-bank state machine with incremental earliest-issue timestamps.
+
+use crate::config::Timing;
+
+/// Bank FSM state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankState {
+    /// All bitlines precharged; only ACT is meaningful.
+    Closed,
+    /// A row is latched in the sense amplifiers.
+    Opened { row: u32 },
+}
+
+/// One DRAM bank: state + the earliest bus cycle each command class may
+/// issue at. Timestamps are pushed forward by each issued command according
+/// to the DDR3 constraint graph; legality is then a single comparison.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    pub state: BankState,
+    /// Earliest cycle an ACT may issue (tRP / tRFC / tRC chains).
+    pub act_at: u64,
+    /// Earliest cycle a PRE may issue (tRAS / tRTP / write recovery).
+    pub pre_at: u64,
+    /// Earliest cycle a RD may issue (tRCD).
+    pub rd_at: u64,
+    /// Earliest cycle a WR may issue (tRCD).
+    pub wr_at: u64,
+    /// Cycle of the most recent ACT (for tRC accounting / stats).
+    pub act_cycle: u64,
+    /// Pending auto-precharge: the bank closes itself at this cycle.
+    pub autopre_at: Option<u64>,
+    /// Core that owns the current activation (HCRAC insertion target).
+    pub open_owner: u32,
+    /// Effective tRAS applied at the last ACT (mechanism may reduce it).
+    pub tras_eff: u64,
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Self {
+            state: BankState::Closed,
+            act_at: 0,
+            pre_at: 0,
+            rd_at: 0,
+            wr_at: 0,
+            act_cycle: 0,
+            autopre_at: None,
+            open_owner: 0,
+            tras_eff: 0,
+        }
+    }
+}
+
+impl Bank {
+    /// Currently open row, if any (auto-precharge must be resolved first
+    /// by [`Bank::tick_autopre`]).
+    pub fn open_row(&self) -> Option<u32> {
+        match self.state {
+            BankState::Opened { row } => Some(row),
+            BankState::Closed => None,
+        }
+    }
+
+    /// Apply an ACT at `now` with effective tRCD/tRAS (mechanism-reduced).
+    pub fn activate(&mut self, now: u64, row: u32, trcd_eff: u64, tras_eff: u64, t: &Timing, owner: u32) {
+        debug_assert!(now >= self.act_at, "ACT issued before legal cycle");
+        debug_assert_eq!(self.state, BankState::Closed);
+        self.state = BankState::Opened { row };
+        self.act_cycle = now;
+        self.rd_at = now + trcd_eff;
+        self.wr_at = now + trcd_eff;
+        self.pre_at = now + tras_eff;
+        // Same-bank ACT-to-ACT must respect tRC even with reduced tRAS
+        // chains (the next ACT also waits for PRE + tRP).
+        self.act_at = now + tras_eff + t.trp;
+        self.open_owner = owner;
+        self.tras_eff = tras_eff;
+        self.autopre_at = None;
+    }
+
+    /// Apply a column read at `now`. `autopre` models RDA (closed-row).
+    pub fn read(&mut self, now: u64, t: &Timing, autopre: bool) {
+        debug_assert!(now >= self.rd_at, "RD issued before legal cycle");
+        // Read-to-precharge: PRE at >= now + tRTP (and still >= tRAS chain).
+        self.pre_at = self.pre_at.max(now + t.trtp);
+        if autopre {
+            self.autopre_at = Some(self.pre_at);
+        }
+    }
+
+    /// Apply a column write at `now`.
+    pub fn write(&mut self, now: u64, t: &Timing, autopre: bool) {
+        debug_assert!(now >= self.wr_at, "WR issued before legal cycle");
+        // Write recovery: PRE >= end of write burst + tWR.
+        self.pre_at = self.pre_at.max(now + t.cwl + t.tbl + t.twr);
+        if autopre {
+            self.autopre_at = Some(self.pre_at);
+        }
+    }
+
+    /// Apply a PRE at `now`. Returns the row that was closed.
+    pub fn precharge(&mut self, now: u64, t: &Timing) -> u32 {
+        debug_assert!(now >= self.pre_at, "PRE issued before legal cycle");
+        let row = match self.state {
+            BankState::Opened { row } => row,
+            BankState::Closed => unreachable!("PRE on closed bank"),
+        };
+        self.state = BankState::Closed;
+        self.act_at = self.act_at.max(now + t.trp);
+        self.autopre_at = None;
+        row
+    }
+
+    /// Resolve a pending auto-precharge whose time has arrived.
+    /// Returns `Some(row)` when the bank closed this call.
+    pub fn tick_autopre(&mut self, now: u64, t: &Timing) -> Option<u32> {
+        if let Some(at) = self.autopre_at {
+            if now >= at {
+                let row = self.precharge(at.max(now), t);
+                return Some(row);
+            }
+        }
+        None
+    }
+
+    /// True if the bank is closed and has no pending auto-precharge.
+    pub fn is_idle_closed(&self) -> bool {
+        self.state == BankState::Closed && self.autopre_at.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Timing {
+        Timing::default()
+    }
+
+    #[test]
+    fn act_sets_column_and_pre_windows() {
+        let mut b = Bank::default();
+        b.activate(100, 7, 11, 28, &t(), 0);
+        assert_eq!(b.open_row(), Some(7));
+        assert_eq!(b.rd_at, 111);
+        assert_eq!(b.wr_at, 111);
+        assert_eq!(b.pre_at, 128);
+        assert_eq!(b.act_at, 100 + 28 + 11); // tRC chain
+    }
+
+    #[test]
+    fn reduced_timing_act() {
+        let mut b = Bank::default();
+        b.activate(0, 1, 7, 20, &t(), 2);
+        assert_eq!(b.rd_at, 7);
+        assert_eq!(b.pre_at, 20);
+        assert_eq!(b.open_owner, 2);
+        assert_eq!(b.tras_eff, 20);
+    }
+
+    #[test]
+    fn read_extends_pre_via_trtp() {
+        let mut b = Bank::default();
+        b.activate(0, 1, 11, 28, &t(), 0);
+        // A late read pushes PRE past the tRAS limit.
+        b.read(30, &t(), false);
+        assert_eq!(b.pre_at, 36); // 30 + tRTP(6) > 28
+    }
+
+    #[test]
+    fn early_read_keeps_tras_pre_limit() {
+        let mut b = Bank::default();
+        b.activate(0, 1, 11, 28, &t(), 0);
+        b.read(11, &t(), false);
+        assert_eq!(b.pre_at, 28); // tRAS still dominates
+    }
+
+    #[test]
+    fn write_recovery_dominates_pre() {
+        let mut b = Bank::default();
+        b.activate(0, 1, 11, 28, &t(), 0);
+        b.write(11, &t(), false);
+        // 11 + CWL(8) + BL(4) + tWR(12) = 35
+        assert_eq!(b.pre_at, 35);
+    }
+
+    #[test]
+    fn precharge_closes_and_arms_trp() {
+        let mut b = Bank::default();
+        b.activate(0, 9, 11, 28, &t(), 0);
+        let row = b.precharge(28, &t());
+        assert_eq!(row, 9);
+        assert_eq!(b.state, BankState::Closed);
+        assert!(b.act_at >= 28 + 11);
+    }
+
+    #[test]
+    fn autoprecharge_resolves_at_deadline() {
+        let mut b = Bank::default();
+        b.activate(0, 3, 11, 28, &t(), 0);
+        b.read(11, &t(), true);
+        assert!(b.autopre_at.is_some());
+        assert_eq!(b.tick_autopre(27, &t()), None);
+        assert_eq!(b.tick_autopre(28, &t()), Some(3));
+        assert!(b.is_idle_closed());
+    }
+}

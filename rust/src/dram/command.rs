@@ -1,0 +1,80 @@
+//! DRAM commands and decoded addresses.
+
+/// A decoded DRAM location (cache-line granularity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Loc {
+    pub channel: u32,
+    pub rank: u32,
+    pub bank: u32,
+    pub row: u32,
+    pub col: u32,
+}
+
+impl Loc {
+    /// Flat bank index within the channel.
+    pub fn bank_in_channel(&self, banks_per_rank: usize) -> usize {
+        self.rank as usize * banks_per_rank + self.bank as usize
+    }
+}
+
+/// DRAM command kinds (all-bank refresh; per-bank REF not modeled, as in
+/// the paper's DDR3 baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommandKind {
+    Activate,
+    Precharge,
+    Read,
+    /// Read with auto-precharge (used by the closed-row policy).
+    ReadAp,
+    Write,
+    WriteAp,
+    Refresh,
+}
+
+impl CommandKind {
+    /// Is this a column (CAS) command?
+    pub fn is_column(&self) -> bool {
+        matches!(
+            self,
+            CommandKind::Read | CommandKind::ReadAp | CommandKind::Write | CommandKind::WriteAp
+        )
+    }
+    pub fn is_read(&self) -> bool {
+        matches!(self, CommandKind::Read | CommandKind::ReadAp)
+    }
+    pub fn is_write(&self) -> bool {
+        matches!(self, CommandKind::Write | CommandKind::WriteAp)
+    }
+    pub fn has_autoprecharge(&self) -> bool {
+        matches!(self, CommandKind::ReadAp | CommandKind::WriteAp)
+    }
+}
+
+/// A command bound to a location (row/col meaning depends on the kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Command {
+    pub kind: CommandKind,
+    pub loc: Loc,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification() {
+        assert!(CommandKind::Read.is_column());
+        assert!(CommandKind::WriteAp.is_column());
+        assert!(!CommandKind::Activate.is_column());
+        assert!(CommandKind::ReadAp.has_autoprecharge());
+        assert!(!CommandKind::Read.has_autoprecharge());
+        assert!(CommandKind::ReadAp.is_read());
+        assert!(CommandKind::Write.is_write());
+    }
+
+    #[test]
+    fn bank_in_channel_flattens_ranks() {
+        let loc = Loc { channel: 0, rank: 1, bank: 3, row: 0, col: 0 };
+        assert_eq!(loc.bank_in_channel(8), 11);
+    }
+}

@@ -1,0 +1,359 @@
+//! Rank and channel state: cross-bank constraints (tRRD, tFAW, tWTR,
+//! data-bus occupancy) and the all-bank refresh engine.
+
+use crate::config::{DramOrg, Timing};
+
+use super::bank::Bank;
+use super::command::{Command, CommandKind, Loc};
+
+/// Rank-level constraint state.
+#[derive(Debug, Clone)]
+pub struct Rank {
+    pub banks: Vec<Bank>,
+    /// Earliest cycle any ACT may issue in this rank (tRRD chain).
+    pub act_at: u64,
+    /// Sliding window of the last four ACT cycles (tFAW).
+    faw: [u64; 4],
+    faw_head: usize,
+    /// Number of valid entries in `faw` (gate applies only once full).
+    faw_count: usize,
+    /// Earliest cycle a RD may issue (tWTR after writes).
+    pub rd_at: u64,
+    /// Earliest cycle a WR may issue.
+    pub wr_at: u64,
+    /// Rank busy with refresh until this cycle.
+    pub ref_busy_until: u64,
+    /// Next tREFI deadline.
+    pub next_refresh_at: u64,
+    /// Monotone count of completed all-bank refreshes (NUAT anchor).
+    pub refresh_count: u64,
+}
+
+impl Rank {
+    pub fn new(banks: usize, trefi: u64) -> Self {
+        Self {
+            banks: vec![Bank::default(); banks],
+            act_at: 0,
+            faw: [0; 4],
+            faw_head: 0,
+            faw_count: 0,
+            rd_at: 0,
+            wr_at: 0,
+            ref_busy_until: 0,
+            next_refresh_at: trefi,
+            refresh_count: 0,
+        }
+    }
+
+    /// Earliest ACT cycle considering tRRD + tFAW + refresh.
+    pub fn act_allowed(&self) -> u64 {
+        // With 4 ACTs in the window, the oldest + tFAW gates the next one;
+        // `faw[faw_head]` is the oldest entry.
+        self.act_at.max(self.ref_busy_until)
+    }
+
+    /// Record an ACT for rank-level bookkeeping.
+    pub fn on_activate(&mut self, now: u64, t: &Timing) {
+        self.act_at = self.act_at.max(now + t.trrd);
+        // tFAW: the 4th-previous ACT + tFAW bounds the next ACT; the gate
+        // only exists once four real ACTs populate the window.
+        self.faw[self.faw_head] = now;
+        self.faw_head = (self.faw_head + 1) % 4;
+        if self.faw_count < 4 {
+            self.faw_count += 1;
+        }
+        if self.faw_count == 4 {
+            let oldest = self.faw[self.faw_head];
+            self.act_at = self.act_at.max(oldest + t.tfaw);
+        }
+    }
+
+    /// Record a column write: reads in this rank wait tWTR after the burst.
+    pub fn on_write(&mut self, now: u64, t: &Timing) {
+        self.rd_at = self.rd_at.max(now + t.cwl + t.tbl + t.twtr);
+    }
+
+    /// All banks idle+closed (required before REF).
+    pub fn all_closed(&self) -> bool {
+        self.banks.iter().all(|b| b.is_idle_closed())
+    }
+
+    /// Issue an all-bank refresh at `now`.
+    pub fn refresh(&mut self, now: u64, t: &Timing) {
+        debug_assert!(self.all_closed(), "REF with open banks");
+        self.ref_busy_until = now + t.trfc;
+        for b in &mut self.banks {
+            b.act_at = b.act_at.max(now + t.trfc);
+        }
+        self.next_refresh_at += t.trefi;
+        self.refresh_count += 1;
+    }
+
+    /// Refresh is due (tREFI deadline passed).
+    pub fn refresh_due(&self, now: u64) -> bool {
+        now >= self.next_refresh_at
+    }
+}
+
+/// Channel: ranks + shared command/data-bus occupancy.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub ranks: Vec<Rank>,
+    pub timing: Timing,
+    pub org: DramOrg,
+    /// Data bus busy until this cycle (one burst at a time).
+    pub data_bus_until: u64,
+    /// Column-to-column (tCCD) gate across the channel.
+    pub ccd_at: u64,
+}
+
+impl Channel {
+    pub fn new(org: &DramOrg, timing: &Timing) -> Self {
+        Self {
+            ranks: (0..org.ranks).map(|_| Rank::new(org.banks, timing.trefi)).collect(),
+            timing: timing.clone(),
+            org: org.clone(),
+            data_bus_until: 0,
+            ccd_at: 0,
+        }
+    }
+
+    pub fn bank(&self, loc: &Loc) -> &Bank {
+        &self.ranks[loc.rank as usize].banks[loc.bank as usize]
+    }
+
+    pub fn bank_mut(&mut self, loc: &Loc) -> &mut Bank {
+        &mut self.ranks[loc.rank as usize].banks[loc.bank as usize]
+    }
+
+    /// Earliest cycle `kind` may legally issue at `loc` (>= `now` check is
+    /// the caller's job; this returns the constraint bound itself).
+    pub fn earliest(&self, kind: CommandKind, loc: &Loc) -> u64 {
+        let rank = &self.ranks[loc.rank as usize];
+        let bank = &rank.banks[loc.bank as usize];
+        match kind {
+            CommandKind::Activate => bank.act_at.max(rank.act_allowed()),
+            CommandKind::Precharge => bank.pre_at.max(rank.ref_busy_until),
+            CommandKind::Read | CommandKind::ReadAp => bank
+                .rd_at
+                .max(rank.rd_at)
+                .max(self.ccd_at)
+                .max(rank.ref_busy_until),
+            CommandKind::Write | CommandKind::WriteAp => bank
+                .wr_at
+                .max(rank.wr_at)
+                .max(self.ccd_at)
+                .max(rank.ref_busy_until),
+            CommandKind::Refresh => rank.ref_busy_until,
+        }
+    }
+
+    /// Can `kind` issue at `loc` right now?
+    pub fn can_issue(&self, kind: CommandKind, loc: &Loc, now: u64) -> bool {
+        if self.earliest(kind, loc) > now {
+            return false;
+        }
+        match kind {
+            CommandKind::Activate => self.bank(loc).is_idle_closed(),
+            CommandKind::Precharge => self.bank(loc).open_row().is_some(),
+            k if k.is_column() => {
+                // Data bus must be free at burst start; a bank with a
+                // pending auto-precharge accepts no further column
+                // commands (it is logically closing).
+                let burst_start = now
+                    + if k.is_read() {
+                        self.timing.cl
+                    } else {
+                        self.timing.cwl
+                    };
+                self.bank(loc).open_row() == Some(loc.row)
+                    && self.bank(loc).autopre_at.is_none()
+                    && burst_start >= self.data_bus_until
+            }
+            CommandKind::Refresh => {
+                self.ranks[loc.rank as usize].all_closed()
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Issue `cmd` at `now` with effective ACT timings (standard timings
+    /// for everything else). Caller must have checked `can_issue`.
+    ///
+    /// Returns the data-ready cycle for reads, `None` otherwise.
+    pub fn issue(
+        &mut self,
+        cmd: Command,
+        now: u64,
+        trcd_eff: u64,
+        tras_eff: u64,
+        owner: u32,
+    ) -> Option<u64> {
+        let t = self.timing.clone();
+        let loc = cmd.loc;
+        match cmd.kind {
+            CommandKind::Activate => {
+                self.bank_mut(&loc).activate(now, loc.row, trcd_eff, tras_eff, &t, owner);
+                self.ranks[loc.rank as usize].on_activate(now, &t);
+                None
+            }
+            CommandKind::Precharge => {
+                self.bank_mut(&loc).precharge(now, &t);
+                None
+            }
+            CommandKind::Read | CommandKind::ReadAp => {
+                let ap = cmd.kind.has_autoprecharge();
+                self.bank_mut(&loc).read(now, &t, ap);
+                self.ccd_at = now + t.tccd;
+                self.data_bus_until = now + t.cl + t.tbl;
+                Some(now + t.cl + t.tbl)
+            }
+            CommandKind::Write | CommandKind::WriteAp => {
+                let ap = cmd.kind.has_autoprecharge();
+                self.bank_mut(&loc).write(now, &t, ap);
+                self.ranks[loc.rank as usize].on_write(now, &t);
+                self.ccd_at = now + t.tccd;
+                self.data_bus_until = now + t.cwl + t.tbl;
+                None
+            }
+            CommandKind::Refresh => {
+                self.ranks[loc.rank as usize].refresh(now, &t);
+                None
+            }
+        }
+    }
+
+    /// Resolve auto-precharges across the channel; calls `on_close(rank,
+    /// bank, row, owner, close_cycle, act_cycle)` for each bank that closed.
+    pub fn tick_autopre<F: FnMut(u32, u32, u32, u32, u64, u64)>(&mut self, now: u64, mut on_close: F) {
+        let t = self.timing.clone();
+        for (ri, rank) in self.ranks.iter_mut().enumerate() {
+            for (bi, bank) in rank.banks.iter_mut().enumerate() {
+                let owner = bank.open_owner;
+                let act_cycle = bank.act_cycle;
+                if let Some(row) = bank.tick_autopre(now, &t) {
+                    on_close(ri as u32, bi as u32, row, owner, now, act_cycle);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DramOrg, Timing};
+
+    fn ch() -> Channel {
+        Channel::new(&DramOrg::default(), &Timing::default())
+    }
+
+    fn loc(bank: u32, row: u32) -> Loc {
+        Loc { channel: 0, rank: 0, bank, row, col: 0 }
+    }
+
+    #[test]
+    fn act_then_read_then_pre_sequence() {
+        let mut c = ch();
+        let l = loc(0, 5);
+        assert!(c.can_issue(CommandKind::Activate, &l, 0));
+        assert!(!c.can_issue(CommandKind::Read, &l, 0));
+        c.issue(Command { kind: CommandKind::Activate, loc: l }, 0, 11, 28, 0);
+        assert!(!c.can_issue(CommandKind::Read, &l, 10));
+        assert!(c.can_issue(CommandKind::Read, &l, 11));
+        let ready = c.issue(Command { kind: CommandKind::Read, loc: l }, 11, 11, 28, 0);
+        assert_eq!(ready, Some(11 + 11 + 4));
+        assert!(!c.can_issue(CommandKind::Precharge, &l, 27));
+        assert!(c.can_issue(CommandKind::Precharge, &l, 28));
+    }
+
+    #[test]
+    fn cannot_read_wrong_row() {
+        let mut c = ch();
+        c.issue(Command { kind: CommandKind::Activate, loc: loc(0, 5) }, 0, 11, 28, 0);
+        let other = loc(0, 6);
+        assert!(!c.can_issue(CommandKind::Read, &other, 100));
+    }
+
+    #[test]
+    fn trrd_gates_cross_bank_acts() {
+        let mut c = ch();
+        c.issue(Command { kind: CommandKind::Activate, loc: loc(0, 1) }, 0, 11, 28, 0);
+        assert!(!c.can_issue(CommandKind::Activate, &loc(1, 1), 4));
+        assert!(c.can_issue(CommandKind::Activate, &loc(1, 1), 5));
+    }
+
+    #[test]
+    fn tfaw_gates_fifth_act() {
+        let mut c = ch();
+        let t = Timing::default();
+        // Issue 4 ACTs at the tRRD rate: 0, 5, 10, 15.
+        for i in 0..4u32 {
+            let at = i as u64 * t.trrd;
+            assert!(c.can_issue(CommandKind::Activate, &loc(i, 1), at));
+            c.issue(Command { kind: CommandKind::Activate, loc: loc(i, 1) }, at, 11, 28, 0);
+        }
+        // 5th ACT must wait until first ACT + tFAW = 24, not 20.
+        assert!(!c.can_issue(CommandKind::Activate, &loc(4, 1), 20));
+        assert!(c.can_issue(CommandKind::Activate, &loc(4, 1), 24));
+    }
+
+    #[test]
+    fn write_to_read_turnaround() {
+        let mut c = ch();
+        let t = Timing::default();
+        c.issue(Command { kind: CommandKind::Activate, loc: loc(0, 1) }, 0, 11, 28, 0);
+        c.issue(Command { kind: CommandKind::Activate, loc: loc(1, 2) }, t.trrd, 11, 28, 0);
+        c.issue(Command { kind: CommandKind::Write, loc: loc(0, 1) }, 11, 11, 28, 0);
+        // RD to the other bank gated by tWTR: 11 + CWL + BL + tWTR = 29.
+        let l2 = loc(1, 2);
+        assert!(!c.can_issue(CommandKind::Read, &l2, 28));
+        assert!(c.can_issue(CommandKind::Read, &l2, 29));
+    }
+
+    #[test]
+    fn refresh_requires_all_closed_and_blocks_acts() {
+        let mut c = ch();
+        let t = Timing::default();
+        let l = loc(0, 1);
+        c.issue(Command { kind: CommandKind::Activate, loc: l }, 0, 11, 28, 0);
+        let rloc = loc(0, 0);
+        assert!(!c.can_issue(CommandKind::Refresh, &rloc, 100));
+        c.issue(Command { kind: CommandKind::Precharge, loc: l }, 28, 11, 28, 0);
+        assert!(c.can_issue(CommandKind::Refresh, &rloc, 100));
+        c.issue(Command { kind: CommandKind::Refresh, loc: rloc }, 100, 11, 28, 0);
+        assert_eq!(c.ranks[0].refresh_count, 1);
+        assert!(!c.can_issue(CommandKind::Activate, &l, 100 + t.trfc - 1));
+        assert!(c.can_issue(CommandKind::Activate, &l, 100 + t.trfc));
+    }
+
+    #[test]
+    fn data_bus_serializes_bursts() {
+        let mut c = ch();
+        c.issue(Command { kind: CommandKind::Activate, loc: loc(0, 1) }, 0, 11, 28, 0);
+        c.issue(Command { kind: CommandKind::Read, loc: loc(0, 1) }, 11, 11, 28, 0);
+        // Second read to the same open row gated by tCCD = 4.
+        let l = loc(0, 1);
+        assert!(!c.can_issue(CommandKind::Read, &l, 14));
+        assert!(c.can_issue(CommandKind::Read, &l, 15));
+    }
+
+    #[test]
+    fn autoprecharge_blocks_further_column_commands() {
+        let mut c = ch();
+        let l = loc(0, 1);
+        c.issue(Command { kind: CommandKind::Activate, loc: l }, 0, 11, 28, 0);
+        c.issue(Command { kind: CommandKind::ReadAp, loc: l }, 11, 11, 28, 0);
+        // The bank is logically closing: no more reads may target it even
+        // though the row is still latched.
+        assert!(!c.can_issue(CommandKind::Read, &l, 20));
+    }
+
+    #[test]
+    fn reduced_tras_allows_earlier_pre() {
+        let mut c = ch();
+        let l = loc(0, 9);
+        c.issue(Command { kind: CommandKind::Activate, loc: l }, 0, 7, 20, 0);
+        assert!(c.can_issue(CommandKind::Precharge, &l, 20));
+    }
+}

@@ -1,0 +1,14 @@
+//! Cycle-accurate DDR3 device model (the Ramulator-equivalent substrate).
+//!
+//! The model is organized as channel → rank → bank, with per-bank /
+//! per-rank / per-channel *earliest-issue* timestamps maintained
+//! incrementally (Ramulator's `next_*` approach) so command legality is an
+//! O(1) comparison rather than a constraint scan.
+
+pub mod bank;
+pub mod command;
+pub mod device;
+
+pub use bank::{Bank, BankState};
+pub use command::{Command, CommandKind};
+pub use device::{Channel, Rank};

@@ -1,0 +1,204 @@
+//! DRAM energy model — DRAMPower-equivalent JEDEC IDD accounting.
+//!
+//! Per-command energies and state-dependent background power are derived
+//! from Micron DDR3-1600 4 Gb x8 datasheet currents, scaled to the rank's
+//! chip count (64-bit bus / x8 = 8 devices). ChargeCache affects energy two
+//! ways (paper Sec. 6.4): reduced-tRAS activations cost slightly less, and
+//! shorter execution time cuts background + refresh energy.
+
+use crate::config::{SystemConfig, Timing};
+use crate::controller::McStats;
+
+/// DDR3 IDD currents in mA (Micron MT41J512M8, DDR3-1600).
+#[derive(Debug, Clone)]
+pub struct DddIdd {
+    pub vdd: f64,
+    pub idd0: f64,
+    pub idd2n: f64,
+    pub idd3n: f64,
+    pub idd4r: f64,
+    pub idd4w: f64,
+    pub idd5b: f64,
+    /// DRAM devices per rank (64-bit channel of x8 chips).
+    pub chips: f64,
+}
+
+impl Default for DddIdd {
+    fn default() -> Self {
+        Self {
+            vdd: 1.5,
+            idd0: 95.0,
+            idd2n: 42.0,
+            idd3n: 45.0,
+            idd4r: 180.0,
+            idd4w: 185.0,
+            idd5b: 215.0,
+            chips: 8.0,
+        }
+    }
+}
+
+/// Energy totals in nanojoules.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyBreakdown {
+    pub act_pre_nj: f64,
+    pub read_nj: f64,
+    pub write_nj: f64,
+    pub refresh_nj: f64,
+    pub background_nj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_nj(&self) -> f64 {
+        self.act_pre_nj + self.read_nj + self.write_nj + self.refresh_nj + self.background_nj
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.act_pre_nj += other.act_pre_nj;
+        self.read_nj += other.read_nj;
+        self.write_nj += other.write_nj;
+        self.refresh_nj += other.refresh_nj;
+        self.background_nj += other.background_nj;
+    }
+}
+
+/// The energy model bound to a timing/IDD configuration.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    idd: DddIdd,
+    timing: Timing,
+    tras_reduced: u64,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self {
+            idd: DddIdd::default(),
+            timing: cfg.timing.clone(),
+            tras_reduced: cfg.timing.tras - cfg.chargecache.tras_reduction,
+        }
+    }
+
+    /// mA * cycles -> nJ at VDD across the rank's chips.
+    #[inline]
+    fn ma_cycles_to_nj(&self, ma: f64, cycles: f64) -> f64 {
+        // mA * V * ns = pJ; / 1000 -> nJ.
+        ma * self.idd.vdd * (cycles * self.timing.tck_ns) * self.idd.chips / 1000.0
+    }
+
+    /// Energy of one ACT+PRE pair with effective tRAS (DRAMPower eq.):
+    /// the IDD0 window minus the background current already accounted
+    /// for. A reduced tRAS shortens the effective row cycle
+    /// (tRC_eff = tRAS_eff + tRP), which is where ChargeCache's per-ACT
+    /// saving comes from.
+    pub fn act_pre_nj(&self, tras_eff: u64) -> f64 {
+        let tras = tras_eff as f64;
+        let trc = tras + self.timing.trp as f64;
+        let bg = self.idd.idd3n * tras + self.idd.idd2n * (trc - tras);
+        self.ma_cycles_to_nj(self.idd.idd0 * trc - bg, 1.0) // currents already x cycles
+    }
+
+    pub fn read_nj(&self) -> f64 {
+        self.ma_cycles_to_nj(self.idd.idd4r - self.idd.idd3n, self.timing.tbl as f64)
+    }
+
+    pub fn write_nj(&self) -> f64 {
+        self.ma_cycles_to_nj(self.idd.idd4w - self.idd.idd3n, self.timing.tbl as f64)
+    }
+
+    pub fn refresh_nj(&self) -> f64 {
+        self.ma_cycles_to_nj(self.idd.idd5b - self.idd.idd3n, self.timing.trfc as f64)
+    }
+
+    /// Full-run energy for one channel.
+    ///
+    /// * `stats` — command counts from the controller,
+    /// * `rank_active_cycles` — per-rank cycles with >= 1 open bank,
+    /// * `bus_cycles` — measured wall time in bus cycles.
+    pub fn channel_energy(
+        &self,
+        stats: &McStats,
+        rank_active_cycles: &[u64],
+        bus_cycles: u64,
+    ) -> EnergyBreakdown {
+        let acts_std = stats.acts - stats.acts_reduced;
+        let act_pre_nj = acts_std as f64 * self.act_pre_nj(self.timing.tras)
+            + stats.acts_reduced as f64 * self.act_pre_nj(self.tras_reduced);
+        let read_nj = stats.reads as f64 * self.read_nj();
+        let write_nj = stats.writes as f64 * self.write_nj();
+        let refresh_nj = stats.refreshes as f64 * self.refresh_nj();
+        let mut background_nj = 0.0;
+        for &active in rank_active_cycles {
+            let active = active.min(bus_cycles) as f64;
+            let idle = bus_cycles as f64 - active;
+            background_nj += self.ma_cycles_to_nj(self.idd.idd3n, active)
+                + self.ma_cycles_to_nj(self.idd.idd2n, idle);
+        }
+        EnergyBreakdown { act_pre_nj, read_nj, write_nj, refresh_nj, background_nj }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(&SystemConfig::default())
+    }
+
+    #[test]
+    fn act_pre_energy_positive_and_reduced_tras_cheaper() {
+        let m = model();
+        let std = m.act_pre_nj(28);
+        let red = m.act_pre_nj(20);
+        assert!(std > 0.0);
+        assert!(red < std, "reduced tRAS must cost less: {red} vs {std}");
+    }
+
+    #[test]
+    fn burst_energies_positive() {
+        let m = model();
+        assert!(m.read_nj() > 0.0);
+        assert!(m.write_nj() > m.read_nj() * 0.9); // IDD4W slightly higher
+        assert!(m.refresh_nj() > m.read_nj());
+    }
+
+    #[test]
+    fn background_scales_with_time() {
+        let m = model();
+        let stats = McStats::default();
+        let e1 = m.channel_energy(&stats, &[0], 1000);
+        let e2 = m.channel_energy(&stats, &[0], 2000);
+        assert!((e2.background_nj / e1.background_nj - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_standby_costs_more_than_idle() {
+        let m = model();
+        let stats = McStats::default();
+        let idle = m.channel_energy(&stats, &[0], 1000);
+        let active = m.channel_energy(&stats, &[1000], 1000);
+        assert!(active.background_nj > idle.background_nj);
+    }
+
+    #[test]
+    fn shorter_run_saves_energy() {
+        // The headline effect: same work, fewer cycles -> less energy.
+        let m = model();
+        let mut stats = McStats::default();
+        stats.acts = 1000;
+        stats.reads = 3000;
+        stats.refreshes = 10;
+        let slow = m.channel_energy(&stats, &[500_000], 1_000_000);
+        let fast = m.channel_energy(&stats, &[480_000], 930_000);
+        assert!(fast.total_nj() < slow.total_nj());
+    }
+
+    #[test]
+    fn ballpark_activation_energy() {
+        // An ACT/PRE pair on a DDR3 rank is ~10-40 nJ across 8 chips.
+        let m = model();
+        let e = m.act_pre_nj(28);
+        assert!(e > 5.0 && e < 60.0, "ACT+PRE energy {e} nJ out of range");
+    }
+}

@@ -1,0 +1,9 @@
+//! DRAM energy (DRAMPower-style IDD current model) and ChargeCache
+//! area/power (McPAT-style analytic SRAM model) — the paper's Sec. 6.4 and
+//! Sec. 6.5 substrates.
+
+pub mod area;
+pub mod dram_energy;
+
+pub use area::HcracCost;
+pub use dram_energy::{DddIdd, EnergyBreakdown, EnergyModel};

@@ -1,0 +1,354 @@
+//! ChargeCache — the paper's mechanism (Sec. 5).
+//!
+//! A small set-associative table in the memory controller, the
+//! *Highly-Charged Row Address Cache* (HCRAC), replicated per core (this
+//! instance covers one channel). Three operations:
+//!
+//! 1. On **PRE**, insert the closed row's address — its cells were just
+//!    replenished by the activation, so it is highly charged *now*.
+//! 2. On **ACT**, look the row up; a hit younger than the caching duration
+//!    grants reduced tRCD/tRAS.
+//! 3. Entries older than the caching duration are invalidated so a
+//!    low-charge row is never accessed with lowered timing (correctness
+//!    criterion; here enforced exactly at lookup, plus a periodic sweep
+//!    that models the paper's hardware invalidation and keeps occupancy
+//!    statistics honest).
+
+use crate::config::{HcracPolicy, HcracSharing, SystemConfig};
+use crate::trace::XorShift64;
+
+use super::{Mechanism, RowKey, TimingGrant};
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    valid: bool,
+    key: u64,
+    inserted_at: u64,
+    /// LRU stamp (monotone counter; lower = older).
+    lru: u64,
+}
+
+/// One per-core HCRAC replica: `sets x ways` with LRU replacement.
+#[derive(Debug, Clone)]
+struct CoreTable {
+    entries: Vec<Entry>,
+    sets: usize,
+    ways: usize,
+    stamp: u64,
+}
+
+impl CoreTable {
+    fn new(entries: usize, ways: usize) -> Self {
+        let sets = (entries / ways).max(1);
+        Self { entries: vec![Entry::default(); sets * ways], sets, ways, stamp: 0 }
+    }
+
+    #[inline]
+    fn set_index(&self, key: RowKey) -> usize {
+        // Multiplicative hash over the packed (rank, bank, row) key: rows
+        // are low bits, so this spreads sequential rows across sets.
+        let h = key.0.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) as usize) % self.sets
+    }
+
+    /// Look up `key`; on hit younger than `max_age` return true and touch
+    /// LRU. Stale hits are invalidated eagerly.
+    fn lookup(&mut self, key: RowKey, now: u64, max_age: u64) -> bool {
+        let base = self.set_index(key) * self.ways;
+        self.stamp += 1;
+        for e in &mut self.entries[base..base + self.ways] {
+            if e.valid && e.key == key.0 {
+                if now.saturating_sub(e.inserted_at) <= max_age {
+                    e.lru = self.stamp;
+                    return true;
+                }
+                // Expired: invalidate (periodic invalidation, done exactly).
+                e.valid = false;
+                return false;
+            }
+        }
+        false
+    }
+
+    /// Insert `key` at `now`, evicting the LRU way of its set.
+    /// `promote=false` (BIP cold insertion) leaves the entry in LRU
+    /// position so a thrashing stream cannot flush the whole set.
+    fn insert(&mut self, key: RowKey, now: u64, promote: bool) {
+        let base = self.set_index(key) * self.ways;
+        self.stamp += 1;
+        let set = &mut self.entries[base..base + self.ways];
+        // Re-insertion of an existing key refreshes its timestamp.
+        if let Some(e) = set.iter_mut().find(|e| e.valid && e.key == key.0) {
+            e.inserted_at = now;
+            e.lru = self.stamp;
+            return;
+        }
+        let victim = set
+            .iter_mut()
+            .min_by_key(|e| if e.valid { e.lru } else { 0 })
+            .expect("ways >= 1");
+        let lru = if promote { self.stamp } else { 0 };
+        *victim = Entry { valid: true, key: key.0, inserted_at: now, lru };
+    }
+
+    /// Periodic sweep: drop entries older than `max_age`.
+    fn invalidate_older_than(&mut self, now: u64, max_age: u64) {
+        for e in &mut self.entries {
+            if e.valid && now.saturating_sub(e.inserted_at) > max_age {
+                e.valid = false;
+            }
+        }
+    }
+
+    fn occupancy(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+}
+
+/// ChargeCache mechanism state for one memory channel.
+pub struct ChargeCache {
+    tables: Vec<CoreTable>,
+    /// Caching duration in bus cycles.
+    duration_cycles: u64,
+    trcd_std: u64,
+    tras_std: u64,
+    trcd_red: u64,
+    tras_red: u64,
+    /// Sweep cadence for the periodic hardware invalidation model.
+    sweep_interval: u64,
+    next_sweep: u64,
+    /// Insertion policy (LRU / bimodal).
+    policy: HcracPolicy,
+    /// BIP: RNG for the epsilon (1/32) promoted insertions.
+    bip_rng: XorShift64,
+    /// Statistics: activations that hit / total activations seen.
+    pub hits: u64,
+    pub lookups: u64,
+    pub inserts: u64,
+}
+
+impl ChargeCache {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let duration_cycles = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        // Shared design (paper footnote 3): one table with the same total
+        // capacity instead of per-core replicas.
+        let tables = match cfg.chargecache.sharing {
+            HcracSharing::PerCore => (0..cfg.cpu.cores)
+                .map(|_| CoreTable::new(cfg.chargecache.entries_per_core, cfg.chargecache.ways))
+                .collect(),
+            HcracSharing::Shared => vec![CoreTable::new(
+                cfg.chargecache.entries_per_core * cfg.cpu.cores,
+                cfg.chargecache.ways,
+            )],
+        };
+        Self {
+            tables,
+            duration_cycles,
+            trcd_std: cfg.timing.trcd,
+            tras_std: cfg.timing.tras,
+            trcd_red: cfg.timing.trcd - cfg.chargecache.trcd_reduction,
+            tras_red: cfg.timing.tras - cfg.chargecache.tras_reduction,
+            // Paper: entries checked periodically; an eighth of the duration
+            // bounds staleness error while staying cheap in hardware.
+            sweep_interval: (duration_cycles / 8).max(1),
+            next_sweep: duration_cycles / 8,
+            policy: cfg.chargecache.policy,
+            bip_rng: XorShift64::new(cfg.seed ^ 0xB1B0),
+            hits: 0,
+            lookups: 0,
+            inserts: 0,
+        }
+    }
+
+    /// Total valid entries across core replicas (for tests/telemetry).
+    pub fn occupancy(&self) -> usize {
+        self.tables.iter().map(|t| t.occupancy()).sum()
+    }
+
+    /// Table replica for a request owner. LLC writebacks carry no owning
+    /// core (u32::MAX); they are attributed to the last replica, which
+    /// keeps their row tracking without polluting a specific core's table
+    /// unfairly.
+    #[inline]
+    fn table_idx(&self, core: u32) -> usize {
+        (core as usize).min(self.tables.len() - 1)
+    }
+
+    fn maybe_sweep(&mut self, now: u64) {
+        if now >= self.next_sweep {
+            for t in &mut self.tables {
+                t.invalidate_older_than(now, self.duration_cycles);
+            }
+            self.next_sweep = now + self.sweep_interval;
+        }
+    }
+}
+
+impl Mechanism for ChargeCache {
+    fn on_activate(&mut self, now: u64, core: u32, key: RowKey) -> TimingGrant {
+        self.maybe_sweep(now);
+        self.lookups += 1;
+        let idx = self.table_idx(core);
+        let hit = self.tables[idx].lookup(key, now, self.duration_cycles);
+        if hit {
+            self.hits += 1;
+            TimingGrant { trcd: self.trcd_red, tras: self.tras_red, reduced: true }
+        } else {
+            TimingGrant { trcd: self.trcd_std, tras: self.tras_std, reduced: false }
+        }
+    }
+
+    fn on_precharge(&mut self, now: u64, core: u32, key: RowKey) {
+        self.maybe_sweep(now);
+        self.inserts += 1;
+        let promote = match self.policy {
+            HcracPolicy::Lru => true,
+            // BIP: promote with epsilon = 1/32 (Qureshi et al.).
+            HcracPolicy::Bip => self.bip_rng.below(32) == 0,
+        };
+        let idx = self.table_idx(core);
+        self.tables[idx].insert(key, now, promote);
+    }
+
+    fn on_refresh(&mut self, _now: u64, _rank: u32, _refresh_count: u64) {
+        // Refresh replenishes rows but ChargeCache does not track it
+        // (that is NUAT's domain); nothing to do.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cc() -> ChargeCache {
+        ChargeCache::new(&SystemConfig::default())
+    }
+
+    fn key(row: u32) -> RowKey {
+        RowKey::new(0, 0, row)
+    }
+
+    #[test]
+    fn miss_then_insert_then_hit() {
+        let mut c = cc();
+        assert!(!c.on_activate(0, 0, key(5)).reduced);
+        c.on_precharge(100, 0, key(5));
+        let g = c.on_activate(200, 0, key(5));
+        assert!(g.reduced);
+        assert_eq!(g.trcd, 7);
+        assert_eq!(g.tras, 20);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.lookups, 2);
+    }
+
+    #[test]
+    fn entry_expires_after_duration() {
+        let mut c = cc();
+        let dur = c.duration_cycles;
+        c.on_precharge(0, 0, key(9));
+        assert!(c.on_activate(dur, 0, key(9)).reduced); // exactly at limit: ok
+        c.on_precharge(0, 0, key(10));
+        assert!(!c.on_activate(dur + 1, 0, key(10)).reduced); // past limit
+    }
+
+    #[test]
+    fn per_core_isolation() {
+        let mut cfg = SystemConfig::default();
+        cfg.cpu.cores = 2;
+        let mut c = ChargeCache::new(&cfg);
+        c.on_precharge(0, 0, key(7));
+        assert!(!c.on_activate(10, 1, key(7)).reduced, "core 1 must miss");
+        assert!(c.on_activate(10, 0, key(7)).reduced, "core 0 must hit");
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_set() {
+        // 1 set x 2 ways: third distinct key in the same set evicts LRU.
+        let mut cfg = SystemConfig::default();
+        cfg.chargecache.entries_per_core = 2;
+        cfg.chargecache.ways = 2;
+        let mut c = ChargeCache::new(&cfg);
+        c.on_precharge(0, 0, key(1));
+        c.on_precharge(1, 0, key(2));
+        // Touch key(1) so key(2) becomes LRU.
+        assert!(c.on_activate(2, 0, key(1)).reduced);
+        c.on_precharge(3, 0, key(3)); // evicts key(2)
+        assert!(!c.on_activate(4, 0, key(2)).reduced);
+        assert!(c.on_activate(4, 0, key(3)).reduced);
+    }
+
+    #[test]
+    fn reinsert_refreshes_age() {
+        let mut c = cc();
+        let dur = c.duration_cycles;
+        c.on_precharge(0, 0, key(4));
+        c.on_precharge(dur, 0, key(4)); // re-close refreshes charge
+        assert!(c.on_activate(dur + dur / 2, 0, key(4)).reduced);
+    }
+
+    #[test]
+    fn periodic_sweep_prunes_occupancy() {
+        let mut c = cc();
+        let dur = c.duration_cycles;
+        for r in 0..64 {
+            c.on_precharge(0, 0, key(r));
+        }
+        assert!(c.occupancy() > 0);
+        // Drive time past duration via an activate (triggers sweep).
+        c.on_activate(2 * dur, 0, key(10_000));
+        assert_eq!(c.occupancy(), 0);
+    }
+
+    #[test]
+    fn storage_entries_match_config() {
+        let cfg = SystemConfig::default();
+        let c = ChargeCache::new(&cfg);
+        let total: usize = c.tables.iter().map(|t| t.entries.len()).sum();
+        assert_eq!(total, cfg.chargecache.entries_per_core * cfg.cpu.cores);
+    }
+
+    #[test]
+    fn shared_table_serves_cross_core_hits() {
+        // Footnote 3 design: core 1 benefits from core 0's precharge.
+        let mut cfg = SystemConfig::default();
+        cfg.cpu.cores = 4;
+        cfg.chargecache.sharing = crate::config::HcracSharing::Shared;
+        let mut c = ChargeCache::new(&cfg);
+        assert_eq!(c.tables.len(), 1);
+        assert_eq!(c.tables[0].entries.len(), 128 * 4);
+        c.on_precharge(0, 0, key(7));
+        assert!(c.on_activate(10, 1, key(7)).reduced, "cross-core hit");
+        assert!(c.on_activate(10, 3, key(7)).reduced);
+    }
+
+    #[test]
+    fn bip_resists_thrashing_streams() {
+        // A scan of many one-shot rows must not flush a reused row out of
+        // a BIP table, while it does flush it from LRU.
+        let run = |policy: crate::config::HcracPolicy| -> bool {
+            let mut cfg = SystemConfig::default();
+            cfg.chargecache.entries_per_core = 4; // 2 sets x 2 ways
+            cfg.chargecache.policy = policy;
+            let mut c = ChargeCache::new(&cfg);
+            c.on_precharge(0, 0, key(1));
+            c.on_activate(1, 0, key(1)); // promote the reused row
+            c.on_precharge(2, 0, key(1));
+            // Thrash with 64 distinct rows.
+            for r in 100..164 {
+                c.on_precharge(3, 0, key(r));
+            }
+            c.on_activate(10, 0, key(1)).reduced
+        };
+        assert!(!run(crate::config::HcracPolicy::Lru), "LRU should thrash");
+        assert!(run(crate::config::HcracPolicy::Bip), "BIP should retain");
+    }
+
+    #[test]
+    fn bip_still_caches_reused_rows() {
+        let mut cfg = SystemConfig::default();
+        cfg.chargecache.policy = crate::config::HcracPolicy::Bip;
+        let mut c = ChargeCache::new(&cfg);
+        c.on_precharge(0, 0, key(5));
+        assert!(c.on_activate(10, 0, key(5)).reduced);
+    }
+}

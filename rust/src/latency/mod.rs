@@ -1,0 +1,219 @@
+//! DRAM latency-reduction mechanisms — the paper's contribution and its
+//! comparison points.
+//!
+//! * [`chargecache`] — **ChargeCache** (HCRAC): track recently-precharged
+//!   rows; grant reduced tRCD/tRAS to re-activations within the caching
+//!   duration (the paper's mechanism, Sec. 5).
+//! * [`nuat`] — NUAT (Shin et al., HPCA'14): reduced timing only for rows
+//!   *recently refreshed* (the paper's main comparison point).
+//! * LL-DRAM — idealized: every activation gets reduced timing.
+//!
+//! All mechanisms sit behind the [`Mechanism`] trait, hooked by the memory
+//! controller on every ACT/PRE/REF.
+
+pub mod chargecache;
+pub mod nuat;
+pub mod timing_table;
+
+
+use crate::config::SystemConfig;
+
+pub use chargecache::ChargeCache;
+pub use nuat::Nuat;
+pub use timing_table::TimingTable;
+
+/// Row identity within one channel (rank, bank, row packed into 64 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RowKey(pub u64);
+
+impl RowKey {
+    pub fn new(rank: u32, bank: u32, row: u32) -> Self {
+        Self(((rank as u64) << 48) | ((bank as u64) << 32) | row as u64)
+    }
+    pub fn row(&self) -> u32 {
+        (self.0 & 0xffff_ffff) as u32
+    }
+    pub fn bank(&self) -> u32 {
+        ((self.0 >> 32) & 0xffff) as u32
+    }
+    pub fn rank(&self) -> u32 {
+        (self.0 >> 48) as u32
+    }
+}
+
+/// Timing granted for one activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimingGrant {
+    /// Effective tRCD in bus cycles.
+    pub trcd: u64,
+    /// Effective tRAS in bus cycles.
+    pub tras: u64,
+    /// Whether the mechanism granted reduced timing.
+    pub reduced: bool,
+}
+
+/// Which mechanism a simulation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MechanismKind {
+    /// Standard DDR3 timing for every access.
+    Baseline,
+    /// The paper's mechanism.
+    ChargeCache,
+    /// Recently-refreshed-rows-only comparison point.
+    Nuat,
+    /// ChargeCache and NUAT combined (hit if either grants).
+    ChargeCacheNuat,
+    /// Idealized low-latency DRAM: all rows, all the time.
+    LlDram,
+}
+
+impl MechanismKind {
+    pub fn all() -> [MechanismKind; 5] {
+        [
+            MechanismKind::Baseline,
+            MechanismKind::ChargeCache,
+            MechanismKind::Nuat,
+            MechanismKind::ChargeCacheNuat,
+            MechanismKind::LlDram,
+        ]
+    }
+    pub fn label(&self) -> &'static str {
+        match self {
+            MechanismKind::Baseline => "Baseline",
+            MechanismKind::ChargeCache => "ChargeCache",
+            MechanismKind::Nuat => "NUAT",
+            MechanismKind::ChargeCacheNuat => "CC+NUAT",
+            MechanismKind::LlDram => "LL-DRAM",
+        }
+    }
+}
+
+/// Per-channel mechanism hook. `now` is in DRAM bus cycles.
+pub trait Mechanism: Send {
+    /// Called when the controller issues an ACT for `core`'s request.
+    fn on_activate(&mut self, now: u64, core: u32, key: RowKey) -> TimingGrant;
+    /// Called when a row is closed (explicit PRE or auto-precharge).
+    fn on_precharge(&mut self, now: u64, core: u32, key: RowKey);
+    /// Called after each all-bank REF completes on `rank`.
+    fn on_refresh(&mut self, now: u64, rank: u32, refresh_count: u64);
+}
+
+/// Baseline: standard timing always.
+pub struct BaselineMech {
+    trcd: u64,
+    tras: u64,
+}
+
+impl BaselineMech {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self { trcd: cfg.timing.trcd, tras: cfg.timing.tras }
+    }
+}
+
+impl Mechanism for BaselineMech {
+    fn on_activate(&mut self, _now: u64, _core: u32, _key: RowKey) -> TimingGrant {
+        TimingGrant { trcd: self.trcd, tras: self.tras, reduced: false }
+    }
+    fn on_precharge(&mut self, _now: u64, _core: u32, _key: RowKey) {}
+    fn on_refresh(&mut self, _now: u64, _rank: u32, _refresh_count: u64) {}
+}
+
+/// LL-DRAM: idealized — reduced timing for every activation (paper Sec. 6.3
+/// comparison upper bound).
+pub struct LlDramMech {
+    trcd: u64,
+    tras: u64,
+}
+
+impl LlDramMech {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self {
+            trcd: cfg.timing.trcd - cfg.chargecache.trcd_reduction,
+            tras: cfg.timing.tras - cfg.chargecache.tras_reduction,
+        }
+    }
+}
+
+impl Mechanism for LlDramMech {
+    fn on_activate(&mut self, _now: u64, _core: u32, _key: RowKey) -> TimingGrant {
+        TimingGrant { trcd: self.trcd, tras: self.tras, reduced: true }
+    }
+    fn on_precharge(&mut self, _now: u64, _core: u32, _key: RowKey) {}
+    fn on_refresh(&mut self, _now: u64, _rank: u32, _refresh_count: u64) {}
+}
+
+/// Combination mechanism: grant the reduction if either component grants
+/// (paper's "ChargeCache + NUAT" configuration).
+pub struct CombinedMech {
+    pub cc: ChargeCache,
+    pub nuat: Nuat,
+}
+
+impl Mechanism for CombinedMech {
+    fn on_activate(&mut self, now: u64, core: u32, key: RowKey) -> TimingGrant {
+        let g_cc = self.cc.on_activate(now, core, key);
+        let g_nu = self.nuat.on_activate(now, core, key);
+        if g_cc.reduced {
+            g_cc
+        } else if g_nu.reduced {
+            g_nu
+        } else {
+            g_cc
+        }
+    }
+    fn on_precharge(&mut self, now: u64, core: u32, key: RowKey) {
+        self.cc.on_precharge(now, core, key);
+        self.nuat.on_precharge(now, core, key);
+    }
+    fn on_refresh(&mut self, now: u64, rank: u32, refresh_count: u64) {
+        self.cc.on_refresh(now, rank, refresh_count);
+        self.nuat.on_refresh(now, rank, refresh_count);
+    }
+}
+
+/// Build the mechanism instance for one channel.
+pub fn build_mechanism(kind: MechanismKind, cfg: &SystemConfig) -> Box<dyn Mechanism> {
+    match kind {
+        MechanismKind::Baseline => Box::new(BaselineMech::new(cfg)),
+        MechanismKind::ChargeCache => Box::new(ChargeCache::new(cfg)),
+        MechanismKind::Nuat => Box::new(Nuat::new(cfg)),
+        MechanismKind::ChargeCacheNuat => Box::new(CombinedMech {
+            cc: ChargeCache::new(cfg),
+            nuat: Nuat::new(cfg),
+        }),
+        MechanismKind::LlDram => Box::new(LlDramMech::new(cfg)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rowkey_packs_fields() {
+        let k = RowKey::new(1, 7, 65535);
+        assert_eq!(k.rank(), 1);
+        assert_eq!(k.bank(), 7);
+        assert_eq!(k.row(), 65535);
+    }
+
+    #[test]
+    fn baseline_never_reduces() {
+        let cfg = SystemConfig::default();
+        let mut m = BaselineMech::new(&cfg);
+        let g = m.on_activate(0, 0, RowKey::new(0, 0, 0));
+        assert!(!g.reduced);
+        assert_eq!(g.trcd, 11);
+        assert_eq!(g.tras, 28);
+    }
+
+    #[test]
+    fn lldram_always_reduces() {
+        let cfg = SystemConfig::default();
+        let mut m = LlDramMech::new(&cfg);
+        let g = m.on_activate(0, 0, RowKey::new(0, 0, 0));
+        assert!(g.reduced);
+        assert_eq!(g.trcd, 7);
+        assert_eq!(g.tras, 20);
+    }
+}

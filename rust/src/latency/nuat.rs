@@ -1,0 +1,184 @@
+//! NUAT (Shin et al., HPCA 2014) — the paper's main comparison point.
+//!
+//! NUAT grants reduced timing to rows that were **recently refreshed**:
+//! right after a refresh, a row's cells are replenished, exactly like after
+//! an activation — but NUAT only exploits the *refresh* replenishment, not
+//! the access replenishment (that is ChargeCache's insight). Because the
+//! refresh pointer sweeps all rows once per retention window, only a
+//! `window / retention` fraction of rows is ever eligible — hence NUAT's
+//! much smaller benefit (paper Sec. 6.3 / Sec. 7).
+//!
+//! Model: all-bank REF commands rotate through `rows / refs_per_window`
+//! row groups; a row's last-refresh time is reconstructed from the rank's
+//! REF counter.
+
+use crate::config::SystemConfig;
+
+use super::{Mechanism, RowKey, TimingGrant};
+
+pub struct Nuat {
+    /// Eligibility window in bus cycles after a row's refresh.
+    window_cycles: u64,
+    /// tREFI in bus cycles (REF k is assumed issued at ~k * tREFI).
+    trefi: u64,
+    /// Number of REF commands that cover all rows once (retention window).
+    refs_per_window: u64,
+    /// Rows advanced per REF (rows / refs_per_window).
+    rows_per_ref: u64,
+    /// Per-rank REF counters (mirrors the device's refresh engine).
+    ref_count: Vec<u64>,
+    trcd_std: u64,
+    tras_std: u64,
+    trcd_red: u64,
+    tras_red: u64,
+    pub hits: u64,
+    pub lookups: u64,
+}
+
+impl Nuat {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        // Retention window: 64 ms (8192 REFs at 7.8 us tREFI for 64K rows).
+        let retention_cycles = cfg.timing.ms_to_cycles(64.0);
+        let refs_est = (retention_cycles / cfg.timing.trefi).max(1);
+        // Round rows-per-REF up so a full sweep fits the retention window.
+        let rows_per_ref = ((cfg.dram.rows as u64) + refs_est - 1) / refs_est;
+        let rows_per_ref = rows_per_ref.max(1).next_power_of_two();
+        let refs_per_window = ((cfg.dram.rows as u64) / rows_per_ref).max(1);
+        Self {
+            window_cycles: cfg.timing.ms_to_cycles(cfg.nuat.window_ms),
+            trefi: cfg.timing.trefi,
+            refs_per_window,
+            rows_per_ref,
+            ref_count: vec![0; cfg.dram.ranks],
+            trcd_std: cfg.timing.trcd,
+            tras_std: cfg.timing.tras,
+            trcd_red: cfg.timing.trcd - cfg.nuat.trcd_reduction,
+            tras_red: cfg.timing.tras - cfg.nuat.tras_reduction,
+            hits: 0,
+            lookups: 0,
+        }
+    }
+
+    /// Approximate cycle at which `row` was last refreshed, given the
+    /// rank's REF counter (None if it has not been refreshed yet).
+    fn last_refresh_cycle(&self, rank: u32, row: u32) -> Option<u64> {
+        let count = self.ref_count[rank as usize];
+        if count == 0 {
+            return None;
+        }
+        let slot = (row as u64 / self.rows_per_ref) % self.refs_per_window;
+        let last_idx = count - 1;
+        // Largest k <= last_idx with k % refs_per_window == slot.
+        let rem = last_idx % self.refs_per_window;
+        let k = if rem >= slot {
+            last_idx - (rem - slot)
+        } else {
+            let back = rem + self.refs_per_window - slot;
+            if last_idx < back {
+                return None;
+            }
+            last_idx - back
+        };
+        Some(k * self.trefi)
+    }
+}
+
+impl Mechanism for Nuat {
+    fn on_activate(&mut self, now: u64, _core: u32, key: RowKey) -> TimingGrant {
+        self.lookups += 1;
+        let hit = self
+            .last_refresh_cycle(key.rank(), key.row())
+            .is_some_and(|at| now.saturating_sub(at) <= self.window_cycles);
+        if hit {
+            self.hits += 1;
+            TimingGrant { trcd: self.trcd_red, tras: self.tras_red, reduced: true }
+        } else {
+            TimingGrant { trcd: self.trcd_std, tras: self.tras_std, reduced: false }
+        }
+    }
+
+    fn on_precharge(&mut self, _now: u64, _core: u32, _key: RowKey) {
+        // NUAT ignores access-driven replenishment (the paper's point).
+    }
+
+    fn on_refresh(&mut self, _now: u64, rank: u32, refresh_count: u64) {
+        self.ref_count[rank as usize] = refresh_count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nuat() -> Nuat {
+        Nuat::new(&SystemConfig::default())
+    }
+
+    #[test]
+    fn geometry_covers_all_rows_per_window() {
+        let n = nuat();
+        // 64 ms / 7.8 us = 8192 REFs; 64K rows / 8192 = 8 rows per REF.
+        assert_eq!(n.refs_per_window, 8192);
+        assert_eq!(n.rows_per_ref, 8);
+    }
+
+    #[test]
+    fn unrefreshed_rows_get_standard_timing() {
+        let mut n = nuat();
+        let g = n.on_activate(100, 0, RowKey::new(0, 0, 5));
+        assert!(!g.reduced);
+    }
+
+    #[test]
+    fn recently_refreshed_row_hits() {
+        let mut n = nuat();
+        // REF #0 covers rows 0..8 and is assumed issued at cycle 0.
+        n.on_refresh(0, 0, 1);
+        let g = n.on_activate(10, 0, RowKey::new(0, 0, 3));
+        assert!(g.reduced);
+        assert_eq!(g.trcd, 7);
+        // Row 8 belongs to the next REF slot -> no grant yet.
+        assert!(!n.on_activate(10, 0, RowKey::new(0, 0, 8)).reduced);
+    }
+
+    #[test]
+    fn refresh_benefit_expires_after_window() {
+        let mut n = nuat();
+        n.on_refresh(0, 0, 1);
+        let w = n.window_cycles;
+        assert!(n.on_activate(w, 0, RowKey::new(0, 0, 1)).reduced);
+        assert!(!n.on_activate(w + 1, 0, RowKey::new(0, 0, 1)).reduced);
+    }
+
+    #[test]
+    fn access_does_not_extend_eligibility() {
+        // Precharging (i.e. a full access) must not create NUAT eligibility.
+        let mut n = nuat();
+        n.on_precharge(0, 0, RowKey::new(0, 0, 42));
+        assert!(!n.on_activate(1, 0, RowKey::new(0, 0, 42)).reduced);
+    }
+
+    #[test]
+    fn eligible_fraction_is_small() {
+        // With a 1 ms window and 64 ms retention, ~1/64 of rows eligible:
+        // after many refreshes, random-row activations rarely hit.
+        let mut n = nuat();
+        // Simulate 8192 refreshes spaced tREFI apart (one full sweep).
+        let trefi = n.trefi;
+        for k in 1..=8192u64 {
+            n.on_refresh(k * trefi, 0, k);
+        }
+        let now = 8192 * trefi;
+        let mut hits = 0;
+        let rows = 4096u32;
+        for r in 0..rows {
+            let row = r * 16 % 65536; // spread over the bank
+            if n.on_activate(now, 0, RowKey::new(0, 0, row)).reduced {
+                hits += 1;
+            }
+        }
+        let frac = hits as f64 / rows as f64;
+        assert!(frac < 0.05, "eligible fraction {frac} should be ~1/64");
+        assert!(frac > 0.001, "some rows must be eligible, got {frac}");
+    }
+}

@@ -1,0 +1,288 @@
+//! Charge → timing table: the codesign bridge between the circuit layer
+//! (L1/L2, JAX+Pallas artifacts) and the architecture layer.
+//!
+//! The table maps *row age* (time since the row's charge was last
+//! replenished by an activation) to the legal tRCD/tRAS **reduction** in
+//! bus cycles. The memory controller configures ChargeCache with the
+//! reduction at its caching duration: entries younger than the duration
+//! are guaranteed at least that much charge, so the reduction is safe for
+//! every HCRAC hit (paper Sec. 5 / 6.2).
+//!
+//! Two constructors:
+//! * [`TimingTable::from_runtime`] — execute the AOT-lowered
+//!   `latency_table` HLO artifact via PJRT (the production path; see
+//!   [`crate::runtime`]).
+//! * [`TimingTable::analytic`] — a pure-Rust port of the same circuit
+//!   model (`python/compile/kernels/circuit.py`), used as a fallback when
+//!   artifacts are absent and as a cross-language consistency oracle in
+//!   tests.
+
+/// Circuit constants mirroring `python/compile/kernels/circuit.py`.
+/// The calibration is re-derived here with the same closed forms so the
+/// two languages cannot drift silently (tests compare against the HLO).
+pub mod circuit {
+    pub const VDD: f64 = 1.5;
+    pub const VBL_PRE: f64 = VDD / 2.0;
+    pub const C_CELL_F: f64 = 24e-15;
+    pub const C_BL_F: f64 = 85e-15;
+    pub const CS_RATIO: f64 = C_CELL_F / (C_CELL_F + C_BL_F);
+    pub const V_READY: f64 = 0.75 * VDD;
+    pub const V_RESTORE: f64 = 0.95 * VDD;
+    pub const T_CS_NS: f64 = 2.0;
+    pub const TAU_R0_NS: f64 = 2.2;
+    pub const T_READY_FULL_NS: f64 = 10.0;
+    pub const T_READY_WORST_NS: f64 = 14.5;
+    pub const T_RESTORE_DELTA_NS: f64 = 9.6;
+    pub const T_REFRESH_MS: f64 = 64.0;
+    pub const T_CAL_CELSIUS: f64 = 85.0;
+    pub const DT_NS: f64 = 0.01;
+    pub const N_STEPS: usize = 4000;
+
+    fn x0_of_vcell(v_cell: f64) -> f64 {
+        (v_cell - VBL_PRE) * CS_RATIO
+    }
+
+    fn ln_g(x0: f64) -> f64 {
+        let xm = VDD / 2.0;
+        let xr = V_READY - VBL_PRE;
+        ((xr * xr * (xm * xm - x0 * x0)) / (x0 * x0 * (xm * xm - xr * xr))).ln()
+    }
+
+    /// (sense-amp gain A [1/ns], retention tau [ms] @ 85C) — closed form.
+    pub fn calibrate() -> (f64, f64) {
+        let x0_full = x0_of_vcell(VDD);
+        let a = ln_g(x0_full) / (2.0 * (T_READY_FULL_NS - T_CS_NS));
+        let ln_g_worst = 2.0 * a * (T_READY_WORST_NS - T_CS_NS);
+        let xm = VDD / 2.0;
+        let xr = V_READY - VBL_PRE;
+        let g = ln_g_worst.exp();
+        let k = g * (xm * xm - xr * xr) / (xr * xr);
+        let x0_w = (xm * xm / (k + 1.0)).sqrt();
+        let v_worst = VBL_PRE + x0_w / CS_RATIO;
+        let frac = (v_worst - VBL_PRE) / (VDD - VBL_PRE);
+        let tau_ms = -T_REFRESH_MS / frac.ln();
+        (a, tau_ms)
+    }
+
+    /// Restore time constant with depletion-dependent overdrive.
+    pub fn tau_r_ns(v_cell0: f64, beta: f64) -> f64 {
+        TAU_R0_NS * (1.0 + beta * (VDD - v_cell0) / VDD)
+    }
+
+    /// Euler-integrate one lane; returns (t_ready_ns, t_restore_ns).
+    /// Same discretization as the Pallas kernel.
+    pub fn sense_latency(v_cell0: f64, a: f64, beta: f64) -> (f64, f64) {
+        let mut v_bl = VBL_PRE + (v_cell0 - VBL_PRE) * CS_RATIO;
+        let mut v_c = v_bl;
+        let tr = tau_r_ns(v_cell0, beta);
+        let xm = VDD / 2.0;
+        let dead = T_CS_NS / DT_NS;
+        let (mut below_ready, mut below_restore) = (0u64, 0u64);
+        for i in 0..N_STEPS {
+            let on = if (i as f64) >= dead { 1.0 } else { 0.0 };
+            let x = v_bl - VBL_PRE;
+            let v_bl_next = v_bl + a * x * (1.0 - (x / xm) * (x / xm)) * on * DT_NS;
+            v_c += (v_bl - v_c) / tr * on * DT_NS;
+            v_bl = v_bl_next;
+            if v_bl < V_READY {
+                below_ready += 1;
+            }
+            if v_c < V_RESTORE {
+                below_restore += 1;
+            }
+        }
+        (below_ready as f64 * DT_NS, below_restore as f64 * DT_NS)
+    }
+
+    /// Calibrate the restore overdrive coefficient beta (bisection on the
+    /// worst-vs-full restore delta == paper's 9.6 ns tRAS reduction).
+    pub fn calibrate_restore(a: f64, tau_ms: f64) -> f64 {
+        let v_worst = v_cell_after(T_REFRESH_MS * 1e-3, T_CAL_CELSIUS, tau_ms);
+        let delta = |beta: f64| -> f64 {
+            sense_latency(v_worst, a, beta).1 - sense_latency(VDD, a, beta).1
+        };
+        let (mut lo, mut hi) = (0.0f64, 20.0f64);
+        for _ in 0..40 {
+            let mid = 0.5 * (lo + hi);
+            if delta(mid) < T_RESTORE_DELTA_NS {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Cell voltage after leaking for `t_ret_s` seconds at `temp_c`.
+    pub fn v_cell_after(t_ret_s: f64, temp_c: f64, tau_ms_85: f64) -> f64 {
+        let tau_s = tau_ms_85 * 1e-3 * 2.0f64.powf((T_CAL_CELSIUS - temp_c) / 10.0);
+        VBL_PRE + (VDD - VBL_PRE) * (-t_ret_s / tau_s).exp()
+    }
+}
+
+/// Age → legal (tRCD, tRAS) reduction table (ns domain, cycle-quantized on
+/// query).
+#[derive(Debug, Clone)]
+pub struct TimingTable {
+    /// Row ages in seconds (ascending).
+    ages_s: Vec<f64>,
+    /// Reductions in ns at each age: (tRCD reduction, tRAS reduction).
+    reductions_ns: Vec<(f64, f64)>,
+    /// Bus clock period used for cycle quantization.
+    tck_ns: f64,
+}
+
+impl TimingTable {
+    /// Standard age grid: log-spaced from 10 us to the 64 ms refresh window.
+    pub fn default_age_grid(n: usize) -> Vec<f64> {
+        let (lo, hi) = (1e-5f64, 0.064f64);
+        (0..n)
+            .map(|i| lo * (hi / lo).powf(i as f64 / (n - 1) as f64))
+            .collect()
+    }
+
+    /// Build from a pre-computed table (the runtime path feeds HLO output
+    /// here; see [`crate::runtime::charge_model`]).
+    pub fn from_rows(ages_s: Vec<f64>, reductions_ns: Vec<(f64, f64)>, tck_ns: f64) -> Self {
+        debug_assert_eq!(ages_s.len(), reductions_ns.len());
+        debug_assert!(ages_s.windows(2).all(|w| w[0] <= w[1]));
+        Self { ages_s, reductions_ns, tck_ns }
+    }
+
+    /// Pure-Rust analytic construction at `temp_c` (fallback + oracle).
+    pub fn analytic(n: usize, temp_c: f64, tck_ns: f64) -> Self {
+        let (a, tau_ms) = circuit::calibrate();
+        let beta = circuit::calibrate_restore(a, tau_ms);
+        let v_worst = circuit::v_cell_after(
+            circuit::T_REFRESH_MS * 1e-3,
+            circuit::T_CAL_CELSIUS,
+            tau_ms,
+        );
+        let (worst_ready, worst_restore) = circuit::sense_latency(v_worst, a, beta);
+        let ages = Self::default_age_grid(n);
+        let reductions = ages
+            .iter()
+            .map(|&age| {
+                let v = circuit::v_cell_after(age, temp_c, tau_ms);
+                let (t_ready, t_restore) = circuit::sense_latency(v, a, beta);
+                (
+                    (worst_ready - t_ready).max(0.0),
+                    (worst_restore - t_restore).max(0.0),
+                )
+            })
+            .collect();
+        Self::from_rows(ages, reductions, tck_ns)
+    }
+
+    /// Legal reduction in **bus cycles** for a row of age `age_s`
+    /// (conservative: uses the next grid point at or above the age).
+    pub fn reduction_cycles(&self, age_s: f64) -> (u64, u64) {
+        let idx = match self
+            .ages_s
+            .binary_search_by(|probe| probe.partial_cmp(&age_s).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.ages_s.len() - 1),
+        };
+        let (rcd_ns, ras_ns) = self.reductions_ns[idx];
+        (
+            (rcd_ns / self.tck_ns).round() as u64,
+            (ras_ns / self.tck_ns).round() as u64,
+        )
+    }
+
+    /// Reduction in ns at the given age (same conservative lookup).
+    pub fn reduction_ns(&self, age_s: f64) -> (f64, f64) {
+        let idx = match self
+            .ages_s
+            .binary_search_by(|probe| probe.partial_cmp(&age_s).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.ages_s.len() - 1),
+        };
+        self.reductions_ns[idx]
+    }
+
+    pub fn len(&self) -> usize {
+        self.ages_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ages_s.is_empty()
+    }
+
+    pub fn ages(&self) -> &[f64] {
+        &self.ages_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_matches_paper_endpoints() {
+        let (a, tau_ms) = circuit::calibrate();
+        let beta = circuit::calibrate_restore(a, tau_ms);
+        let (t_full, r_full) = circuit::sense_latency(circuit::VDD, a, beta);
+        let v_worst =
+            circuit::v_cell_after(0.064, circuit::T_CAL_CELSIUS, tau_ms);
+        let (t_worst, r_worst) = circuit::sense_latency(v_worst, a, beta);
+        assert!((t_full - 10.0).abs() < 0.05, "t_full={t_full}");
+        assert!((t_worst - 14.5).abs() < 0.05, "t_worst={t_worst}");
+        assert!(((t_worst - t_full) - 4.5).abs() < 0.1);
+        assert!(((r_worst - r_full) - 9.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn one_ms_grants_paper_cycle_reductions() {
+        // The Table 1 operating point: 1 ms duration -> -4 tRCD, -8 tRAS.
+        let t = TimingTable::analytic(64, 85.0, 1.25);
+        let (rcd, ras) = t.reduction_cycles(1e-3);
+        assert_eq!(rcd, 4);
+        assert_eq!(ras, 8);
+    }
+
+    #[test]
+    fn reductions_monotone_nonincreasing_with_age() {
+        let t = TimingTable::analytic(64, 85.0, 1.25);
+        let mut prev = (f64::INFINITY, f64::INFINITY);
+        for &age in t.ages() {
+            let r = t.reduction_ns(age);
+            assert!(r.0 <= prev.0 + 1e-9 && r.1 <= prev.1 + 1e-9);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn refresh_window_age_grants_nothing() {
+        let t = TimingTable::analytic(64, 85.0, 1.25);
+        let (rcd, ras) = t.reduction_cycles(0.064);
+        assert_eq!(rcd, 0);
+        assert!(ras <= 1);
+    }
+
+    #[test]
+    fn colder_grants_at_least_as_much() {
+        let hot = TimingTable::analytic(32, 85.0, 1.25);
+        let cold = TimingTable::analytic(32, 45.0, 1.25);
+        for &age in hot.ages() {
+            assert!(cold.reduction_ns(age).0 >= hot.reduction_ns(age).0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn conservative_lookup_rounds_age_up() {
+        let t = TimingTable::from_rows(
+            vec![1e-4, 1e-3, 1e-2],
+            vec![(5.0, 10.0), (4.5, 9.6), (2.0, 4.0)],
+            1.25,
+        );
+        // An age between grid points must use the older (weaker) row.
+        assert_eq!(t.reduction_ns(5e-4), (4.5, 9.6));
+        assert_eq!(t.reduction_ns(1e-3), (4.5, 9.6));
+        assert_eq!(t.reduction_ns(2e-3), (2.0, 4.0));
+        // Beyond the grid: clamp to the last (weakest) row.
+        assert_eq!(t.reduction_ns(1.0), (2.0, 4.0));
+    }
+}

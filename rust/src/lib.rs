@@ -1,0 +1,42 @@
+//! # ChargeCache — full-system reproduction
+//!
+//! Reproduction of *"Exploiting Row-Level Temporal Locality in DRAM to
+//! Reduce the Memory Access Latency"* (Hassan et al., summary of the
+//! HPCA 2016 ChargeCache paper).
+//!
+//! The crate is the **architecture layer (L3)** of a three-layer
+//! hardware-codesign stack:
+//!
+//! * **L1 (Pallas)** — `python/compile/kernels/bitline.py`: batched
+//!   transient simulation of the DRAM cell/bitline/sense-amp circuit
+//!   (the paper's SPICE replacement).
+//! * **L2 (JAX)** — `python/compile/model.py`: leakage + latency-table
+//!   charge model, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L3 (this crate)** — a cycle-accurate DDR3 simulator
+//!   (Ramulator-equivalent), trace-driven CPU cores + LLC, a memory
+//!   controller implementing **ChargeCache** (HCRAC) plus the NUAT and
+//!   LL-DRAM comparison mechanisms, DRAM energy / area models, and the
+//!   experiment coordinator that regenerates every figure in the paper.
+//!
+//! Python never runs on the simulation path: the [`runtime`] module loads
+//! the AOT artifacts via PJRT (the `xla` crate) at startup to build the
+//! charge→timing tables; everything after that is pure Rust.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod config;
+pub mod controller;
+pub mod coordinator;
+pub mod cpu;
+pub mod dram;
+pub mod energy;
+pub mod latency;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+
+pub use config::SystemConfig;
+pub use latency::MechanismKind;
+pub use sim::system::System;

@@ -1,0 +1,412 @@
+//! ChargeCache CLI — regenerates every figure/table of the paper and runs
+//! ad-hoc simulations.
+//!
+//! ```text
+//! chargecache fig1   [--insts N] [--mixes M] [--quick]      Fig. 1  (RLTL)
+//! chargecache fig3   [--csv path]                           Fig. 3  (bitline)
+//! chargecache fig4   --cores 1|8 [--insts N] [--quick]      Fig. 4  (speedup)
+//! chargecache fig5   --cores 1|8 [--insts N] [--quick]      Fig. 5  (energy)
+//! chargecache area                                          Sec. 6.5 overhead
+//! chargecache sweep-capacity | sweep-duration | sweep-temperature
+//! chargecache simulate --workload mcf --mechanism cc [--cores N]
+//! chargecache gen-traces --out dir [--insts N]              trace files
+//! chargecache timing-table [--temp C]                       codesign bridge
+//! ```
+
+use anyhow::{bail, Result};
+
+use chargecache::config::SystemConfig;
+use chargecache::coordinator::cli::Args;
+use chargecache::coordinator::experiments::{
+    fig1, run_suite, sweep_capacity, sweep_duration, sweep_temperature, ExperimentScale,
+};
+use chargecache::coordinator::figures::{bar, f, pct, print_table, write_csv};
+use chargecache::energy::HcracCost;
+use chargecache::latency::MechanismKind;
+use chargecache::runtime::{charge_model::timing_table_or_analytic, ChargeModelRuntime, Runtime};
+use chargecache::sim::System;
+use chargecache::trace::{file::write_trace, Profile, SynthTrace, PROFILES};
+
+fn scale_from(args: &Args) -> Result<ExperimentScale> {
+    let mut s = if args.flag("quick") {
+        ExperimentScale::quick()
+    } else {
+        ExperimentScale::default()
+    };
+    s.insts_per_core = args.get_u64("insts", s.insts_per_core)?;
+    s.warmup_cycles = args.get_u64("warmup", s.warmup_cycles)?;
+    s.mixes = args.get_usize("mixes", s.mixes)?;
+    Ok(s)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "fig1" => cmd_fig1(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig4(&args),
+        "fig5" => cmd_fig5(&args),
+        "area" => cmd_area(&args),
+        "sweep-capacity" => cmd_sweep_capacity(&args),
+        "sweep-duration" => cmd_sweep_duration(&args),
+        "sweep-temperature" => cmd_sweep_temperature(&args),
+        "simulate" => cmd_simulate(&args),
+        "gen-traces" => cmd_gen_traces(&args),
+        "timing-table" => cmd_timing_table(&args),
+        "help" | _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "chargecache — ChargeCache (HPCA'16) reproduction
+commands: fig1 fig3 fig4 fig5 area sweep-capacity sweep-duration
+          sweep-temperature simulate gen-traces timing-table
+common options: --insts N --warmup N --mixes M --quick";
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    println!("Fig. 1 — average t-RLTL ({} workloads, {} mixes)", PROFILES.len(), scale.mixes);
+    let rows_data = fig1(scale);
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|(ms, s, e)| {
+            vec![
+                format!("{ms} ms"),
+                pct(*s),
+                bar(*s, 1.0, 24),
+                pct(*e),
+                bar(*e, 1.0, 24),
+            ]
+        })
+        .collect();
+    print_table(&["t", "1-core", "", "8-core", ""], &rows);
+    let csv_rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|(ms, s, e)| vec![ms.to_string(), s.to_string(), e.to_string()])
+        .collect();
+    write_csv("results/fig1_rltl.csv", &["t_ms", "single", "eight"], &csv_rows)?;
+    println!("\nPaper: 1 ms-RLTL = 83% (1-core), 89% (8-core). CSV: results/fig1_rltl.csv");
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let rt = Runtime::new(Runtime::default_dir())?;
+    if !rt.artifacts_present() {
+        bail!("artifacts not built — run `make artifacts` first");
+    }
+    let cm = ChargeModelRuntime::load(&rt)?;
+    println!("Fig. 3 — bitline voltage vs time (PJRT: {})", rt.platform());
+
+    // Initial voltages: fully charged down to one refresh window of leakage.
+    let tau_ms = cm.meta.get("tau_leak_ms")?;
+    let vdd = cm.meta.get("vdd")?;
+    let ages_ms = [0.0, 1.0, 4.0, 8.0, 16.0, 32.0, 48.0, 64.0];
+    // Leakage toward the VDD/2 precharge midpoint (see circuit.py).
+    let v0: Vec<f32> = ages_ms
+        .iter()
+        .map(|&ms| (vdd / 2.0 + (vdd / 2.0) * (-(ms) / tau_ms).exp()) as f32)
+        .collect();
+    let (samples, data) = cm.bitline_sweep(&v0)?;
+    let dt = cm.meta.get("dt_ns")? * cm.meta.get("traj_stride")?;
+
+    // Ready-time per lane (first crossing of V_READY).
+    let v_ready = cm.meta.get("v_ready")?;
+    println!("\n  age(ms)  V_init(V)  t_ready(ns)");
+    let mut csv = Vec::new();
+    for (lane, &ms) in ages_ms.iter().enumerate() {
+        let row = &data[lane * samples..(lane + 1) * samples];
+        let cross = row.iter().position(|&v| v as f64 >= v_ready).unwrap_or(samples);
+        let t_ready = cross as f64 * dt;
+        println!("  {:>6.1}  {:>9.4}  {:>10.2}", ms, v0[lane], t_ready);
+        csv.push(vec![ms.to_string(), v0[lane].to_string(), t_ready.to_string()]);
+    }
+    write_csv("results/fig3_ready_times.csv", &["age_ms", "v_init", "t_ready_ns"], &csv)?;
+
+    // Sec. 6.2 headline numbers.
+    let full = data[..samples].to_vec();
+    let worst = data[(ages_ms.len() - 1) * samples..].to_vec();
+    let tr_full = full.iter().position(|&v| v as f64 >= v_ready).unwrap_or(0) as f64 * dt;
+    let tr_worst = worst.iter().position(|&v| v as f64 >= v_ready).unwrap_or(0) as f64 * dt;
+    println!("\nSec. 6.2: t_ready full = {tr_full:.2} ns, worst = {tr_worst:.2} ns");
+    println!("          tRCD reduction = {:.2} ns (paper: 4.5 ns)", tr_worst - tr_full);
+
+    // Trajectory CSV for plotting.
+    let mut traj_rows = Vec::new();
+    for s in 0..samples {
+        let mut row = vec![format!("{}", s as f64 * dt)];
+        for lane in 0..ages_ms.len() {
+            row.push(format!("{}", data[lane * samples + s]));
+        }
+        traj_rows.push(row);
+    }
+    let mut headers: Vec<String> = vec!["t_ns".into()];
+    headers.extend(ages_ms.iter().map(|ms| format!("age_{ms}ms")));
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    write_csv(
+        args.get_str("csv", "results/fig3_bitline.csv"),
+        &headers_ref,
+        &traj_rows,
+    )?;
+    println!("Trajectories: results/fig3_bitline.csv");
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let cores = args.get_usize("cores", 1)?;
+    let eight = cores > 1;
+    println!("Fig. 4{} — speedup ({} insts/core)", if eight { "b" } else { "a" }, scale.insts_per_core);
+    let suite = run_suite(scale, eight);
+    let rows = if eight { suite.fig4b() } else { suite.fig4a() };
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut row = vec![r.workload.clone(), f(r.rmpkc, 2)];
+            for (_, s, _) in &r.speedups {
+                row.push(f(*s, 3));
+            }
+            row.push(pct(r.speedups[0].2)); // CC reduced-act fraction
+            row
+        })
+        .collect();
+    print_table(
+        &["workload", "RMPKC", "CC", "NUAT", "CC+NUAT", "LL-DRAM", "CC hit%"],
+        &table,
+    );
+
+    // Averages (paper: CC 2.1%/8.6%, NUAT ~0.5%/2.5%, CC+NUAT 9.6%, LL 13.4%).
+    let mechs = ["ChargeCache", "NUAT", "CC+NUAT", "LL-DRAM"];
+    let mut avg_row = vec!["AVERAGE".to_string(), String::new()];
+    for (i, _) in mechs.iter().enumerate() {
+        let avg = rows.iter().map(|r| r.speedups[i].1).sum::<f64>() / rows.len() as f64;
+        avg_row.push(f(avg, 3));
+    }
+    let hit = rows.iter().map(|r| r.speedups[0].2).sum::<f64>() / rows.len() as f64;
+    avg_row.push(pct(hit));
+    print_table(&["", "", "CC", "NUAT", "CC+NUAT", "LL-DRAM", "CC hit%"], &[avg_row]);
+
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut row = vec![r.workload.clone(), r.rmpkc.to_string()];
+            row.extend(r.speedups.iter().map(|(_, s, _)| s.to_string()));
+            row
+        })
+        .collect();
+    write_csv(
+        &format!("results/fig4{}_speedup.csv", if eight { "b" } else { "a" }),
+        &["workload", "rmpkc", "cc", "nuat", "cc_nuat", "lldram"],
+        &csv,
+    )?;
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let cores = args.get_usize("cores", 8)?;
+    let eight = cores > 1;
+    println!("Fig. 5 — DRAM energy reduction ({}-core)", if eight { 8 } else { 1 });
+    let suite = run_suite(scale, eight);
+    let data = suite.fig5(eight);
+
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|(w, per_mech)| {
+            let mut row = vec![w.clone()];
+            row.extend(per_mech.iter().map(|(_, frac)| pct(*frac)));
+            row
+        })
+        .collect();
+    print_table(&["workload", "CC", "NUAT", "CC+NUAT", "LL-DRAM"], &rows);
+
+    for (i, m) in ["CC", "NUAT", "CC+NUAT", "LL-DRAM"].iter().enumerate() {
+        let vals: Vec<f64> = data.iter().map(|(_, pm)| pm[i].1).collect();
+        let avg = vals.iter().sum::<f64>() / vals.len() as f64;
+        let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+        println!("{m}: avg {} max {}", pct(avg), pct(max));
+    }
+    println!("Paper (CC): avg 7.9% / max 14.1% (8-core); avg 1.8% / max 6.9% (1-core)");
+
+    let csv: Vec<Vec<String>> = data
+        .iter()
+        .map(|(w, pm)| {
+            let mut row = vec![w.clone()];
+            row.extend(pm.iter().map(|(_, v)| v.to_string()));
+            row
+        })
+        .collect();
+    write_csv(
+        &format!("results/fig5_energy_{}core.csv", if eight { 8 } else { 1 }),
+        &["workload", "cc", "nuat", "cc_nuat", "lldram"],
+        &csv,
+    )?;
+    Ok(())
+}
+
+fn cmd_area(args: &Args) -> Result<()> {
+    let cores = args.get_usize("cores", 8)?;
+    let cfg = SystemConfig::multi_core(cores);
+    // Access rate: every ACT+PRE across channels; use the paper-scale
+    // figure unless told otherwise.
+    let rate = args.get_f64("access-rate", 170e6)?;
+    let cost = HcracCost::of(&cfg, rate);
+    println!("Sec. 6.5 — HCRAC overhead ({} cores, {} channels)", cfg.cpu.cores, cfg.dram.channels);
+    println!("  storage : {} bytes ({} bits)", cost.storage_bytes, cost.storage_bits);
+    println!("  area    : {:.4} mm^2 ({} of 4MB LLC)", cost.area_mm2, pct(cost.area_fraction_of_llc()));
+    println!("  power   : {:.4} mW (static {:.4} + dynamic {:.4})", cost.total_mw(), cost.static_mw, cost.dynamic_mw);
+    println!("Paper: 5376 bytes, 0.022 mm^2 (0.24% of LLC), 0.149 mW");
+    Ok(())
+}
+
+fn cmd_sweep_capacity(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let entries = [32usize, 64, 128, 256, 512, 1024];
+    println!("Sensitivity — HCRAC capacity (8-core, CC speedup vs baseline)");
+    let rows = sweep_capacity(scale, &entries);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(e, s)| vec![e.to_string(), f(*s, 4), bar(s - 1.0, 0.15, 30)])
+        .collect();
+    print_table(&["entries/core", "speedup", ""], &table);
+    write_csv(
+        "results/sweep_capacity.csv",
+        &["entries", "speedup"],
+        &rows.iter().map(|(e, s)| vec![e.to_string(), s.to_string()]).collect::<Vec<_>>(),
+    )?;
+    Ok(())
+}
+
+fn cmd_sweep_duration(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let durations = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
+    println!("Sensitivity — caching duration (reductions from the circuit layer)");
+    let rows = sweep_duration(scale, &durations);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(d, s)| vec![format!("{d} ms"), f(*s, 4), bar(s - 1.0, 0.15, 30)])
+        .collect();
+    print_table(&["duration", "speedup", ""], &table);
+    write_csv(
+        "results/sweep_duration.csv",
+        &["duration_ms", "speedup"],
+        &rows.iter().map(|(d, s)| vec![d.to_string(), s.to_string()]).collect::<Vec<_>>(),
+    )?;
+    Ok(())
+}
+
+fn cmd_sweep_temperature(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    let temps = [45.0, 55.0, 65.0, 75.0, 85.0];
+    println!("Sensitivity — temperature (paper Sec. 8.3: CC works at worst case)");
+    let rows = sweep_temperature(scale, &temps);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(t, s)| vec![format!("{t} C"), f(*s, 4), bar(s - 1.0, 0.15, 30)])
+        .collect();
+    print_table(&["temp", "speedup", ""], &table);
+    write_csv(
+        "results/sweep_temperature.csv",
+        &["temp_c", "speedup"],
+        &rows.iter().map(|(t, s)| vec![t.to_string(), s.to_string()]).collect::<Vec<_>>(),
+    )?;
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cores = args.get_usize("cores", 1)?;
+    let mut cfg = SystemConfig::multi_core(cores);
+    cfg.insts_per_core = args.get_u64("insts", 500_000)?;
+    cfg.warmup_cpu_cycles = args.get_u64("warmup", 250_000)?;
+    cfg.chargecache.duration_ms = args.get_f64("duration", 1.0)?;
+    cfg.chargecache.entries_per_core = args.get_usize("entries", 128)?;
+    let kind = args.mechanism(MechanismKind::ChargeCache)?;
+
+    let name = args.get_str("workload", "mcf");
+    let result = if let Some(mix) = args.get("mix") {
+        let mix: usize = mix.parse()?;
+        System::new_mix(&cfg, kind, mix).run()
+    } else {
+        let p = Profile::by_name(name)
+            .with_context_or(|| format!("unknown workload {name:?}"))?;
+        let profiles: Vec<&Profile> = (0..cores).map(|_| p).collect();
+        System::new(&cfg, kind, &profiles).run()
+    };
+
+    println!("workload  : {}", result.workload);
+    println!("mechanism : {}", result.mechanism);
+    println!("cycles    : {}", result.cpu_cycles);
+    for (i, ipc) in result.core_ipc.iter().enumerate() {
+        println!("core {i} IPC: {ipc:.4}");
+    }
+    println!("RMPKC     : {:.3}", result.rmpkc());
+    println!("acts      : {} (reduced: {})", result.acts(), pct(result.reduced_act_fraction()));
+    println!("row hit/miss/conf: {}/{}/{}",
+        result.mc.iter().map(|m| m.row_hits).sum::<u64>(),
+        result.mc.iter().map(|m| m.row_misses).sum::<u64>(),
+        result.mc.iter().map(|m| m.row_conflicts).sum::<u64>());
+    println!("avg read latency : {:.1} bus cycles", result.avg_read_latency());
+    println!("1ms-RLTL  : {}", pct(result.rltl_at_ms(1.0)));
+    println!("DRAM energy: {:.1} uJ (bg {:.1}, act {:.1}, rd {:.1}, wr {:.1}, ref {:.1})",
+        result.energy.total_nj() / 1000.0,
+        result.energy.background_nj / 1000.0,
+        result.energy.act_pre_nj / 1000.0,
+        result.energy.read_nj / 1000.0,
+        result.energy.write_nj / 1000.0,
+        result.energy.refresh_nj / 1000.0);
+    Ok(())
+}
+
+fn cmd_gen_traces(args: &Args) -> Result<()> {
+    let out = args.get_str("out", "traces");
+    let n = args.get_u64("insts", 1_000_000)?;
+    std::fs::create_dir_all(out)?;
+    for p in PROFILES.iter() {
+        let path = format!("{out}/{}.trace", p.name);
+        let mut src = SynthTrace::new(p, 42, 0);
+        write_trace(&path, &mut src, n / p.inst_per_mem as u64)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_timing_table(args: &Args) -> Result<()> {
+    let temp = args.get_f64("temp", 85.0)?;
+    let (table, from_artifacts) = timing_table_or_analytic(temp, 1.25);
+    println!(
+        "Charge -> timing table at {temp} C ({})",
+        if from_artifacts { "AOT artifacts via PJRT" } else { "analytic fallback" }
+    );
+    let rows: Vec<Vec<String>> = table
+        .ages()
+        .iter()
+        .step_by(8)
+        .map(|&age| {
+            let (rcd_ns, ras_ns) = table.reduction_ns(age);
+            let (rcd, ras) = table.reduction_cycles(age);
+            vec![
+                format!("{:.3} ms", age * 1e3),
+                format!("{rcd_ns:.2} ns"),
+                format!("{ras_ns:.2} ns"),
+                format!("-{rcd} cyc"),
+                format!("-{ras} cyc"),
+            ]
+        })
+        .collect();
+    print_table(&["row age", "tRCD red", "tRAS red", "tRCD", "tRAS"], &rows);
+    let (rcd, ras) = table.reduction_cycles(1e-3);
+    println!("\nAt the paper's 1 ms duration: -{rcd} tRCD / -{ras} tRAS cycles (paper: -4/-8)");
+    Ok(())
+}
+
+// Small helper: Option::with_context-like for readability above.
+trait WithContextOr<T> {
+    fn with_context_or(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+impl<T> WithContextOr<T> for Option<T> {
+    fn with_context_or(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| anyhow::anyhow!(f()))
+    }
+}

@@ -1,0 +1,155 @@
+//! `charge_meta.json` parser — a minimal flat-JSON reader (the build is
+//! offline; no serde). The file is machine-written by `aot.py` with flat
+//! `"key": value` pairs plus one string list, which is all we parse.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Metadata emitted by the AOT build describing the artifact shapes and
+/// the calibrated circuit constants.
+#[derive(Debug, Clone)]
+pub struct ChargeMeta {
+    pub numbers: HashMap<String, f64>,
+    pub entry_points: Vec<String>,
+}
+
+impl ChargeMeta {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse a flat JSON object of numbers and one string array.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut numbers = HashMap::new();
+        let mut entry_points = Vec::new();
+        let body = text
+            .trim()
+            .strip_prefix('{')
+            .and_then(|s| s.strip_suffix('}'))
+            .context("not a JSON object")?;
+        // Split top-level fields: the only nested structure is one [...]
+        // array, so splitting on `",` / newline boundaries suffices when
+        // we re-join array contents first.
+        for raw in split_top_level(body) {
+            let (key, value) = raw
+                .split_once(':')
+                .with_context(|| format!("bad field {raw:?}"))?;
+            let key = key.trim().trim_matches('"').to_string();
+            let value = value.trim();
+            if let Some(list) = value.strip_prefix('[') {
+                let list = list.strip_suffix(']').context("unterminated array")?;
+                entry_points = list
+                    .split(',')
+                    .map(|s| s.trim().trim_matches('"').to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+            } else {
+                let v: f64 = value
+                    .trim_end_matches(',')
+                    .parse()
+                    .with_context(|| format!("bad number for {key}: {value:?}"))?;
+                numbers.insert(key, v);
+            }
+        }
+        if numbers.is_empty() {
+            bail!("no numeric fields parsed");
+        }
+        Ok(Self { numbers, entry_points })
+    }
+
+    pub fn get(&self, key: &str) -> Result<f64> {
+        self.numbers
+            .get(key)
+            .copied()
+            .with_context(|| format!("missing meta key {key}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.get(key)? as usize)
+    }
+}
+
+/// Split a JSON object body into `"key": value` chunks at top level
+/// (commas inside `[...]` do not split).
+fn split_top_level(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for ch in body.chars() {
+        match ch {
+            '[' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ']' => {
+                depth = depth.saturating_sub(1);
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                if !cur.trim().is_empty() {
+                    out.push(cur.trim().to_string());
+                }
+                cur.clear();
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "vdd": 1.5,
+  "table_n": 64,
+  "tau_leak_ms": 124.95,
+  "entry_points": [
+    "bitline_sweep",
+    "decay_curve",
+    "latency_table"
+  ],
+  "dt_ns": 0.01
+}"#;
+
+    #[test]
+    fn parses_numbers_and_list() {
+        let m = ChargeMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.get("vdd").unwrap(), 1.5);
+        assert_eq!(m.get_usize("table_n").unwrap(), 64);
+        assert_eq!(m.get("dt_ns").unwrap(), 0.01);
+        assert_eq!(m.entry_points.len(), 3);
+        assert_eq!(m.entry_points[0], "bitline_sweep");
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let m = ChargeMeta::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ChargeMeta::parse("not json").is_err());
+        assert!(ChargeMeta::parse("{}").is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_if_present() {
+        let path = crate::runtime::Runtime::default_dir().join("charge_meta.json");
+        if path.exists() {
+            let m = ChargeMeta::load(&path).unwrap();
+            assert_eq!(m.get("vdd").unwrap(), 1.5);
+            assert!(m.get("a_per_ns").unwrap() > 0.0);
+            assert!(m.entry_points.contains(&"latency_table".to_string()));
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! PJRT runtime: load the AOT-compiled circuit-layer artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts` from the
+//! JAX/Pallas models) and execute them from Rust. Python never runs on the
+//! simulation path — this module is the only bridge to the circuit layer.
+
+pub mod charge_model;
+pub mod meta;
+
+pub use charge_model::ChargeModelRuntime;
+pub use meta::ChargeMeta;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO artifact bound to a PJRT client.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// PJRT CPU client + artifact loader.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifacts location (repo-root/artifacts).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True if the artifact set exists (built by `make artifacts`).
+    pub fn artifacts_present(&self) -> bool {
+        self.dir.join("charge_meta.json").exists()
+    }
+
+    /// Load and compile `<name>.hlo.txt`.
+    ///
+    /// HLO *text* is the interchange format: jax >= 0.5 emits protos with
+    /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids (see python/compile/aot.py).
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Artifact { exe, name: name.to_string() })
+    }
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the tuple elements of the
+    /// (return_tuple=True) result.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+}

@@ -1,0 +1,8 @@
+//! Full-system simulation: cores + LLC + controllers wired together, plus
+//! the result/statistics types every experiment consumes.
+
+pub mod stats;
+pub mod system;
+
+pub use stats::SimResult;
+pub use system::System;

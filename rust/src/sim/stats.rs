@@ -1,0 +1,147 @@
+//! Simulation results and derived metrics (IPC, weighted speedup, RMPKC).
+
+use crate::analysis::rltl::RLTL_INTERVALS_MS;
+use crate::controller::McStats;
+use crate::energy::EnergyBreakdown;
+
+/// Everything one simulation run produces.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Workload label (profile name or mix id).
+    pub workload: String,
+    pub mechanism: &'static str,
+    /// Per-core IPC over the measured region.
+    pub core_ipc: Vec<f64>,
+    /// Measured CPU cycles (warmup excluded) until the last core finished.
+    pub cpu_cycles: u64,
+    /// Per-channel controller statistics.
+    pub mc: Vec<McStats>,
+    /// Merged t-RLTL fractions, aligned with [`RLTL_INTERVALS_MS`].
+    pub rltl: Vec<f64>,
+    /// DRAM energy breakdown over the measured region.
+    pub energy: EnergyBreakdown,
+    /// Total instructions retired in the measured region (all cores).
+    pub total_insts: u64,
+    /// LLC behaviour.
+    pub llc_hits: u64,
+    pub llc_misses: u64,
+}
+
+impl SimResult {
+    /// Total activations across channels.
+    pub fn acts(&self) -> u64 {
+        self.mc.iter().map(|m| m.acts).sum()
+    }
+
+    /// Fraction of activations served with reduced timing (paper Sec. 5
+    /// reports 67% for multiprogrammed workloads under ChargeCache).
+    pub fn reduced_act_fraction(&self) -> f64 {
+        let acts = self.acts();
+        if acts == 0 {
+            return 0.0;
+        }
+        self.mc.iter().map(|m| m.acts_reduced).sum::<u64>() as f64 / acts as f64
+    }
+
+    /// Row misses (activations) per kilo-CPU-cycle — the paper's RMPKC.
+    pub fn rmpkc(&self) -> f64 {
+        if self.cpu_cycles == 0 {
+            return 0.0;
+        }
+        self.acts() as f64 / (self.cpu_cycles as f64 / 1000.0)
+    }
+
+    /// Single-core IPC (panics if multi-core).
+    pub fn ipc(&self) -> f64 {
+        assert_eq!(self.core_ipc.len(), 1);
+        self.core_ipc[0]
+    }
+
+    /// t-RLTL at a tracked interval.
+    pub fn rltl_at_ms(&self, ms: f64) -> f64 {
+        let idx = RLTL_INTERVALS_MS
+            .iter()
+            .position(|&m| (m - ms).abs() < 1e-12)
+            .expect("interval not tracked");
+        self.rltl[idx]
+    }
+
+    /// DRAM energy per retired instruction [nJ/inst] — the basis for the
+    /// Fig. 5 comparison (energy for a fixed amount of work; required
+    /// because fixed-time windows do differing amounts of work).
+    pub fn energy_per_inst(&self) -> f64 {
+        self.energy.total_nj() / self.total_insts.max(1) as f64
+    }
+
+    /// Mean read latency in bus cycles.
+    pub fn avg_read_latency(&self) -> f64 {
+        let (sum, cnt) = self
+            .mc
+            .iter()
+            .fold((0u64, 0u64), |(s, c), m| (s + m.read_latency_sum, c + m.read_latency_cnt));
+        if cnt == 0 {
+            0.0
+        } else {
+            sum as f64 / cnt as f64
+        }
+    }
+}
+
+/// Weighted speedup of a multiprogrammed run against per-core alone IPCs
+/// (Snavely & Tullsen; the paper's multi-core metric, Sec. 6.1).
+pub fn weighted_speedup(shared_ipc: &[f64], alone_ipc: &[f64]) -> f64 {
+    assert_eq!(shared_ipc.len(), alone_ipc.len());
+    shared_ipc
+        .iter()
+        .zip(alone_ipc)
+        .map(|(s, a)| if *a > 0.0 { s / a } else { 0.0 })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result_with(acts: u64, reduced: u64, cycles: u64) -> SimResult {
+        let mut mc = McStats::default();
+        mc.acts = acts;
+        mc.acts_reduced = reduced;
+        SimResult {
+            workload: "test".into(),
+            mechanism: "Baseline",
+            core_ipc: vec![1.5],
+            cpu_cycles: cycles,
+            mc: vec![mc],
+            rltl: vec![0.0; RLTL_INTERVALS_MS.len()],
+            energy: EnergyBreakdown::default(),
+            total_insts: 1000,
+            llc_hits: 0,
+            llc_misses: 0,
+        }
+    }
+
+    #[test]
+    fn rmpkc_definition() {
+        let r = result_with(500, 0, 1_000_000);
+        assert!((r.rmpkc() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduced_fraction() {
+        let r = result_with(100, 67, 1000);
+        assert!((r.reduced_act_fraction() - 0.67).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_speedup_identity() {
+        let ipc = vec![1.0, 2.0, 0.5];
+        assert!((weighted_speedup(&ipc, &ipc) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_speedup_degradation() {
+        let shared = vec![0.5, 1.0];
+        let alone = vec![1.0, 2.0];
+        assert!((weighted_speedup(&shared, &alone) - 1.0).abs() < 1e-12);
+    }
+}

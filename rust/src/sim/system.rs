@@ -1,0 +1,385 @@
+//! The full simulated system: trace-driven cores → shared LLC → per-channel
+//! memory controllers → DDR3 devices, ticked cycle-accurately with a 5:1
+//! CPU:bus clock ratio (4 GHz / 800 MHz, Table 1).
+
+use std::collections::HashMap;
+
+use crate::config::SystemConfig;
+use crate::controller::{AddressMapper, Completion, MapScheme, MemController, Request};
+use crate::cpu::core_model::{Core, MemPort};
+use crate::cpu::Llc;
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::latency::MechanismKind;
+use crate::sim::stats::SimResult;
+use crate::trace::{profile::multicore_mix, Profile, SynthTrace, TraceSource};
+
+/// LLC + controllers + mapper: the memory side of the system, split from
+/// the cores so each core can tick with a mutable borrow of this.
+struct MemHierarchy {
+    llc: Llc,
+    mcs: Vec<MemController>,
+    mapper: AddressMapper,
+    /// Current bus cycle (updated by the system loop).
+    bus_now: u64,
+    next_req_id: u64,
+    /// In-flight read id -> (core, line).
+    inflight: HashMap<u64, (u32, u64)>,
+}
+
+impl MemPort for MemHierarchy {
+    fn load(&mut self, core: u32, line: u64, _seq: u64) -> Result<bool, ()> {
+        if self.llc.probe(line) {
+            self.llc.access(line, false);
+            return Ok(true);
+        }
+        let loc = self.mapper.map_line(line);
+        // Admission control before mutating the LLC: the read channel must
+        // accept, and (conservatively) every channel must have writeback
+        // room since the victim's channel is unknown until eviction.
+        if !self.mcs[loc.channel as usize].can_accept_read()
+            || !self.mcs.iter().all(|m| m.can_accept_write())
+        {
+            return Err(());
+        }
+        let res = self.llc.access(line, false);
+        if let crate::cpu::cache::LlcResult::Miss { writeback: Some(victim) } = res {
+            self.send_write(victim);
+        }
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        self.inflight.insert(id, (core, line));
+        let accepted = self.mcs[loc.channel as usize].enqueue(
+            Request { id, core, loc, is_write: false, arrived: self.bus_now },
+            self.bus_now,
+        );
+        debug_assert!(accepted, "admission was pre-checked");
+        Ok(false)
+    }
+
+    fn store(&mut self, core: u32, line: u64) -> Result<(), ()> {
+        if !self.mcs.iter().all(|m| m.can_accept_write()) {
+            return Err(());
+        }
+        let _ = core;
+        let res = self.llc.access(line, true);
+        if let crate::cpu::cache::LlcResult::Miss { writeback: Some(victim) } = res {
+            self.send_write(victim);
+        }
+        Ok(())
+    }
+}
+
+impl MemHierarchy {
+    fn send_write(&mut self, line: u64) {
+        let loc = self.mapper.map_line(line);
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        let accepted = self.mcs[loc.channel as usize].enqueue(
+            Request { id, core: u32::MAX, loc, is_write: true, arrived: self.bus_now },
+            self.bus_now,
+        );
+        debug_assert!(accepted, "writeback admission pre-checked");
+    }
+}
+
+/// The simulated system.
+pub struct System {
+    cfg: SystemConfig,
+    kind: MechanismKind,
+    cores: Vec<Core>,
+    hier: MemHierarchy,
+    cpu_cycle: u64,
+    workload: String,
+}
+
+impl System {
+    /// Build a system running `profiles[i]` on core `i`.
+    pub fn new(cfg: &SystemConfig, kind: MechanismKind, profiles: &[&Profile]) -> Self {
+        assert_eq!(profiles.len(), cfg.cpu.cores, "one profile per core");
+        let workload = profiles.iter().map(|p| p.name).collect::<Vec<_>>().join("+");
+        let traces: Vec<Box<dyn TraceSource>> = profiles
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                Box::new(SynthTrace::new(p, cfg.seed ^ (i as u64) << 8, i as u64))
+                    as Box<dyn TraceSource>
+            })
+            .collect();
+        Self::with_traces(cfg, kind, traces, workload)
+    }
+
+    /// Build the paper's eight-core mix `mix_idx`.
+    pub fn new_mix(cfg: &SystemConfig, kind: MechanismKind, mix_idx: usize) -> Self {
+        let profiles = multicore_mix(mix_idx, cfg.cpu.cores);
+        let mut s = Self::new(cfg, kind, &profiles);
+        s.workload = format!("mix{mix_idx:02}");
+        s
+    }
+
+    /// Build from explicit trace sources (file replay, tests).
+    pub fn with_traces(
+        cfg: &SystemConfig,
+        kind: MechanismKind,
+        traces: Vec<Box<dyn TraceSource>>,
+        workload: String,
+    ) -> Self {
+        assert_eq!(traces.len(), cfg.cpu.cores);
+        let cores = traces
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                Core::new(
+                    i as u32,
+                    t,
+                    cfg.cpu.window,
+                    cfg.cpu.issue_width,
+                    cfg.cpu.mshrs,
+                    cfg.cpu.llc_hit_cycles,
+                )
+            })
+            .collect();
+        let mcs = (0..cfg.dram.channels)
+            .map(|_| MemController::new(cfg, kind))
+            .collect();
+        Self {
+            cfg: cfg.clone(),
+            kind,
+            cores,
+            hier: MemHierarchy {
+                llc: Llc::new(cfg.cpu.llc_bytes, cfg.cpu.llc_ways, cfg.dram.line_bytes),
+                mcs,
+                mapper: AddressMapper::new(&cfg.dram, MapScheme::RoRaBaColCh),
+                bus_now: 0,
+                next_req_id: 0,
+                inflight: HashMap::new(),
+            },
+            cpu_cycle: 0,
+            workload,
+        }
+    }
+
+    /// Names of the workloads on each core.
+    pub fn workload(&self) -> &str {
+        &self.workload
+    }
+
+    fn tick(&mut self, completions: &mut Vec<Completion>) {
+        let now = self.cpu_cycle;
+        // Memory side ticks on the bus clock.
+        if now % self.cfg.cpu.cpu_per_bus == 0 {
+            let bus = now / self.cfg.cpu.cpu_per_bus;
+            self.hier.bus_now = bus;
+            completions.clear();
+            for mc in &mut self.hier.mcs {
+                mc.tick(bus, completions);
+            }
+            for c in completions.drain(..) {
+                if let Some((core, line)) = self.hier.inflight.remove(&c.req_id) {
+                    self.cores[core as usize].complete_line(line);
+                }
+            }
+        }
+        for core in &mut self.cores {
+            core.tick(now, &mut self.hier);
+        }
+        self.cpu_cycle += 1;
+    }
+
+    /// Run warmup + measured region; returns the result.
+    pub fn run(&mut self) -> SimResult {
+        let mut completions = Vec::new();
+
+        // Warmup: caches, HCRAC, and DRAM state get warm; stats reset after.
+        while self.cpu_cycle < self.cfg.warmup_cpu_cycles {
+            self.tick(&mut completions);
+        }
+        for core in &mut self.cores {
+            core.reset_stats();
+            core.target = self.cfg.insts_per_core;
+        }
+        for mc in &mut self.hier.mcs {
+            mc.reset_stats();
+        }
+        self.hier.llc.reset_stats();
+        let measure_start = self.cpu_cycle;
+        let bus_start = self.cpu_cycle / self.cfg.cpu.cpu_per_bus;
+
+        // Measured region. Fixed-time: run exactly `measure_cycles` (the
+        // stable basis for multiprogrammed comparisons). Fixed-work: run
+        // until every core reaches its instruction target (hard cap
+        // guards against pathological stalls).
+        match self.cfg.measure_cycles {
+            Some(n) => {
+                for core in &mut self.cores {
+                    core.target = 0; // no finish target in fixed-time mode
+                }
+                let end = measure_start + n;
+                while self.cpu_cycle < end {
+                    self.tick(&mut completions);
+                }
+            }
+            None => {
+                let cap = measure_start
+                    + self.cfg.insts_per_core * 400
+                    + 10 * self.cfg.warmup_cpu_cycles;
+                while !self.cores.iter().all(|c| c.stats.finished_at.is_some()) {
+                    self.tick(&mut completions);
+                    if self.cpu_cycle >= cap {
+                        break;
+                    }
+                }
+            }
+        }
+        let end = self.cpu_cycle;
+        let bus_end = end / self.cfg.cpu.cpu_per_bus;
+        for mc in &mut self.hier.mcs {
+            mc.finalize(bus_end);
+        }
+        // Energy window: the mean core-finish time. Using last-finish
+        // would let one chaotic laggard dominate the background-energy
+        // comparison between mechanisms (multiprogrammed runs diverge).
+        let mean_finish = self
+            .cores
+            .iter()
+            .map(|c| c.stats.finished_at.unwrap_or(end))
+            .sum::<u64>()
+            / self.cores.len() as u64;
+        let bus_energy_end = mean_finish / self.cfg.cpu.cpu_per_bus;
+
+        // Per-core IPC: fixed-time mode uses the shared window; fixed-work
+        // uses each core's own window up to its instruction target.
+        let core_ipc = self
+            .cores
+            .iter()
+            .map(|c| match self.cfg.measure_cycles {
+                Some(n) => c.stats.retired as f64 / n as f64,
+                None => {
+                    let fin = c.stats.finished_at.unwrap_or(end);
+                    let cycles = (fin - measure_start).max(1);
+                    c.stats.retired.min(self.cfg.insts_per_core) as f64 / cycles as f64
+                }
+            })
+            .collect();
+
+        // Merge RLTL across channels.
+        let mut rltl = self.hier.mcs[0].rltl.clone();
+        for mc in &self.hier.mcs[1..] {
+            rltl.merge(&mc.rltl);
+        }
+
+        // DRAM energy over the measured region.
+        let emodel = EnergyModel::new(&self.cfg);
+        let mut energy = EnergyBreakdown::default();
+        let bus_cycles = bus_energy_end.saturating_sub(bus_start).max(1);
+        for mc in &self.hier.mcs {
+            energy.add(&emodel.channel_energy(&mc.stats, &mc.rank_active_cycles, bus_cycles));
+        }
+
+        let total_insts = self
+            .cores
+            .iter()
+            .map(|c| match self.cfg.measure_cycles {
+                Some(_) => c.stats.retired,
+                None => c.stats.retired.min(self.cfg.insts_per_core),
+            })
+            .sum();
+        SimResult {
+            workload: self.workload.clone(),
+            mechanism: self.kind.label(),
+            core_ipc,
+            cpu_cycles: end - measure_start,
+            mc: self.hier.mcs.iter().map(|m| m.stats.clone()).collect(),
+            rltl: rltl.fractions(),
+            energy,
+            total_insts,
+            llc_hits: self.hier.llc.hits,
+            llc_misses: self.hier.llc.misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Profile;
+
+    fn quick_cfg(insts: u64) -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.insts_per_core = insts;
+        cfg.warmup_cpu_cycles = 20_000;
+        cfg
+    }
+
+    #[test]
+    fn llc_resident_workload_runs_near_full_ipc() {
+        let mut cfg = quick_cfg(150_000);
+        cfg.warmup_cpu_cycles = 100_000; // enough to pull the WS into LLC
+        let p = Profile::by_name("povray").unwrap();
+        let r = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        assert!(r.ipc() > 1.2, "IPC {} too low for an LLC-resident app", r.ipc());
+        assert!(r.rmpkc() < 5.0, "RMPKC {} too high", r.rmpkc());
+    }
+
+    #[test]
+    fn memory_bound_workload_stresses_dram() {
+        let cfg = quick_cfg(60_000);
+        let p = Profile::by_name("mcf").unwrap();
+        let r = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        assert!(r.ipc() < 1.0, "IPC {} too high for mcf-class", r.ipc());
+        assert!(r.acts() > 100, "expected DRAM activity");
+        assert!(r.rmpkc() > 1.0, "RMPKC {}", r.rmpkc());
+    }
+
+    #[test]
+    fn lldram_never_slower_than_baseline() {
+        let cfg = quick_cfg(60_000);
+        let p = Profile::by_name("libquantum").unwrap();
+        let base = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        let ll = System::new(&cfg, MechanismKind::LlDram, &[p]).run();
+        assert!(ll.ipc() >= base.ipc() * 0.999, "{} vs {}", ll.ipc(), base.ipc());
+    }
+
+    #[test]
+    fn chargecache_between_baseline_and_lldram() {
+        let cfg = quick_cfg(60_000);
+        let p = Profile::by_name("tpcc64").unwrap();
+        let base = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        let cc = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+        let ll = System::new(&cfg, MechanismKind::LlDram, &[p]).run();
+        assert!(cc.ipc() >= base.ipc() * 0.995);
+        assert!(ll.ipc() >= cc.ipc() * 0.995);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = quick_cfg(30_000);
+        let p = Profile::by_name("gcc").unwrap();
+        let a = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+        let b = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+        assert_eq!(a.ipc(), b.ipc());
+        assert_eq!(a.acts(), b.acts());
+        assert_eq!(a.cpu_cycles, b.cpu_cycles);
+    }
+
+    #[test]
+    fn multicore_mix_runs_all_cores() {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 4;
+        cfg.insts_per_core = 20_000;
+        cfg.warmup_cpu_cycles = 10_000;
+        let r = System::new_mix(&cfg, MechanismKind::ChargeCache, 0).run();
+        assert_eq!(r.core_ipc.len(), 4);
+        assert!(r.core_ipc.iter().all(|&i| i > 0.0));
+        assert_eq!(r.mc.len(), 2); // two channels
+    }
+
+    #[test]
+    fn energy_is_positive_and_dominated_by_known_terms() {
+        let cfg = quick_cfg(40_000);
+        let p = Profile::by_name("lbm").unwrap();
+        let r = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        assert!(r.energy.total_nj() > 0.0);
+        assert!(r.energy.background_nj > 0.0);
+        assert!(r.energy.act_pre_nj > 0.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Trace file I/O — Ramulator-compatible CPU trace format.
+//!
+//! Each line: `<bubbles> <hex line addr> [W]`, e.g. `7 0x1a2b3c` or
+//! `3 0x44 W`. `gen-traces` writes these; `simulate --trace-file` replays
+//! them (looping at EOF, like Ramulator's trace wrap-around).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{TraceEntry, TraceSource};
+
+/// Parse one trace line (empty/comment lines -> None).
+pub fn parse_line(line: &str) -> Result<Option<TraceEntry>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let bubbles: u32 = parts
+        .next()
+        .context("missing bubble count")?
+        .parse()
+        .context("bad bubble count")?;
+    let addr_s = parts.next().context("missing address")?;
+    let line_addr = if let Some(hex) = addr_s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).context("bad hex address")?
+    } else {
+        addr_s.parse().context("bad address")?
+    };
+    let is_write = match parts.next() {
+        None => false,
+        Some("W") | Some("w") => true,
+        Some("R") | Some("r") => false,
+        Some(x) => bail!("bad access type {x:?}"),
+    };
+    Ok(Some(TraceEntry { bubbles, line_addr, is_write }))
+}
+
+/// Write `n` records from `src` to `path`.
+pub fn write_trace<P: AsRef<Path>>(path: P, src: &mut dyn TraceSource, n: u64) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# chargecache trace: <bubbles> <line addr hex> [W]")?;
+    for _ in 0..n {
+        let e = src.next_entry();
+        if e.is_write {
+            writeln!(w, "{} {:#x} W", e.bubbles, e.line_addr)?;
+        } else {
+            writeln!(w, "{} {:#x}", e.bubbles, e.line_addr)?;
+        }
+    }
+    Ok(())
+}
+
+/// In-memory replaying trace (loops at the end).
+pub struct FileTrace {
+    entries: Vec<TraceEntry>,
+    pos: usize,
+}
+
+impl FileTrace {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let mut entries = Vec::new();
+        for line in std::io::BufReader::new(f).lines() {
+            if let Some(e) = parse_line(&line?)? {
+                entries.push(e);
+            }
+        }
+        if entries.is_empty() {
+            bail!("empty trace file");
+        }
+        Ok(Self { entries, pos: 0 })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl TraceSource for FileTrace {
+    fn next_entry(&mut self) -> TraceEntry {
+        let e = self.entries[self.pos];
+        self.pos = (self.pos + 1) % self.entries.len();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_read_and_write_lines() {
+        assert_eq!(
+            parse_line("7 0x1a2b").unwrap(),
+            Some(TraceEntry { bubbles: 7, line_addr: 0x1a2b, is_write: false })
+        );
+        assert_eq!(
+            parse_line("3 68 W").unwrap(),
+            Some(TraceEntry { bubbles: 3, line_addr: 68, is_write: true })
+        );
+        assert_eq!(parse_line("# comment").unwrap(), None);
+        assert_eq!(parse_line("").unwrap(), None);
+        assert!(parse_line("x y").is_err());
+        assert!(parse_line("1 0x10 Q").is_err());
+    }
+
+    #[test]
+    fn round_trip_through_file() {
+        use crate::trace::{Profile, SynthTrace};
+        let dir = std::env::temp_dir().join("cc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        let p = Profile::by_name("gcc").unwrap();
+        let mut src = SynthTrace::new(p, 11, 0);
+        write_trace(&path, &mut src, 500).unwrap();
+
+        let mut reference = SynthTrace::new(p, 11, 0);
+        let mut replay = FileTrace::load(&path).unwrap();
+        assert_eq!(replay.len(), 500);
+        for _ in 0..500 {
+            assert_eq!(replay.next_entry(), reference.next_entry());
+        }
+        // Loops at the end.
+        let mut reference2 = SynthTrace::new(p, 11, 0);
+        assert_eq!(replay.next_entry(), reference2.next_entry());
+    }
+}

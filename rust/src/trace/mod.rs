@@ -1,0 +1,32 @@
+//! Workload traces: synthetic generators standing in for the paper's
+//! Pin-collected SPEC CPU2006 / TPC / STREAM SimPoint traces.
+//!
+//! The substitution (DESIGN.md §3): Fig. 4's behaviour is governed by each
+//! workload's memory intensity (RMPKC) and row-locality character, both of
+//! which the generators control directly via working-set size, access
+//! pattern, and memory-instruction density. Profiles are named after the
+//! benchmarks in the paper's figures and ordered to reproduce the paper's
+//! RMPKC spread.
+
+pub mod file;
+pub mod profile;
+pub mod rng;
+pub mod synth;
+
+pub use profile::{Pattern, Profile, PROFILES};
+pub use rng::XorShift64;
+pub use synth::SynthTrace;
+
+/// One trace record: `bubbles` non-memory instructions followed by a
+/// memory access to cache line `line_addr`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEntry {
+    pub bubbles: u32,
+    pub line_addr: u64,
+    pub is_write: bool,
+}
+
+/// Infinite instruction-stream source.
+pub trait TraceSource: Send {
+    fn next_entry(&mut self) -> TraceEntry;
+}

@@ -1,0 +1,132 @@
+//! The 22 workload profiles (SPEC CPU2006 + TPC + STREAM stand-ins).
+//!
+//! Parameters are chosen to reproduce each benchmark's published memory
+//! character: memory intensity (instructions per memory access), working
+//! set (drives LLC miss rate), access pattern (drives row locality and
+//! reuse distance), and write fraction. The paper sorts Fig. 4a by RMPKC;
+//! the list below spans ~0 (povray) to very high (STREAM/lbm-class).
+
+/// Memory access pattern of a workload region.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    /// Sequential unit-stride streaming over the working set.
+    Stream,
+    /// `streams` concurrent sequential streams with `stride` lines.
+    Strided { stride: u64, streams: u32 },
+    /// Uniform random lines over the working set.
+    Random,
+    /// Random with short dependent bursts (pointer chasing: high reuse
+    /// distance, poor row locality — the mcf/omnetpp class).
+    PointerChase,
+    /// `stream_frac` of accesses stream; the rest are random.
+    Mixed { stream_frac: f64 },
+}
+
+/// A synthetic workload profile.
+#[derive(Debug, Clone, Copy)]
+pub struct Profile {
+    pub name: &'static str,
+    /// Average instructions between memory accesses (incl. the access).
+    pub inst_per_mem: u32,
+    /// Working set in cache lines (64 B each).
+    pub ws_lines: u64,
+    pub pattern: Pattern,
+    /// Fraction of memory accesses that are writes.
+    pub write_frac: f64,
+}
+
+impl Profile {
+    pub fn by_name(name: &str) -> Option<&'static Profile> {
+        PROFILES.iter().find(|p| p.name == name)
+    }
+    /// Working set in bytes.
+    pub fn ws_bytes(&self) -> u64 {
+        self.ws_lines * 64
+    }
+}
+
+const MB: u64 = 1024 * 1024 / 64; // lines per MiB
+
+/// The 22 workloads of the paper's evaluation (Sec. 6.1), as synthetic
+/// stand-ins. Ordered roughly by expected RMPKC (ascending), mirroring
+/// the paper's Fig. 4a x-axis. `inst_per_mem` is tuned so DRAM-reaching
+/// traffic lands in the realistic MPKI range (tens per kilo-instruction
+/// for the memory-bound class) rather than saturating the channel.
+pub static PROFILES: [Profile; 22] = [
+    // LLC-resident: negligible memory traffic.
+    Profile { name: "povray", inst_per_mem: 6, ws_lines: MB / 8, pattern: Pattern::Mixed { stream_frac: 0.8 }, write_frac: 0.20 },
+    Profile { name: "calculix", inst_per_mem: 6, ws_lines: MB / 4, pattern: Pattern::Stream, write_frac: 0.15 },
+    Profile { name: "namd", inst_per_mem: 5, ws_lines: MB / 2, pattern: Pattern::Strided { stride: 2, streams: 4 }, write_frac: 0.20 },
+    Profile { name: "gromacs", inst_per_mem: 5, ws_lines: MB, pattern: Pattern::Mixed { stream_frac: 0.6 }, write_frac: 0.25 },
+    Profile { name: "h264ref", inst_per_mem: 8, ws_lines: 2 * MB, pattern: Pattern::Stream, write_frac: 0.30 },
+    Profile { name: "hmmer", inst_per_mem: 20, ws_lines: 2 * MB, pattern: Pattern::Random, write_frac: 0.25 },
+    Profile { name: "gobmk", inst_per_mem: 48, ws_lines: 5 * MB, pattern: Pattern::Random, write_frac: 0.20 },
+    Profile { name: "dealII", inst_per_mem: 44, ws_lines: 8 * MB, pattern: Pattern::Mixed { stream_frac: 0.5 }, write_frac: 0.25 },
+    Profile { name: "gcc", inst_per_mem: 40, ws_lines: 16 * MB, pattern: Pattern::Mixed { stream_frac: 0.4 }, write_frac: 0.30 },
+    Profile { name: "astar", inst_per_mem: 44, ws_lines: 24 * MB, pattern: Pattern::PointerChase, write_frac: 0.15 },
+    Profile { name: "tpcc64", inst_per_mem: 40, ws_lines: 96 * MB, pattern: Pattern::Random, write_frac: 0.35 },
+    Profile { name: "cactusADM", inst_per_mem: 36, ws_lines: 48 * MB, pattern: Pattern::Strided { stride: 2, streams: 6 }, write_frac: 0.30 },
+    Profile { name: "zeusmp", inst_per_mem: 32, ws_lines: 64 * MB, pattern: Pattern::Strided { stride: 2, streams: 8 }, write_frac: 0.30 },
+    Profile { name: "sphinx3", inst_per_mem: 28, ws_lines: 32 * MB, pattern: Pattern::Stream, write_frac: 0.10 },
+    Profile { name: "GemsFDTD", inst_per_mem: 28, ws_lines: 128 * MB, pattern: Pattern::Strided { stride: 8, streams: 6 }, write_frac: 0.30 },
+    Profile { name: "leslie3d", inst_per_mem: 24, ws_lines: 96 * MB, pattern: Pattern::Strided { stride: 1, streams: 8 }, write_frac: 0.30 },
+    Profile { name: "soplex", inst_per_mem: 24, ws_lines: 128 * MB, pattern: Pattern::Mixed { stream_frac: 0.5 }, write_frac: 0.20 },
+    Profile { name: "omnetpp", inst_per_mem: 28, ws_lines: 96 * MB, pattern: Pattern::PointerChase, write_frac: 0.25 },
+    Profile { name: "milc", inst_per_mem: 24, ws_lines: 192 * MB, pattern: Pattern::Random, write_frac: 0.25 },
+    Profile { name: "libquantum", inst_per_mem: 20, ws_lines: 32 * MB, pattern: Pattern::Stream, write_frac: 0.25 },
+    Profile { name: "mcf", inst_per_mem: 24, ws_lines: 512 * MB, pattern: Pattern::PointerChase, write_frac: 0.20 },
+    Profile { name: "lbm", inst_per_mem: 20, ws_lines: 256 * MB, pattern: Pattern::Stream, write_frac: 0.45 },
+];
+
+/// The paper's 20 eight-core multiprogrammed mixes: 8 randomly-chosen
+/// applications per mix (Sec. 6.1), deterministic in the mix index.
+pub fn multicore_mix(mix: usize, cores: usize) -> Vec<&'static Profile> {
+    use super::rng::XorShift64;
+    let mut rng = XorShift64::new(0xC0FFEE ^ (mix as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    (0..cores)
+        .map(|_| &PROFILES[rng.below(PROFILES.len() as u64) as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_two_unique_names() {
+        use std::collections::HashSet;
+        let names: HashSet<_> = PROFILES.iter().map(|p| p.name).collect();
+        assert_eq!(names.len(), 22);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(Profile::by_name("mcf").is_some());
+        assert!(Profile::by_name("nonexistent").is_none());
+        assert_eq!(Profile::by_name("mcf").unwrap().ws_lines, 512 * MB);
+    }
+
+    #[test]
+    fn working_sets_span_llc_boundary() {
+        // Some profiles fit the 4 MB LLC (low RMPKC), some far exceed it.
+        let fits = PROFILES.iter().filter(|p| p.ws_bytes() <= 2 << 20).count();
+        let exceeds = PROFILES.iter().filter(|p| p.ws_bytes() > 64 << 20).count();
+        assert!(fits >= 4, "need LLC-resident profiles");
+        assert!(exceeds >= 6, "need memory-bound profiles");
+    }
+
+    #[test]
+    fn mixes_are_deterministic_and_distinct() {
+        let a = multicore_mix(0, 8);
+        let b = multicore_mix(0, 8);
+        assert_eq!(
+            a.iter().map(|p| p.name).collect::<Vec<_>>(),
+            b.iter().map(|p| p.name).collect::<Vec<_>>()
+        );
+        let c = multicore_mix(1, 8);
+        assert_ne!(
+            a.iter().map(|p| p.name).collect::<Vec<_>>(),
+            c.iter().map(|p| p.name).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,300 @@
+//! Synthetic trace generator: turns a [`Profile`] into an infinite,
+//! deterministic instruction stream.
+
+use super::profile::{Pattern, Profile};
+use super::rng::XorShift64;
+use super::{TraceEntry, TraceSource};
+
+/// Pointer-chase burst length (dependent accesses before re-randomizing).
+const CHASE_BURST: u32 = 4;
+
+/// Deterministic synthetic trace for one core.
+pub struct SynthTrace {
+    profile: Profile,
+    rng: XorShift64,
+    /// Base line address of this core's region (separate memory regions
+    /// per core, as the paper notes for multiprogrammed workloads).
+    base: u64,
+    /// Per-stream cursors (streaming/strided patterns).
+    cursors: Vec<u64>,
+    next_stream: usize,
+    /// Pointer-chase state.
+    chase_pos: u64,
+    chase_left: u32,
+    /// Strided-pattern burst position (accesses left on current stream).
+    stride_burst: u32,
+    /// Spatial follow-through for Random/PointerChase: objects span
+    /// several cache lines, so each random jump is followed by a few
+    /// sequential neighbour lines (real-workload row-buffer locality).
+    seq_pos: u64,
+    seq_left: u32,
+    /// Zipf-style temporal reuse: most irregular accesses fall in a hot
+    /// subset (cache-resident in real workloads); the rest sweep the full
+    /// working set. Keeps the DRAM-visible stream irregular while giving
+    /// the LLC a realistic hit rate.
+    hot_lines: u64,
+}
+
+/// Fraction of irregular accesses that target the hot subset.
+const HOT_FRAC: f64 = 0.75;
+/// Hot-subset cap (256 KiB in lines — LLC-resident even with 8 cores
+/// sharing the 4 MiB LLC).
+const HOT_CAP_LINES: u64 = 4 * 1024;
+
+impl SynthTrace {
+    /// `region` selects the core's address region (separate per core).
+    pub fn new(profile: &Profile, seed: u64, region: u64) -> Self {
+        let mut rng = XorShift64::new(seed ^ 0xDEAD_BEEF);
+        let streams = match profile.pattern {
+            Pattern::Strided { streams, .. } => streams.max(1) as usize,
+            Pattern::Stream => 1,
+            _ => 1,
+        };
+        let ws = profile.ws_lines.max(1);
+        let cursors = (0..streams).map(|_| rng.below(ws)).collect();
+        let chase_pos = rng.below(ws);
+        Self {
+            profile: *profile,
+            rng,
+            base: region << 36, // regions 64 GiB apart (line granularity)
+            cursors,
+            next_stream: 0,
+            chase_pos,
+            chase_left: 0,
+            stride_burst: 0,
+            seq_pos: 0,
+            seq_left: 0,
+            hot_lines: (profile.ws_lines / 4).clamp(1, HOT_CAP_LINES),
+        }
+    }
+
+    /// Zipf-ish irregular target: hot subset with HOT_FRAC, else full WS.
+    #[inline]
+    fn irregular_target(&mut self, ws: u64) -> u64 {
+        if self.rng.f64() < HOT_FRAC {
+            self.rng.below(self.hot_lines.min(ws))
+        } else {
+            self.rng.below(ws)
+        }
+    }
+
+    /// Random jump with spatial follow-through (see `seq_left`).
+    #[inline]
+    fn jump_with_locality(&mut self, target: u64, ws: u64) -> u64 {
+        if self.seq_left > 0 {
+            self.seq_left -= 1;
+            self.seq_pos = (self.seq_pos + 1) % ws;
+            return self.seq_pos;
+        }
+        // 1-4 sequential neighbours follow each jump.
+        self.seq_left = self.rng.below(4) as u32 + 1;
+        self.seq_pos = target;
+        target
+    }
+
+    #[inline]
+    fn ws(&self) -> u64 {
+        self.profile.ws_lines.max(1)
+    }
+
+    /// Scatter logical row-groups across the physical row space (page
+    /// allocation): a real OS maps a working set's pages all over DRAM,
+    /// not into rows 0..N. Keeps within-row spatial locality (low 10 bits
+    /// = col+bank untouched) while permuting the 16 row bits with an odd
+    /// multiplier (a bijection mod 2^16), salted per region.
+    #[inline]
+    fn scatter(&self, logical_line: u64) -> u64 {
+        const ROW_SHIFT: u64 = 10; // cols(7) + banks(3) in the default org
+        let within = logical_line & ((1 << ROW_SHIFT) - 1);
+        let group = logical_line >> ROW_SHIFT;
+        let salt = self.base >> 36;
+        let permuted = (group.wrapping_mul(40503).wrapping_add(salt * 0x9E37)) & 0xFFFF
+            | (group >> 16 << 16); // keep giant-WS bits beyond the row field
+        (permuted << ROW_SHIFT) | within
+    }
+
+    fn next_line(&mut self) -> u64 {
+        let ws = self.ws();
+        let off = match self.profile.pattern {
+            Pattern::Stream => {
+                let c = &mut self.cursors[0];
+                *c = (*c + 1) % ws;
+                *c
+            }
+            Pattern::Strided { stride, .. } => {
+                // Stencil-style: a few consecutive touches per stream
+                // before rotating, so same-row accesses arrive together
+                // (matters for FR-FCFS row-hit batching). Burst length is
+                // jittered — fixed lengths resonate with DRAM timing and
+                // produce pathological synthetic schedules.
+                let idx = self.next_stream;
+                self.stride_burst = self.stride_burst.saturating_sub(1);
+                if self.stride_burst == 0 {
+                    self.stride_burst = 2 + self.rng.below(5) as u32;
+                    self.next_stream = (self.next_stream + 1) % self.cursors.len();
+                }
+                let c = &mut self.cursors[idx];
+                *c = (*c + stride) % ws;
+                *c
+            }
+            Pattern::Random => {
+                let target = self.irregular_target(ws);
+                self.jump_with_locality(target, ws)
+            }
+            Pattern::PointerChase => {
+                if self.seq_left > 0 {
+                    self.jump_with_locality(0, ws)
+                } else {
+                    if self.chase_left == 0 {
+                        self.chase_pos = self.irregular_target(ws);
+                        self.chase_left = CHASE_BURST;
+                    }
+                    self.chase_left -= 1;
+                    // Dependent hop: pseudo-random walk from position.
+                    self.chase_pos = (self
+                        .chase_pos
+                        .wrapping_mul(0x5851_F42D_4C95_7F2D)
+                        .wrapping_add(0x14057B7EF767814F))
+                        % ws;
+                    let t = self.chase_pos;
+                    self.jump_with_locality(t, ws)
+                }
+            }
+            Pattern::Mixed { stream_frac } => {
+                if self.rng.f64() < stream_frac {
+                    let c = &mut self.cursors[0];
+                    *c = (*c + 1) % ws;
+                    *c
+                } else {
+                    self.irregular_target(ws)
+                }
+            }
+        };
+        self.base + self.scatter(off)
+    }
+}
+
+impl TraceSource for SynthTrace {
+    fn next_entry(&mut self) -> TraceEntry {
+        // Geometric-ish jitter around inst_per_mem (±50%) keeps cores from
+        // lock-stepping in multiprogrammed mixes.
+        let base = self.profile.inst_per_mem.max(1);
+        let jitter = (self.rng.below(base as u64) as u32).min(base);
+        let bubbles = (base - 1).saturating_sub(jitter / 2) + jitter;
+        let is_write = self.rng.f64() < self.profile.write_frac;
+        TraceEntry { bubbles, line_addr: self.next_line(), is_write }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::profile::PROFILES;
+
+    fn profile(name: &str) -> &'static Profile {
+        Profile::by_name(name).unwrap()
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = profile("mcf");
+        let mut a = SynthTrace::new(p, 1, 0);
+        let mut b = SynthTrace::new(p, 1, 0);
+        for _ in 0..1000 {
+            assert_eq!(a.next_entry(), b.next_entry());
+        }
+    }
+
+    #[test]
+    fn stays_within_region() {
+        for p in PROFILES.iter() {
+            let mut t = SynthTrace::new(p, 3, 2);
+            for _ in 0..2000 {
+                let e = t.next_entry();
+                assert_eq!(e.line_addr >> 36, 2, "{}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_lines_bounded_by_working_set() {
+        use std::collections::HashSet;
+        let p = profile("gromacs"); // 1 MiB-class working set
+        let mut t = SynthTrace::new(p, 3, 0);
+        let distinct: HashSet<u64> = (0..100_000).map(|_| t.next_entry().line_addr).collect();
+        assert!(distinct.len() as u64 <= p.ws_lines);
+    }
+
+    #[test]
+    fn stream_pattern_is_sequential_within_a_row() {
+        // The scatter permutes 1024-line row-groups but keeps lines inside
+        // a group contiguous: consecutive stream accesses off a group
+        // boundary differ by exactly 1.
+        let p = profile("libquantum");
+        let mut t = SynthTrace::new(p, 5, 0);
+        let mut consecutive = 0;
+        let mut prev = t.next_entry().line_addr;
+        for _ in 0..200 {
+            let cur = t.next_entry().line_addr;
+            if cur == prev + 1 {
+                consecutive += 1;
+            }
+            prev = cur;
+        }
+        assert!(consecutive > 190, "stream locality destroyed: {consecutive}/200");
+    }
+
+    #[test]
+    fn scatter_spreads_rows_across_the_row_space() {
+        // Page-allocation realism: a small sequential working set must not
+        // sit in the lowest rows; its row-groups spread over the 64K range.
+        let p = profile("libquantum");
+        let mut t = SynthTrace::new(p, 5, 0);
+        let mut high_rows = 0;
+        for _ in 0..10_000 {
+            let e = t.next_entry();
+            let row = (e.line_addr >> 10) & 0xFFFF;
+            if row > 32_768 {
+                high_rows += 1;
+            }
+        }
+        assert!(high_rows > 2_000, "rows not scattered: {high_rows}/10000 high");
+    }
+
+    #[test]
+    fn write_fraction_approximates_profile() {
+        let p = profile("lbm"); // 0.45 writes
+        let mut t = SynthTrace::new(p, 7, 0);
+        let writes = (0..20_000)
+            .filter(|_| t.next_entry().is_write)
+            .count();
+        let frac = writes as f64 / 20_000.0;
+        assert!((frac - 0.45).abs() < 0.03, "write frac {frac}");
+    }
+
+    #[test]
+    fn random_pattern_mixes_hot_reuse_with_cold_sweep() {
+        use std::collections::HashMap;
+        let p = profile("tpcc64"); // big-WS random
+        let mut t = SynthTrace::new(p, 9, 0);
+        let mut counts: HashMap<u64, u64> = HashMap::new();
+        for _ in 0..50_000 {
+            *counts.entry(t.next_entry().line_addr).or_insert(0) += 1;
+        }
+        let reused = counts.values().filter(|&&c| c > 1).count();
+        let singles = counts.values().filter(|&&c| c == 1).count();
+        // Zipf-ish: a reused hot set AND a broad cold tail must both exist.
+        assert!(reused > 1_000, "hot-set reuse missing: {reused}");
+        assert!(singles > 5_000, "cold sweep missing: {singles}");
+    }
+
+    #[test]
+    fn different_regions_never_collide() {
+        let p = profile("gcc");
+        let mut a = SynthTrace::new(p, 1, 0);
+        let mut b = SynthTrace::new(p, 1, 1);
+        for _ in 0..1000 {
+            assert_ne!(a.next_entry().line_addr, b.next_entry().line_addr);
+        }
+    }
+}

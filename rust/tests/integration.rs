@@ -1,0 +1,219 @@
+//! Integration tests across the whole stack: runtime <-> artifacts,
+//! circuit-layer <-> architecture-layer consistency, and end-to-end
+//! paper-shape checks on small horizons.
+
+use chargecache::config::SystemConfig;
+use chargecache::coordinator::experiments::{run_suite, ExperimentScale};
+use chargecache::latency::timing_table::TimingTable;
+use chargecache::latency::MechanismKind;
+use chargecache::runtime::{ChargeModelRuntime, Runtime};
+use chargecache::sim::System;
+use chargecache::trace::{Profile, PROFILES};
+
+fn artifacts_available() -> Option<Runtime> {
+    let rt = Runtime::new(Runtime::default_dir()).ok()?;
+    rt.artifacts_present().then_some(rt)
+}
+
+/// The HLO artifacts (JAX/Pallas circuit layer) must agree with the
+/// pure-Rust analytic port: this is the cross-language consistency oracle
+/// for the whole codesign bridge.
+#[test]
+fn hlo_timing_table_matches_rust_analytic() {
+    let Some(rt) = artifacts_available() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let cm = ChargeModelRuntime::load(&rt).unwrap();
+    let hlo = cm.timing_table(85.0, 1.25).unwrap();
+    let analytic = TimingTable::analytic(64, 85.0, 1.25);
+    for &age in analytic.ages() {
+        let (h_rcd, h_ras) = hlo.reduction_ns(age);
+        let (a_rcd, a_ras) = analytic.reduction_ns(age);
+        // f32 HLO vs f64 Rust: tolerate the Euler grid quantum (0.01 ns)
+        // plus small float drift.
+        assert!(
+            (h_rcd - a_rcd).abs() < 0.05,
+            "tRCD mismatch at {age}s: HLO {h_rcd} vs analytic {a_rcd}"
+        );
+        assert!(
+            (h_ras - a_ras).abs() < 0.05,
+            "tRAS mismatch at {age}s: HLO {h_ras} vs analytic {a_ras}"
+        );
+    }
+}
+
+/// The production operating point must round to the paper's -4/-8 cycles
+/// through the real PJRT path.
+#[test]
+fn hlo_grants_paper_reductions_at_1ms() {
+    let Some(rt) = artifacts_available() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let cm = ChargeModelRuntime::load(&rt).unwrap();
+    let table = cm.timing_table(85.0, 1.25).unwrap();
+    assert_eq!(table.reduction_cycles(1e-3), (4, 8));
+}
+
+/// Sec. 6.2 endpoints through the PJRT sense_latency entry point.
+#[test]
+fn hlo_sense_latency_reproduces_sec62() {
+    let Some(rt) = artifacts_available() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let cm = ChargeModelRuntime::load(&rt).unwrap();
+    let n = cm.meta.get_usize("latency_batch").unwrap();
+    let vdd = cm.meta.get("vdd").unwrap() as f32;
+    let tau = cm.meta.get("tau_leak_ms").unwrap();
+    let v_worst = (vdd / 2.0) as f64 + (vdd as f64 / 2.0) * (-64.0 / tau).exp();
+    let mut v = vec![vdd; n];
+    v[1] = v_worst as f32;
+    let (t_ready, t_restore) = cm.sense_latency(&v).unwrap();
+    assert!((t_ready[0] - 10.0).abs() < 0.05, "full-charge t_ready {}", t_ready[0]);
+    assert!((t_ready[1] - 14.5).abs() < 0.05, "worst-case t_ready {}", t_ready[1]);
+    assert!(
+        ((t_restore[1] - t_restore[0]) - 9.6).abs() < 0.15,
+        "tRAS delta {}",
+        t_restore[1] - t_restore[0]
+    );
+}
+
+/// Fig. 3 trajectories through PJRT: monotone family, correct shape.
+#[test]
+fn hlo_bitline_sweep_family_is_ordered() {
+    let Some(rt) = artifacts_available() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let cm = ChargeModelRuntime::load(&rt).unwrap();
+    let b = cm.meta.get_usize("traj_batch").unwrap();
+    let vdd = cm.meta.get("vdd").unwrap() as f32;
+    let v0: Vec<f32> = (0..b).map(|i| vdd * (0.80 + 0.2 * i as f32 / (b - 1) as f32)).collect();
+    let (samples, data) = cm.bitline_sweep(&v0).unwrap();
+    let v_ready = cm.meta.get("v_ready").unwrap() as f32;
+    let cross: Vec<usize> = (0..b)
+        .map(|lane| {
+            data[lane * samples..(lane + 1) * samples]
+                .iter()
+                .position(|&v| v >= v_ready)
+                .unwrap_or(samples)
+        })
+        .collect();
+    // More initial charge -> earlier crossing.
+    for w in cross.windows(2) {
+        assert!(w[1] <= w[0], "crossings must be ordered: {cross:?}");
+    }
+}
+
+/// End-to-end paper shape on a reduced horizon: multiprogrammed 4-core,
+/// ChargeCache improves throughput (the paper's per-core-IPC metric;
+/// cycles-to-last-finish is chaotic under shared-LLC interleaving and is
+/// NOT a stable comparison basis).
+#[test]
+fn multicore_mechanism_ordering_end_to_end() {
+    let mut cfg = SystemConfig::eight_core();
+    cfg.cpu.cores = 4;
+    cfg.insts_per_core = 60_000;
+    cfg.warmup_cpu_cycles = 30_000;
+    let run = |kind| -> f64 {
+        System::new_mix(&cfg, kind, 1).run().core_ipc.iter().sum()
+    };
+    let base = run(MechanismKind::Baseline);
+    let cc = run(MechanismKind::ChargeCache);
+    let ll = run(MechanismKind::LlDram);
+    assert!(cc >= base * 0.99, "ChargeCache must not hurt throughput: {cc} vs {base}");
+    assert!(ll >= base * 0.99, "LL-DRAM must not hurt throughput: {ll} vs {base}");
+}
+
+/// ChargeCache's hit rate rises with bank conflicts: an 8-core mix sees a
+/// larger reduced-activation fraction than the same apps run alone
+/// (paper Sec. 6.3's explanation of the 8-core win).
+#[test]
+fn multicore_increases_hcrac_hit_fraction() {
+    let mut cfg8 = SystemConfig::eight_core();
+    cfg8.cpu.cores = 4;
+    cfg8.insts_per_core = 50_000;
+    cfg8.warmup_cpu_cycles = 25_000;
+    let multi = System::new_mix(&cfg8, MechanismKind::ChargeCache, 3).run();
+
+    let mut cfg1 = SystemConfig::single_core();
+    cfg1.insts_per_core = 50_000;
+    cfg1.warmup_cpu_cycles = 25_000;
+    // Alone runs of the same mix members, averaged.
+    let profiles = chargecache::trace::profile::multicore_mix(3, 4);
+    let mut singles = 0.0;
+    for p in &profiles {
+        let r = System::new(&cfg1, MechanismKind::ChargeCache, &[*p]).run();
+        singles += r.reduced_act_fraction();
+    }
+    singles /= profiles.len() as f64;
+    assert!(
+        multi.reduced_act_fraction() >= singles * 0.9,
+        "multiprogramming should not reduce HCRAC hits: multi {} vs single-avg {}",
+        multi.reduced_act_fraction(),
+        singles
+    );
+}
+
+/// Mini evaluation suite keeps the paper's aggregate orderings.
+#[test]
+fn mini_suite_orderings() {
+    let scale = ExperimentScale { insts_per_core: 25_000, warmup_cycles: 10_000, mixes: 2 };
+    let suite = run_suite(scale, true);
+    let rows4a = suite.fig4a();
+    let avg = |idx: usize| -> f64 {
+        rows4a.iter().map(|r| r.speedups[idx].1).sum::<f64>() / rows4a.len() as f64
+    };
+    let (cc, nuat, ccn, ll) = (avg(0), avg(1), avg(2), avg(3));
+    // LL-DRAM is the upper bound; CC+NUAT >= CC ~ >= NUAT (small noise ok).
+    assert!(ll + 1e-6 >= cc, "LL {ll} vs CC {cc}");
+    assert!(ll + 1e-6 >= ccn, "LL {ll} vs CC+NUAT {ccn}");
+    assert!(cc >= nuat - 0.005, "CC {cc} vs NUAT {nuat}");
+    // Fig. 5 view exists for all mixes.
+    assert_eq!(suite.fig5(true).len(), 2);
+}
+
+/// Every named workload runs and produces nonzero IPC.
+#[test]
+fn all_profiles_simulate() {
+    let mut cfg = SystemConfig::default();
+    cfg.insts_per_core = 8_000;
+    cfg.warmup_cpu_cycles = 3_000;
+    for p in PROFILES.iter() {
+        let r = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+        assert!(r.ipc() > 0.0, "{} produced zero IPC", p.name);
+        assert!(r.ipc() <= 3.0 + 1e-9, "{} exceeded issue width", p.name);
+    }
+}
+
+/// Trace files round-trip through the system: a file-driven run matches
+/// the generator-driven run exactly.
+#[test]
+fn file_trace_reproduces_synth_run() {
+    use chargecache::trace::file::{write_trace, FileTrace};
+    use chargecache::trace::{SynthTrace, TraceSource};
+
+    let p = Profile::by_name("gcc").unwrap();
+    let dir = std::env::temp_dir().join("cc_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("gcc.trace");
+    // Enough records that the horizon never wraps.
+    let mut src = SynthTrace::new(p, 99, 0);
+    write_trace(&path, &mut src, 200_000).unwrap();
+
+    let mut cfg = SystemConfig::default();
+    cfg.insts_per_core = 20_000;
+    cfg.warmup_cpu_cycles = 5_000;
+    cfg.seed = 99;
+
+    let synth: Box<dyn TraceSource> = Box::new(SynthTrace::new(p, 99, 0));
+    let a = System::with_traces(&cfg, MechanismKind::ChargeCache, vec![synth], "synth".into())
+        .run();
+    let file: Box<dyn TraceSource> = Box::new(FileTrace::load(&path).unwrap());
+    let b = System::with_traces(&cfg, MechanismKind::ChargeCache, vec![file], "file".into())
+        .run();
+    assert_eq!(a.cpu_cycles, b.cpu_cycles);
+    assert_eq!(a.acts(), b.acts());
+}

@@ -1,0 +1,276 @@
+//! Property-based tests on coordinator/DRAM invariants.
+//!
+//! The build is offline (no proptest crate), so properties are driven by a
+//! seeded-random case generator: each property runs across many random
+//! seeds and shrink-free failures print the offending seed for replay.
+
+use chargecache::config::{RowPolicy, SystemConfig};
+use chargecache::controller::{MemController, Request};
+use chargecache::dram::command::Loc;
+use chargecache::latency::chargecache::ChargeCache;
+use chargecache::latency::{Mechanism, MechanismKind, RowKey};
+use chargecache::trace::XorShift64;
+
+/// Run `body` for `cases` random seeds; panic messages carry the seed.
+fn property(cases: u64, body: impl Fn(&mut XorShift64, u64)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case * 7919;
+        let mut rng = XorShift64::new(seed);
+        body(&mut rng, seed);
+    }
+}
+
+/// Drive a controller with a random request stream; the DRAM device's
+/// debug assertions (every command >= its earliest legal cycle) act as the
+/// invariant oracle — any timing violation panics.
+#[test]
+fn prop_no_timing_violation_under_random_traffic() {
+    property(25, |rng, seed| {
+        let mut cfg = SystemConfig::default();
+        cfg.mc.row_policy = if rng.below(2) == 0 { RowPolicy::Open } else { RowPolicy::Closed };
+        let kinds = [
+            MechanismKind::Baseline,
+            MechanismKind::ChargeCache,
+            MechanismKind::Nuat,
+            MechanismKind::ChargeCacheNuat,
+            MechanismKind::LlDram,
+        ];
+        let kind = kinds[rng.below(5) as usize];
+        let mut mc = MemController::new(&cfg, kind);
+        let mut done = Vec::new();
+        let mut id = 0u64;
+        let mut issued = 0u64;
+        let mut completed = 0u64;
+        for now in 0..40_000u64 {
+            // Random arrivals, bursty.
+            if rng.below(3) == 0 {
+                let req = Request {
+                    id,
+                    core: 0,
+                    loc: Loc {
+                        channel: 0,
+                        rank: 0,
+                        bank: rng.below(8) as u32,
+                        row: rng.below(64) as u32,
+                        col: rng.below(128) as u32,
+                    },
+                    is_write: rng.below(4) == 0,
+                    arrived: now,
+                };
+                let is_write = req.is_write;
+                if mc.enqueue(req, now) {
+                    id += 1;
+                    if !is_write {
+                        issued += 1;
+                    }
+                }
+            }
+            done.clear();
+            mc.tick(now, &mut done);
+            completed += done.len() as u64;
+        }
+        // Conservation: every completed read was issued (seed {seed}).
+        assert!(completed <= issued, "completions exceed reads (seed {seed})");
+        // Liveness: the controller must have made progress.
+        assert!(completed > 0, "no read ever completed (seed {seed})");
+    });
+}
+
+/// HCRAC must never serve an entry older than the caching duration, under
+/// arbitrary interleavings of inserts/lookups with arbitrary time gaps.
+#[test]
+fn prop_hcrac_never_serves_stale_entries() {
+    property(40, |rng, seed| {
+        let cfg = SystemConfig::default();
+        let duration = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        let mut cc = ChargeCache::new(&cfg);
+        let mut now = 0u64;
+        // Shadow model: exact insertion times.
+        let mut inserted: std::collections::HashMap<u64, u64> = Default::default();
+        for _ in 0..3000 {
+            now += rng.below(duration / 4) + 1;
+            let key = RowKey::new(0, rng.below(8) as u32, rng.below(32) as u32);
+            if rng.below(2) == 0 {
+                cc.on_precharge(now, 0, key);
+                inserted.insert(key.0, now);
+            } else {
+                let grant = cc.on_activate(now, 0, key);
+                if grant.reduced {
+                    let age = now - inserted[&key.0];
+                    assert!(
+                        age <= duration,
+                        "stale grant: age {age} > {duration} (seed {seed})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// ChargeCache grants imply a real prior precharge (no phantom hits), and
+/// the hit count matches the number of reduced grants.
+#[test]
+fn prop_hcrac_hits_require_prior_precharge() {
+    property(30, |rng, seed| {
+        let cfg = SystemConfig::default();
+        let mut cc = ChargeCache::new(&cfg);
+        let mut seen = std::collections::HashSet::new();
+        let mut reduced = 0u64;
+        let mut now = 0;
+        for _ in 0..2000 {
+            now += rng.below(100) + 1;
+            let key = RowKey::new(0, rng.below(4) as u32, rng.below(1024) as u32);
+            if rng.below(2) == 0 {
+                cc.on_precharge(now, 0, key);
+                seen.insert(key.0);
+            } else {
+                let g = cc.on_activate(now, 0, key);
+                if g.reduced {
+                    reduced += 1;
+                    assert!(seen.contains(&key.0), "phantom hit (seed {seed})");
+                }
+            }
+        }
+        assert_eq!(cc.hits, reduced, "hit accounting mismatch (seed {seed})");
+    });
+}
+
+/// FR-FCFS must not starve row-conflict requests: every enqueued read
+/// eventually completes even under a hammering row-hit stream.
+#[test]
+fn prop_no_starvation_of_conflicting_request() {
+    property(10, |rng, _seed| {
+        let cfg = SystemConfig::default();
+        let mut mc = MemController::new(&cfg, MechanismKind::Baseline);
+        let mut done = Vec::new();
+        // Victim read to row 99 in bank 0.
+        mc.enqueue(
+            Request {
+                id: 0,
+                core: 0,
+                loc: Loc { channel: 0, rank: 0, bank: 0, row: 99, col: 0 },
+                is_write: false,
+                arrived: 0,
+            },
+            0,
+        );
+        let mut id = 1;
+        let mut victim_done = false;
+        for now in 0..200_000u64 {
+            // Hammer row 1 in the same bank with fresh hits.
+            if now % 3 == 0 && rng.below(2) == 0 {
+                mc.enqueue(
+                    Request {
+                        id,
+                        core: 0,
+                        loc: Loc {
+                            channel: 0,
+                            rank: 0,
+                            bank: 0,
+                            row: 1,
+                            col: (id % 128) as u32,
+                        },
+                        is_write: false,
+                        arrived: now,
+                    },
+                    now,
+                );
+                id += 1;
+            }
+            done.clear();
+            mc.tick(now, &mut done);
+            if done.iter().any(|c| c.req_id == 0) {
+                victim_done = true;
+                break;
+            }
+        }
+        assert!(victim_done, "conflicting request starved");
+    });
+}
+
+/// Request-queue conservation through the full system: reads in == reads
+/// completed + still queued, across random multi-bank traffic.
+#[test]
+fn prop_read_conservation() {
+    property(15, |rng, seed| {
+        let cfg = SystemConfig::default();
+        let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache);
+        let mut done = Vec::new();
+        let mut sent = std::collections::HashSet::new();
+        let mut got = std::collections::HashSet::new();
+        let mut id = 0u64;
+        for now in 0..60_000u64 {
+            if rng.below(4) == 0 {
+                let req = Request {
+                    id,
+                    core: 0,
+                    loc: Loc {
+                        channel: 0,
+                        rank: 0,
+                        bank: rng.below(8) as u32,
+                        row: rng.below(16) as u32,
+                        col: rng.below(128) as u32,
+                    },
+                    is_write: false,
+                    arrived: now,
+                };
+                if mc.enqueue(req, now) {
+                    sent.insert(id);
+                    id += 1;
+                }
+            }
+            done.clear();
+            mc.tick(now, &mut done);
+            for c in &done {
+                assert!(got.insert(c.req_id), "duplicate completion (seed {seed})");
+                assert!(sent.contains(&c.req_id), "unknown completion (seed {seed})");
+            }
+        }
+        // Drain.
+        for now in 60_000..400_000u64 {
+            done.clear();
+            mc.tick(now, &mut done);
+            for c in &done {
+                assert!(got.insert(c.req_id), "duplicate completion (seed {seed})");
+            }
+            if got.len() == sent.len() {
+                break;
+            }
+        }
+        assert_eq!(got.len(), sent.len(), "lost reads (seed {seed})");
+    });
+}
+
+/// The mechanism ordering invariant at system level, across random small
+/// workloads: LL-DRAM cycles <= ChargeCache cycles <= ~Baseline cycles.
+#[test]
+fn prop_mechanism_ordering_on_random_workloads() {
+    use chargecache::sim::System;
+    use chargecache::trace::PROFILES;
+    property(4, |rng, seed| {
+        let mut cfg = SystemConfig::default();
+        cfg.insts_per_core = 40_000;
+        cfg.warmup_cpu_cycles = 15_000;
+        cfg.seed = seed;
+        let p = &PROFILES[rng.below(PROFILES.len() as u64) as usize];
+        let base = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        let cc = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+        let ll = System::new(&cfg, MechanismKind::LlDram, &[p]).run();
+        // Tolerate a few % scheduling chaos (FR-FCFS decisions shift when
+        // commands become ready earlier; LLC interleavings diverge).
+        assert!(
+            cc.ipc() >= base.ipc() * 0.97,
+            "CC slower than baseline on {}: {} vs {} (seed {seed})",
+            p.name,
+            cc.ipc(),
+            base.ipc()
+        );
+        assert!(
+            ll.ipc() >= cc.ipc() * 0.97,
+            "LL-DRAM slower than CC on {}: {} vs {} (seed {seed})",
+            p.name,
+            ll.ipc(),
+            cc.ipc()
+        );
+    });
+}
