@@ -16,7 +16,12 @@ use chargecache::runtime::charge_model::timing_table_or_analytic;
 use chargecache::config::SystemConfig;
 
 fn main() {
-    let scale = ExperimentScale { insts_per_core: 150_000, warmup_cycles: 75_000, mixes: 6 };
+    let scale = ExperimentScale {
+        insts_per_core: 150_000,
+        warmup_cycles: 75_000,
+        mixes: 6,
+        ..ExperimentScale::default()
+    };
 
     // --- Circuit layer (L1/L2 via PJRT) ------------------------------
     let (table, from_hlo) = timing_table_or_analytic(85.0, 1.25);

@@ -8,9 +8,19 @@ use chargecache::coordinator::experiments::{fig1, ExperimentScale};
 
 fn main() {
     let scale = if harness::is_quick() {
-        ExperimentScale { insts_per_core: 20_000, warmup_cycles: 8_000, mixes: 2 }
+        ExperimentScale {
+            insts_per_core: 20_000,
+            warmup_cycles: 8_000,
+            mixes: 2,
+            ..ExperimentScale::default()
+        }
     } else {
-        ExperimentScale { insts_per_core: 120_000, warmup_cycles: 60_000, mixes: 8 }
+        ExperimentScale {
+            insts_per_core: 120_000,
+            warmup_cycles: 60_000,
+            mixes: 8,
+            ..ExperimentScale::default()
+        }
     };
 
     let mut rows = Vec::new();

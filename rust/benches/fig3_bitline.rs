@@ -6,7 +6,6 @@
 mod harness;
 
 use chargecache::latency::timing_table::{circuit, TimingTable};
-use chargecache::runtime::{ChargeModelRuntime, Runtime};
 
 fn main() {
     // Rust analytic path.
@@ -22,7 +21,23 @@ fn main() {
     });
     r.report_throughput(circuit::N_STEPS as f64, "euler-steps");
 
-    // PJRT path (the production artifact).
+    pjrt_benches();
+
+    // Sec. 6.2 deltas from the analytic table.
+    let table = TimingTable::analytic(64, 85.0, 1.25);
+    let (rcd_ns, ras_ns) = table.reduction_ns(1e-3);
+    println!("\nSec. 6.2 @1ms: tRCD -{rcd_ns:.2} ns, tRAS -{ras_ns:.2} ns (paper 4.5/9.6)");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches() {
+    println!("(pjrt feature off; HLO benches skipped — the analytic path above is the default)");
+}
+
+/// PJRT path (the production artifact).
+#[cfg(feature = "pjrt")]
+fn pjrt_benches() {
+    use chargecache::runtime::{ChargeModelRuntime, Runtime};
     match Runtime::new(Runtime::default_dir()) {
         Ok(rt) if rt.artifacts_present() => {
             let cm = ChargeModelRuntime::load(&rt).expect("artifacts load");
@@ -61,9 +76,4 @@ fn main() {
         }
         _ => println!("(artifacts not built; PJRT benches skipped — run `make artifacts`)"),
     }
-
-    // Sec. 6.2 deltas from the analytic table.
-    let table = TimingTable::analytic(64, 85.0, 1.25);
-    let (rcd_ns, ras_ns) = table.reduction_ns(1e-3);
-    println!("\nSec. 6.2 @1ms: tRCD -{rcd_ns:.2} ns, tRAS -{ras_ns:.2} ns (paper 4.5/9.6)");
 }

@@ -8,9 +8,19 @@ use chargecache::coordinator::experiments::{run_suite, ExperimentScale, SuiteRes
 
 fn main() {
     let scale = if harness::is_quick() {
-        ExperimentScale { insts_per_core: 15_000, warmup_cycles: 6_000, mixes: 2 }
+        ExperimentScale {
+            insts_per_core: 15_000,
+            warmup_cycles: 6_000,
+            mixes: 2,
+            ..ExperimentScale::default()
+        }
     } else {
-        ExperimentScale { insts_per_core: 100_000, warmup_cycles: 50_000, mixes: 8 }
+        ExperimentScale {
+            insts_per_core: 100_000,
+            warmup_cycles: 50_000,
+            mixes: 8,
+            ..ExperimentScale::default()
+        }
     };
 
     let mut suite: Option<SuiteResults> = None;

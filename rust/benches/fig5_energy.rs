@@ -7,9 +7,19 @@ use chargecache::coordinator::experiments::{run_suite, ExperimentScale, SuiteRes
 
 fn main() {
     let scale = if harness::is_quick() {
-        ExperimentScale { insts_per_core: 15_000, warmup_cycles: 6_000, mixes: 2 }
+        ExperimentScale {
+            insts_per_core: 15_000,
+            warmup_cycles: 6_000,
+            mixes: 2,
+            ..ExperimentScale::default()
+        }
     } else {
-        ExperimentScale { insts_per_core: 80_000, warmup_cycles: 40_000, mixes: 8 }
+        ExperimentScale {
+            insts_per_core: 80_000,
+            warmup_cycles: 40_000,
+            mixes: 8,
+            ..ExperimentScale::default()
+        }
     };
 
     let mut suite: Option<SuiteResults> = None;

@@ -13,7 +13,8 @@ use chargecache::cpu::Llc;
 use chargecache::dram::command::Loc;
 use chargecache::latency::chargecache::ChargeCache;
 use chargecache::latency::{Mechanism, MechanismKind, RowKey};
-use chargecache::sim::System;
+use chargecache::sim::engine::LoopMode;
+use chargecache::sim::{SimResult, System};
 use chargecache::trace::{Profile, SynthTrace, TraceSource, XorShift64};
 
 fn main() {
@@ -139,5 +140,61 @@ fn main() {
             cycles = res.cpu_cycles;
         });
         r.report_throughput(cycles as f64, "cpu-cycles");
+    }
+
+    engine_vs_strict_tick();
+}
+
+/// The event kernel vs the per-cycle loop on the memory-bound `mcf`
+/// profile: the headline wall-clock figure for the cycle-skipping engine.
+/// Emits `BENCH_engine.json` (repo root) so future PRs have a perf
+/// trajectory to track.
+fn engine_vs_strict_tick() {
+    let insts = 150_000u64;
+    let run_mode = |mode: LoopMode, label: &str| -> (f64, SimResult) {
+        let p = Profile::by_name("mcf").unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.insts_per_core = insts;
+        cfg.warmup_cpu_cycles = 30_000;
+        cfg.loop_mode = mode;
+        let mut res: Option<SimResult> = None;
+        let r = harness::bench(label, 1, 3, || {
+            res = Some(System::new(&cfg, MechanismKind::ChargeCache, &[p]).run());
+        });
+        let res = res.unwrap();
+        r.report_throughput(res.cpu_cycles as f64, "cpu-cycles");
+        (r.mean.as_secs_f64(), res)
+    };
+
+    let (strict_s, strict) = run_mode(LoopMode::StrictTick, "hotpath/mcf_strict_tick");
+    let (event_s, event) = run_mode(LoopMode::EventDriven, "hotpath/mcf_event_driven");
+
+    let strict_cps = strict.cpu_cycles as f64 / strict_s;
+    let event_cps = event.cpu_cycles as f64 / event_s;
+    let speedup = event_cps / strict_cps;
+    let identical = strict.cpu_cycles == event.cpu_cycles
+        && strict.acts() == event.acts()
+        && strict.core_ipc == event.core_ipc
+        && strict.total_insts == event.total_insts;
+    println!(
+        "engine speedup on mcf: {speedup:.2}x ({:.2}M -> {:.2}M sim-cycles/s), stats identical: {identical}",
+        strict_cps / 1e6,
+        event_cps / 1e6
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"engine_vs_strict_tick\",\n  \"workload\": \"mcf\",\n  \
+         \"mechanism\": \"ChargeCache\",\n  \"insts_per_core\": {insts},\n  \
+         \"strict_tick\": {{ \"wall_s\": {strict_s:.6}, \"sim_cpu_cycles\": {}, \
+         \"cycles_per_sec\": {strict_cps:.0} }},\n  \
+         \"event_driven\": {{ \"wall_s\": {event_s:.6}, \"sim_cpu_cycles\": {}, \
+         \"cycles_per_sec\": {event_cps:.0} }},\n  \
+         \"speedup\": {speedup:.3},\n  \"stats_identical\": {identical}\n}}\n",
+        strict.cpu_cycles, event.cpu_cycles
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

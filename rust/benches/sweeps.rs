@@ -10,9 +10,19 @@ use chargecache::coordinator::experiments::{
 
 fn main() {
     let scale = if harness::is_quick() {
-        ExperimentScale { insts_per_core: 12_000, warmup_cycles: 5_000, mixes: 1 }
+        ExperimentScale {
+            insts_per_core: 12_000,
+            warmup_cycles: 5_000,
+            mixes: 1,
+            ..ExperimentScale::default()
+        }
     } else {
-        ExperimentScale { insts_per_core: 60_000, warmup_cycles: 30_000, mixes: 4 }
+        ExperimentScale {
+            insts_per_core: 60_000,
+            warmup_cycles: 30_000,
+            mixes: 4,
+            ..ExperimentScale::default()
+        }
     };
 
     let mut cap = Vec::new();

@@ -4,6 +4,7 @@
 //! simulated system and the CLI layers overrides on top.
 
 use crate::latency::MechanismKind;
+use crate::sim::engine::LoopMode;
 
 /// DRAM organization (DDR3-1600, Table 1).
 #[derive(Debug, Clone, PartialEq)]
@@ -282,6 +283,11 @@ pub struct SystemConfig {
     pub measure_cycles: Option<u64>,
     /// RNG seed for trace generation.
     pub seed: u64,
+    /// How the system loop advances time: the event-driven kernel
+    /// (default) fast-forwards over provably idle cycles;
+    /// [`LoopMode::StrictTick`] keeps the original per-cycle loop as the
+    /// differential-testing oracle (CLI: `--strict-tick`).
+    pub loop_mode: LoopMode,
 }
 
 impl Default for SystemConfig {
@@ -299,6 +305,7 @@ impl Default for SystemConfig {
             warmup_cpu_cycles: 1_000_000,
             measure_cycles: None,
             seed: 42,
+            loop_mode: LoopMode::EventDriven,
         }
     }
 }

@@ -248,6 +248,119 @@ impl MemController {
         !self.rq.is_empty() || !self.wq.is_empty() || !self.completions.is_empty()
     }
 
+    /// Earliest bus cycle `>= now` at which ticking this controller could
+    /// do anything: deliver a completion, resolve an auto-precharge,
+    /// start or advance a refresh, or issue a command for a queued
+    /// request — the event-kernel wake contract
+    /// (see [`crate::sim::engine`]).
+    ///
+    /// The bound is a conservative *lower* bound: it ignores the
+    /// scheduler's row-hit-first and write-drain gates (those can only
+    /// delay an issue past this bound, and a too-early tick is a no-op),
+    /// but it must never be later than the true next action. The
+    /// conflict-precharge hysteresis IS folded in (`arrived +
+    /// CONFLICT_AGE_CYCLES`) because it is a pure function of the
+    /// request, keeping the bound tight on row-conflict traffic.
+    pub fn next_event_at(&self, now: u64) -> u64 {
+        // The write-drain hysteresis flag is itself mutable state the
+        // strict loop re-evaluates every bus cycle, and the opportunistic
+        // trigger can oscillate with period 2 (rq empty, 0 < wq <= lo
+        // flips it on, the yield-back flips it off), making the write
+        // issue cycle depend on tick parity. Any tick that would flip the
+        // flag is therefore an event: report "hot" and let the kernel
+        // tick per-cycle through the window, exactly like the strict
+        // loop. (Ticking extra cycles is always safe — every event-mode
+        // tick coincides with a strict-mode tick.)
+        let drain_flips = if !self.write_drain {
+            self.wq.len() >= self.wq_hi || (self.rq.is_empty() && !self.wq.is_empty())
+        } else {
+            self.wq.is_empty()
+                || self.wq.len() <= self.wq_lo
+                || (!self.rq.is_empty() && self.wq.len() < self.wq_hi)
+        };
+        if drain_flips {
+            return now;
+        }
+        let mut t = u64::MAX;
+        if let Some(r) = self.next_completion_at() {
+            t = t.min(r);
+        }
+        for (ri, rank) in self.dev.ranks.iter().enumerate() {
+            // The tREFI deadline flips this rank into drain mode.
+            t = t.min(rank.next_refresh_at);
+            for bank in &rank.banks {
+                if let Some(ap) = bank.next_autopre_at() {
+                    t = t.min(ap);
+                }
+            }
+            if self.ref_drain[ri] {
+                // Drain in progress: next action is the REF itself (all
+                // banks closed) or the PRE of an open bank.
+                if rank.all_closed() {
+                    t = t.min(rank.ref_busy_until.max(now));
+                } else {
+                    for bank in &rank.banks {
+                        if bank.open_row().is_some() {
+                            t = t.min(bank.pre_at.max(rank.ref_busy_until));
+                        }
+                    }
+                }
+            }
+        }
+        // Closed-row policy: the eager-precharge pass closes an open bank
+        // with no queued hits as soon as tRAS/tRTP allow. One O(queues)
+        // pass builds the per-bank open-row-hit bitmap (same shape as
+        // `refresh_open_hit`, which needs &mut and so cannot be reused
+        // here).
+        if self.row_policy == RowPolicy::Closed {
+            let bpr = self.banks_per_rank;
+            let mut open_hit = vec![false; self.dev.ranks.len() * bpr];
+            for req in self.rq.iter().chain(self.wq.iter()) {
+                let idx = req.loc.rank as usize * bpr + req.loc.bank as usize;
+                if !open_hit[idx]
+                    && self.dev.bank(&req.loc).open_row() == Some(req.loc.row)
+                {
+                    open_hit[idx] = true;
+                }
+            }
+            for (ri, rank) in self.dev.ranks.iter().enumerate() {
+                if self.ref_drain[ri] {
+                    continue;
+                }
+                for (bi, bank) in rank.banks.iter().enumerate() {
+                    if bank.open_row().is_some() && !open_hit[ri * bpr + bi] {
+                        t = t.min(bank.pre_at);
+                    }
+                }
+            }
+        }
+        // Queued requests: the cycle each one's next command becomes
+        // timing-legal (queue arrivals re-trigger this computation, so a
+        // fresh request surfaces at the next bus boundary).
+        for req in self.rq.iter().chain(self.wq.iter()) {
+            if self.ref_drain[req.loc.rank as usize] {
+                continue; // drained ranks are covered above
+            }
+            let bank = self.dev.bank(&req.loc);
+            if bank.next_autopre_at().is_some() {
+                continue; // logically closing; its autopre is the event
+            }
+            let cand = match bank.open_row() {
+                Some(row) if row == req.loc.row => {
+                    let kind = if req.is_write { CommandKind::Write } else { CommandKind::Read };
+                    self.dev.earliest_issue(kind, &req.loc)
+                }
+                Some(_) => self
+                    .dev
+                    .earliest_issue(CommandKind::Precharge, &req.loc)
+                    .max(req.arrived + CONFLICT_AGE_CYCLES),
+                None => self.dev.earliest_issue(CommandKind::Activate, &req.loc),
+            };
+            t = t.min(cand);
+        }
+        t.max(now)
+    }
+
     fn resolve_autopre(&mut self, now: u64) {
         let rltl = &mut self.rltl;
         let mech = &mut self.mech;
@@ -699,6 +812,30 @@ mod tests {
         // precharged between the two column commands.
         assert_eq!(mc.stats.precharges, 0);
         assert_eq!(mc.stats.row_hits + mc.stats.row_misses, 2);
+    }
+
+    #[test]
+    fn wake_bound_tracks_idle_act_read_and_completion() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        // Idle controller: nothing can happen before the tREFI deadline.
+        assert_eq!(mc.next_event_at(0), c.timing.trefi);
+        // A fresh request to a closed bank can ACT immediately.
+        assert!(mc.enqueue(req(1, 0, 5, 3, false), 0));
+        assert_eq!(mc.next_event_at(0), 0);
+        let mut done = Vec::new();
+        mc.tick(0, &mut done); // ACT issues
+        // Next action: the RD once tRCD expires.
+        assert_eq!(mc.next_event_at(1), c.timing.trcd);
+        for now in 1..=c.timing.trcd {
+            mc.tick(now, &mut done);
+        }
+        // RD issued at tRCD; the only remaining event is its completion
+        // at tRCD + CL + BL (the queue is empty, the row stays open).
+        assert_eq!(
+            mc.next_event_at(c.timing.trcd + 1),
+            c.timing.trcd + c.timing.cl + c.timing.tbl
+        );
     }
 
     #[test]

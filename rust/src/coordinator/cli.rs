@@ -3,7 +3,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]

@@ -6,6 +6,7 @@ use std::collections::HashMap;
 use crate::analysis::rltl::RLTL_INTERVALS_MS;
 use crate::config::SystemConfig;
 use crate::latency::MechanismKind;
+use crate::sim::engine::LoopMode;
 use crate::sim::stats::weighted_speedup;
 use crate::sim::{SimResult, System};
 use crate::trace::{profile::multicore_mix, PROFILES};
@@ -22,23 +23,32 @@ pub struct ExperimentScale {
     pub warmup_cycles: u64,
     /// Number of eight-core mixes (paper: 20).
     pub mixes: usize,
+    /// Loop kernel for every simulation in the suite: the event-driven
+    /// engine by default; `--strict-tick` selects the per-cycle oracle.
+    pub loop_mode: LoopMode,
 }
 
 impl Default for ExperimentScale {
     fn default() -> Self {
-        Self { insts_per_core: 500_000, warmup_cycles: 250_000, mixes: 20 }
+        Self {
+            insts_per_core: 500_000,
+            warmup_cycles: 250_000,
+            mixes: 20,
+            loop_mode: LoopMode::EventDriven,
+        }
     }
 }
 
 impl ExperimentScale {
     pub fn quick() -> Self {
-        Self { insts_per_core: 60_000, warmup_cycles: 30_000, mixes: 4 }
+        Self { insts_per_core: 60_000, warmup_cycles: 30_000, mixes: 4, ..Self::default() }
     }
 
     pub fn single_cfg(&self) -> SystemConfig {
         let mut cfg = SystemConfig::single_core();
         cfg.insts_per_core = self.insts_per_core;
         cfg.warmup_cpu_cycles = self.warmup_cycles;
+        cfg.loop_mode = self.loop_mode;
         cfg
     }
 
@@ -46,6 +56,7 @@ impl ExperimentScale {
         let mut cfg = SystemConfig::eight_core();
         cfg.insts_per_core = self.insts_per_core;
         cfg.warmup_cpu_cycles = self.warmup_cycles;
+        cfg.loop_mode = self.loop_mode;
         // Multiprogrammed runs measure over a fixed time window (see
         // SystemConfig::measure_cycles): ~10 cycles per target instruction
         // gives every core a deep window at typical shared-system IPCs.
@@ -334,7 +345,12 @@ mod tests {
     #[test]
     fn mini_suite_has_sane_shape() {
         // Tiny horizon: structural test, not a results test.
-        let scale = ExperimentScale { insts_per_core: 5_000, warmup_cycles: 2_000, mixes: 1 };
+        let scale = ExperimentScale {
+            insts_per_core: 5_000,
+            warmup_cycles: 2_000,
+            mixes: 1,
+            ..ExperimentScale::default()
+        };
         let suite = run_suite(scale, false);
         assert_eq!(suite.single.len(), PROFILES.len() * 5);
         let rows = suite.fig4a();

@@ -4,7 +4,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// Print an aligned table.
 pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {

@@ -117,6 +117,48 @@ impl Core {
         }
     }
 
+    /// Earliest CPU cycle `>= now` at which ticking this core could
+    /// change its state — the event-kernel wake contract
+    /// (see [`crate::sim::engine`]).
+    ///
+    /// The core is *hot* (wake = `now`) whenever it could retire or
+    /// insert an instruction this cycle, including every case where the
+    /// outcome depends on the memory system accepting a request (the
+    /// attempt itself is the only way to find out, and a rejected
+    /// attempt mutates nothing — so re-attempting each cycle matches the
+    /// strict loop exactly). It sleeps only in the two states that are
+    /// provably inert until an external fill arrives: the reorder window
+    /// blocked behind an outstanding miss ("blocked on MSHR" as opposed
+    /// to "computing for N cycles"), or a primary miss stalled on a full
+    /// MSHR file. Pending LLC hits wake it at their ready cycle; DRAM
+    /// completions are controller wake events and need no entry here.
+    pub fn next_event_at(&self, now: u64) -> u64 {
+        if self.window.front() == Some(&true) {
+            return now; // retirement possible
+        }
+        if self.window.len() < self.window_cap {
+            let insertable = match &self.pending {
+                _ if self.bubbles_left > 0 => true,
+                // Next trace entry unknown until fetched: stay hot.
+                None => true,
+                // Posted store: acceptance depends on the write queue.
+                Some(e) if e.is_write => true,
+                Some(e) => {
+                    // A secondary miss merges internally; a primary miss
+                    // needs a free MSHR — otherwise only a fill helps.
+                    self.mshr.contains(e.line_addr) || !self.mshr.is_full()
+                }
+            };
+            if insertable {
+                return now;
+            }
+        }
+        match self.hit_queue.peek() {
+            Some(&Reverse((ready, _))) => ready.max(now),
+            None => u64::MAX,
+        }
+    }
+
     /// Advance one CPU cycle.
     pub fn tick(&mut self, now: u64, mem: &mut dyn MemPort) {
         self.stats.cycles += 1;
@@ -382,6 +424,57 @@ mod tests {
             c.tick(now, &mut m);
         }
         assert_eq!(c.stats.llc_miss_loads, 3);
+    }
+
+    #[test]
+    fn wake_contract_tracks_blocking_states() {
+        // Window (8 slots) fills behind a miss to line 42 -> core sleeps.
+        let mut c = core_with(vec![
+            TraceEntry { bubbles: 0, line_addr: 42, is_write: false },
+            TraceEntry { bubbles: 100, line_addr: 0, is_write: false },
+        ]);
+        let mut m = MockMem { hit_lines: vec![], accepted: vec![], stall: false };
+        assert_eq!(c.next_event_at(0), 0, "fresh core is hot");
+        for now in 0..20 {
+            c.tick(now, &mut m);
+        }
+        assert_eq!(c.window_occupancy(), 8);
+        assert_eq!(c.next_event_at(20), u64::MAX, "blocked on DRAM: inert");
+        // The fill is the wake event; afterwards the head can retire.
+        c.complete_line(42);
+        assert_eq!(c.next_event_at(20), 20);
+    }
+
+    #[test]
+    fn wake_contract_mshr_exhaustion_sleeps_and_llc_hit_wakes() {
+        // 2 MSHRs, 3 distinct miss lines: the third stalls on a full file.
+        let mut c = core_with(vec![
+            TraceEntry { bubbles: 0, line_addr: 1, is_write: false },
+            TraceEntry { bubbles: 0, line_addr: 2, is_write: false },
+            TraceEntry { bubbles: 0, line_addr: 3, is_write: false },
+        ]);
+        let mut m = MockMem { hit_lines: vec![], accepted: vec![], stall: false };
+        for now in 0..10 {
+            c.tick(now, &mut m);
+        }
+        assert!(c.mshr.is_full());
+        assert_eq!(c.next_event_at(10), u64::MAX, "MSHR-full primary miss: inert");
+
+        // An LLC hit in flight wakes the core at its ready cycle.
+        let mut c2 = core_with(vec![
+            TraceEntry { bubbles: 0, line_addr: 7, is_write: false },
+            TraceEntry { bubbles: 0, line_addr: 1, is_write: false },
+            TraceEntry { bubbles: 0, line_addr: 2, is_write: false },
+            TraceEntry { bubbles: 0, line_addr: 3, is_write: false },
+        ]);
+        let mut m2 = MockMem { hit_lines: vec![7], accepted: vec![], stall: false };
+        for now in 0..10 {
+            c2.tick(now, &mut m2);
+        }
+        assert!(c2.mshr.is_full());
+        // Hit issued at cycle 0 with latency 4: ready at 4, already past —
+        // but it was consumed during ticking, so only check monotonicity.
+        assert!(c2.next_event_at(10) >= 10);
     }
 
     #[test]

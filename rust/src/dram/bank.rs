@@ -127,6 +127,16 @@ impl Bank {
     pub fn is_idle_closed(&self) -> bool {
         self.state == BankState::Closed && self.autopre_at.is_none()
     }
+
+    /// Earliest-ready surface for the event kernel
+    /// ([`crate::sim::engine`]): the cycle at which this bank's pending
+    /// auto-precharge resolves, if one is armed. The per-command
+    /// timestamps (`act_at`, `pre_at`, `rd_at`, `wr_at`) are the other
+    /// half of the contract and are consulted through
+    /// [`crate::dram::device::Channel::earliest_issue`].
+    pub fn next_autopre_at(&self) -> Option<u64> {
+        self.autopre_at
+    }
 }
 
 #[cfg(test)]

@@ -148,6 +148,23 @@ impl Channel {
         }
     }
 
+    /// Like [`Channel::earliest`], but additionally folds in the shared
+    /// data-bus constraint for column commands (a burst starting at
+    /// `issue + CL/CWL` must not begin before `data_bus_until`). This is
+    /// the per-request wake bound the event kernel uses: it is exactly
+    /// the cycle at which the *timing* gates of [`Channel::can_issue`]
+    /// open; the remaining gates (row state, pending auto-precharge,
+    /// refresh drain) are separate wake events tracked by the
+    /// controller.
+    pub fn earliest_issue(&self, kind: CommandKind, loc: &Loc) -> u64 {
+        let mut t = self.earliest(kind, loc);
+        if kind.is_column() {
+            let lead = if kind.is_read() { self.timing.cl } else { self.timing.cwl };
+            t = t.max(self.data_bus_until.saturating_sub(lead));
+        }
+        t
+    }
+
     /// Can `kind` issue at `loc` right now?
     pub fn can_issue(&self, kind: CommandKind, loc: &Loc, now: u64) -> bool {
         if self.earliest(kind, loc) > now {
@@ -347,6 +364,18 @@ mod tests {
         // The bank is logically closing: no more reads may target it even
         // though the row is still latched.
         assert!(!c.can_issue(CommandKind::Read, &l, 20));
+    }
+
+    #[test]
+    fn earliest_issue_is_exact_for_column_commands() {
+        let mut c = ch();
+        let l = loc(0, 1);
+        c.issue(Command { kind: CommandKind::Activate, loc: l }, 0, 11, 28, 0);
+        c.issue(Command { kind: CommandKind::Read, loc: l }, 11, 11, 28, 0);
+        // The wake bound must be the first cycle the timing gates open.
+        let t = c.earliest_issue(CommandKind::Read, &l);
+        assert!(!c.can_issue(CommandKind::Read, &l, t - 1));
+        assert!(c.can_issue(CommandKind::Read, &l, t));
     }
 
     #[test]

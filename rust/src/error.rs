@@ -1,0 +1,148 @@
+//! Crate-local error type. The build is offline (no `anyhow`), so a small
+//! enum plus anyhow-style context helpers cover the whole failure surface:
+//! CLI parsing, trace/metadata IO, and artifact loading.
+
+use std::fmt;
+
+/// What went wrong, with a human-readable message chain.
+#[derive(Debug)]
+pub enum SimError {
+    /// Filesystem / IO failure.
+    Io(std::io::Error),
+    /// Malformed input: a trace line, CLI option, or metadata field.
+    Parse(String),
+    /// Anything else worth a message (artifact loading, config errors).
+    Msg(String),
+}
+
+pub type Result<T> = std::result::Result<T, SimError>;
+
+impl SimError {
+    pub fn msg(m: impl Into<String>) -> Self {
+        SimError::Msg(m.into())
+    }
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::Io(e) => write!(f, "io error: {e}"),
+            SimError::Parse(m) => write!(f, "parse error: {m}"),
+            SimError::Msg(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+impl From<std::io::Error> for SimError {
+    fn from(e: std::io::Error) -> Self {
+        SimError::Io(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for SimError {
+    fn from(e: std::num::ParseIntError) -> Self {
+        SimError::Parse(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for SimError {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        SimError::Parse(e.to_string())
+    }
+}
+
+/// anyhow-style `.context(..)` / `.with_context(..)` on `Result` and
+/// `Option`, so call sites read the same as they did under anyhow.
+pub trait Context<T> {
+    fn context(self, msg: &str) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| SimError::Msg(format!("{msg}: {e}")))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| SimError::Msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.ok_or_else(|| SimError::Msg(msg.to_string()))
+    }
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| SimError::Msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`SimError::Msg`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::SimError::Msg(format!($($arg)*)))
+    };
+}
+
+/// Bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("value was {}", 42)
+    }
+
+    #[test]
+    fn bail_formats_message() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "value was 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(30).is_err());
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        let r: std::result::Result<u32, std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "nope",
+        ));
+        let e = r.with_context(|| "loading thing".to_string()).unwrap_err();
+        assert!(e.to_string().contains("loading thing"));
+    }
+
+    #[test]
+    fn io_and_parse_conversions() {
+        fn parse(s: &str) -> Result<u64> {
+            Ok(s.parse::<u64>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(matches!(parse("x").unwrap_err(), SimError::Parse(_)));
+    }
+}

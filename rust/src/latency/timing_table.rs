@@ -94,6 +94,27 @@ pub mod circuit {
         (below_ready as f64 * DT_NS, below_restore as f64 * DT_NS)
     }
 
+    /// Bitline-voltage trajectory for one lane (same discretization as
+    /// [`sense_latency`]), sampled every `stride` Euler steps — the
+    /// pure-Rust stand-in for the `bitline_sweep` HLO artifact (Fig. 3)
+    /// when the `pjrt` feature is off.
+    pub fn bitline_trajectory(v_cell0: f64, a: f64, stride: usize) -> Vec<f64> {
+        let mut v_bl = VBL_PRE + (v_cell0 - VBL_PRE) * CS_RATIO;
+        let xm = VDD / 2.0;
+        let dead = T_CS_NS / DT_NS;
+        let stride = stride.max(1);
+        let mut out = Vec::with_capacity(N_STEPS / stride + 1);
+        for i in 0..N_STEPS {
+            if i % stride == 0 {
+                out.push(v_bl);
+            }
+            let on = if (i as f64) >= dead { 1.0 } else { 0.0 };
+            let x = v_bl - VBL_PRE;
+            v_bl += a * x * (1.0 - (x / xm) * (x / xm)) * on * DT_NS;
+        }
+        out
+    }
+
     /// Calibrate the restore overdrive coefficient beta (bisection on the
     /// worst-vs-full restore delta == paper's 9.6 ns tRAS reduction).
     pub fn calibrate_restore(a: f64, tau_ms: f64) -> f64 {
@@ -269,6 +290,20 @@ mod tests {
         for &age in hot.ages() {
             assert!(cold.reduction_ns(age).0 >= hot.reduction_ns(age).0 - 1e-9);
         }
+    }
+
+    #[test]
+    fn bitline_trajectory_crossing_matches_sense_latency() {
+        let (a, tau_ms) = circuit::calibrate();
+        let beta = circuit::calibrate_restore(a, tau_ms);
+        let traj = circuit::bitline_trajectory(circuit::VDD, a, 1);
+        let cross = traj.iter().position(|&v| v >= circuit::V_READY).unwrap();
+        let t_cross = cross as f64 * circuit::DT_NS;
+        let (t_ready, _) = circuit::sense_latency(circuit::VDD, a, beta);
+        assert!(
+            (t_cross - t_ready).abs() <= 2.0 * circuit::DT_NS,
+            "trajectory crossing {t_cross} ns vs sense_latency {t_ready} ns"
+        );
     }
 
     #[test]

@@ -18,12 +18,21 @@
 //!   LL-DRAM comparison mechanisms, DRAM energy / area models, and the
 //!   experiment coordinator that regenerates every figure in the paper.
 //!
-//! Python never runs on the simulation path: the [`runtime`] module loads
-//! the AOT artifacts via PJRT (the `xla` crate) at startup to build the
-//! charge→timing tables; everything after that is pure Rust.
+//! The simulation loop is driven by the event kernel in [`sim::engine`]:
+//! components surface *wake times* (earliest cycle they could act) and
+//! the clock fast-forwards to the global minimum instead of ticking
+//! every cycle. The original per-cycle loop survives as
+//! [`sim::LoopMode::StrictTick`] and differential tests assert the two
+//! produce bit-identical results.
 //!
-//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! Python never runs on the simulation path: with the off-by-default
+//! `pjrt` feature, the [`runtime`] module loads the AOT artifacts via
+//! PJRT (the `xla` crate) at startup to build the charge→timing tables.
+//! The default build uses the pure-Rust analytic circuit model instead
+//! and has zero external dependencies.
+//!
+//! See `DESIGN.md` (repo root) for the architecture and per-experiment
+//! index.
 
 pub mod analysis;
 pub mod config;
@@ -32,6 +41,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod dram;
 pub mod energy;
+pub mod error;
 pub mod latency;
 pub mod runtime;
 pub mod sim;
@@ -39,4 +49,5 @@ pub mod trace;
 
 pub use config::SystemConfig;
 pub use latency::MechanismKind;
+pub use sim::engine::LoopMode;
 pub use sim::system::System;

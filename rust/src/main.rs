@@ -12,8 +12,10 @@
 //! chargecache gen-traces --out dir [--insts N]              trace files
 //! chargecache timing-table [--temp C]                       codesign bridge
 //! ```
-
-use anyhow::{bail, Result};
+//!
+//! Every simulation runs on the event-driven kernel; pass `--strict-tick`
+//! to any simulating command to use the original per-cycle loop (the
+//! differential-testing oracle — results are bit-identical, only slower).
 
 use chargecache::config::SystemConfig;
 use chargecache::coordinator::cli::Args;
@@ -22,8 +24,10 @@ use chargecache::coordinator::experiments::{
 };
 use chargecache::coordinator::figures::{bar, f, pct, print_table, write_csv};
 use chargecache::energy::HcracCost;
+use chargecache::error::{Context, Result};
 use chargecache::latency::MechanismKind;
-use chargecache::runtime::{charge_model::timing_table_or_analytic, ChargeModelRuntime, Runtime};
+use chargecache::runtime::charge_model::timing_table_or_analytic;
+use chargecache::sim::engine::LoopMode;
 use chargecache::sim::System;
 use chargecache::trace::{file::write_trace, Profile, SynthTrace, PROFILES};
 
@@ -36,6 +40,9 @@ fn scale_from(args: &Args) -> Result<ExperimentScale> {
     s.insts_per_core = args.get_u64("insts", s.insts_per_core)?;
     s.warmup_cycles = args.get_u64("warmup", s.warmup_cycles)?;
     s.mixes = args.get_usize("mixes", s.mixes)?;
+    if args.flag("strict-tick") {
+        s.loop_mode = LoopMode::StrictTick;
+    }
     Ok(s)
 }
 
@@ -53,7 +60,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "gen-traces" => cmd_gen_traces(&args),
         "timing-table" => cmd_timing_table(&args),
-        "help" | _ => {
+        _ => {
             println!("{}", HELP);
             Ok(())
         }
@@ -63,7 +70,7 @@ fn main() -> Result<()> {
 const HELP: &str = "chargecache — ChargeCache (HPCA'16) reproduction
 commands: fig1 fig3 fig4 fig5 area sweep-capacity sweep-duration
           sweep-temperature simulate gen-traces timing-table
-common options: --insts N --warmup N --mixes M --quick";
+common options: --insts N --warmup N --mixes M --quick --strict-tick";
 
 fn cmd_fig1(args: &Args) -> Result<()> {
     let scale = scale_from(args)?;
@@ -91,44 +98,81 @@ fn cmd_fig1(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fig. 3 — bitline trajectories and ready times.
+///
+/// With the `pjrt` feature the trajectories come from the AOT HLO
+/// artifacts executed via PJRT; otherwise from the pure-Rust analytic
+/// circuit model (the two are pinned against each other in tests).
 fn cmd_fig3(args: &Args) -> Result<()> {
-    let rt = Runtime::new(Runtime::default_dir())?;
-    if !rt.artifacts_present() {
-        bail!("artifacts not built — run `make artifacts` first");
-    }
-    let cm = ChargeModelRuntime::load(&rt)?;
-    println!("Fig. 3 — bitline voltage vs time (PJRT: {})", rt.platform());
-
-    // Initial voltages: fully charged down to one refresh window of leakage.
-    let tau_ms = cm.meta.get("tau_leak_ms")?;
-    let vdd = cm.meta.get("vdd")?;
     let ages_ms = [0.0, 1.0, 4.0, 8.0, 16.0, 32.0, 48.0, 64.0];
-    // Leakage toward the VDD/2 precharge midpoint (see circuit.py).
-    let v0: Vec<f32> = ages_ms
-        .iter()
-        .map(|&ms| (vdd / 2.0 + (vdd / 2.0) * (-(ms) / tau_ms).exp()) as f32)
-        .collect();
-    let (samples, data) = cm.bitline_sweep(&v0)?;
-    let dt = cm.meta.get("dt_ns")? * cm.meta.get("traj_stride")?;
+    // Each branch produces: source label, samples per lane, sample period
+    // (ns), initial voltages, row-major trajectories, per-lane ready times.
+    let source: String;
+    let samples: usize;
+    let dt: f64;
+    let v0: Vec<f64>;
+    let trajectories: Vec<f64>;
+    let readies: Vec<f64>;
 
-    // Ready-time per lane (first crossing of V_READY).
-    let v_ready = cm.meta.get("v_ready")?;
+    #[cfg(feature = "pjrt")]
+    {
+        use chargecache::runtime::{ChargeModelRuntime, Runtime};
+        let rt = Runtime::new(Runtime::default_dir())?;
+        if !rt.artifacts_present() {
+            chargecache::bail!("artifacts not built — run `make artifacts` first");
+        }
+        let cm = ChargeModelRuntime::load(&rt)?;
+        source = format!("PJRT: {}", rt.platform());
+        let tau_ms = cm.meta.get("tau_leak_ms")?;
+        let vdd = cm.meta.get("vdd")?;
+        v0 = ages_ms
+            .iter()
+            .map(|&ms| vdd / 2.0 + (vdd / 2.0) * (-(ms) / tau_ms).exp())
+            .collect();
+        let v0_f32: Vec<f32> = v0.iter().map(|&v| v as f32).collect();
+        let (s, data) = cm.bitline_sweep(&v0_f32)?;
+        samples = s;
+        dt = cm.meta.get("dt_ns")? * cm.meta.get("traj_stride")?;
+        trajectories = data.iter().map(|&v| v as f64).collect();
+        let v_ready = cm.meta.get("v_ready")?;
+        readies = (0..ages_ms.len())
+            .map(|lane| {
+                let row = &trajectories[lane * samples..(lane + 1) * samples];
+                row.iter().position(|&v| v >= v_ready).unwrap_or(samples) as f64 * dt
+            })
+            .collect();
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    {
+        use chargecache::latency::timing_table::circuit;
+        source = "analytic circuit model (build with --features pjrt for HLO)".to_string();
+        let (a, tau_ms) = circuit::calibrate();
+        let beta = circuit::calibrate_restore(a, tau_ms);
+        v0 = ages_ms
+            .iter()
+            .map(|&ms| circuit::v_cell_after(ms * 1e-3, circuit::T_CAL_CELSIUS, tau_ms))
+            .collect();
+        let stride = 10usize;
+        dt = circuit::DT_NS * stride as f64;
+        let lanes: Vec<Vec<f64>> =
+            v0.iter().map(|&v| circuit::bitline_trajectory(v, a, stride)).collect();
+        samples = lanes[0].len();
+        trajectories = lanes.into_iter().flatten().collect();
+        readies = v0.iter().map(|&v| circuit::sense_latency(v, a, beta).0).collect();
+    }
+
+    println!("Fig. 3 — bitline voltage vs time ({source})");
     println!("\n  age(ms)  V_init(V)  t_ready(ns)");
     let mut csv = Vec::new();
     for (lane, &ms) in ages_ms.iter().enumerate() {
-        let row = &data[lane * samples..(lane + 1) * samples];
-        let cross = row.iter().position(|&v| v as f64 >= v_ready).unwrap_or(samples);
-        let t_ready = cross as f64 * dt;
-        println!("  {:>6.1}  {:>9.4}  {:>10.2}", ms, v0[lane], t_ready);
-        csv.push(vec![ms.to_string(), v0[lane].to_string(), t_ready.to_string()]);
+        println!("  {:>6.1}  {:>9.4}  {:>10.2}", ms, v0[lane], readies[lane]);
+        csv.push(vec![ms.to_string(), v0[lane].to_string(), readies[lane].to_string()]);
     }
     write_csv("results/fig3_ready_times.csv", &["age_ms", "v_init", "t_ready_ns"], &csv)?;
 
     // Sec. 6.2 headline numbers.
-    let full = data[..samples].to_vec();
-    let worst = data[(ages_ms.len() - 1) * samples..].to_vec();
-    let tr_full = full.iter().position(|&v| v as f64 >= v_ready).unwrap_or(0) as f64 * dt;
-    let tr_worst = worst.iter().position(|&v| v as f64 >= v_ready).unwrap_or(0) as f64 * dt;
+    let (tr_full, tr_worst) = (readies[0], readies[ages_ms.len() - 1]);
     println!("\nSec. 6.2: t_ready full = {tr_full:.2} ns, worst = {tr_worst:.2} ns");
     println!("          tRCD reduction = {:.2} ns (paper: 4.5 ns)", tr_worst - tr_full);
 
@@ -137,7 +181,7 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     for s in 0..samples {
         let mut row = vec![format!("{}", s as f64 * dt)];
         for lane in 0..ages_ms.len() {
-            row.push(format!("{}", data[lane * samples + s]));
+            row.push(format!("{}", trajectories[lane * samples + s]));
         }
         traj_rows.push(row);
     }
@@ -157,7 +201,11 @@ fn cmd_fig4(args: &Args) -> Result<()> {
     let scale = scale_from(args)?;
     let cores = args.get_usize("cores", 1)?;
     let eight = cores > 1;
-    println!("Fig. 4{} — speedup ({} insts/core)", if eight { "b" } else { "a" }, scale.insts_per_core);
+    println!(
+        "Fig. 4{} — speedup ({} insts/core)",
+        if eight { "b" } else { "a" },
+        scale.insts_per_core
+    );
     let suite = run_suite(scale, eight);
     let rows = if eight { suite.fig4b() } else { suite.fig4a() };
 
@@ -253,10 +301,22 @@ fn cmd_area(args: &Args) -> Result<()> {
     // figure unless told otherwise.
     let rate = args.get_f64("access-rate", 170e6)?;
     let cost = HcracCost::of(&cfg, rate);
-    println!("Sec. 6.5 — HCRAC overhead ({} cores, {} channels)", cfg.cpu.cores, cfg.dram.channels);
+    println!(
+        "Sec. 6.5 — HCRAC overhead ({} cores, {} channels)",
+        cfg.cpu.cores, cfg.dram.channels
+    );
     println!("  storage : {} bytes ({} bits)", cost.storage_bytes, cost.storage_bits);
-    println!("  area    : {:.4} mm^2 ({} of 4MB LLC)", cost.area_mm2, pct(cost.area_fraction_of_llc()));
-    println!("  power   : {:.4} mW (static {:.4} + dynamic {:.4})", cost.total_mw(), cost.static_mw, cost.dynamic_mw);
+    println!(
+        "  area    : {:.4} mm^2 ({} of 4MB LLC)",
+        cost.area_mm2,
+        pct(cost.area_fraction_of_llc())
+    );
+    println!(
+        "  power   : {:.4} mW (static {:.4} + dynamic {:.4})",
+        cost.total_mw(),
+        cost.static_mw,
+        cost.dynamic_mw
+    );
     println!("Paper: 5376 bytes, 0.022 mm^2 (0.24% of LLC), 0.149 mW");
     Ok(())
 }
@@ -322,6 +382,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.warmup_cpu_cycles = args.get_u64("warmup", 250_000)?;
     cfg.chargecache.duration_ms = args.get_f64("duration", 1.0)?;
     cfg.chargecache.entries_per_core = args.get_usize("entries", 128)?;
+    if args.flag("strict-tick") {
+        cfg.loop_mode = LoopMode::StrictTick;
+    }
     let kind = args.mechanism(MechanismKind::ChargeCache)?;
 
     let name = args.get_str("workload", "mcf");
@@ -330,32 +393,37 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         System::new_mix(&cfg, kind, mix).run()
     } else {
         let p = Profile::by_name(name)
-            .with_context_or(|| format!("unknown workload {name:?}"))?;
+            .with_context(|| format!("unknown workload {name:?}"))?;
         let profiles: Vec<&Profile> = (0..cores).map(|_| p).collect();
         System::new(&cfg, kind, &profiles).run()
     };
 
     println!("workload  : {}", result.workload);
     println!("mechanism : {}", result.mechanism);
+    println!("loop mode : {:?}", cfg.loop_mode);
     println!("cycles    : {}", result.cpu_cycles);
     for (i, ipc) in result.core_ipc.iter().enumerate() {
         println!("core {i} IPC: {ipc:.4}");
     }
     println!("RMPKC     : {:.3}", result.rmpkc());
     println!("acts      : {} (reduced: {})", result.acts(), pct(result.reduced_act_fraction()));
-    println!("row hit/miss/conf: {}/{}/{}",
+    println!(
+        "row hit/miss/conf: {}/{}/{}",
         result.mc.iter().map(|m| m.row_hits).sum::<u64>(),
         result.mc.iter().map(|m| m.row_misses).sum::<u64>(),
-        result.mc.iter().map(|m| m.row_conflicts).sum::<u64>());
+        result.mc.iter().map(|m| m.row_conflicts).sum::<u64>()
+    );
     println!("avg read latency : {:.1} bus cycles", result.avg_read_latency());
     println!("1ms-RLTL  : {}", pct(result.rltl_at_ms(1.0)));
-    println!("DRAM energy: {:.1} uJ (bg {:.1}, act {:.1}, rd {:.1}, wr {:.1}, ref {:.1})",
+    println!(
+        "DRAM energy: {:.1} uJ (bg {:.1}, act {:.1}, rd {:.1}, wr {:.1}, ref {:.1})",
         result.energy.total_nj() / 1000.0,
         result.energy.background_nj / 1000.0,
         result.energy.act_pre_nj / 1000.0,
         result.energy.read_nj / 1000.0,
         result.energy.write_nj / 1000.0,
-        result.energy.refresh_nj / 1000.0);
+        result.energy.refresh_nj / 1000.0
+    );
     Ok(())
 }
 
@@ -399,14 +467,4 @@ fn cmd_timing_table(args: &Args) -> Result<()> {
     let (rcd, ras) = table.reduction_cycles(1e-3);
     println!("\nAt the paper's 1 ms duration: -{rcd} tRCD / -{ras} tRAS cycles (paper: -4/-8)");
     Ok(())
-}
-
-// Small helper: Option::with_context-like for readability above.
-trait WithContextOr<T> {
-    fn with_context_or(self, f: impl FnOnce() -> String) -> Result<T>;
-}
-impl<T> WithContextOr<T> for Option<T> {
-    fn with_context_or(self, f: impl FnOnce() -> String) -> Result<T> {
-        self.ok_or_else(|| anyhow::anyhow!(f()))
-    }
 }

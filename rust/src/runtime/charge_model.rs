@@ -1,99 +1,119 @@
 //! Typed wrappers over the circuit-layer artifacts: the latency table
 //! (controller timing derivation), decay curves, and the Fig. 3 bitline
-//! sweep — all executed via PJRT at startup, never per-request.
-
-use anyhow::{ensure, Context, Result};
+//! sweep — executed via PJRT at startup (never per-request) when the
+//! `pjrt` feature is enabled. The default build resolves everything
+//! through the pure-Rust analytic circuit model instead.
 
 use crate::latency::timing_table::TimingTable;
 
-use super::meta::ChargeMeta;
-use super::{Artifact, Runtime};
+#[cfg(feature = "pjrt")]
+pub use pjrt_model::ChargeModelRuntime;
 
-/// All circuit-layer entry points, compiled and ready to execute.
-pub struct ChargeModelRuntime {
-    pub meta: ChargeMeta,
-    latency_table: Artifact,
-    decay_curve: Artifact,
-    bitline_sweep: Artifact,
-    sense_latency: Artifact,
+#[cfg(feature = "pjrt")]
+mod pjrt_model {
+    use crate::ensure;
+    use crate::error::{Context, Result};
+    use crate::latency::timing_table::TimingTable;
+
+    use super::super::meta::ChargeMeta;
+    use super::super::{Artifact, Runtime};
+
+    /// All circuit-layer entry points, compiled and ready to execute.
+    pub struct ChargeModelRuntime {
+        pub meta: ChargeMeta,
+        latency_table: Artifact,
+        decay_curve: Artifact,
+        bitline_sweep: Artifact,
+        sense_latency: Artifact,
+    }
+
+    impl ChargeModelRuntime {
+        /// Load every artifact from `rt`'s directory.
+        pub fn load(rt: &Runtime) -> Result<Self> {
+            let meta = ChargeMeta::load(rt.dir().join("charge_meta.json"))
+                .context("loading charge_meta.json (run `make artifacts`)")?;
+            Ok(Self {
+                meta,
+                latency_table: rt.load("latency_table")?,
+                decay_curve: rt.load("decay_curve")?,
+                bitline_sweep: rt.load("bitline_sweep")?,
+                sense_latency: rt.load("sense_latency")?,
+            })
+        }
+
+        /// Build the age -> (tRCD, tRAS) reduction [`TimingTable`] at the
+        /// given temperature by executing the `latency_table` HLO.
+        pub fn timing_table(&self, temp_c: f64, tck_ns: f64) -> Result<TimingTable> {
+            let n = self.meta.get_usize("table_n")?;
+            let ages = TimingTable::default_age_grid(n);
+            let ages_f32: Vec<f32> = ages.iter().map(|&a| a as f32).collect();
+            let t_in = xla::Literal::vec1(&ages_f32);
+            let temp = xla::Literal::scalar(temp_c as f32);
+            let out = self.latency_table.run(&[t_in, temp])?;
+            ensure!(out.len() == 1, "latency_table returns one array");
+            let flat: Vec<f32> = out[0].to_vec().context("latency_table output")?;
+            ensure!(flat.len() == n * 2, "expected [{n},2] table");
+            let reductions = (0..n)
+                .map(|i| (flat[2 * i] as f64, flat[2 * i + 1] as f64))
+                .collect();
+            Ok(TimingTable::from_rows(ages, reductions, tck_ns))
+        }
+
+        /// Cell voltage after each retention time (seconds) at `temp_c`.
+        pub fn decay_curve(&self, t_ret_s: &[f32], temp_c: f64) -> Result<Vec<f32>> {
+            let n = self.meta.get_usize("table_n")?;
+            ensure!(t_ret_s.len() == n, "decay_curve expects exactly {n} points");
+            let out = self.decay_curve.run(&[
+                xla::Literal::vec1(t_ret_s),
+                xla::Literal::scalar(temp_c as f32),
+            ])?;
+            out[0].to_vec().context("decay_curve output")
+        }
+
+        /// Fig. 3: bitline-voltage trajectories for a family of initial
+        /// cell voltages. Returns (samples_per_lane, flattened row-major
+        /// data).
+        pub fn bitline_sweep(&self, v_cell0: &[f32]) -> Result<(usize, Vec<f32>)> {
+            let b = self.meta.get_usize("traj_batch")?;
+            ensure!(v_cell0.len() == b, "bitline_sweep expects exactly {b} lanes");
+            let out = self.bitline_sweep.run(&[xla::Literal::vec1(v_cell0)])?;
+            let data: Vec<f32> = out[0].to_vec().context("bitline_sweep output")?;
+            let samples = self.meta.get_usize("traj_samples")?;
+            ensure!(data.len() == b * samples);
+            Ok((samples, data))
+        }
+
+        /// Raw (t_ready, t_restore) in ns for a batch of initial voltages.
+        pub fn sense_latency(&self, v_cell0: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+            let b = self.meta.get_usize("latency_batch")?;
+            ensure!(v_cell0.len() == b, "sense_latency expects exactly {b} lanes");
+            let out = self.sense_latency.run(&[xla::Literal::vec1(v_cell0)])?;
+            ensure!(out.len() == 2);
+            Ok((
+                out[0].to_vec().context("sense_latency t_ready")?,
+                out[1].to_vec().context("sense_latency t_restore")?,
+            ))
+        }
+    }
 }
 
-impl ChargeModelRuntime {
-    /// Load every artifact from `rt`'s directory.
-    pub fn load(rt: &Runtime) -> Result<Self> {
-        let meta = ChargeMeta::load(rt.dir().join("charge_meta.json"))
-            .context("loading charge_meta.json (run `make artifacts`)")?;
-        Ok(Self {
-            meta,
-            latency_table: rt.load("latency_table")?,
-            decay_curve: rt.load("decay_curve")?,
-            bitline_sweep: rt.load("bitline_sweep")?,
-            sense_latency: rt.load("sense_latency")?,
-        })
-    }
-
-    /// Build the age -> (tRCD, tRAS) reduction [`TimingTable`] at the given
-    /// temperature by executing the `latency_table` HLO.
-    pub fn timing_table(&self, temp_c: f64, tck_ns: f64) -> Result<TimingTable> {
-        let n = self.meta.get_usize("table_n")?;
-        let ages = TimingTable::default_age_grid(n);
-        let ages_f32: Vec<f32> = ages.iter().map(|&a| a as f32).collect();
-        let t_in = xla::Literal::vec1(&ages_f32);
-        let temp = xla::Literal::scalar(temp_c as f32);
-        let out = self.latency_table.run(&[t_in, temp])?;
-        ensure!(out.len() == 1, "latency_table returns one array");
-        let flat: Vec<f32> = out[0].to_vec()?;
-        ensure!(flat.len() == n * 2, "expected [{n},2] table");
-        let reductions = (0..n)
-            .map(|i| (flat[2 * i] as f64, flat[2 * i + 1] as f64))
-            .collect();
-        Ok(TimingTable::from_rows(ages, reductions, tck_ns))
-    }
-
-    /// Cell voltage after each retention time (seconds) at `temp_c`.
-    pub fn decay_curve(&self, t_ret_s: &[f32], temp_c: f64) -> Result<Vec<f32>> {
-        let n = self.meta.get_usize("table_n")?;
-        ensure!(t_ret_s.len() == n, "decay_curve expects exactly {n} points");
-        let out = self.decay_curve.run(&[
-            xla::Literal::vec1(t_ret_s),
-            xla::Literal::scalar(temp_c as f32),
-        ])?;
-        Ok(out[0].to_vec()?)
-    }
-
-    /// Fig. 3: bitline-voltage trajectories for a family of initial cell
-    /// voltages. Returns (samples_per_lane, flattened row-major data).
-    pub fn bitline_sweep(&self, v_cell0: &[f32]) -> Result<(usize, Vec<f32>)> {
-        let b = self.meta.get_usize("traj_batch")?;
-        ensure!(v_cell0.len() == b, "bitline_sweep expects exactly {b} lanes");
-        let out = self.bitline_sweep.run(&[xla::Literal::vec1(v_cell0)])?;
-        let data: Vec<f32> = out[0].to_vec()?;
-        let samples = self.meta.get_usize("traj_samples")?;
-        ensure!(data.len() == b * samples);
-        Ok((samples, data))
-    }
-
-    /// Raw (t_ready, t_restore) in ns for a batch of initial voltages.
-    pub fn sense_latency(&self, v_cell0: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let b = self.meta.get_usize("latency_batch")?;
-        ensure!(v_cell0.len() == b, "sense_latency expects exactly {b} lanes");
-        let out = self.sense_latency.run(&[xla::Literal::vec1(v_cell0)])?;
-        ensure!(out.len() == 2);
-        Ok((out[0].to_vec()?, out[1].to_vec()?))
-    }
-}
-
-/// Load the timing table from artifacts, falling back to the pure-Rust
-/// analytic model when artifacts are absent (e.g. plain `cargo test`).
+/// Load the timing table from artifacts (pjrt builds only), falling back
+/// to the pure-Rust analytic model when artifacts are absent or the
+/// `pjrt` feature is off (e.g. plain `cargo test`).
 /// Returns (table, true-if-from-artifacts).
 pub fn timing_table_or_analytic(temp_c: f64, tck_ns: f64) -> (TimingTable, bool) {
-    let try_rt = || -> Result<TimingTable> {
-        let rt = Runtime::new(Runtime::default_dir())?;
-        ensure!(rt.artifacts_present(), "artifacts not built");
-        ChargeModelRuntime::load(&rt)?.timing_table(temp_c, tck_ns)
-    };
-    match try_rt() {
-        Ok(t) => (t, true),
-        Err(_) => (TimingTable::analytic(64, temp_c, tck_ns), false),
+    #[cfg(feature = "pjrt")]
+    {
+        use crate::ensure;
+        use crate::error::Result;
+        let try_rt = || -> Result<TimingTable> {
+            let rt = super::Runtime::new(super::default_artifacts_dir())?;
+            ensure!(rt.artifacts_present(), "artifacts not built");
+            ChargeModelRuntime::load(&rt)?.timing_table(temp_c, tck_ns)
+        };
+        if let Ok(t) = try_rt() {
+            return (t, true);
+        }
     }
+    (TimingTable::analytic(64, temp_c, tck_ns), false)
 }

@@ -5,7 +5,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 /// Metadata emitted by the AOT build describing the artifact shapes and
 /// the calibrated circuit constants.
@@ -144,7 +145,7 @@ mod tests {
 
     #[test]
     fn parses_real_artifact_if_present() {
-        let path = crate::runtime::Runtime::default_dir().join("charge_meta.json");
+        let path = crate::runtime::default_artifacts_dir().join("charge_meta.json");
         if path.exists() {
             let m = ChargeMeta::load(&path).unwrap();
             assert_eq!(m.get("vdd").unwrap(), 1.5);

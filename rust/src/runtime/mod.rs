@@ -1,86 +1,114 @@
-//! PJRT runtime: load the AOT-compiled circuit-layer artifacts
-//! (`artifacts/*.hlo.txt`, produced once by `make artifacts` from the
-//! JAX/Pallas models) and execute them from Rust. Python never runs on the
-//! simulation path — this module is the only bridge to the circuit layer.
+//! Runtime bridge to the circuit layer.
+//!
+//! With the off-by-default `pjrt` feature, this module loads the
+//! AOT-compiled circuit-layer artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from the JAX/Pallas models) and executes them
+//! from Rust via PJRT. Python never runs on the simulation path — this is
+//! the only bridge to the circuit layer.
+//!
+//! The default build carries no `xla` dependency (the crate builds
+//! offline with zero external deps); every caller goes through
+//! [`charge_model::timing_table_or_analytic`], which falls back to the
+//! pure-Rust analytic circuit model
+//! ([`crate::latency::timing_table::circuit`]). Enabling `pjrt` requires
+//! adding the `xla` dependency to `rust/Cargo.toml` (see the comment
+//! there).
 
 pub mod charge_model;
 pub mod meta;
 
+#[cfg(feature = "pjrt")]
 pub use charge_model::ChargeModelRuntime;
 pub use meta::ChargeMeta;
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{Context, Result};
-
-/// A compiled HLO artifact bound to a PJRT client.
-pub struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
+/// Default artifacts location (repo-root/artifacts — where
+/// `python/compile/aot.py` emits), shared by the PJRT loader and the
+/// artifact-presence probes in tests. `CARGO_MANIFEST_DIR` is the
+/// `rust/` crate dir, hence the `..`.
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
 }
 
-/// PJRT CPU client + artifact loader.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
+#[cfg(feature = "pjrt")]
+mod pjrt_runtime {
+    use std::path::{Path, PathBuf};
+
+    use crate::error::{Context, Result};
+
+    /// A compiled HLO artifact bound to a PJRT client.
+    pub struct Artifact {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    /// PJRT CPU client + artifact loader.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at an artifacts directory.
+        pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf() })
+        }
+
+        /// Default artifacts location (repo-root/rust/artifacts).
+        pub fn default_dir() -> PathBuf {
+            super::default_artifacts_dir()
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// True if the artifact set exists (built by `make artifacts`).
+        pub fn artifacts_present(&self) -> bool {
+            self.dir.join("charge_meta.json").exists()
+        }
+
+        /// Load and compile `<name>.hlo.txt`.
+        ///
+        /// HLO *text* is the interchange format: jax >= 0.5 emits protos
+        /// with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+        /// the text parser reassigns ids (see python/compile/aot.py).
+        pub fn load(&self, name: &str) -> Result<Artifact> {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            Ok(Artifact { exe, name: name.to_string() })
+        }
+    }
+
+    impl Artifact {
+        /// Execute with literal inputs; returns the tuple elements of the
+        /// (return_tuple=True) result.
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing {}", self.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            lit.to_tuple().context("decomposing result tuple")
+        }
+    }
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
-    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf() })
-    }
-
-    /// Default artifacts location (repo-root/artifacts).
-    pub fn default_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// True if the artifact set exists (built by `make artifacts`).
-    pub fn artifacts_present(&self) -> bool {
-        self.dir.join("charge_meta.json").exists()
-    }
-
-    /// Load and compile `<name>.hlo.txt`.
-    ///
-    /// HLO *text* is the interchange format: jax >= 0.5 emits protos with
-    /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-    /// parser reassigns ids (see python/compile/aot.py).
-    pub fn load(&self, name: &str) -> Result<Artifact> {
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        Ok(Artifact { exe, name: name.to_string() })
-    }
-}
-
-impl Artifact {
-    /// Execute with literal inputs; returns the tuple elements of the
-    /// (return_tuple=True) result.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        lit.to_tuple().context("decomposing result tuple")
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_runtime::{Artifact, Runtime};

@@ -1,0 +1,183 @@
+//! Event-driven simulation kernel: fast-forward the clock to the next
+//! cycle at which any component can act, instead of ticking every cycle.
+//!
+//! The per-cycle loop spends most of its time ticking components that
+//! provably cannot do anything: cores whose reorder windows are blocked
+//! behind an outstanding DRAM miss, and controllers waiting out a timing
+//! constraint (tRCD, tRP, tRFC, ...) with nothing legal to issue. On
+//! memory-bound workloads (`mcf`, `tpcc64`) that is the overwhelming
+//! majority of CPU cycles. The kernel skips them.
+//!
+//! ## The wake-time contract
+//!
+//! Every component exposes a `next_event_at(now)` method: a
+//! **conservative lower bound** on the earliest cycle `>= now` at which
+//! ticking it could change simulation state. Two properties make
+//! cycle-skipping *exact* (bit-identical statistics vs per-cycle
+//! ticking), and both are load-bearing:
+//!
+//! 1. **No-op ticks.** Ticking a component before its true next event
+//!    must not change its state. The only exception is bookkeeping that
+//!    feeds no statistic: [`crate::cpu::CoreStats::cycles`] counts
+//!    *ticked* cycles and is excluded from [`crate::sim::SimResult`].
+//! 2. **Lower bound.** `next_event_at` must never exceed the true next
+//!    event time. An early wake merely costs a wasted (no-op) tick; a
+//!    late wake would reorder command issue and silently break the
+//!    equivalence against [`LoopMode::StrictTick`].
+//!
+//! Under these properties the driver may jump from `now` to the global
+//! minimum wake time: every skipped cycle is a no-op for every
+//! component, so the state trajectory — and therefore every statistic in
+//! [`crate::sim::SimResult`] — is identical to per-cycle ticking.
+//!
+//! One subtlety is hysteresis state inside the controller (the
+//! write-drain flag), which the strict loop re-evaluates every bus
+//! cycle and which can oscillate with *unchanged* queue occupancy (the
+//! opportunistic-drain trigger flips it on with an empty read queue and
+//! a small write backlog; the yield-back flips it off the next cycle).
+//! The controller therefore treats any tick that would flip the flag as
+//! an event in its own right: while a flip is pending it reports "hot"
+//! and the kernel ticks per-cycle through the window, reproducing the
+//! strict loop's flag trajectory — and write-issue parity — exactly.
+//!
+//! The strict loop is kept as [`LoopMode::StrictTick`] (CLI:
+//! `--strict-tick`) and the differential test suite asserts identical
+//! `SimResult`s across mechanisms, core counts, and workload profiles.
+
+/// How the system loop advances time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopMode {
+    /// Fast-forward to the minimum wake time (the event kernel).
+    EventDriven,
+    /// Tick every CPU cycle (the original loop; the differential oracle).
+    StrictTick,
+}
+
+/// A simulation the event kernel can drive.
+pub trait EventDriven {
+    /// Mutate state at CPU cycle `now`. The clock is owned by the driver:
+    /// implementations must not advance it.
+    fn tick_at(&mut self, now: u64);
+    /// Earliest CPU cycle `>= now` at which ticking could change state
+    /// (the wake-time contract above). `u64::MAX` means "only an already
+    /// scheduled wake of another component can unblock this one".
+    fn next_wake(&self, now: u64) -> u64;
+}
+
+/// Drive `sim` from `now` until `done` reports completion or the clock
+/// reaches `end` (exclusive tick bound). Returns the final clock value.
+///
+/// The return value is identical between modes: `end` when the region
+/// runs to its bound, or `t + 1` when `done` first holds after the tick
+/// at cycle `t` (ticks are the only mutators, so `done` can only change
+/// across a tick, and every tick that changes state is executed in both
+/// modes).
+pub fn advance<S: EventDriven>(
+    sim: &mut S,
+    mode: LoopMode,
+    mut now: u64,
+    end: u64,
+    done: impl Fn(&S) -> bool,
+) -> u64 {
+    loop {
+        if now >= end || done(sim) {
+            return now;
+        }
+        sim.tick_at(now);
+        now += 1;
+        if done(sim) || now >= end {
+            return now;
+        }
+        if mode == LoopMode::EventDriven {
+            // Jump to the global minimum wake, clamped to `end - 1` so a
+            // capped region still ends with `now == end` in both modes.
+            now = sim.next_wake(now).min(end - 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scripted component: state changes only at the listed cycles; any
+    /// other tick is a no-op. Mirrors the wake contract exactly.
+    struct Scripted {
+        events: Vec<u64>,
+        fired: Vec<u64>,
+        ticked: Vec<u64>,
+    }
+
+    impl EventDriven for Scripted {
+        fn tick_at(&mut self, now: u64) {
+            self.ticked.push(now);
+            if self.events.contains(&now) {
+                self.fired.push(now);
+            }
+        }
+        fn next_wake(&self, now: u64) -> u64 {
+            self.events
+                .iter()
+                .copied()
+                .filter(|&e| e >= now)
+                .min()
+                .unwrap_or(u64::MAX)
+        }
+    }
+
+    fn scripted(events: &[u64]) -> Scripted {
+        Scripted { events: events.to_vec(), fired: Vec::new(), ticked: Vec::new() }
+    }
+
+    #[test]
+    fn event_mode_fires_same_events_as_strict() {
+        let events = [3u64, 4, 17, 40, 99];
+        let mut a = scripted(&events);
+        let mut b = scripted(&events);
+        let ea = advance(&mut a, LoopMode::StrictTick, 0, 100, |_| false);
+        let eb = advance(&mut b, LoopMode::EventDriven, 0, 100, |_| false);
+        assert_eq!(ea, eb);
+        assert_eq!(a.fired, b.fired);
+        assert_eq!(a.fired, events.to_vec());
+    }
+
+    #[test]
+    fn event_mode_skips_idle_cycles() {
+        let mut s = scripted(&[5, 50]);
+        advance(&mut s, LoopMode::EventDriven, 0, 1000, |_| false);
+        // Cycle 0 is always ticked; afterwards only events plus the final
+        // clamped tick at end - 1.
+        assert!(s.ticked.len() < 10, "ticked {} cycles", s.ticked.len());
+        assert!(s.ticked.contains(&5) && s.ticked.contains(&50));
+    }
+
+    #[test]
+    fn done_terminates_with_identical_clock() {
+        let events = [2u64, 8, 30];
+        let mut a = scripted(&events);
+        let mut b = scripted(&events);
+        let done = |s: &Scripted| s.fired.len() == 2;
+        let ea = advance(&mut a, LoopMode::StrictTick, 0, 1000, done);
+        let eb = advance(&mut b, LoopMode::EventDriven, 0, 1000, done);
+        assert_eq!(ea, 9); // tick at 8 fired the second event
+        assert_eq!(ea, eb);
+        assert_eq!(a.fired, b.fired);
+    }
+
+    #[test]
+    fn capped_region_ends_exactly_at_end() {
+        let mut a = scripted(&[2]);
+        let mut b = scripted(&[2]);
+        let ea = advance(&mut a, LoopMode::StrictTick, 0, 64, |_| false);
+        let eb = advance(&mut b, LoopMode::EventDriven, 0, 64, |_| false);
+        assert_eq!(ea, 64);
+        assert_eq!(eb, 64);
+    }
+
+    #[test]
+    fn empty_region_is_a_noop() {
+        let mut s = scripted(&[0]);
+        assert_eq!(advance(&mut s, LoopMode::EventDriven, 5, 5, |_| false), 5);
+        assert!(s.ticked.is_empty());
+    }
+}

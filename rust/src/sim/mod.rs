@@ -1,8 +1,11 @@
-//! Full-system simulation: cores + LLC + controllers wired together, plus
-//! the result/statistics types every experiment consumes.
+//! Full-system simulation: cores + LLC + controllers wired together, the
+//! event-driven loop kernel, plus the result/statistics types every
+//! experiment consumes.
 
+pub mod engine;
 pub mod stats;
 pub mod system;
 
+pub use engine::LoopMode;
 pub use stats::SimResult;
 pub use system::System;

@@ -1,6 +1,11 @@
 //! The full simulated system: trace-driven cores → shared LLC → per-channel
-//! memory controllers → DDR3 devices, ticked cycle-accurately with a 5:1
-//! CPU:bus clock ratio (4 GHz / 800 MHz, Table 1).
+//! memory controllers → DDR3 devices, simulated cycle-accurately with a
+//! 5:1 CPU:bus clock ratio (4 GHz / 800 MHz, Table 1).
+//!
+//! Time is advanced by the event kernel ([`crate::sim::engine`]): each
+//! component surfaces its next wake cycle and the clock fast-forwards to
+//! the global minimum. [`crate::sim::LoopMode::StrictTick`] keeps the
+//! original per-cycle loop; both produce bit-identical [`SimResult`]s.
 
 use std::collections::HashMap;
 
@@ -10,6 +15,7 @@ use crate::cpu::core_model::{Core, MemPort};
 use crate::cpu::Llc;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::latency::MechanismKind;
+use crate::sim::engine::{self, EventDriven};
 use crate::sim::stats::SimResult;
 use crate::trace::{profile::multicore_mix, Profile, SynthTrace, TraceSource};
 
@@ -90,6 +96,8 @@ pub struct System {
     hier: MemHierarchy,
     cpu_cycle: u64,
     workload: String,
+    /// Scratch buffer for completion delivery (avoids per-tick allocs).
+    completions: Vec<Completion>,
 }
 
 impl System {
@@ -155,6 +163,7 @@ impl System {
             },
             cpu_cycle: 0,
             workload,
+            completions: Vec::new(),
         }
     }
 
@@ -163,36 +172,14 @@ impl System {
         &self.workload
     }
 
-    fn tick(&mut self, completions: &mut Vec<Completion>) {
-        let now = self.cpu_cycle;
-        // Memory side ticks on the bus clock.
-        if now % self.cfg.cpu.cpu_per_bus == 0 {
-            let bus = now / self.cfg.cpu.cpu_per_bus;
-            self.hier.bus_now = bus;
-            completions.clear();
-            for mc in &mut self.hier.mcs {
-                mc.tick(bus, completions);
-            }
-            for c in completions.drain(..) {
-                if let Some((core, line)) = self.hier.inflight.remove(&c.req_id) {
-                    self.cores[core as usize].complete_line(line);
-                }
-            }
-        }
-        for core in &mut self.cores {
-            core.tick(now, &mut self.hier);
-        }
-        self.cpu_cycle += 1;
-    }
-
     /// Run warmup + measured region; returns the result.
     pub fn run(&mut self) -> SimResult {
-        let mut completions = Vec::new();
+        let mode = self.cfg.loop_mode;
 
         // Warmup: caches, HCRAC, and DRAM state get warm; stats reset after.
-        while self.cpu_cycle < self.cfg.warmup_cpu_cycles {
-            self.tick(&mut completions);
-        }
+        let start = self.cpu_cycle;
+        let warmup_end = self.cfg.warmup_cpu_cycles;
+        self.cpu_cycle = engine::advance(self, mode, start, warmup_end, |_| false);
         for core in &mut self.cores {
             core.reset_stats();
             core.target = self.cfg.insts_per_core;
@@ -214,20 +201,15 @@ impl System {
                     core.target = 0; // no finish target in fixed-time mode
                 }
                 let end = measure_start + n;
-                while self.cpu_cycle < end {
-                    self.tick(&mut completions);
-                }
+                self.cpu_cycle = engine::advance(self, mode, measure_start, end, |_| false);
             }
             None => {
                 let cap = measure_start
                     + self.cfg.insts_per_core * 400
                     + 10 * self.cfg.warmup_cpu_cycles;
-                while !self.cores.iter().all(|c| c.stats.finished_at.is_some()) {
-                    self.tick(&mut completions);
-                    if self.cpu_cycle >= cap {
-                        break;
-                    }
-                }
+                self.cpu_cycle = engine::advance(self, mode, measure_start, cap, |s| {
+                    s.cores.iter().all(|c| c.stats.finished_at.is_some())
+                });
             }
         }
         let end = self.cpu_cycle;
@@ -298,9 +280,66 @@ impl System {
     }
 }
 
+impl EventDriven for System {
+    /// One simulation step at CPU cycle `now`: memory side first on bus
+    /// boundaries (completions delivered before cores tick, as in the
+    /// original loop), then every core in index order. The clock is
+    /// owned by the loop driver.
+    fn tick_at(&mut self, now: u64) {
+        let cpb = self.cfg.cpu.cpu_per_bus;
+        // Floor semantics: between boundaries the strict loop kept the
+        // stale (floored) bus cycle, so recomputing it every visited
+        // cycle is equivalent.
+        self.hier.bus_now = now / cpb;
+        if now % cpb == 0 {
+            let bus = now / cpb;
+            let mut completions = std::mem::take(&mut self.completions);
+            completions.clear();
+            for mc in &mut self.hier.mcs {
+                mc.tick(bus, &mut completions);
+            }
+            for c in completions.drain(..) {
+                if let Some((core, line)) = self.hier.inflight.remove(&c.req_id) {
+                    self.cores[core as usize].complete_line(line);
+                }
+            }
+            self.completions = completions;
+        }
+        for core in &mut self.cores {
+            core.tick(now, &mut self.hier);
+        }
+    }
+
+    /// Global next-wake: the minimum over every core's wake cycle and
+    /// every controller's wake bus-cycle (mapped onto the CPU clock at
+    /// the next bus boundary `>= now`). Exits early once any component
+    /// is hot — the kernel then degrades to per-cycle ticking, which is
+    /// exactly the strict loop.
+    fn next_wake(&self, now: u64) -> u64 {
+        let mut wake = u64::MAX;
+        for core in &self.cores {
+            wake = wake.min(core.next_event_at(now));
+            if wake <= now {
+                return now;
+            }
+        }
+        let cpb = self.cfg.cpu.cpu_per_bus;
+        let bus_next = (now + cpb - 1) / cpb;
+        for mc in &self.hier.mcs {
+            let b = mc.next_event_at(bus_next).max(bus_next);
+            wake = wake.min(b.saturating_mul(cpb));
+            if wake <= now {
+                return now;
+            }
+        }
+        wake.max(now)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::engine::LoopMode;
     use crate::trace::Profile;
 
     fn quick_cfg(insts: u64) -> SystemConfig {
@@ -308,6 +347,23 @@ mod tests {
         cfg.insts_per_core = insts;
         cfg.warmup_cpu_cycles = 20_000;
         cfg
+    }
+
+    #[test]
+    fn event_kernel_matches_strict_tick_exactly() {
+        // The engine's headline invariant: bit-identical results. The
+        // full matrix lives in tests/engine_equiv.rs; this is the fast
+        // in-crate smoke check.
+        let mut cfg = quick_cfg(30_000);
+        cfg.warmup_cpu_cycles = 12_000;
+        for name in ["mcf", "gcc"] {
+            let p = Profile::by_name(name).unwrap();
+            cfg.loop_mode = LoopMode::StrictTick;
+            let a = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+            cfg.loop_mode = LoopMode::EventDriven;
+            let b = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "{name} diverged");
+        }
     }
 
     #[test]

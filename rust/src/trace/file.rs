@@ -7,7 +7,8 @@
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use super::{TraceEntry, TraceSource};
 

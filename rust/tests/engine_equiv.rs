@@ -1,0 +1,123 @@
+//! Differential tests for the event-driven kernel (`sim::engine`): the
+//! event loop and the strict per-cycle loop must produce **bit-identical**
+//! [`SimResult`]s across mechanisms, core counts, row policies, and
+//! measurement modes — plus determinism of the parallel experiment runner
+//! across worker counts.
+
+use chargecache::config::{RowPolicy, SystemConfig};
+use chargecache::coordinator::runner::parallel_map_threads;
+use chargecache::latency::MechanismKind;
+use chargecache::sim::engine::LoopMode;
+use chargecache::sim::{SimResult, System};
+use chargecache::trace::Profile;
+
+const MECHS: [MechanismKind; 4] = [
+    MechanismKind::Baseline,
+    MechanismKind::ChargeCache,
+    MechanismKind::Nuat,
+    MechanismKind::LlDram,
+];
+
+fn run_single(kind: MechanismKind, mode: LoopMode, workload: &str) -> SimResult {
+    let mut cfg = SystemConfig::single_core();
+    cfg.insts_per_core = 20_000;
+    cfg.warmup_cpu_cycles = 8_000;
+    cfg.loop_mode = mode;
+    let p = Profile::by_name(workload).unwrap();
+    System::new(&cfg, kind, &[p]).run()
+}
+
+fn run_mix(kind: MechanismKind, mode: LoopMode) -> SimResult {
+    // The paper's multi-core shape scaled to 4 cores: 2 channels,
+    // closed-row policy, fixed-work measurement.
+    let mut cfg = SystemConfig::eight_core();
+    cfg.cpu.cores = 4;
+    cfg.insts_per_core = 8_000;
+    cfg.warmup_cpu_cycles = 4_000;
+    cfg.loop_mode = mode;
+    System::new_mix(&cfg, kind, 1).run()
+}
+
+/// Assert full-state identity. The headline fields get their own
+/// assertions (readable failures); the Debug comparison then covers every
+/// remaining field — [`SimResult`] is plain data (u64 counters, f64
+/// metrics, stat structs), so equal Debug output is equal state.
+fn assert_identical(strict: &SimResult, event: &SimResult, what: &str) {
+    assert_eq!(strict.cpu_cycles, event.cpu_cycles, "{what}: cpu_cycles drift");
+    assert_eq!(strict.acts(), event.acts(), "{what}: acts drift");
+    assert_eq!(strict.total_insts, event.total_insts, "{what}: total_insts drift");
+    assert_eq!(strict.core_ipc, event.core_ipc, "{what}: IPC drift");
+    assert_eq!(format!("{strict:?}"), format!("{event:?}"), "{what}: full-result drift");
+}
+
+#[test]
+fn single_core_matrix_is_bit_identical() {
+    for kind in MECHS {
+        for wl in ["mcf", "tpcc64"] {
+            let strict = run_single(kind, LoopMode::StrictTick, wl);
+            let event = run_single(kind, LoopMode::EventDriven, wl);
+            assert_identical(&strict, &event, &format!("{wl}/{}", kind.label()));
+        }
+    }
+}
+
+#[test]
+fn four_core_mix_matrix_is_bit_identical() {
+    for kind in MECHS {
+        let strict = run_mix(kind, LoopMode::StrictTick);
+        let event = run_mix(kind, LoopMode::EventDriven);
+        assert_identical(&strict, &event, kind.label());
+    }
+}
+
+#[test]
+fn closed_row_policy_single_core_is_bit_identical() {
+    // The eager-precharge pass has its own wake bound; pin it in
+    // isolation from the multi-core mix.
+    let run = |mode: LoopMode| -> SimResult {
+        let mut cfg = SystemConfig::single_core();
+        cfg.mc.row_policy = RowPolicy::Closed;
+        cfg.insts_per_core = 15_000;
+        cfg.warmup_cpu_cycles = 6_000;
+        cfg.loop_mode = mode;
+        let p = Profile::by_name("libquantum").unwrap();
+        System::new(&cfg, MechanismKind::ChargeCache, &[p]).run()
+    };
+    assert_identical(&run(LoopMode::StrictTick), &run(LoopMode::EventDriven), "closed-row");
+}
+
+#[test]
+fn fixed_time_window_is_bit_identical() {
+    // The measure_cycles = Some(n) path (multiprogrammed methodology).
+    let run = |mode: LoopMode| -> SimResult {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 2;
+        cfg.insts_per_core = 10_000;
+        cfg.warmup_cpu_cycles = 5_000;
+        cfg.measure_cycles = Some(60_000);
+        cfg.loop_mode = mode;
+        System::new_mix(&cfg, MechanismKind::ChargeCacheNuat, 0).run()
+    };
+    assert_identical(&run(LoopMode::StrictTick), &run(LoopMode::EventDriven), "fixed-time");
+}
+
+#[test]
+fn parallel_map_threads_is_deterministic_across_thread_counts() {
+    // Real simulation payload (the same jobs the experiment suites run),
+    // mapped across 1, 2, and 8 workers: index-pure + in-order results.
+    let sim = |i: usize| -> (u64, u64, String) {
+        let wl = ["mcf", "gcc", "tpcc64"][i % 3];
+        let kind = MECHS[i % MECHS.len()];
+        let mut cfg = SystemConfig::single_core();
+        cfg.insts_per_core = 4_000;
+        cfg.warmup_cpu_cycles = 2_000;
+        let p = Profile::by_name(wl).unwrap();
+        let r = System::new(&cfg, kind, &[p]).run();
+        (r.cpu_cycles, r.acts(), format!("{:?}", r.core_ipc))
+    };
+    let t1 = parallel_map_threads(6, 1, sim);
+    let t2 = parallel_map_threads(6, 2, sim);
+    let t8 = parallel_map_threads(6, 8, sim);
+    assert_eq!(t1, t2, "1-thread vs 2-thread results diverged");
+    assert_eq!(t1, t8, "1-thread vs 8-thread results diverged");
+}

@@ -4,106 +4,115 @@
 
 use chargecache::config::SystemConfig;
 use chargecache::coordinator::experiments::{run_suite, ExperimentScale};
-use chargecache::latency::timing_table::TimingTable;
 use chargecache::latency::MechanismKind;
-use chargecache::runtime::{ChargeModelRuntime, Runtime};
 use chargecache::sim::System;
 use chargecache::trace::{Profile, PROFILES};
 
-fn artifacts_available() -> Option<Runtime> {
-    let rt = Runtime::new(Runtime::default_dir()).ok()?;
-    rt.artifacts_present().then_some(rt)
-}
+/// The PJRT/HLO cross-language consistency tests only exist when the
+/// `pjrt` feature (and its manually-added `xla` dependency) is enabled;
+/// the default offline build exercises the analytic circuit model, which
+/// `latency::timing_table` pins against the same paper endpoints.
+#[cfg(feature = "pjrt")]
+mod hlo {
+    use chargecache::latency::timing_table::TimingTable;
+    use chargecache::runtime::{ChargeModelRuntime, Runtime};
 
-/// The HLO artifacts (JAX/Pallas circuit layer) must agree with the
-/// pure-Rust analytic port: this is the cross-language consistency oracle
-/// for the whole codesign bridge.
-#[test]
-fn hlo_timing_table_matches_rust_analytic() {
-    let Some(rt) = artifacts_available() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let cm = ChargeModelRuntime::load(&rt).unwrap();
-    let hlo = cm.timing_table(85.0, 1.25).unwrap();
-    let analytic = TimingTable::analytic(64, 85.0, 1.25);
-    for &age in analytic.ages() {
-        let (h_rcd, h_ras) = hlo.reduction_ns(age);
-        let (a_rcd, a_ras) = analytic.reduction_ns(age);
-        // f32 HLO vs f64 Rust: tolerate the Euler grid quantum (0.01 ns)
-        // plus small float drift.
+    fn artifacts_available() -> Option<Runtime> {
+        let rt = Runtime::new(Runtime::default_dir()).ok()?;
+        rt.artifacts_present().then_some(rt)
+    }
+
+    /// The HLO artifacts (JAX/Pallas circuit layer) must agree with the
+    /// pure-Rust analytic port: this is the cross-language consistency
+    /// oracle for the whole codesign bridge.
+    #[test]
+    fn hlo_timing_table_matches_rust_analytic() {
+        let Some(rt) = artifacts_available() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let cm = ChargeModelRuntime::load(&rt).unwrap();
+        let hlo = cm.timing_table(85.0, 1.25).unwrap();
+        let analytic = TimingTable::analytic(64, 85.0, 1.25);
+        for &age in analytic.ages() {
+            let (h_rcd, h_ras) = hlo.reduction_ns(age);
+            let (a_rcd, a_ras) = analytic.reduction_ns(age);
+            // f32 HLO vs f64 Rust: tolerate the Euler grid quantum
+            // (0.01 ns) plus small float drift.
+            assert!(
+                (h_rcd - a_rcd).abs() < 0.05,
+                "tRCD mismatch at {age}s: HLO {h_rcd} vs analytic {a_rcd}"
+            );
+            assert!(
+                (h_ras - a_ras).abs() < 0.05,
+                "tRAS mismatch at {age}s: HLO {h_ras} vs analytic {a_ras}"
+            );
+        }
+    }
+
+    /// The production operating point must round to the paper's -4/-8
+    /// cycles through the real PJRT path.
+    #[test]
+    fn hlo_grants_paper_reductions_at_1ms() {
+        let Some(rt) = artifacts_available() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let cm = ChargeModelRuntime::load(&rt).unwrap();
+        let table = cm.timing_table(85.0, 1.25).unwrap();
+        assert_eq!(table.reduction_cycles(1e-3), (4, 8));
+    }
+
+    /// Sec. 6.2 endpoints through the PJRT sense_latency entry point.
+    #[test]
+    fn hlo_sense_latency_reproduces_sec62() {
+        let Some(rt) = artifacts_available() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let cm = ChargeModelRuntime::load(&rt).unwrap();
+        let n = cm.meta.get_usize("latency_batch").unwrap();
+        let vdd = cm.meta.get("vdd").unwrap() as f32;
+        let tau = cm.meta.get("tau_leak_ms").unwrap();
+        let v_worst = (vdd / 2.0) as f64 + (vdd as f64 / 2.0) * (-64.0 / tau).exp();
+        let mut v = vec![vdd; n];
+        v[1] = v_worst as f32;
+        let (t_ready, t_restore) = cm.sense_latency(&v).unwrap();
+        assert!((t_ready[0] - 10.0).abs() < 0.05, "full-charge t_ready {}", t_ready[0]);
+        assert!((t_ready[1] - 14.5).abs() < 0.05, "worst-case t_ready {}", t_ready[1]);
         assert!(
-            (h_rcd - a_rcd).abs() < 0.05,
-            "tRCD mismatch at {age}s: HLO {h_rcd} vs analytic {a_rcd}"
-        );
-        assert!(
-            (h_ras - a_ras).abs() < 0.05,
-            "tRAS mismatch at {age}s: HLO {h_ras} vs analytic {a_ras}"
+            ((t_restore[1] - t_restore[0]) - 9.6).abs() < 0.15,
+            "tRAS delta {}",
+            t_restore[1] - t_restore[0]
         );
     }
-}
 
-/// The production operating point must round to the paper's -4/-8 cycles
-/// through the real PJRT path.
-#[test]
-fn hlo_grants_paper_reductions_at_1ms() {
-    let Some(rt) = artifacts_available() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let cm = ChargeModelRuntime::load(&rt).unwrap();
-    let table = cm.timing_table(85.0, 1.25).unwrap();
-    assert_eq!(table.reduction_cycles(1e-3), (4, 8));
-}
-
-/// Sec. 6.2 endpoints through the PJRT sense_latency entry point.
-#[test]
-fn hlo_sense_latency_reproduces_sec62() {
-    let Some(rt) = artifacts_available() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let cm = ChargeModelRuntime::load(&rt).unwrap();
-    let n = cm.meta.get_usize("latency_batch").unwrap();
-    let vdd = cm.meta.get("vdd").unwrap() as f32;
-    let tau = cm.meta.get("tau_leak_ms").unwrap();
-    let v_worst = (vdd / 2.0) as f64 + (vdd as f64 / 2.0) * (-64.0 / tau).exp();
-    let mut v = vec![vdd; n];
-    v[1] = v_worst as f32;
-    let (t_ready, t_restore) = cm.sense_latency(&v).unwrap();
-    assert!((t_ready[0] - 10.0).abs() < 0.05, "full-charge t_ready {}", t_ready[0]);
-    assert!((t_ready[1] - 14.5).abs() < 0.05, "worst-case t_ready {}", t_ready[1]);
-    assert!(
-        ((t_restore[1] - t_restore[0]) - 9.6).abs() < 0.15,
-        "tRAS delta {}",
-        t_restore[1] - t_restore[0]
-    );
-}
-
-/// Fig. 3 trajectories through PJRT: monotone family, correct shape.
-#[test]
-fn hlo_bitline_sweep_family_is_ordered() {
-    let Some(rt) = artifacts_available() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let cm = ChargeModelRuntime::load(&rt).unwrap();
-    let b = cm.meta.get_usize("traj_batch").unwrap();
-    let vdd = cm.meta.get("vdd").unwrap() as f32;
-    let v0: Vec<f32> = (0..b).map(|i| vdd * (0.80 + 0.2 * i as f32 / (b - 1) as f32)).collect();
-    let (samples, data) = cm.bitline_sweep(&v0).unwrap();
-    let v_ready = cm.meta.get("v_ready").unwrap() as f32;
-    let cross: Vec<usize> = (0..b)
-        .map(|lane| {
-            data[lane * samples..(lane + 1) * samples]
-                .iter()
-                .position(|&v| v >= v_ready)
-                .unwrap_or(samples)
-        })
-        .collect();
-    // More initial charge -> earlier crossing.
-    for w in cross.windows(2) {
-        assert!(w[1] <= w[0], "crossings must be ordered: {cross:?}");
+    /// Fig. 3 trajectories through PJRT: monotone family, correct shape.
+    #[test]
+    fn hlo_bitline_sweep_family_is_ordered() {
+        let Some(rt) = artifacts_available() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let cm = ChargeModelRuntime::load(&rt).unwrap();
+        let b = cm.meta.get_usize("traj_batch").unwrap();
+        let vdd = cm.meta.get("vdd").unwrap() as f32;
+        let v0: Vec<f32> =
+            (0..b).map(|i| vdd * (0.80 + 0.2 * i as f32 / (b - 1) as f32)).collect();
+        let (samples, data) = cm.bitline_sweep(&v0).unwrap();
+        let v_ready = cm.meta.get("v_ready").unwrap() as f32;
+        let cross: Vec<usize> = (0..b)
+            .map(|lane| {
+                data[lane * samples..(lane + 1) * samples]
+                    .iter()
+                    .position(|&v| v >= v_ready)
+                    .unwrap_or(samples)
+            })
+            .collect();
+        // More initial charge -> earlier crossing.
+        for w in cross.windows(2) {
+            assert!(w[1] <= w[0], "crossings must be ordered: {cross:?}");
+        }
     }
 }
 
@@ -160,7 +169,12 @@ fn multicore_increases_hcrac_hit_fraction() {
 /// Mini evaluation suite keeps the paper's aggregate orderings.
 #[test]
 fn mini_suite_orderings() {
-    let scale = ExperimentScale { insts_per_core: 25_000, warmup_cycles: 10_000, mixes: 2 };
+    let scale = ExperimentScale {
+        insts_per_core: 25_000,
+        warmup_cycles: 10_000,
+        mixes: 2,
+        ..ExperimentScale::default()
+    };
     let suite = run_suite(scale, true);
     let rows4a = suite.fig4a();
     let avg = |idx: usize| -> f64 {

@@ -241,6 +241,59 @@ fn prop_read_conservation() {
     });
 }
 
+/// The event kernel's wake contract, tested directly on the controller:
+/// whenever `next_event_at(now)` says the next event is strictly in the
+/// future, ticking at `now` must be a no-op (no command issued, no
+/// completion delivered, no stat moved). A violation here is exactly a
+/// "late wake" bug — the failure mode that would silently break the
+/// event-driven/strict-tick equivalence.
+#[test]
+fn prop_controller_wake_bound_is_never_late() {
+    property(15, |rng, seed| {
+        let mut cfg = SystemConfig::default();
+        cfg.mc.row_policy = if rng.below(2) == 0 { RowPolicy::Open } else { RowPolicy::Closed };
+        let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache);
+        let mut done = Vec::new();
+        let mut id = 0u64;
+        for now in 0..30_000u64 {
+            if rng.below(3) == 0 {
+                let req = Request {
+                    id,
+                    core: 0,
+                    loc: Loc {
+                        channel: 0,
+                        rank: 0,
+                        bank: rng.below(8) as u32,
+                        row: rng.below(32) as u32,
+                        col: rng.below(128) as u32,
+                    },
+                    is_write: rng.below(4) == 0,
+                    arrived: now,
+                };
+                if mc.enqueue(req, now) {
+                    id += 1;
+                }
+            }
+            let wake = mc.next_event_at(now);
+            let quiet = wake > now;
+            let before = format!("{:?}", mc.stats);
+            done.clear();
+            mc.tick(now, &mut done);
+            if quiet {
+                assert!(
+                    done.is_empty(),
+                    "completion delivered during declared-quiet cycle {now} (seed {seed})"
+                );
+                assert_eq!(
+                    before,
+                    format!("{:?}", mc.stats),
+                    "stats moved during declared-quiet cycle {now}, wake was {wake} (seed {seed})"
+                );
+            }
+        }
+    });
+}
+
 /// The mechanism ordering invariant at system level, across random small
 /// workloads: LL-DRAM cycles <= ChargeCache cycles <= ~Baseline cycles.
 #[test]
