@@ -8,7 +8,7 @@
 mod harness;
 
 use chargecache::config::SystemConfig;
-use chargecache::controller::{MemController, Request};
+use chargecache::controller::{MemController, Request, SchedulerKind};
 use chargecache::cpu::Llc;
 use chargecache::dram::command::Loc;
 use chargecache::latency::chargecache::ChargeCache;
@@ -64,46 +64,57 @@ fn main() {
         .report_throughput(n as f64, "entries");
     }
 
-    // Controller tick under load (the simulator's dominant loop).
-    {
+    // Controller tick under load (the simulator's dominant loop), per
+    // scheduler policy — the per-bank-indexing payoff and the relative
+    // cost of FCFS/BLISS land here (recorded in BENCH_engine.json).
+    let mut policy_tick_cps: Vec<(&'static str, f64)> = Vec::new();
+    for sched in SchedulerKind::all() {
+        let mut pcfg = cfg.clone();
+        pcfg.mc.scheduler = sched;
         let n_cycles = 200_000u64;
-        harness::bench("hotpath/controller_tick_200k_loaded", 1, 3, || {
-            let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache);
-            let mut rng = XorShift64::new(4);
-            let mut done = Vec::new();
-            let mut id = 0u64;
-            for now in 0..n_cycles {
-                if now % 4 == 0 {
-                    let _ = mc.enqueue(
-                        Request {
-                            id,
-                            core: 0,
-                            loc: Loc {
-                                channel: 0,
-                                rank: 0,
-                                bank: rng.below(8) as u32,
-                                row: rng.below(256) as u32,
-                                col: rng.below(128) as u32,
+        let r = harness::bench(
+            &format!("hotpath/controller_tick_200k_{}", sched.label()),
+            1,
+            3,
+            || {
+                let mut mc = MemController::new(&pcfg, MechanismKind::ChargeCache, 0);
+                let mut rng = XorShift64::new(4);
+                let mut done = Vec::new();
+                let mut id = 0u64;
+                for now in 0..n_cycles {
+                    if now % 4 == 0 {
+                        let _ = mc.enqueue(
+                            Request {
+                                id,
+                                core: (id % 4) as u32,
+                                loc: Loc {
+                                    channel: 0,
+                                    rank: 0,
+                                    bank: rng.below(8) as u32,
+                                    row: rng.below(256) as u32,
+                                    col: rng.below(128) as u32,
+                                },
+                                is_write: rng.below(4) == 0,
+                                arrived: now,
                             },
-                            is_write: rng.below(4) == 0,
-                            arrived: now,
-                        },
-                        now,
-                    );
-                    id += 1;
+                            now,
+                        );
+                        id += 1;
+                    }
+                    done.clear();
+                    mc.tick(now, &mut done);
                 }
-                done.clear();
-                mc.tick(now, &mut done);
-            }
-        })
-        .report_throughput(n_cycles as f64, "bus-cycles");
+            },
+        );
+        r.report_throughput(n_cycles as f64, "bus-cycles");
+        policy_tick_cps.push((sched.label(), n_cycles as f64 / r.mean.as_secs_f64()));
     }
 
     // Idle controller tick (common case in low-RMPKC phases).
     {
         let n_cycles = 2_000_000u64;
         harness::bench("hotpath/controller_tick_2M_idle", 1, 3, || {
-            let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache);
+            let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache, 0);
             let mut done = Vec::new();
             for now in 0..n_cycles {
                 done.clear();
@@ -142,14 +153,15 @@ fn main() {
         r.report_throughput(cycles as f64, "cpu-cycles");
     }
 
-    engine_vs_strict_tick();
+    engine_vs_strict_tick(&policy_tick_cps);
 }
 
 /// The event kernel vs the per-cycle loop on the memory-bound `mcf`
-/// profile: the headline wall-clock figure for the cycle-skipping engine.
-/// Emits `BENCH_engine.json` (repo root) so future PRs have a perf
-/// trajectory to track.
-fn engine_vs_strict_tick() {
+/// profile, plus the event-mode 4-core mix (the per-bank-indexing
+/// acceptance workload) and the per-policy controller-tick rates. Emits
+/// `BENCH_engine.json` (repo root) so future PRs have a perf trajectory
+/// to track.
+fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)]) {
     let insts = 150_000u64;
     let run_mode = |mode: LoopMode, label: &str| -> (f64, SimResult) {
         let p = Profile::by_name("mcf").unwrap();
@@ -182,6 +194,26 @@ fn engine_vs_strict_tick() {
         event_cps / 1e6
     );
 
+    // Event-mode 4-core mix: the workload the per-bank request indexing
+    // targets (two channels, closed-row policy, deep queues).
+    let mix_insts = 25_000u64;
+    let mut mix_cfg = SystemConfig::eight_core();
+    mix_cfg.cpu.cores = 4;
+    mix_cfg.insts_per_core = mix_insts;
+    mix_cfg.warmup_cpu_cycles = 10_000;
+    let mut mix_cycles = 0u64;
+    let mix_r = harness::bench("hotpath/mix4_event_driven", 1, 3, || {
+        let res = System::new_mix(&mix_cfg, MechanismKind::ChargeCache, 0).run();
+        mix_cycles = res.cpu_cycles;
+    });
+    mix_r.report_throughput(mix_cycles as f64, "cpu-cycles");
+    let mix_cps = mix_cycles as f64 / mix_r.mean.as_secs_f64();
+
+    let policies_json = policy_tick_cps
+        .iter()
+        .map(|(label, cps)| format!("    \"{label}\": {{ \"tick_cycles_per_sec\": {cps:.0} }}"))
+        .collect::<Vec<_>>()
+        .join(",\n");
     let json = format!(
         "{{\n  \"bench\": \"engine_vs_strict_tick\",\n  \"workload\": \"mcf\",\n  \
          \"mechanism\": \"ChargeCache\",\n  \"insts_per_core\": {insts},\n  \
@@ -189,8 +221,13 @@ fn engine_vs_strict_tick() {
          \"cycles_per_sec\": {strict_cps:.0} }},\n  \
          \"event_driven\": {{ \"wall_s\": {event_s:.6}, \"sim_cpu_cycles\": {}, \
          \"cycles_per_sec\": {event_cps:.0} }},\n  \
-         \"speedup\": {speedup:.3},\n  \"stats_identical\": {identical}\n}}\n",
-        strict.cpu_cycles, event.cpu_cycles
+         \"speedup\": {speedup:.3},\n  \"stats_identical\": {identical},\n  \
+         \"four_core_mix_event\": {{ \"insts_per_core\": {mix_insts}, \
+         \"wall_s\": {:.6}, \"sim_cpu_cycles\": {mix_cycles}, \
+         \"cycles_per_sec\": {mix_cps:.0} }},\n  \"policies\": {{\n{policies_json}\n  }}\n}}\n",
+        strict.cpu_cycles,
+        event.cpu_cycles,
+        mix_r.mean.as_secs_f64()
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     match std::fs::write(path, &json) {

@@ -3,6 +3,7 @@
 //! Every experiment is a [`SystemConfig`]; presets mirror the paper's
 //! simulated system and the CLI layers overrides on top.
 
+use crate::controller::SchedulerKind;
 use crate::latency::MechanismKind;
 use crate::sim::engine::LoopMode;
 
@@ -139,6 +140,8 @@ pub struct McConfig {
     /// Stop draining writes below this occupancy.
     pub write_lo_watermark: usize,
     pub row_policy: RowPolicy,
+    /// Scheduling policy (CLI: `--scheduler fr-fcfs|fcfs|bliss`).
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for McConfig {
@@ -149,6 +152,7 @@ impl Default for McConfig {
             write_hi_watermark: 48,
             write_lo_watermark: 16,
             row_policy: RowPolicy::Open,
+            scheduler: SchedulerKind::FrFcfs,
         }
     }
 }

@@ -1,0 +1,165 @@
+//! BankEngine — per-bank request indexing for the memory controller.
+//!
+//! The scheduler and the event-kernel wake bound both need one fact per
+//! bank, many times per tick: *does any queued request hit the currently
+//! open row?* The pre-refactor controller answered it by re-scanning both
+//! request queues (an O(read-queue + write-queue) pass in `schedule()`,
+//! `eager_precharge()`, and `next_event_at()` — the last one allocating a
+//! scratch bitmap per call). This index maintains the answer
+//! incrementally, O(1) per queue/row transition:
+//!
+//! * **enqueue/dequeue** — a per-bank `row -> queued-count` map is
+//!   updated, and the open-row-hit counter bumps when the request's row
+//!   matches the bank's open row;
+//! * **ACT** — the hit counter is reseeded from the row map (one hash
+//!   lookup);
+//! * **PRE** (explicit, auto, or refresh-drain) — the hit counter drops
+//!   to zero.
+//!
+//! The controller is the single writer: every path that moves a request
+//! or a row must notify the engine, and `debug_assert_consistent`
+//! re-derives the counters from queue + device state to catch a missed
+//! notification in tests.
+
+use std::collections::HashMap;
+
+use crate::dram::command::Loc;
+
+/// Incremental per-bank view over the request queues.
+#[derive(Debug, Clone)]
+pub struct BankEngine {
+    banks_per_rank: usize,
+    /// Per (rank, bank): queued-request count per row, both queues.
+    rows: Vec<HashMap<u32, u32>>,
+    /// Per (rank, bank): queued requests hitting the currently open row.
+    open_hits: Vec<u32>,
+}
+
+impl BankEngine {
+    pub fn new(ranks: usize, banks_per_rank: usize) -> Self {
+        Self {
+            banks_per_rank,
+            rows: vec![HashMap::new(); ranks * banks_per_rank],
+            open_hits: vec![0; ranks * banks_per_rank],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, rank: u32, bank: u32) -> usize {
+        rank as usize * self.banks_per_rank + bank as usize
+    }
+
+    /// A request entered a queue. `open_row` is its bank's open row at
+    /// enqueue time.
+    pub fn on_enqueue(&mut self, loc: &Loc, open_row: Option<u32>) {
+        let i = self.idx(loc.rank, loc.bank);
+        *self.rows[i].entry(loc.row).or_insert(0) += 1;
+        if open_row == Some(loc.row) {
+            self.open_hits[i] += 1;
+        }
+    }
+
+    /// A request left a queue (its column command issued). `open_row` is
+    /// its bank's open row after the issue (column commands do not close
+    /// the row; auto-precharge resolution reports separately).
+    pub fn on_dequeue(&mut self, loc: &Loc, open_row: Option<u32>) {
+        let i = self.idx(loc.rank, loc.bank);
+        match self.rows[i].get_mut(&loc.row) {
+            Some(n) if *n > 1 => *n -= 1,
+            Some(_) => {
+                self.rows[i].remove(&loc.row);
+            }
+            None => debug_assert!(false, "dequeue of untracked request at {loc:?}"),
+        }
+        if open_row == Some(loc.row) {
+            debug_assert!(self.open_hits[i] > 0, "open-hit underflow at {loc:?}");
+            self.open_hits[i] -= 1;
+        }
+    }
+
+    /// An ACT opened `row`: reseed the hit counter from the row index.
+    pub fn on_row_opened(&mut self, rank: u32, bank: u32, row: u32) {
+        let i = self.idx(rank, bank);
+        self.open_hits[i] = self.rows[i].get(&row).copied().unwrap_or(0);
+    }
+
+    /// A PRE (explicit, auto, or refresh-drain) closed the bank's row.
+    pub fn on_row_closed(&mut self, rank: u32, bank: u32) {
+        let i = self.idx(rank, bank);
+        self.open_hits[i] = 0;
+    }
+
+    /// Does any queued request hit the bank's currently open row? O(1) —
+    /// this is the query the per-tick queue scans used to answer.
+    #[inline]
+    pub fn open_row_has_hit(&self, rank: u32, bank: u32) -> bool {
+        self.open_hits[self.idx(rank, bank)] > 0
+    }
+
+    /// Re-derive both indexes from first principles and compare (test
+    /// hook: catches any controller path that forgot a notification).
+    pub fn debug_assert_consistent<'a>(
+        &self,
+        requests: impl Iterator<Item = &'a crate::controller::Request>,
+        open_row_of: impl Fn(u32, u32) -> Option<u32>,
+    ) {
+        let mut rows = vec![HashMap::new(); self.rows.len()];
+        let mut hits = vec![0u32; self.open_hits.len()];
+        for req in requests {
+            let i = self.idx(req.loc.rank, req.loc.bank);
+            *rows[i].entry(req.loc.row).or_insert(0u32) += 1;
+            if open_row_of(req.loc.rank, req.loc.bank) == Some(req.loc.row) {
+                hits[i] += 1;
+            }
+        }
+        debug_assert_eq!(rows, self.rows, "row index diverged from queues");
+        debug_assert_eq!(hits, self.open_hits, "open-hit counters diverged");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loc(bank: u32, row: u32) -> Loc {
+        Loc { channel: 0, rank: 0, bank, row, col: 0 }
+    }
+
+    #[test]
+    fn enqueue_dequeue_tracks_open_hits() {
+        let mut e = BankEngine::new(1, 8);
+        e.on_enqueue(&loc(0, 5), None);
+        assert!(!e.open_row_has_hit(0, 0));
+        e.on_row_opened(0, 0, 5);
+        assert!(e.open_row_has_hit(0, 0));
+        e.on_enqueue(&loc(0, 5), Some(5));
+        e.on_dequeue(&loc(0, 5), Some(5));
+        assert!(e.open_row_has_hit(0, 0));
+        e.on_dequeue(&loc(0, 5), Some(5));
+        assert!(!e.open_row_has_hit(0, 0));
+    }
+
+    #[test]
+    fn act_reseeds_from_queued_rows() {
+        let mut e = BankEngine::new(1, 8);
+        e.on_enqueue(&loc(3, 7), None);
+        e.on_enqueue(&loc(3, 7), None);
+        e.on_enqueue(&loc(3, 9), None);
+        e.on_row_opened(0, 3, 9);
+        assert!(e.open_row_has_hit(0, 3));
+        e.on_row_closed(0, 3);
+        assert!(!e.open_row_has_hit(0, 3));
+        e.on_row_opened(0, 3, 7);
+        assert!(e.open_row_has_hit(0, 3));
+    }
+
+    #[test]
+    fn close_zeroes_hits_regardless_of_queue() {
+        let mut e = BankEngine::new(2, 4);
+        e.on_enqueue(&Loc { channel: 0, rank: 1, bank: 2, row: 4, col: 0 }, None);
+        e.on_row_opened(1, 2, 4);
+        assert!(e.open_row_has_hit(1, 2));
+        e.on_row_closed(1, 2);
+        assert!(!e.open_row_has_hit(1, 2));
+    }
+}

@@ -41,7 +41,12 @@ impl AddressMapper {
         self.map_line(line)
     }
 
-    /// Map a cache-line index.
+    /// Map a cache-line index. The decoded `Loc.channel` selects the
+    /// owning [`crate::controller::MemController`]; the controller stamps
+    /// the same channel id into every Loc/RowKey it fabricates itself
+    /// (refresh, eager precharge), so decoded and fabricated locations
+    /// agree.
+    #[inline]
     pub fn map_line(&self, line: u64) -> Loc {
         let ch_bits = self.org.channels.trailing_zeros();
         let ra_bits = self.org.ranks.trailing_zeros();

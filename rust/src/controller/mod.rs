@@ -1,18 +1,33 @@
-//! Memory controller: request queues, FR-FCFS scheduling, row-buffer
+//! Memory controller: request queues, pluggable scheduling, row-buffer
 //! policy, refresh engine, and the latency-mechanism hook points.
 //!
-//! One controller instance drives one channel. Each bus cycle it issues at
-//! most one DRAM command, chosen by priority:
+//! One controller instance drives one channel. It is layered (DESIGN.md
+//! §4):
 //!
-//! 1. refresh drain (PREs, then the all-bank REF at the tREFI deadline),
-//! 2. FR-FCFS pass 1 — ready **column** commands (row hits), oldest first,
-//! 3. FR-FCFS pass 2 — ready ACT/PRE commands, oldest first.
+//! * [`bank_engine::BankEngine`] — per-bank request indexes: requests
+//!   bucketed by `(rank, bank)` with open-row-hit counts maintained
+//!   incrementally on enqueue/issue/precharge, so the scheduler and the
+//!   wake bound ask "does any queued request hit this open row?" in O(1)
+//!   instead of re-scanning both queues.
+//! * [`policy::SchedPolicy`] — the scheduling policy (FR-FCFS+cap by
+//!   default; strict FCFS and BLISS-style blacklisting selectable via
+//!   `SystemConfig::mc.scheduler` / `--scheduler`). Each policy supplies
+//!   its two per-tick picks *and* its own wake-bound contribution, so
+//!   [`MemController::next_event_at`] composes layer bounds instead of
+//!   re-deriving scheduler logic.
+//! * [`sink::CommandSink`] — the mechanism hook layer: ChargeCache/NUAT
+//!   ACT/PRE/REF callbacks, RLTL/reuse tracking, and stats accounting in
+//!   one funnel, exactly as in Fig. 2 of the paper.
 //!
-//! ChargeCache/NUAT hooks (`Mechanism`) fire on every ACT (lookup → timing
-//! grant) and every PRE (insert), exactly as in Fig. 2 of the paper.
+//! Each bus cycle the controller issues at most one DRAM command, chosen
+//! by priority: refresh drain first, then the policy's ready-column pass,
+//! then its ACT/PRE pass.
 
+pub mod bank_engine;
 pub mod mapping;
+pub mod policy;
 pub mod queue;
+pub mod sink;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -21,28 +36,14 @@ use crate::analysis::{ReuseTracker, RltlTracker};
 use crate::config::{RowPolicy, SystemConfig};
 use crate::dram::command::{Command, CommandKind, Loc};
 use crate::dram::device::Channel;
-use crate::latency::{build_mechanism, Mechanism, MechanismKind, RowKey};
+use crate::latency::{Mechanism, MechanismKind, RowKey};
 
+pub use bank_engine::BankEngine;
 pub use mapping::{AddressMapper, MapScheme};
+pub use policy::{build_policy, SchedCtx, SchedPolicy, SchedulerKind};
+pub use policy::{CONFLICT_AGE_CYCLES, STARVE_CAP_CYCLES};
 pub use queue::{Request, RequestQueue};
-
-/// How a request's first DRAM command classified it (row-buffer outcome).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ReqClass {
-    Hit,
-    Miss,
-    Conflict,
-}
-
-/// Row-hysteresis: a conflicting request must have waited this many bus
-/// cycles before it may close an open row (see the scheduler's pass 2).
-const CONFLICT_AGE_CYCLES: u64 = 16;
-
-/// FR-FCFS starvation cap: once a request has waited this long, it may
-/// close an open row even while younger row hits keep arriving (the
-/// classic FR-FCFS+cap fix — without it, a streaming core can starve a
-/// conflicting one indefinitely).
-const STARVE_CAP_CYCLES: u64 = 256;
+pub use sink::{CommandSink, McStats, ReqClass};
 
 /// A finished read (the core's MSHR is released at `ready` bus cycle).
 #[derive(Debug, Clone, Copy)]
@@ -52,37 +53,21 @@ pub struct Completion {
     pub ready: u64,
 }
 
-/// Controller statistics (reset after warmup).
-#[derive(Debug, Clone, Default)]
-pub struct McStats {
-    pub acts: u64,
-    pub acts_reduced: u64,
-    pub reads: u64,
-    pub writes: u64,
-    pub precharges: u64,
-    pub refreshes: u64,
-    pub row_hits: u64,
-    pub row_misses: u64,
-    pub row_conflicts: u64,
-    pub read_latency_sum: u64,
-    pub read_latency_cnt: u64,
-    /// Aggregate bank-open time (for active-standby energy).
-    pub bank_open_cycles: u64,
-    /// Forwarded from the write queue (no DRAM access).
-    pub wq_forwards: u64,
-    /// Enqueue rejections (queue full) — backpressure signal.
-    pub rejects: u64,
-}
-
 /// One-channel memory controller.
 pub struct MemController {
     pub dev: Channel,
+    /// Which channel this controller drives (stamped into every `Loc` and
+    /// `RowKey` it constructs, so multi-channel stats and keys never
+    /// collide).
+    channel: u32,
     rq: RequestQueue,
     wq: RequestQueue,
-    mech: Box<dyn Mechanism>,
-    pub rltl: RltlTracker,
-    pub reuse: ReuseTracker,
-    pub stats: McStats,
+    /// Mechanism hooks + trackers + stats (the CommandSink layer).
+    sink: CommandSink,
+    /// Scheduling policy (the SchedPolicy layer).
+    policy: Box<dyn SchedPolicy>,
+    /// Per-bank request index (the BankEngine layer).
+    engine: BankEngine,
     row_policy: RowPolicy,
     write_drain: bool,
     wq_hi: usize,
@@ -97,23 +82,18 @@ pub struct MemController {
     rank_active_since: Vec<u64>,
     /// Cycles each rank spent with >= 1 bank open.
     pub rank_active_cycles: Vec<u64>,
-    /// Scratch: per (rank, bank), does any queued request hit the open
-    /// row? Recomputed once per scheduling tick (collapses the O(n^2)
-    /// per-candidate row-hit scans to a single O(n) pass).
-    open_hit: Vec<bool>,
-    banks_per_rank: usize,
 }
 
 impl MemController {
-    pub fn new(cfg: &SystemConfig, kind: MechanismKind) -> Self {
+    pub fn new(cfg: &SystemConfig, kind: MechanismKind, channel: u32) -> Self {
         Self {
             dev: Channel::new(&cfg.dram, &cfg.timing),
+            channel,
             rq: RequestQueue::new(cfg.mc.read_queue),
             wq: RequestQueue::new(cfg.mc.write_queue),
-            mech: build_mechanism(kind, cfg),
-            rltl: RltlTracker::new(cfg.timing.tck_ns),
-            reuse: ReuseTracker::new(),
-            stats: McStats::default(),
+            sink: CommandSink::new(cfg, kind),
+            policy: build_policy(cfg.mc.scheduler),
+            engine: BankEngine::new(cfg.dram.ranks, cfg.dram.banks),
             row_policy: cfg.mc.row_policy,
             write_drain: false,
             wq_hi: cfg.mc.write_hi_watermark,
@@ -124,34 +104,38 @@ impl MemController {
             rank_open: vec![0; cfg.dram.ranks],
             rank_active_since: vec![0; cfg.dram.ranks],
             rank_active_cycles: vec![0; cfg.dram.ranks],
-            open_hit: vec![false; cfg.dram.ranks * cfg.dram.banks],
-            banks_per_rank: cfg.dram.banks,
         }
     }
 
-    /// Recompute the open-row-hit bitmap (one O(queues) pass). Called
-    /// lazily: only the first time a scheduling tick actually needs a
-    /// conflict/eager-PRE decision (most ticks resolve in pass 1).
-    fn refresh_open_hit(&mut self) {
-        self.open_hit.iter_mut().for_each(|b| *b = false);
-        let bpr = self.banks_per_rank;
-        for req in self.rq.iter().chain(self.wq.iter()) {
-            let idx = req.loc.rank as usize * bpr + req.loc.bank as usize;
-            if !self.open_hit[idx]
-                && self.dev.bank(&req.loc).open_row() == Some(req.loc.row)
-            {
-                self.open_hit[idx] = true;
-            }
-        }
+    /// Controller statistics (owned by the CommandSink layer).
+    pub fn stats(&self) -> &McStats {
+        &self.sink.stats
     }
 
+    /// Row-level temporal locality tracker.
+    pub fn rltl(&self) -> &RltlTracker {
+        &self.sink.rltl
+    }
+
+    /// Row-reuse tracker.
+    pub fn reuse(&self) -> &ReuseTracker {
+        &self.sink.reuse
+    }
+
+    /// The scheduling policy this controller runs.
+    pub fn scheduler(&self) -> SchedulerKind {
+        self.policy.kind()
+    }
+
+    /// The channel this controller drives.
+    pub fn channel_id(&self) -> u32 {
+        self.channel
+    }
+
+    /// Channel-qualified row identity for mechanism/RLTL keys.
     #[inline]
-    fn open_row_has_hit(&mut self, rank: u32, bank: u32, fresh: &mut bool) -> bool {
-        if !*fresh {
-            self.refresh_open_hit();
-            *fresh = true;
-        }
-        self.open_hit[rank as usize * self.banks_per_rank + bank as usize]
+    fn row_key(&self, rank: u32, bank: u32, row: u32) -> RowKey {
+        RowKey::new_in_channel(self.channel, rank, bank, row)
     }
 
     fn rank_opened(&mut self, rank: usize, now: u64) {
@@ -172,7 +156,7 @@ impl MemController {
 
     /// Replace the mechanism (coordinator sweeps reuse a controller).
     pub fn set_mechanism(&mut self, mech: Box<dyn Mechanism>) {
-        self.mech = mech;
+        self.sink.set_mechanism(mech);
     }
 
     /// Queue occupancy (reads, writes).
@@ -194,9 +178,10 @@ impl MemController {
     pub fn enqueue(&mut self, req: Request, now: u64) -> bool {
         if req.is_write {
             if self.wq.is_full() {
-                self.stats.rejects += 1;
+                self.sink.stats.rejects += 1;
                 return false;
             }
+            self.engine.on_enqueue(&req.loc, self.dev.bank(&req.loc).open_row());
             self.wq.push(req);
             true
         } else {
@@ -208,14 +193,15 @@ impl MemController {
                     && w.loc.col == req.loc.col
             });
             if fwd {
-                self.stats.wq_forwards += 1;
+                self.sink.stats.wq_forwards += 1;
                 self.completions.push(Reverse((now + 1, req.id, req.core)));
                 return true;
             }
             if self.rq.is_full() {
-                self.stats.rejects += 1;
+                self.sink.stats.rejects += 1;
                 return false;
             }
+            self.engine.on_enqueue(&req.loc, self.dev.bank(&req.loc).open_row());
             self.rq.push(req);
             true
         }
@@ -248,19 +234,25 @@ impl MemController {
         !self.rq.is_empty() || !self.wq.is_empty() || !self.completions.is_empty()
     }
 
+    /// Read-only scheduling context for the current device + index state.
+    #[inline]
+    fn ctx(&self, now: u64) -> SchedCtx<'_> {
+        SchedCtx { dev: &self.dev, ref_drain: &self.ref_drain, engine: &self.engine, now }
+    }
+
     /// Earliest bus cycle `>= now` at which ticking this controller could
     /// do anything: deliver a completion, resolve an auto-precharge,
-    /// start or advance a refresh, or issue a command for a queued
-    /// request — the event-kernel wake contract
-    /// (see [`crate::sim::engine`]).
+    /// start or advance a refresh, eagerly close a row (closed policy),
+    /// or issue a command for a queued request — the event-kernel wake
+    /// contract (see [`crate::sim::engine`]).
     ///
-    /// The bound is a conservative *lower* bound: it ignores the
-    /// scheduler's row-hit-first and write-drain gates (those can only
-    /// delay an issue past this bound, and a too-early tick is a no-op),
-    /// but it must never be later than the true next action. The
-    /// conflict-precharge hysteresis IS folded in (`arrived +
-    /// CONFLICT_AGE_CYCLES`) because it is a pure function of the
-    /// request, keeping the bound tight on row-conflict traffic.
+    /// The bound is *composed from the layer bounds*: device/refresh
+    /// terms from the controller itself, the eager-PRE term from the
+    /// BankEngine's open-row-hit index, and the queued-request term from
+    /// [`SchedPolicy::next_ready_at`] — so a policy change can never
+    /// silently diverge from a hand-copied wake computation. Each term is
+    /// a conservative *lower* bound (a too-early tick is a no-op), but
+    /// must never be later than the layer's true next action.
     pub fn next_event_at(&self, now: u64) -> u64 {
         // The write-drain hysteresis flag is itself mutable state the
         // strict loop re-evaluates every bus cycle, and the opportunistic
@@ -308,70 +300,41 @@ impl MemController {
             }
         }
         // Closed-row policy: the eager-precharge pass closes an open bank
-        // with no queued hits as soon as tRAS/tRTP allow. One O(queues)
-        // pass builds the per-bank open-row-hit bitmap (same shape as
-        // `refresh_open_hit`, which needs &mut and so cannot be reused
-        // here).
+        // with no queued hits as soon as tRAS/tRTP allow. The BankEngine's
+        // incremental open-row-hit index answers "any hits?" in O(1) —
+        // the pre-refactor code rebuilt a scratch bitmap from both queues
+        // (an O(queues) scan plus a heap allocation) on every call.
         if self.row_policy == RowPolicy::Closed {
-            let bpr = self.banks_per_rank;
-            let mut open_hit = vec![false; self.dev.ranks.len() * bpr];
-            for req in self.rq.iter().chain(self.wq.iter()) {
-                let idx = req.loc.rank as usize * bpr + req.loc.bank as usize;
-                if !open_hit[idx]
-                    && self.dev.bank(&req.loc).open_row() == Some(req.loc.row)
-                {
-                    open_hit[idx] = true;
-                }
-            }
             for (ri, rank) in self.dev.ranks.iter().enumerate() {
                 if self.ref_drain[ri] {
                     continue;
                 }
                 for (bi, bank) in rank.banks.iter().enumerate() {
-                    if bank.open_row().is_some() && !open_hit[ri * bpr + bi] {
+                    if bank.open_row().is_some()
+                        && !self.engine.open_row_has_hit(ri as u32, bi as u32)
+                    {
                         t = t.min(bank.pre_at);
                     }
                 }
             }
         }
-        // Queued requests: the cycle each one's next command becomes
-        // timing-legal (queue arrivals re-trigger this computation, so a
-        // fresh request surfaces at the next bus boundary).
-        for req in self.rq.iter().chain(self.wq.iter()) {
-            if self.ref_drain[req.loc.rank as usize] {
-                continue; // drained ranks are covered above
-            }
-            let bank = self.dev.bank(&req.loc);
-            if bank.next_autopre_at().is_some() {
-                continue; // logically closing; its autopre is the event
-            }
-            let cand = match bank.open_row() {
-                Some(row) if row == req.loc.row => {
-                    let kind = if req.is_write { CommandKind::Write } else { CommandKind::Read };
-                    self.dev.earliest_issue(kind, &req.loc)
-                }
-                Some(_) => self
-                    .dev
-                    .earliest_issue(CommandKind::Precharge, &req.loc)
-                    .max(req.arrived + CONFLICT_AGE_CYCLES),
-                None => self.dev.earliest_issue(CommandKind::Activate, &req.loc),
-            };
-            t = t.min(cand);
-        }
+        // Queued requests: the policy layer owns the bound for when its
+        // next pick could become legal (queue arrivals re-trigger this
+        // computation, so a fresh request surfaces at the next bus
+        // boundary).
+        t = t.min(self.policy.next_ready_at(&self.ctx(now), &self.rq, &self.wq));
         t.max(now)
     }
 
     fn resolve_autopre(&mut self, now: u64) {
-        let rltl = &mut self.rltl;
-        let mech = &mut self.mech;
-        let stats = &mut self.stats;
+        let sink = &mut self.sink;
+        let engine = &mut self.engine;
+        let channel = self.channel;
         let mut closed: Vec<u32> = Vec::new();
         self.dev.tick_autopre(now, |rank, bank, row, owner, cycle, act_cycle| {
-            let key = RowKey::new(rank, bank, row);
-            mech.on_precharge(cycle, owner, key);
-            rltl.on_precharge(cycle, key);
-            stats.precharges += 1;
-            stats.bank_open_cycles += cycle.saturating_sub(act_cycle);
+            let key = RowKey::new_in_channel(channel, rank, bank, row);
+            sink.on_precharge(cycle, owner, key, act_cycle);
+            engine.on_row_closed(rank, bank);
             closed.push(rank);
         });
         for rank in closed {
@@ -390,7 +353,13 @@ impl MemController {
             }
             let rank = &self.dev.ranks[rank_idx];
             if rank.all_closed() {
-                let loc = Loc { channel: 0, rank: rank_idx as u32, bank: 0, row: 0, col: 0 };
+                let loc = Loc {
+                    channel: self.channel,
+                    rank: rank_idx as u32,
+                    bank: 0,
+                    row: 0,
+                    col: 0,
+                };
                 if self.dev.can_issue(CommandKind::Refresh, &loc, now) {
                     self.dev.issue(
                         Command { kind: CommandKind::Refresh, loc },
@@ -400,27 +369,23 @@ impl MemController {
                         0,
                     );
                     let count = self.dev.ranks[rank_idx].refresh_count;
-                    self.mech.on_refresh(now, rank_idx as u32, count);
-                    self.stats.refreshes += 1;
+                    self.sink.on_refresh(now, rank_idx as u32, count);
                     self.ref_drain[rank_idx] = false;
                     return true;
                 }
                 continue;
             }
             // Precharge one open bank (oldest activation first).
-            let mut best: Option<(u64, usize)> = None;
-            for (bi, b) in rank.banks.iter().enumerate() {
-                if b.open_row().is_some() {
-                    let cand = (b.act_cycle, bi);
-                    if best.map_or(true, |x| cand < x) {
-                        best = Some(cand);
-                    }
-                }
-            }
-            if let Some((_, bi)) = best {
+            if let Some(bi) = rank.oldest_open_bank() {
                 let bank = &self.dev.ranks[rank_idx].banks[bi];
-                let row = bank.open_row().unwrap();
-                let loc = Loc { channel: 0, rank: rank_idx as u32, bank: bi as u32, row, col: 0 };
+                let row = bank.open_row().expect("oldest_open_bank returns open banks");
+                let loc = Loc {
+                    channel: self.channel,
+                    rank: rank_idx as u32,
+                    bank: bi as u32,
+                    row,
+                    col: 0,
+                };
                 if self.dev.can_issue(CommandKind::Precharge, &loc, now) {
                     self.issue_precharge(now, loc);
                     return true;
@@ -437,15 +402,15 @@ impl MemController {
         let owner = self.dev.bank(&loc).open_owner;
         let act_cycle = self.dev.bank(&loc).act_cycle;
         self.dev.issue(Command { kind: CommandKind::Precharge, loc }, now, 0, 0, owner);
-        let key = RowKey::new(loc.rank, loc.bank, loc.row);
-        self.mech.on_precharge(now, owner, key);
-        self.rltl.on_precharge(now, key);
-        self.stats.precharges += 1;
-        self.stats.bank_open_cycles += now - act_cycle;
+        let key = self.row_key(loc.rank, loc.bank, loc.row);
+        self.sink.on_precharge(now, owner, key, act_cycle);
+        self.engine.on_row_closed(loc.rank, loc.bank);
         self.rank_closed(loc.rank as usize, now);
     }
 
-    /// FR-FCFS scheduling; issues at most one command.
+    /// One scheduling slot: write-drain hysteresis, then the policy's
+    /// column pass, then its ACT/PRE pass, then (closed policy) the eager
+    /// precharge pass. Issues at most one command.
     fn schedule(&mut self, now: u64) {
         // Write drain mode hysteresis with read priority: drain when the
         // write queue is critically full (forced) or when there are no
@@ -463,116 +428,71 @@ impl MemController {
             self.write_drain = false;
         }
         let serving_writes = self.write_drain && !self.wq.is_empty();
-        // Lazily-computed open-row-hit bitmap (valid for this tick).
-        let mut hit_map_fresh = false;
         if self.rq.is_empty() && self.wq.is_empty() {
             // Idle fast path; the closed policy still parks open banks.
             if self.row_policy == RowPolicy::Closed {
-                self.eager_precharge(now, &mut hit_map_fresh);
+                self.eager_precharge(now);
             }
             return;
         }
 
-        // Pass 1: ready column command, oldest first.
-        let queue = if serving_writes { &self.wq } else { &self.rq };
-        let mut issue_col: Option<(usize, Request, CommandKind)> = None;
-        for (i, req) in queue.iter().enumerate() {
-            if self.ref_drain[req.loc.rank as usize] {
-                continue;
-            }
-            if self.dev.bank(&req.loc).open_row() != Some(req.loc.row) {
-                continue;
-            }
-            // The closed-row policy precharges via the eager-idle pass
-            // (pass 3) rather than auto-precharge: deciding at PRE time
-            // with live queue knowledge avoids closing a row whose next
-            // hit is still in flight (DDR3 RDA cannot be cancelled).
+        // Pass 1: ready column command (policy's pick — FR-FCFS takes the
+        // oldest row hit). The closed-row policy precharges via the
+        // eager-idle pass (pass 3) rather than auto-precharge: deciding
+        // at PRE time with live queue knowledge avoids closing a row
+        // whose next hit is still in flight (DDR3 RDA cannot be
+        // cancelled).
+        let picked = {
+            let ctx = SchedCtx {
+                dev: &self.dev,
+                ref_drain: &self.ref_drain,
+                engine: &self.engine,
+                now,
+            };
+            let queue = if serving_writes { &self.wq } else { &self.rq };
+            self.policy.pick_column(&ctx, queue)
+        };
+        if let Some(i) = picked {
+            let req = if serving_writes { self.wq.get(i) } else { self.rq.get(i) };
             let kind = if req.is_write { CommandKind::Write } else { CommandKind::Read };
-            if self.dev.can_issue(kind, &req.loc, now) {
-                issue_col = Some((i, *req, kind));
-                break;
-            }
-        }
-        if let Some((i, req, kind)) = issue_col {
             let ready = self.dev.issue(Command { kind, loc: req.loc }, now, 0, 0, req.core);
-            let class = self
-                .class_of
-                .remove(&req.id)
-                .unwrap_or(ReqClass::Hit);
-            match class {
-                ReqClass::Hit => self.stats.row_hits += 1,
-                ReqClass::Miss => self.stats.row_misses += 1,
-                ReqClass::Conflict => self.stats.row_conflicts += 1,
-            }
-            if req.is_write {
-                self.stats.writes += 1;
+            let class = self.class_of.remove(&req.id).unwrap_or(ReqClass::Hit);
+            let read_latency = if req.is_write {
                 self.wq.remove(i);
+                None
             } else {
-                self.stats.reads += 1;
                 let ready = ready.expect("read returns data-ready cycle");
                 self.completions.push(Reverse((ready, req.id, req.core)));
-                self.stats.read_latency_sum += ready - req.arrived;
-                self.stats.read_latency_cnt += 1;
                 self.rq.remove(i);
-            }
+                Some(ready - req.arrived)
+            };
+            self.engine.on_dequeue(&req.loc, self.dev.bank(&req.loc).open_row());
+            self.sink.on_column(class, req.is_write, read_latency);
+            self.policy.on_column_issued(now, req.core);
             return;
         }
 
-        // Pass 2: ready ACT or PRE, oldest first (index scan: the lazy
-        // hit-map computation needs &mut self mid-loop).
-        let queue_len = if serving_writes { self.wq.len() } else { self.rq.len() };
-        let mut action: Option<(u64, Request, CommandKind)> = None;
-        for i in 0..queue_len {
-            let req = if serving_writes { self.wq.get(i) } else { self.rq.get(i) };
-            if self.ref_drain[req.loc.rank as usize] {
-                continue;
-            }
-            match self.dev.bank(&req.loc).open_row() {
-                None => {
-                    if self.dev.can_issue(CommandKind::Activate, &req.loc, now) {
-                        action = Some((req.id, req, CommandKind::Activate));
-                        break;
-                    }
-                }
-                Some(open) if open != req.loc.row => {
-                    // Precharge only when no queued request still hits the
-                    // open row (in either queue) — FR-FCFS row-hit-first —
-                    // and the conflicting request has aged past the
-                    // hysteresis window. The aging guard keeps a stream's
-                    // in-flight same-row access (trickling in through the
-                    // MSHRs) from losing its open row to a premature
-                    // conflict precharge. Requests older than the
-                    // starvation cap override the row-hit priority.
-                    let age = now.saturating_sub(req.arrived);
-                    let starving = age >= STARVE_CAP_CYCLES;
-                    if age >= CONFLICT_AGE_CYCLES
-                        && (starving
-                            || !self.open_row_has_hit(
-                                req.loc.rank,
-                                req.loc.bank,
-                                &mut hit_map_fresh,
-                            ))
-                        && self.dev.can_issue(CommandKind::Precharge, &req.loc, now)
-                    {
-                        action = Some((req.id, req, CommandKind::Precharge));
-                        self.class_of.entry(req.id).or_insert(ReqClass::Conflict);
-                        break;
-                    }
-                }
-                Some(_) => {} // row hit, column not ready yet
-            }
-        }
-        if action.is_none() && self.row_policy == RowPolicy::Closed {
-            self.eager_precharge(now, &mut hit_map_fresh);
+        // Pass 2: ready ACT or conflict-PRE (policy's pick).
+        let picked = {
+            let ctx = SchedCtx {
+                dev: &self.dev,
+                ref_drain: &self.ref_drain,
+                engine: &self.engine,
+                now,
+            };
+            let queue = if serving_writes { &self.wq } else { &self.rq };
+            self.policy.pick_act_pre(&ctx, queue)
+        };
+        if picked.is_none() && self.row_policy == RowPolicy::Closed {
+            self.eager_precharge(now);
             return;
         }
-        if let Some((id, req, kind)) = action {
+        if let Some((i, kind)) = picked {
+            let req = if serving_writes { self.wq.get(i) } else { self.rq.get(i) };
             match kind {
                 CommandKind::Activate => {
-                    let key = RowKey::new(req.loc.rank, req.loc.bank, req.loc.row);
-                    let grant = self.mech.on_activate(now, req.core, key);
-                    self.rltl.on_activate(now, key);
-                    self.reuse.on_activate(key);
+                    let key = self.row_key(req.loc.rank, req.loc.bank, req.loc.row);
+                    let grant = self.sink.on_activate(now, req.core, key);
                     self.dev.issue(
                         Command { kind, loc: req.loc },
                         now,
@@ -580,19 +500,21 @@ impl MemController {
                         grant.tras,
                         req.core,
                     );
-                    self.stats.acts += 1;
-                    if grant.reduced {
-                        self.stats.acts_reduced += 1;
-                    }
+                    self.engine.on_row_opened(req.loc.rank, req.loc.bank, req.loc.row);
                     self.rank_opened(req.loc.rank as usize, now);
-                    self.class_of.entry(id).or_insert(ReqClass::Miss);
+                    self.class_of.entry(req.id).or_insert(ReqClass::Miss);
                 }
                 CommandKind::Precharge => {
+                    self.class_of.entry(req.id).or_insert(ReqClass::Conflict);
                     let mut loc = req.loc;
-                    loc.row = self.dev.bank(&req.loc).open_row().unwrap();
+                    loc.row = self
+                        .dev
+                        .bank(&req.loc)
+                        .open_row()
+                        .expect("policy picked PRE on an open bank");
                     self.issue_precharge(now, loc);
                 }
-                _ => unreachable!(),
+                _ => unreachable!("policies pick only ACT or PRE"),
             }
         }
     }
@@ -600,40 +522,42 @@ impl MemController {
     /// Pass 3 (closed-row policy): eager precharge of any open bank with
     /// no pending hits, using the spare command slot. tRAS reductions make
     /// this PRE legal earlier — ChargeCache's tRAS benefit under the
-    /// closed policy.
-    fn eager_precharge(&mut self, now: u64, hit_map_fresh: &mut bool) {
-        let (nranks, nbanks) = (self.dev.ranks.len(), self.banks_per_rank);
-        for ri in 0..nranks {
+    /// closed policy. The hit check is the BankEngine's O(1) index.
+    fn eager_precharge(&mut self, now: u64) {
+        for ri in 0..self.dev.ranks.len() {
             if self.ref_drain[ri] {
                 continue;
             }
-            for bi in 0..nbanks {
+            for bi in 0..self.dev.ranks[ri].banks.len() {
                 let open = self.dev.ranks[ri].banks[bi].open_row();
                 if let Some(open) = open {
-                    let loc = Loc {
-                        channel: 0,
-                        rank: ri as u32,
-                        bank: bi as u32,
-                        row: open,
-                        col: 0,
-                    };
-                    if !self.open_row_has_hit(ri as u32, bi as u32, hit_map_fresh)
-                        && self.dev.can_issue(CommandKind::Precharge, &loc, now)
-                    {
-                        self.issue_precharge(now, loc);
-                        return;
+                    if !self.engine.open_row_has_hit(ri as u32, bi as u32) {
+                        let loc = Loc {
+                            channel: self.channel,
+                            rank: ri as u32,
+                            bank: bi as u32,
+                            row: open,
+                            col: 0,
+                        };
+                        if self.dev.can_issue(CommandKind::Precharge, &loc, now) {
+                            self.issue_precharge(now, loc);
+                            return;
+                        }
                     }
                 }
             }
         }
     }
 
-    /// Finalize open-bank accounting at end of simulation.
+    /// Finalize open-bank accounting at end of simulation, and sweep the
+    /// classification map: every surviving `class_of` entry must belong
+    /// to a still-queued request (requests retired through any other path
+    /// — forwarding, simulation end — must not leak entries).
     pub fn finalize(&mut self, now: u64) {
         for rank in &self.dev.ranks {
             for b in &rank.banks {
                 if b.open_row().is_some() {
-                    self.stats.bank_open_cycles += now.saturating_sub(b.act_cycle);
+                    self.sink.stats.bank_open_cycles += now.saturating_sub(b.act_cycle);
                 }
             }
         }
@@ -644,13 +568,33 @@ impl MemController {
                 self.rank_active_since[r] = now;
             }
         }
+        let (rq, wq) = (&self.rq, &self.wq);
+        let before = self.class_of.len();
+        self.class_of.retain(|id, _| rq.contains_id(*id) || wq.contains_id(*id));
+        debug_assert_eq!(
+            before,
+            self.class_of.len(),
+            "class_of leaked {} entries for retired requests",
+            before - self.class_of.len()
+        );
     }
 
     /// Reset statistics (end of warmup). Mechanism state is retained —
     /// that is the point of warmup.
     pub fn reset_stats(&mut self) {
-        self.stats = McStats::default();
-        self.rltl.reset_counts();
+        self.sink.reset_stats();
+    }
+
+    /// Test hook: re-derive the BankEngine indexes from queue + device
+    /// state and assert they match (debug builds only).
+    #[cfg(test)]
+    fn assert_engine_consistent(&self) {
+        self.engine.debug_assert_consistent(
+            self.rq.iter().chain(self.wq.iter()),
+            |rank, bank| {
+                self.dev.ranks[rank as usize].banks[bank as usize].open_row()
+            },
+        );
     }
 }
 
@@ -684,32 +628,33 @@ mod tests {
     #[test]
     fn single_read_completes_with_expected_latency() {
         let c = cfg();
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         assert!(mc.enqueue(req(1, 0, 5, 3, false), 0));
         let done = run_until_complete(&mut mc, 0, 200);
         assert_eq!(done.len(), 1);
         // ACT@0 -> RD@tRCD(11) -> data at 11 + CL(11) + BL(4) = 26.
         assert_eq!(done[0].ready, 26);
-        assert_eq!(mc.stats.acts, 1);
-        assert_eq!(mc.stats.row_misses, 1);
+        assert_eq!(mc.stats().acts, 1);
+        assert_eq!(mc.stats().row_misses, 1);
     }
 
     #[test]
     fn row_hits_are_prioritized_and_counted() {
         let c = cfg();
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         mc.enqueue(req(1, 0, 5, 0, false), 0);
         mc.enqueue(req(2, 0, 5, 1, false), 0);
         mc.enqueue(req(3, 0, 9, 0, false), 0); // conflicting row
         let done = run_until_complete(&mut mc, 0, 400);
         assert_eq!(done.len(), 3);
-        assert_eq!(mc.stats.row_hits, 1);
-        assert_eq!(mc.stats.row_misses, 1);
-        assert_eq!(mc.stats.row_conflicts, 1);
+        assert_eq!(mc.stats().row_hits, 1);
+        assert_eq!(mc.stats().row_misses, 1);
+        assert_eq!(mc.stats().row_conflicts, 1);
         // Hit (id 2) must finish before the conflicting row 9 (id 3).
         let pos =
             |id: u64| done.iter().position(|c| c.req_id == id).unwrap();
         assert!(pos(2) < pos(3));
+        mc.assert_engine_consistent();
     }
 
     #[test]
@@ -717,7 +662,7 @@ mod tests {
         let c = cfg();
         // Baseline: open row 5, conflict to row 9, re-open row 5.
         let mut run = |kind: MechanismKind| -> u64 {
-            let mut mc = MemController::new(&c, kind);
+            let mut mc = MemController::new(&c, kind, 0);
             mc.enqueue(req(1, 0, 5, 0, false), 0);
             let _ = run_until_complete(&mut mc, 0, 400);
             mc.enqueue(req(2, 0, 9, 0, false), 400);
@@ -737,71 +682,72 @@ mod tests {
     #[test]
     fn write_drain_hysteresis() {
         let c = cfg();
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         // Fill write queue past the high watermark.
         for i in 0..49 {
             assert!(mc.enqueue(req(i, (i % 8) as u32, (i / 8) as u32, 0, true), 0));
         }
         let _ = run_until_complete(&mut mc, 0, 4000);
-        assert!(mc.stats.writes > 0, "drain must have issued writes");
+        assert!(mc.stats().writes > 0, "drain must have issued writes");
         assert!(mc.occupancy().1 <= c.mc.write_lo_watermark);
+        mc.assert_engine_consistent();
     }
 
     #[test]
     fn read_forwarded_from_write_queue() {
         let c = cfg();
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         mc.enqueue(req(1, 0, 5, 3, true), 0);
         mc.enqueue(req(2, 0, 5, 3, false), 0);
         let mut done = Vec::new();
         mc.tick(0, &mut done);
         mc.tick(1, &mut done);
         assert!(done.iter().any(|c| c.req_id == 2));
-        assert_eq!(mc.stats.wq_forwards, 1);
+        assert_eq!(mc.stats().wq_forwards, 1);
     }
 
     #[test]
     fn refresh_happens_on_schedule() {
         let c = cfg();
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         let mut done = Vec::new();
         for now in 0..(c.timing.trefi * 3 + 100) {
             mc.tick(now, &mut done);
         }
-        assert_eq!(mc.stats.refreshes, 3);
+        assert_eq!(mc.stats().refreshes, 3);
     }
 
     #[test]
     fn refresh_drains_open_banks_first() {
         let c = cfg();
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         mc.enqueue(req(1, 0, 5, 0, false), 0);
         let mut done = Vec::new();
         for now in 0..(c.timing.trefi + c.timing.trfc + 200) {
             mc.tick(now, &mut done);
         }
-        assert_eq!(mc.stats.refreshes, 1);
-        assert!(mc.stats.precharges >= 1);
+        assert_eq!(mc.stats().refreshes, 1);
+        assert!(mc.stats().precharges >= 1);
     }
 
     #[test]
     fn closed_policy_precharges_idle_banks_eagerly() {
         let mut c = cfg();
         c.mc.row_policy = RowPolicy::Closed;
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         mc.enqueue(req(1, 0, 5, 0, false), 0);
         let _ = run_until_complete(&mut mc, 0, 200);
         // The eager-idle pass closed the bank once no hits were pending.
         assert!(mc.dev.bank(&Loc { channel: 0, rank: 0, bank: 0, row: 5, col: 0 })
             .is_idle_closed());
-        assert_eq!(mc.stats.precharges, 1);
+        assert_eq!(mc.stats().precharges, 1);
     }
 
     #[test]
     fn closed_policy_keeps_row_open_while_hits_pending() {
         let mut c = cfg();
         c.mc.row_policy = RowPolicy::Closed;
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         mc.enqueue(req(1, 0, 5, 0, false), 0);
         mc.enqueue(req(2, 0, 5, 1, false), 0);
         let mut done = Vec::new();
@@ -810,14 +756,14 @@ mod tests {
         }
         // Second hit still queued or just served: row must not have been
         // precharged between the two column commands.
-        assert_eq!(mc.stats.precharges, 0);
-        assert_eq!(mc.stats.row_hits + mc.stats.row_misses, 2);
+        assert_eq!(mc.stats().precharges, 0);
+        assert_eq!(mc.stats().row_hits + mc.stats().row_misses, 2);
     }
 
     #[test]
     fn wake_bound_tracks_idle_act_read_and_completion() {
         let c = cfg();
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         // Idle controller: nothing can happen before the tREFI deadline.
         assert_eq!(mc.next_event_at(0), c.timing.trefi);
         // A fresh request to a closed bank can ACT immediately.
@@ -841,14 +787,213 @@ mod tests {
     #[test]
     fn rltl_tracks_reopens_through_controller() {
         let c = cfg();
-        let mut mc = MemController::new(&c, MechanismKind::Baseline);
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
         mc.enqueue(req(1, 0, 5, 0, false), 0);
         let _ = run_until_complete(&mut mc, 0, 300);
         mc.enqueue(req(2, 0, 9, 0, false), 300); // forces PRE of row 5
         let _ = run_until_complete(&mut mc, 300, 600);
         mc.enqueue(req(3, 0, 5, 0, false), 600); // re-open row 5
         let _ = run_until_complete(&mut mc, 600, 900);
-        assert_eq!(mc.rltl.activations, 3);
-        assert!(mc.rltl.fraction_at_ms(1.0) > 0.0);
+        assert_eq!(mc.rltl().activations, 3);
+        assert!(mc.rltl().fraction_at_ms(1.0) > 0.0);
+    }
+
+    /// Drive a two-bank row-hit stream from `core 0` (banks 0 and 1, row
+    /// 1) plus one conflicting victim read (bank 0, row 99, core 1) at
+    /// `victim_arrives`; returns the victim's completion cycle. The
+    /// stream alternates banks so tCCD gaps leave the bank-0 PRE legal
+    /// while younger hits are still queued — the exact situation the
+    /// starvation cap (and BLISS's blacklist) must resolve. A
+    /// single-bank stream would instead re-arm tRTP faster than the PRE
+    /// window can open, and no scheduler could close the row.
+    fn hammer_until_victim_completes(sched: SchedulerKind, victim_arrives: u64) -> u64 {
+        let mut c = cfg();
+        c.mc.scheduler = sched;
+        let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
+        let mut id = 100u64;
+        let mut done = Vec::new();
+        for now in 0..4_000u64 {
+            if now % 3 == 0 && mc.can_accept_read() {
+                mc.enqueue(
+                    Request {
+                        id,
+                        core: 0,
+                        loc: Loc {
+                            channel: 0,
+                            rank: 0,
+                            bank: (id % 2) as u32,
+                            row: 1,
+                            col: (id % 128) as u32,
+                        },
+                        is_write: false,
+                        arrived: now,
+                    },
+                    now,
+                );
+                id += 1;
+            }
+            if now == victim_arrives {
+                mc.enqueue(
+                    Request {
+                        id: 1,
+                        core: 1,
+                        loc: Loc { channel: 0, rank: 0, bank: 0, row: 99, col: 0 },
+                        is_write: false,
+                        arrived: now,
+                    },
+                    now,
+                );
+            }
+            done.clear();
+            mc.tick(now, &mut done);
+            if done.iter().any(|c| c.req_id == 1) {
+                assert!(mc.stats().row_conflicts >= 1);
+                return now;
+            }
+        }
+        panic!("victim starved under {sched:?}");
+    }
+
+    /// Satellite: FR-FCFS starvation semantics. A conflicting request
+    /// older than `STARVE_CAP_CYCLES` closes the row even while younger
+    /// row hits keep arriving — and not before the cap, while hits are
+    /// pending.
+    #[test]
+    fn starvation_cap_overrides_row_hit_priority() {
+        let victim_arrives = 40u64;
+        let at = hammer_until_victim_completes(SchedulerKind::FrFcfs, victim_arrives);
+        // Not before the cap: hits were always pending, so the PRE could
+        // only have issued once the victim's age reached the cap.
+        assert!(
+            at >= victim_arrives + STARVE_CAP_CYCLES,
+            "victim finished at {at}, before the starvation cap"
+        );
+        // And promptly after it (PRE + ACT + RD + data, bounded loosely).
+        assert!(
+            at <= victim_arrives + STARVE_CAP_CYCLES + 120,
+            "victim finished at {at}, long after the cap opened"
+        );
+    }
+
+    /// Strict FCFS must serve a conflicting older request before a
+    /// younger row hit (the inverse of FR-FCFS's reordering).
+    #[test]
+    fn fcfs_serves_in_strict_arrival_order() {
+        let run = |sched: SchedulerKind| -> Vec<u64> {
+            let mut c = cfg();
+            c.mc.scheduler = sched;
+            let mut mc = MemController::new(&c, MechanismKind::Baseline, 0);
+            // Open row 5 with request 1, then a conflict (row 9) and a
+            // row-5 hit behind it.
+            mc.enqueue(req(1, 0, 5, 0, false), 0);
+            mc.enqueue(req(2, 0, 9, 0, false), 0);
+            mc.enqueue(req(3, 0, 5, 1, false), 0);
+            run_until_complete(&mut mc, 0, 600)
+                .iter()
+                .map(|c| c.req_id)
+                .collect()
+        };
+        assert_eq!(run(SchedulerKind::Fcfs), vec![1, 2, 3], "FCFS keeps arrival order");
+        assert_eq!(run(SchedulerKind::FrFcfs), vec![1, 3, 2], "FR-FCFS reorders for the hit");
+    }
+
+    /// BLISS: once the streaming core is blacklisted, a conflicting
+    /// request from another core closes its row long before the FR-FCFS
+    /// starvation cap would have.
+    #[test]
+    fn bliss_breaks_streaks_faster_than_starvation_cap() {
+        let victim_arrives = 40u64;
+        let bliss = hammer_until_victim_completes(SchedulerKind::Bliss, victim_arrives);
+        let frfcfs = hammer_until_victim_completes(SchedulerKind::FrFcfs, victim_arrives);
+        assert!(
+            bliss < frfcfs,
+            "BLISS ({bliss}) should beat FR-FCFS's starvation cap ({frfcfs})"
+        );
+        assert!(
+            bliss < victim_arrives + STARVE_CAP_CYCLES,
+            "BLISS victim ({bliss}) should finish before the cap"
+        );
+    }
+
+    /// The controller stamps its channel id into refresh/eager-PRE `Loc`s
+    /// and into mechanism keys (satellite: no hard-coded channel 0). The
+    /// ChargeCache hit pins key *consistency* across the PRE-insert and
+    /// ACT-lookup paths on a nonzero channel: if any one site fell back
+    /// to channel-0 keys, the re-activation would miss and the reduced
+    /// grant would vanish.
+    #[test]
+    fn channel_id_reaches_mechanism_keys() {
+        let c = cfg();
+        let mut mc = MemController::new(&c, MechanismKind::ChargeCache, 3);
+        assert_eq!(mc.channel_id(), 3);
+        assert_eq!(mc.row_key(0, 0, 5).channel(), 3);
+        let rd = |id: u64, row: u32| Request {
+            id,
+            core: 0,
+            loc: Loc { channel: 3, rank: 0, bank: 0, row, col: 0 },
+            is_write: false,
+            arrived: 0,
+        };
+        mc.enqueue(rd(1, 5), 0); // open row 5
+        let _ = run_until_complete(&mut mc, 0, 400);
+        mc.enqueue(rd(2, 9), 400); // conflict: PRE row 5 -> HCRAC insert
+        let _ = run_until_complete(&mut mc, 400, 800);
+        mc.enqueue(rd(3, 5), 800); // re-open row 5 -> HCRAC hit
+        let _ = run_until_complete(&mut mc, 800, 1600);
+        assert_eq!(mc.stats().acts, 3);
+        assert_eq!(
+            mc.stats().acts_reduced,
+            1,
+            "channel-3 PRE-insert and ACT-lookup keys must agree"
+        );
+    }
+
+    /// Randomized cross-check of the BankEngine's incremental indexes
+    /// against a from-scratch re-derivation, across every scheduler and
+    /// both row policies. A missed notification on any enqueue/issue/
+    /// precharge path would leave the counters stale *identically* in
+    /// strict and event mode, so the differential tests cannot catch it —
+    /// only this oracle can.
+    #[test]
+    fn bank_engine_index_survives_random_traffic() {
+        let mut seed = 0xB1E5u64;
+        for sched in SchedulerKind::all() {
+            for row_policy in [RowPolicy::Open, RowPolicy::Closed] {
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let mut rng = crate::trace::XorShift64::new(seed);
+                let mut c = cfg();
+                c.mc.scheduler = sched;
+                c.mc.row_policy = row_policy;
+                let mut mc = MemController::new(&c, MechanismKind::ChargeCache, 0);
+                let mut done = Vec::new();
+                let mut id = 0u64;
+                for now in 0..20_000u64 {
+                    if rng.below(3) == 0 {
+                        let req = Request {
+                            id,
+                            core: rng.below(4) as u32,
+                            loc: Loc {
+                                channel: 0,
+                                rank: 0,
+                                bank: rng.below(8) as u32,
+                                row: rng.below(16) as u32,
+                                col: rng.below(128) as u32,
+                            },
+                            is_write: rng.below(4) == 0,
+                            arrived: now,
+                        };
+                        if mc.enqueue(req, now) {
+                            id += 1;
+                        }
+                    }
+                    done.clear();
+                    mc.tick(now, &mut done);
+                    if now % 64 == 0 {
+                        mc.assert_engine_consistent();
+                    }
+                }
+                mc.assert_engine_consistent();
+            }
+        }
     }
 }

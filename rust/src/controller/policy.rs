@@ -1,0 +1,548 @@
+//! SchedPolicy — pluggable memory-scheduler policies.
+//!
+//! The controller's per-tick template is fixed (refresh drain, then a
+//! ready **column** pass, then an **ACT/PRE** pass); what varies between
+//! schedulers is *which* request each pass picks and *when* the next pick
+//! could become legal. A policy supplies exactly those three decisions:
+//!
+//! * [`SchedPolicy::pick_column`] — pass 1: the queue index whose ready
+//!   column command (row hit) should issue this cycle;
+//! * [`SchedPolicy::pick_act_pre`] — pass 2: the queue index and command
+//!   (ACT or conflict-PRE) to issue when no column was ready;
+//! * [`SchedPolicy::next_ready_at`] — the policy's contribution to the
+//!   controller's event-kernel wake bound: a conservative **lower** bound
+//!   on the earliest bus cycle at which either pass could issue anything.
+//!   Early bounds cost a no-op tick; a late bound would silently break
+//!   the strict-tick equivalence, so every policy's bound is attacked by
+//!   `tests/prop.rs::prop_wake_bound_is_never_late_for_any_policy`.
+//!
+//! Three policies ship:
+//!
+//! * **FR-FCFS+cap** (default) — row hits first, oldest first, with a
+//!   conflict-PRE hysteresis window and a starvation cap that lets a
+//!   sufficiently old conflicting request close a busy row.
+//! * **FCFS** — strict arrival order: only the oldest schedulable request
+//!   (oldest request outside a refresh-draining rank) may issue its next
+//!   command. No row-hit reordering; the reference point scheduling
+//!   studies compare against.
+//! * **BLISS-style** — FR-FCFS order plus application blacklisting
+//!   (Subramanian et al.): a core served too many consecutive column
+//!   commands is blacklisted until the next clearing interval;
+//!   non-blacklisted requests win ties in both passes, and a blacklisted
+//!   core's open row loses its row-hit-first protection against
+//!   non-blacklisted conflicts.
+
+use std::collections::HashSet;
+
+use crate::dram::command::CommandKind;
+use crate::dram::device::Channel;
+
+use super::bank_engine::BankEngine;
+use super::queue::{Request, RequestQueue};
+
+/// Row-hysteresis: a conflicting request must have waited this many bus
+/// cycles before it may close an open row (FR-FCFS / BLISS pass 2).
+pub const CONFLICT_AGE_CYCLES: u64 = 16;
+
+/// FR-FCFS starvation cap: once a request has waited this long, it may
+/// close an open row even while younger row hits keep arriving (the
+/// classic FR-FCFS+cap fix — without it, a streaming core can starve a
+/// conflicting one indefinitely).
+pub const STARVE_CAP_CYCLES: u64 = 256;
+
+/// BLISS: consecutive column commands served to one core before it is
+/// blacklisted.
+pub const BLISS_STREAK_CAP: u32 = 4;
+
+/// BLISS: the blacklist is cleared on this fixed bus-cycle grid. A grid
+/// (rather than `now + interval`) keeps clearing deterministic between
+/// the strict-tick and event-driven loops, which visit different cycles.
+pub const BLISS_CLEAR_INTERVAL: u64 = 10_000;
+
+/// Which scheduler a controller runs (`SystemConfig::mc.scheduler`,
+/// CLI `--scheduler`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    /// FR-FCFS with conflict hysteresis and a starvation cap (default).
+    FrFcfs,
+    /// Strict first-come-first-served (no row-hit reordering).
+    Fcfs,
+    /// FR-FCFS with BLISS-style application blacklisting.
+    Bliss,
+}
+
+impl SchedulerKind {
+    pub fn all() -> [SchedulerKind; 3] {
+        [SchedulerKind::FrFcfs, SchedulerKind::Fcfs, SchedulerKind::Bliss]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::FrFcfs => "FR-FCFS",
+            SchedulerKind::Fcfs => "FCFS",
+            SchedulerKind::Bliss => "BLISS",
+        }
+    }
+}
+
+/// Read-only scheduling context for one bus cycle: the device timing
+/// surface, refresh-drain flags, and the per-bank request index.
+pub struct SchedCtx<'a> {
+    pub dev: &'a Channel,
+    pub ref_drain: &'a [bool],
+    pub engine: &'a BankEngine,
+    pub now: u64,
+}
+
+/// One scheduling policy. Implementations must be deterministic pure
+/// functions of (their own state, the context, the queue) — the
+/// strict-tick differential oracle depends on it.
+pub trait SchedPolicy: Send {
+    fn kind(&self) -> SchedulerKind;
+
+    /// Pass 1: index of the request whose ready column command should
+    /// issue this cycle, or `None`.
+    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<usize>;
+
+    /// Pass 2: `(index, Activate | Precharge)` to issue, or `None`.
+    fn pick_act_pre(
+        &mut self,
+        ctx: &SchedCtx,
+        queue: &RequestQueue,
+    ) -> Option<(usize, CommandKind)>;
+
+    /// Wake-bound contribution (see module docs): a lower bound over both
+    /// queues on the earliest cycle `>= ctx.now` at which this policy
+    /// could issue any command. Must never be later than the true next
+    /// issue cycle.
+    fn next_ready_at(&self, ctx: &SchedCtx, rq: &RequestQueue, wq: &RequestQueue) -> u64;
+
+    /// A column command issued for `core`'s request (BLISS bookkeeping).
+    fn on_column_issued(&mut self, _now: u64, _core: u32) {}
+}
+
+/// Build the policy instance for one controller.
+pub fn build_policy(kind: SchedulerKind) -> Box<dyn SchedPolicy> {
+    match kind {
+        SchedulerKind::FrFcfs => Box::new(FrFcfs),
+        SchedulerKind::Fcfs => Box::new(Fcfs),
+        SchedulerKind::Bliss => Box::new(Bliss::new()),
+    }
+}
+
+#[inline]
+fn column_kind(req: &Request) -> CommandKind {
+    if req.is_write {
+        CommandKind::Write
+    } else {
+        CommandKind::Read
+    }
+}
+
+/// Shared wake-bound term: the cycle `req`'s next command becomes
+/// timing-legal, or `None` when the request is parked behind a refresh
+/// drain or a pending auto-precharge (both are separate wake events owned
+/// by the controller layer). `conflict_age` folds the policy's hysteresis
+/// into the conflict-PRE term (a pure function of the request, so it
+/// keeps the bound tight on row-conflict traffic).
+fn request_ready_at(ctx: &SchedCtx, req: &Request, conflict_age: u64) -> Option<u64> {
+    if ctx.ref_drain[req.loc.rank as usize] {
+        return None;
+    }
+    let bank = ctx.dev.bank(&req.loc);
+    if bank.next_autopre_at().is_some() {
+        return None; // logically closing; its autopre is the event
+    }
+    Some(match bank.open_row() {
+        Some(row) if row == req.loc.row => ctx.dev.earliest_issue(column_kind(req), &req.loc),
+        Some(_) => ctx
+            .dev
+            .earliest_issue(CommandKind::Precharge, &req.loc)
+            .max(req.arrived + conflict_age),
+        None => ctx.dev.earliest_issue(CommandKind::Activate, &req.loc),
+    })
+}
+
+/// Min of [`request_ready_at`] over every request in both queues — the
+/// FR-FCFS-shaped bound (also sound for BLISS, whose blacklist reorders
+/// preferences but never changes *when* a command first becomes legal).
+fn all_requests_ready_at(
+    ctx: &SchedCtx,
+    rq: &RequestQueue,
+    wq: &RequestQueue,
+    conflict_age: u64,
+) -> u64 {
+    let mut t = u64::MAX;
+    for req in rq.iter().chain(wq.iter()) {
+        if let Some(c) = request_ready_at(ctx, req, conflict_age) {
+            t = t.min(c);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// FR-FCFS + starvation cap (the default; extracted verbatim from the
+// pre-refactor monolithic scheduler).
+// ---------------------------------------------------------------------
+
+/// First-ready FCFS with conflict hysteresis and a starvation cap.
+pub struct FrFcfs;
+
+impl SchedPolicy for FrFcfs {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::FrFcfs
+    }
+
+    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<usize> {
+        for (i, req) in queue.iter().enumerate() {
+            if ctx.ref_drain[req.loc.rank as usize] {
+                continue;
+            }
+            if ctx.dev.bank(&req.loc).open_row() != Some(req.loc.row) {
+                continue;
+            }
+            if ctx.dev.can_issue(column_kind(req), &req.loc, ctx.now) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    fn pick_act_pre(
+        &mut self,
+        ctx: &SchedCtx,
+        queue: &RequestQueue,
+    ) -> Option<(usize, CommandKind)> {
+        for (i, req) in queue.iter().enumerate() {
+            if ctx.ref_drain[req.loc.rank as usize] {
+                continue;
+            }
+            let bank = ctx.dev.bank(&req.loc);
+            if bank.next_autopre_at().is_some() {
+                continue; // logically closing; wait for the autopre
+            }
+            match bank.open_row() {
+                None => {
+                    if ctx.dev.can_issue(CommandKind::Activate, &req.loc, ctx.now) {
+                        return Some((i, CommandKind::Activate));
+                    }
+                }
+                Some(open) if open != req.loc.row => {
+                    // Precharge only when no queued request still hits the
+                    // open row (in either queue) — FR-FCFS row-hit-first —
+                    // and the conflicting request has aged past the
+                    // hysteresis window. The aging guard keeps a stream's
+                    // in-flight same-row access (trickling in through the
+                    // MSHRs) from losing its open row to a premature
+                    // conflict precharge. Requests older than the
+                    // starvation cap override the row-hit priority.
+                    let age = ctx.now.saturating_sub(req.arrived);
+                    let starving = age >= STARVE_CAP_CYCLES;
+                    if age >= CONFLICT_AGE_CYCLES
+                        && (starving || !ctx.engine.open_row_has_hit(req.loc.rank, req.loc.bank))
+                        && ctx.dev.can_issue(CommandKind::Precharge, &req.loc, ctx.now)
+                    {
+                        return Some((i, CommandKind::Precharge));
+                    }
+                }
+                Some(_) => {} // row hit, column not ready yet
+            }
+        }
+        None
+    }
+
+    fn next_ready_at(&self, ctx: &SchedCtx, rq: &RequestQueue, wq: &RequestQueue) -> u64 {
+        all_requests_ready_at(ctx, rq, wq, CONFLICT_AGE_CYCLES)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Strict FCFS.
+// ---------------------------------------------------------------------
+
+/// Strict arrival-order scheduling: the oldest schedulable request (the
+/// oldest one whose rank is not refresh-draining) is the *only*
+/// candidate; nothing younger may overtake it, row hit or not.
+pub struct Fcfs;
+
+/// The head candidate of one queue under strict FCFS.
+fn fcfs_candidate<'q>(ctx: &SchedCtx, queue: &'q RequestQueue) -> Option<(usize, &'q Request)> {
+    queue
+        .iter()
+        .enumerate()
+        .find(|(_, r)| !ctx.ref_drain[r.loc.rank as usize])
+}
+
+impl SchedPolicy for Fcfs {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Fcfs
+    }
+
+    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<usize> {
+        let (i, req) = fcfs_candidate(ctx, queue)?;
+        if ctx.dev.bank(&req.loc).open_row() == Some(req.loc.row)
+            && ctx.dev.can_issue(column_kind(req), &req.loc, ctx.now)
+        {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    fn pick_act_pre(
+        &mut self,
+        ctx: &SchedCtx,
+        queue: &RequestQueue,
+    ) -> Option<(usize, CommandKind)> {
+        let (i, req) = fcfs_candidate(ctx, queue)?;
+        let bank = ctx.dev.bank(&req.loc);
+        if bank.next_autopre_at().is_some() {
+            return None;
+        }
+        match bank.open_row() {
+            None if ctx.dev.can_issue(CommandKind::Activate, &req.loc, ctx.now) => {
+                Some((i, CommandKind::Activate))
+            }
+            // Head-of-queue conflicts close the row as soon as the PRE is
+            // legal: strict FCFS has no row-hit-first protection and
+            // therefore needs no hysteresis or starvation cap.
+            Some(open)
+                if open != req.loc.row
+                    && ctx.dev.can_issue(CommandKind::Precharge, &req.loc, ctx.now) =>
+            {
+                Some((i, CommandKind::Precharge))
+            }
+            _ => None,
+        }
+    }
+
+    fn next_ready_at(&self, ctx: &SchedCtx, rq: &RequestQueue, wq: &RequestQueue) -> u64 {
+        // Only the head candidate of each queue can issue; which queue is
+        // served depends on the controller's write-drain state, so min
+        // over both (the non-serving head's bound is merely early, and an
+        // early wake is a no-op tick).
+        let mut t = u64::MAX;
+        for queue in [rq, wq] {
+            if let Some((_, req)) = fcfs_candidate(ctx, queue) {
+                if let Some(c) = request_ready_at(ctx, req, 0) {
+                    t = t.min(c);
+                }
+            }
+        }
+        t
+    }
+}
+
+// ---------------------------------------------------------------------
+// BLISS-style blacklisting.
+// ---------------------------------------------------------------------
+
+/// FR-FCFS order with application blacklisting: a core served
+/// [`BLISS_STREAK_CAP`] consecutive column commands is blacklisted until
+/// the next [`BLISS_CLEAR_INTERVAL`] grid point. Non-blacklisted requests
+/// win both passes, and a blacklisted core's open row loses its
+/// row-hit-first protection against non-blacklisted conflicts (the O(1)
+/// stand-in for full BLISS priority inversion, using the bank's
+/// activation owner).
+pub struct Bliss {
+    blacklist: HashSet<u32>,
+    last_core: Option<u32>,
+    streak: u32,
+    next_clear: u64,
+}
+
+impl Bliss {
+    pub fn new() -> Self {
+        Self {
+            blacklist: HashSet::new(),
+            last_core: None,
+            streak: 0,
+            next_clear: BLISS_CLEAR_INTERVAL,
+        }
+    }
+
+    /// Catch up to the clearing grid. Called at every pick so the state
+    /// at any decision cycle is a function of (issue history, cycle)
+    /// alone — identical between the strict and event loops even though
+    /// they visit different cycles.
+    fn maybe_clear(&mut self, now: u64) {
+        while now >= self.next_clear {
+            self.blacklist.clear();
+            self.next_clear += BLISS_CLEAR_INTERVAL;
+        }
+    }
+
+    #[inline]
+    fn listed(&self, core: u32) -> bool {
+        self.blacklist.contains(&core)
+    }
+
+    /// Is `req` an eligible pass-2 action, and which one?
+    fn act_pre_of(&self, ctx: &SchedCtx, req: &Request) -> Option<CommandKind> {
+        let bank = ctx.dev.bank(&req.loc);
+        if bank.next_autopre_at().is_some() {
+            return None;
+        }
+        match bank.open_row() {
+            None if ctx.dev.can_issue(CommandKind::Activate, &req.loc, ctx.now) => {
+                Some(CommandKind::Activate)
+            }
+            Some(open) if open != req.loc.row => {
+                let age = ctx.now.saturating_sub(req.arrived);
+                let starving = age >= STARVE_CAP_CYCLES;
+                // A blacklisted owner forfeits row-hit-first protection
+                // against a non-blacklisted conflicting request.
+                let owner_forfeits =
+                    self.listed(bank.open_owner) && !self.listed(req.core);
+                if age >= CONFLICT_AGE_CYCLES
+                    && (starving
+                        || owner_forfeits
+                        || !ctx.engine.open_row_has_hit(req.loc.rank, req.loc.bank))
+                    && ctx.dev.can_issue(CommandKind::Precharge, &req.loc, ctx.now)
+                {
+                    Some(CommandKind::Precharge)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+impl Default for Bliss {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SchedPolicy for Bliss {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Bliss
+    }
+
+    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<usize> {
+        self.maybe_clear(ctx.now);
+        let mut fallback = None;
+        for (i, req) in queue.iter().enumerate() {
+            if ctx.ref_drain[req.loc.rank as usize] {
+                continue;
+            }
+            if ctx.dev.bank(&req.loc).open_row() != Some(req.loc.row) {
+                continue;
+            }
+            if ctx.dev.can_issue(column_kind(req), &req.loc, ctx.now) {
+                if !self.listed(req.core) {
+                    return Some(i);
+                }
+                if fallback.is_none() {
+                    fallback = Some(i);
+                }
+            }
+        }
+        fallback
+    }
+
+    fn pick_act_pre(
+        &mut self,
+        ctx: &SchedCtx,
+        queue: &RequestQueue,
+    ) -> Option<(usize, CommandKind)> {
+        self.maybe_clear(ctx.now);
+        let mut fallback = None;
+        for (i, req) in queue.iter().enumerate() {
+            if ctx.ref_drain[req.loc.rank as usize] {
+                continue;
+            }
+            if let Some(kind) = self.act_pre_of(ctx, req) {
+                if !self.listed(req.core) {
+                    return Some((i, kind));
+                }
+                if fallback.is_none() {
+                    fallback = Some((i, kind));
+                }
+            }
+        }
+        fallback
+    }
+
+    fn next_ready_at(&self, ctx: &SchedCtx, rq: &RequestQueue, wq: &RequestQueue) -> u64 {
+        // The blacklist reorders preferences among *ready* requests; it
+        // never delays the first legal issue past the FR-FCFS bound (the
+        // owner-forfeits rule only widens eligibility), so the FR-FCFS
+        // scan is a sound lower bound here too.
+        all_requests_ready_at(ctx, rq, wq, CONFLICT_AGE_CYCLES)
+    }
+
+    fn on_column_issued(&mut self, now: u64, core: u32) {
+        // LLC writebacks carry the pseudo-core u32::MAX; they are not an
+        // application, so they neither accrue a streak, get blacklisted,
+        // nor break a real core's streak.
+        if core == u32::MAX {
+            return;
+        }
+        self.maybe_clear(now);
+        if self.last_core == Some(core) {
+            self.streak += 1;
+            if self.streak >= BLISS_STREAK_CAP {
+                self.blacklist.insert(core);
+            }
+        } else {
+            self.last_core = Some(core);
+            self.streak = 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_kind_labels_are_distinct() {
+        let labels: HashSet<&str> = SchedulerKind::all().iter().map(|k| k.label()).collect();
+        assert_eq!(labels.len(), 3);
+    }
+
+    #[test]
+    fn build_policy_round_trips_kind() {
+        for kind in SchedulerKind::all() {
+            assert_eq!(build_policy(kind).kind(), kind);
+        }
+    }
+
+    #[test]
+    fn bliss_blacklists_after_streak_and_clears_on_grid() {
+        let mut b = Bliss::new();
+        for _ in 0..BLISS_STREAK_CAP {
+            b.on_column_issued(10, 3);
+        }
+        assert!(b.listed(3));
+        b.on_column_issued(11, 5);
+        assert!(b.listed(3), "other cores do not clear the list");
+        b.maybe_clear(BLISS_CLEAR_INTERVAL);
+        assert!(!b.listed(3), "grid point clears the blacklist");
+        assert_eq!(b.next_clear, 2 * BLISS_CLEAR_INTERVAL);
+    }
+
+    #[test]
+    fn bliss_clear_grid_is_catch_up_not_restart() {
+        let mut b = Bliss::new();
+        // Jump far past several grid points in one step (the event loop
+        // does this); next_clear must land on the grid, not at now + I.
+        b.maybe_clear(3 * BLISS_CLEAR_INTERVAL + 17);
+        assert_eq!(b.next_clear, 4 * BLISS_CLEAR_INTERVAL);
+    }
+
+    #[test]
+    fn bliss_streak_resets_on_core_change() {
+        let mut b = Bliss::new();
+        b.on_column_issued(0, 1);
+        b.on_column_issued(1, 1);
+        b.on_column_issued(2, 2);
+        b.on_column_issued(3, 1);
+        assert!(!b.listed(1));
+        assert!(!b.listed(2));
+    }
+}

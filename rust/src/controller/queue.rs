@@ -62,24 +62,16 @@ impl RequestQueue {
         self.items[idx]
     }
 
-    /// Any queued request that hits `row` open in the same bank?
-    pub fn has_row_hit(&self, loc: &Loc, row: u32) -> bool {
-        self.items
-            .iter()
-            .any(|r| r.loc.rank == loc.rank && r.loc.bank == loc.bank && r.loc.row == row)
-    }
-
-    /// Any queued request (other than index `skip`) targeting the same
-    /// bank and row? Used by the closed-row policy to pick RDA vs RD.
-    pub fn another_hit_exists(&self, skip: usize, loc: &Loc) -> bool {
-        self.items.iter().enumerate().any(|(i, r)| {
-            i != skip
-                && r.loc.rank == loc.rank
-                && r.loc.bank == loc.bank
-                && r.loc.row == loc.row
-        })
+    /// Is a request with this id still queued? (Classification-map sweep
+    /// at `finalize`.)
+    pub fn contains_id(&self, id: u64) -> bool {
+        self.items.iter().any(|r| r.id == id)
     }
 }
+
+// Row-hit scans over the queue (`has_row_hit` / `another_hit_exists`)
+// used to live here; the BankEngine's incremental per-bank index
+// (`controller::bank_engine`) replaced every caller.
 
 #[cfg(test)]
 mod tests {
@@ -105,26 +97,13 @@ mod tests {
     }
 
     #[test]
-    fn row_hit_detection() {
+    fn contains_id_tracks_membership() {
         let mut q = RequestQueue::new(8);
-        q.push(req(0, 1, 10));
-        q.push(req(1, 1, 11));
-        let probe = Loc { channel: 0, rank: 0, bank: 1, row: 0, col: 0 };
-        assert!(q.has_row_hit(&probe, 10));
-        assert!(q.has_row_hit(&probe, 11));
-        assert!(!q.has_row_hit(&probe, 12));
-    }
-
-    #[test]
-    fn another_hit_skips_self() {
-        let mut q = RequestQueue::new(8);
-        q.push(req(0, 1, 10));
-        q.push(req(1, 1, 10));
-        let loc = Loc { channel: 0, rank: 0, bank: 1, row: 10, col: 0 };
-        assert!(q.another_hit_exists(0, &loc));
-        let mut q2 = RequestQueue::new(8);
-        q2.push(req(0, 1, 10));
-        assert!(!q2.another_hit_exists(0, &loc));
+        q.push(req(7, 1, 10));
+        assert!(q.contains_id(7));
+        assert!(!q.contains_id(8));
+        q.remove(0);
+        assert!(!q.contains_id(7));
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! CommandSink — the mechanism hook layer of the controller.
+//!
+//! Every observable command event flows through here exactly once: ACT
+//! (mechanism lookup → timing grant, RLTL/reuse tracking), PRE (mechanism
+//! insert, RLTL close, open-time accounting), REF, and column issue
+//! (row-buffer classification, latency accounting). Before the layering,
+//! these callbacks were threaded separately through `issue_precharge`,
+//! `resolve_autopre`, and `schedule` — three call sites that had to agree
+//! on ordering; now the controller calls one sink method per event and
+//! the ChargeCache/NUAT hook semantics (Fig. 2 of the paper) live in a
+//! single file.
+
+use crate::analysis::{ReuseTracker, RltlTracker};
+use crate::config::SystemConfig;
+use crate::latency::{build_mechanism, Mechanism, MechanismKind, RowKey, TimingGrant};
+
+/// How a request's first DRAM command classified it (row-buffer outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqClass {
+    Hit,
+    Miss,
+    Conflict,
+}
+
+/// Controller statistics (reset after warmup).
+#[derive(Debug, Clone, Default)]
+pub struct McStats {
+    pub acts: u64,
+    pub acts_reduced: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub precharges: u64,
+    pub refreshes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    pub read_latency_sum: u64,
+    pub read_latency_cnt: u64,
+    /// Aggregate bank-open time (for active-standby energy).
+    pub bank_open_cycles: u64,
+    /// Forwarded from the write queue (no DRAM access).
+    pub wq_forwards: u64,
+    /// Enqueue rejections (queue full) — backpressure signal.
+    pub rejects: u64,
+}
+
+/// Single funnel for ACT/PRE/REF/column events: owns the latency
+/// mechanism, the RLTL/reuse trackers, and the stats they feed.
+pub struct CommandSink {
+    mech: Box<dyn Mechanism>,
+    pub rltl: RltlTracker,
+    pub reuse: ReuseTracker,
+    pub stats: McStats,
+}
+
+impl CommandSink {
+    pub fn new(cfg: &SystemConfig, kind: MechanismKind) -> Self {
+        Self {
+            mech: build_mechanism(kind, cfg),
+            rltl: RltlTracker::new(cfg.timing.tck_ns),
+            reuse: ReuseTracker::new(),
+            stats: McStats::default(),
+        }
+    }
+
+    /// Replace the mechanism (coordinator sweeps reuse a controller).
+    pub fn set_mechanism(&mut self, mech: Box<dyn Mechanism>) {
+        self.mech = mech;
+    }
+
+    /// An ACT is being issued for `core`'s request: mechanism lookup
+    /// (ChargeCache/NUAT timing grant), RLTL + reuse tracking, stats.
+    pub fn on_activate(&mut self, now: u64, core: u32, key: RowKey) -> TimingGrant {
+        let grant = self.mech.on_activate(now, core, key);
+        self.rltl.on_activate(now, key);
+        self.reuse.on_activate(key);
+        self.stats.acts += 1;
+        if grant.reduced {
+            self.stats.acts_reduced += 1;
+        }
+        grant
+    }
+
+    /// A row closed (explicit PRE, auto-precharge, or refresh drain):
+    /// mechanism insert, RLTL close, open-time accounting.
+    pub fn on_precharge(&mut self, now: u64, owner: u32, key: RowKey, act_cycle: u64) {
+        self.mech.on_precharge(now, owner, key);
+        self.rltl.on_precharge(now, key);
+        self.stats.precharges += 1;
+        self.stats.bank_open_cycles += now.saturating_sub(act_cycle);
+    }
+
+    /// An all-bank REF completed on `rank`.
+    pub fn on_refresh(&mut self, now: u64, rank: u32, refresh_count: u64) {
+        self.mech.on_refresh(now, rank, refresh_count);
+        self.stats.refreshes += 1;
+    }
+
+    /// A column command issued: row-buffer classification plus read
+    /// latency (`Some(ready - arrived)` for reads, `None` for writes).
+    pub fn on_column(&mut self, class: ReqClass, is_write: bool, read_latency: Option<u64>) {
+        match class {
+            ReqClass::Hit => self.stats.row_hits += 1,
+            ReqClass::Miss => self.stats.row_misses += 1,
+            ReqClass::Conflict => self.stats.row_conflicts += 1,
+        }
+        if is_write {
+            self.stats.writes += 1;
+        } else {
+            self.stats.reads += 1;
+            let lat = read_latency.expect("reads carry a latency sample");
+            self.stats.read_latency_sum += lat;
+            self.stats.read_latency_cnt += 1;
+        }
+    }
+
+    /// Reset statistics (end of warmup). Mechanism state is retained —
+    /// that is the point of warmup.
+    pub fn reset_stats(&mut self) {
+        self.stats = McStats::default();
+        self.rltl.reset_counts();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activate_precharge_update_stats_and_trackers() {
+        let cfg = SystemConfig::default();
+        let mut sink = CommandSink::new(&cfg, MechanismKind::Baseline);
+        let key = RowKey::new(0, 0, 7);
+        let g = sink.on_activate(10, 0, key);
+        assert!(!g.reduced);
+        assert_eq!(sink.stats.acts, 1);
+        assert_eq!(sink.rltl.activations, 1);
+        sink.on_precharge(50, 0, key, 10);
+        assert_eq!(sink.stats.precharges, 1);
+        assert_eq!(sink.stats.bank_open_cycles, 40);
+    }
+
+    #[test]
+    fn chargecache_grant_counts_reduced_acts() {
+        let cfg = SystemConfig::default();
+        let mut sink = CommandSink::new(&cfg, MechanismKind::ChargeCache);
+        let key = RowKey::new(0, 1, 3);
+        sink.on_activate(0, 0, key);
+        sink.on_precharge(40, 0, key, 0);
+        let g = sink.on_activate(80, 0, key);
+        assert!(g.reduced);
+        assert_eq!(sink.stats.acts, 2);
+        assert_eq!(sink.stats.acts_reduced, 1);
+    }
+
+    #[test]
+    fn column_events_classify_and_accumulate_latency() {
+        let cfg = SystemConfig::default();
+        let mut sink = CommandSink::new(&cfg, MechanismKind::Baseline);
+        sink.on_column(ReqClass::Hit, false, Some(26));
+        sink.on_column(ReqClass::Conflict, true, None);
+        assert_eq!(sink.stats.row_hits, 1);
+        assert_eq!(sink.stats.row_conflicts, 1);
+        assert_eq!(sink.stats.reads, 1);
+        assert_eq!(sink.stats.writes, 1);
+        assert_eq!(sink.stats.read_latency_sum, 26);
+    }
+
+    #[test]
+    fn reset_clears_stats_but_keeps_mechanism_state() {
+        let cfg = SystemConfig::default();
+        let mut sink = CommandSink::new(&cfg, MechanismKind::ChargeCache);
+        let key = RowKey::new(0, 0, 9);
+        sink.on_activate(0, 0, key);
+        sink.on_precharge(40, 0, key, 0);
+        sink.reset_stats();
+        assert_eq!(sink.stats.acts, 0);
+        // The HCRAC entry inserted before the reset still grants.
+        assert!(sink.on_activate(80, 0, key).reduced);
+    }
+}

@@ -70,6 +70,23 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse a scheduler policy name (`--scheduler`).
+    pub fn scheduler(
+        &self,
+        default: crate::controller::SchedulerKind,
+    ) -> Result<crate::controller::SchedulerKind> {
+        use crate::controller::SchedulerKind as S;
+        match self.get("scheduler") {
+            None => Ok(default),
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "fr-fcfs" | "frfcfs" => Ok(S::FrFcfs),
+                "fcfs" => Ok(S::Fcfs),
+                "bliss" => Ok(S::Bliss),
+                other => bail!("unknown scheduler {other:?} (fr-fcfs | fcfs | bliss)"),
+            },
+        }
+    }
+
     /// Parse a mechanism name.
     pub fn mechanism(&self, default: crate::latency::MechanismKind) -> Result<crate::latency::MechanismKind> {
         use crate::latency::MechanismKind as M;
@@ -125,6 +142,24 @@ mod tests {
             MechanismKind::LlDram
         );
         assert!(args("x --mechanism bogus").mechanism(MechanismKind::Baseline).is_err());
+    }
+
+    #[test]
+    fn scheduler_aliases() {
+        use crate::controller::SchedulerKind;
+        assert_eq!(
+            args("x --scheduler fcfs").scheduler(SchedulerKind::FrFcfs).unwrap(),
+            SchedulerKind::Fcfs
+        );
+        assert_eq!(
+            args("x --scheduler BLISS").scheduler(SchedulerKind::FrFcfs).unwrap(),
+            SchedulerKind::Bliss
+        );
+        assert_eq!(
+            args("x").scheduler(SchedulerKind::FrFcfs).unwrap(),
+            SchedulerKind::FrFcfs
+        );
+        assert!(args("x --scheduler lifo").scheduler(SchedulerKind::FrFcfs).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::collections::HashMap;
 
 use crate::analysis::rltl::RLTL_INTERVALS_MS;
 use crate::config::SystemConfig;
+use crate::controller::SchedulerKind;
 use crate::latency::MechanismKind;
 use crate::sim::engine::LoopMode;
 use crate::sim::stats::weighted_speedup;
@@ -26,6 +27,9 @@ pub struct ExperimentScale {
     /// Loop kernel for every simulation in the suite: the event-driven
     /// engine by default; `--strict-tick` selects the per-cycle oracle.
     pub loop_mode: LoopMode,
+    /// Memory-scheduler policy for every controller in the suite
+    /// (`--scheduler`).
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for ExperimentScale {
@@ -35,6 +39,7 @@ impl Default for ExperimentScale {
             warmup_cycles: 250_000,
             mixes: 20,
             loop_mode: LoopMode::EventDriven,
+            scheduler: SchedulerKind::FrFcfs,
         }
     }
 }
@@ -49,6 +54,7 @@ impl ExperimentScale {
         cfg.insts_per_core = self.insts_per_core;
         cfg.warmup_cpu_cycles = self.warmup_cycles;
         cfg.loop_mode = self.loop_mode;
+        cfg.mc.scheduler = self.scheduler;
         cfg
     }
 
@@ -57,6 +63,7 @@ impl ExperimentScale {
         cfg.insts_per_core = self.insts_per_core;
         cfg.warmup_cpu_cycles = self.warmup_cycles;
         cfg.loop_mode = self.loop_mode;
+        cfg.mc.scheduler = self.scheduler;
         // Multiprogrammed runs measure over a fixed time window (see
         // SystemConfig::measure_cycles): ~10 cycles per target instruction
         // gives every core a deep window at typical shared-system IPCs.

@@ -53,7 +53,9 @@ impl Default for Bank {
 
 impl Bank {
     /// Currently open row, if any (auto-precharge must be resolved first
-    /// by [`Bank::tick_autopre`]).
+    /// by [`Bank::tick_autopre`]). Hot query: the controller's BankEngine
+    /// and every scheduler pass branch on it.
+    #[inline]
     pub fn open_row(&self) -> Option<u32> {
         match self.state {
             BankState::Opened { row } => Some(row),

@@ -93,6 +93,17 @@ impl Rank {
     pub fn refresh_due(&self, now: u64) -> bool {
         now >= self.next_refresh_at
     }
+
+    /// Bank index of the open bank with the oldest activation, if any
+    /// (the refresh drain closes banks in this order).
+    pub fn oldest_open_bank(&self) -> Option<usize> {
+        self.banks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.open_row().is_some())
+            .min_by_key(|(bi, b)| (b.act_cycle, *bi))
+            .map(|(bi, _)| bi)
+    }
 }
 
 /// Channel: ranks + shared command/data-bus occupancy.

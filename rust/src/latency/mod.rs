@@ -22,13 +22,31 @@ pub use chargecache::ChargeCache;
 pub use nuat::Nuat;
 pub use timing_table::TimingTable;
 
-/// Row identity within one channel (rank, bank, row packed into 64 bits).
+/// Row identity (channel, rank, bank, row packed into 64 bits).
+///
+/// Mechanism and RLTL instances are per-channel, so keys were historically
+/// only rank/bank/row-qualified. The controller now stamps its channel id
+/// into every key it builds ([`RowKey::new_in_channel`]), so keys from
+/// different channels can never silently collide if they ever meet in a
+/// shared structure (merged RLTL histograms, a future cross-channel
+/// HCRAC).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct RowKey(pub u64);
 
 impl RowKey {
+    /// Channel-0 key (single-channel paths and tests).
     pub fn new(rank: u32, bank: u32, row: u32) -> Self {
-        Self(((rank as u64) << 48) | ((bank as u64) << 32) | row as u64)
+        Self::new_in_channel(0, rank, bank, row)
+    }
+    /// Fully-qualified key: `channel:8 | rank:8 | bank:16 | row:32`.
+    pub fn new_in_channel(channel: u32, rank: u32, bank: u32, row: u32) -> Self {
+        debug_assert!(channel < 256 && rank < 256, "key fields overflow packing");
+        Self(
+            ((channel as u64) << 56)
+                | ((rank as u64) << 48)
+                | ((bank as u64) << 32)
+                | row as u64,
+        )
     }
     pub fn row(&self) -> u32 {
         (self.0 & 0xffff_ffff) as u32
@@ -37,7 +55,10 @@ impl RowKey {
         ((self.0 >> 32) & 0xffff) as u32
     }
     pub fn rank(&self) -> u32 {
-        (self.0 >> 48) as u32
+        ((self.0 >> 48) & 0xff) as u32
+    }
+    pub fn channel(&self) -> u32 {
+        (self.0 >> 56) as u32
     }
 }
 
@@ -192,9 +213,23 @@ mod tests {
     #[test]
     fn rowkey_packs_fields() {
         let k = RowKey::new(1, 7, 65535);
+        assert_eq!(k.channel(), 0);
         assert_eq!(k.rank(), 1);
         assert_eq!(k.bank(), 7);
         assert_eq!(k.row(), 65535);
+    }
+
+    #[test]
+    fn rowkey_channels_never_collide() {
+        let a = RowKey::new_in_channel(0, 0, 3, 42);
+        let b = RowKey::new_in_channel(1, 0, 3, 42);
+        assert_ne!(a, b);
+        assert_eq!(b.channel(), 1);
+        assert_eq!(b.rank(), 0);
+        assert_eq!(b.bank(), 3);
+        assert_eq!(b.row(), 42);
+        // Channel 0 keys keep the legacy packing.
+        assert_eq!(a, RowKey::new(0, 3, 42));
     }
 
     #[test]

@@ -40,6 +40,7 @@ fn scale_from(args: &Args) -> Result<ExperimentScale> {
     s.insts_per_core = args.get_u64("insts", s.insts_per_core)?;
     s.warmup_cycles = args.get_u64("warmup", s.warmup_cycles)?;
     s.mixes = args.get_usize("mixes", s.mixes)?;
+    s.scheduler = args.scheduler(s.scheduler)?;
     if args.flag("strict-tick") {
         s.loop_mode = LoopMode::StrictTick;
     }
@@ -70,7 +71,8 @@ fn main() -> Result<()> {
 const HELP: &str = "chargecache — ChargeCache (HPCA'16) reproduction
 commands: fig1 fig3 fig4 fig5 area sweep-capacity sweep-duration
           sweep-temperature simulate gen-traces timing-table
-common options: --insts N --warmup N --mixes M --quick --strict-tick";
+common options: --insts N --warmup N --mixes M --quick --strict-tick
+                --scheduler fr-fcfs|fcfs|bliss";
 
 fn cmd_fig1(args: &Args) -> Result<()> {
     let scale = scale_from(args)?;
@@ -382,6 +384,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.warmup_cpu_cycles = args.get_u64("warmup", 250_000)?;
     cfg.chargecache.duration_ms = args.get_f64("duration", 1.0)?;
     cfg.chargecache.entries_per_core = args.get_usize("entries", 128)?;
+    cfg.mc.scheduler = args.scheduler(cfg.mc.scheduler)?;
     if args.flag("strict-tick") {
         cfg.loop_mode = LoopMode::StrictTick;
     }
@@ -400,6 +403,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     println!("workload  : {}", result.workload);
     println!("mechanism : {}", result.mechanism);
+    println!("scheduler : {}", cfg.mc.scheduler.label());
     println!("loop mode : {:?}", cfg.loop_mode);
     println!("cycles    : {}", result.cpu_cycles);
     for (i, ipc) in result.core_ipc.iter().enumerate() {

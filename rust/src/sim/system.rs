@@ -147,7 +147,7 @@ impl System {
             })
             .collect();
         let mcs = (0..cfg.dram.channels)
-            .map(|_| MemController::new(cfg, kind))
+            .map(|ch| MemController::new(cfg, kind, ch as u32))
             .collect();
         Self {
             cfg: cfg.clone(),
@@ -243,10 +243,11 @@ impl System {
             })
             .collect();
 
-        // Merge RLTL across channels.
-        let mut rltl = self.hier.mcs[0].rltl.clone();
+        // Merge RLTL across channels (keys are channel-qualified, so the
+        // merged histograms never conflate same-coordinate rows).
+        let mut rltl = self.hier.mcs[0].rltl().clone();
         for mc in &self.hier.mcs[1..] {
-            rltl.merge(&mc.rltl);
+            rltl.merge(mc.rltl());
         }
 
         // DRAM energy over the measured region.
@@ -254,7 +255,7 @@ impl System {
         let mut energy = EnergyBreakdown::default();
         let bus_cycles = bus_energy_end.saturating_sub(bus_start).max(1);
         for mc in &self.hier.mcs {
-            energy.add(&emodel.channel_energy(&mc.stats, &mc.rank_active_cycles, bus_cycles));
+            energy.add(&emodel.channel_energy(mc.stats(), &mc.rank_active_cycles, bus_cycles));
         }
 
         let total_insts = self
@@ -270,7 +271,7 @@ impl System {
             mechanism: self.kind.label(),
             core_ipc,
             cpu_cycles: end - measure_start,
-            mc: self.hier.mcs.iter().map(|m| m.stats.clone()).collect(),
+            mc: self.hier.mcs.iter().map(|m| m.stats().clone()).collect(),
             rltl: rltl.fractions(),
             energy,
             total_insts,

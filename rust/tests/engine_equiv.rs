@@ -5,6 +5,7 @@
 //! across worker counts.
 
 use chargecache::config::{RowPolicy, SystemConfig};
+use chargecache::controller::SchedulerKind;
 use chargecache::coordinator::runner::parallel_map_threads;
 use chargecache::latency::MechanismKind;
 use chargecache::sim::engine::LoopMode;
@@ -99,6 +100,50 @@ fn fixed_time_window_is_bit_identical() {
         System::new_mix(&cfg, MechanismKind::ChargeCacheNuat, 0).run()
     };
     assert_identical(&run(LoopMode::StrictTick), &run(LoopMode::EventDriven), "fixed-time");
+}
+
+#[test]
+fn fcfs_and_bliss_single_core_are_bit_identical() {
+    // The new scheduler policies must satisfy the same wake contract as
+    // FR-FCFS: strict-tick and event-driven runs may not drift by a bit.
+    for sched in [SchedulerKind::Fcfs, SchedulerKind::Bliss] {
+        for kind in [MechanismKind::Baseline, MechanismKind::ChargeCache] {
+            let run = |mode: LoopMode| -> SimResult {
+                let mut cfg = SystemConfig::single_core();
+                cfg.mc.scheduler = sched;
+                cfg.insts_per_core = 20_000;
+                cfg.warmup_cpu_cycles = 8_000;
+                cfg.loop_mode = mode;
+                let p = Profile::by_name("mcf").unwrap();
+                System::new(&cfg, kind, &[p]).run()
+            };
+            assert_identical(
+                &run(LoopMode::StrictTick),
+                &run(LoopMode::EventDriven),
+                &format!("mcf/{}/{}", sched.label(), kind.label()),
+            );
+        }
+    }
+}
+
+#[test]
+fn fcfs_and_bliss_four_core_mix_are_bit_identical() {
+    for sched in [SchedulerKind::Fcfs, SchedulerKind::Bliss] {
+        let run = |mode: LoopMode| -> SimResult {
+            let mut cfg = SystemConfig::eight_core();
+            cfg.mc.scheduler = sched;
+            cfg.cpu.cores = 4;
+            cfg.insts_per_core = 8_000;
+            cfg.warmup_cpu_cycles = 4_000;
+            cfg.loop_mode = mode;
+            System::new_mix(&cfg, MechanismKind::ChargeCache, 1).run()
+        };
+        assert_identical(
+            &run(LoopMode::StrictTick),
+            &run(LoopMode::EventDriven),
+            sched.label(),
+        );
+    }
 }
 
 #[test]

@@ -5,7 +5,7 @@
 //! seeds and shrink-free failures print the offending seed for replay.
 
 use chargecache::config::{RowPolicy, SystemConfig};
-use chargecache::controller::{MemController, Request};
+use chargecache::controller::{MemController, Request, SchedulerKind};
 use chargecache::dram::command::Loc;
 use chargecache::latency::chargecache::ChargeCache;
 use chargecache::latency::{Mechanism, MechanismKind, RowKey};
@@ -28,6 +28,7 @@ fn prop_no_timing_violation_under_random_traffic() {
     property(25, |rng, seed| {
         let mut cfg = SystemConfig::default();
         cfg.mc.row_policy = if rng.below(2) == 0 { RowPolicy::Open } else { RowPolicy::Closed };
+        cfg.mc.scheduler = SchedulerKind::all()[rng.below(3) as usize];
         let kinds = [
             MechanismKind::Baseline,
             MechanismKind::ChargeCache,
@@ -36,7 +37,7 @@ fn prop_no_timing_violation_under_random_traffic() {
             MechanismKind::LlDram,
         ];
         let kind = kinds[rng.below(5) as usize];
-        let mut mc = MemController::new(&cfg, kind);
+        let mut mc = MemController::new(&cfg, kind, 0);
         let mut done = Vec::new();
         let mut id = 0u64;
         let mut issued = 0u64;
@@ -135,13 +136,15 @@ fn prop_hcrac_hits_require_prior_precharge() {
     });
 }
 
-/// FR-FCFS must not starve row-conflict requests: every enqueued read
-/// eventually completes even under a hammering row-hit stream.
+/// No scheduler may starve row-conflict requests: every enqueued read
+/// eventually completes even under a hammering row-hit stream (FR-FCFS
+/// via the starvation cap, FCFS by construction, BLISS via blacklisting).
 #[test]
 fn prop_no_starvation_of_conflicting_request() {
-    property(10, |rng, _seed| {
-        let cfg = SystemConfig::default();
-        let mut mc = MemController::new(&cfg, MechanismKind::Baseline);
+    property(12, |rng, _seed| {
+        let mut cfg = SystemConfig::default();
+        cfg.mc.scheduler = SchedulerKind::all()[rng.below(3) as usize];
+        let mut mc = MemController::new(&cfg, MechanismKind::Baseline, 0);
         let mut done = Vec::new();
         // Victim read to row 99 in bank 0.
         mc.enqueue(
@@ -194,7 +197,7 @@ fn prop_no_starvation_of_conflicting_request() {
 fn prop_read_conservation() {
     property(15, |rng, seed| {
         let cfg = SystemConfig::default();
-        let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache);
+        let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache, 0);
         let mut done = Vec::new();
         let mut sent = std::collections::HashSet::new();
         let mut got = std::collections::HashSet::new();
@@ -241,57 +244,62 @@ fn prop_read_conservation() {
     });
 }
 
-/// The event kernel's wake contract, tested directly on the controller:
-/// whenever `next_event_at(now)` says the next event is strictly in the
-/// future, ticking at `now` must be a no-op (no command issued, no
-/// completion delivered, no stat moved). A violation here is exactly a
-/// "late wake" bug — the failure mode that would silently break the
-/// event-driven/strict-tick equivalence.
+/// The event kernel's wake contract, tested directly on the controller
+/// for **every scheduler policy**: whenever `next_event_at(now)` says the
+/// next event is strictly in the future, ticking at `now` must be a no-op
+/// (no command issued, no completion delivered, no stat moved). A
+/// violation here is exactly a "late wake" bug — a policy reporting a
+/// wake bound later than its true next issue cycle, the failure mode that
+/// would silently break the event-driven/strict-tick equivalence.
 #[test]
-fn prop_controller_wake_bound_is_never_late() {
-    property(15, |rng, seed| {
-        let mut cfg = SystemConfig::default();
-        cfg.mc.row_policy = if rng.below(2) == 0 { RowPolicy::Open } else { RowPolicy::Closed };
-        let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache);
-        let mut done = Vec::new();
-        let mut id = 0u64;
-        for now in 0..30_000u64 {
-            if rng.below(3) == 0 {
-                let req = Request {
-                    id,
-                    core: 0,
-                    loc: Loc {
-                        channel: 0,
-                        rank: 0,
-                        bank: rng.below(8) as u32,
-                        row: rng.below(32) as u32,
-                        col: rng.below(128) as u32,
-                    },
-                    is_write: rng.below(4) == 0,
-                    arrived: now,
-                };
-                if mc.enqueue(req, now) {
-                    id += 1;
+fn prop_wake_bound_is_never_late_for_any_policy() {
+    for sched in SchedulerKind::all() {
+        property(8, |rng, seed| {
+            let mut cfg = SystemConfig::default();
+            cfg.mc.row_policy =
+                if rng.below(2) == 0 { RowPolicy::Open } else { RowPolicy::Closed };
+            cfg.mc.scheduler = sched;
+            let mut mc = MemController::new(&cfg, MechanismKind::ChargeCache, 0);
+            let mut done = Vec::new();
+            let mut id = 0u64;
+            for now in 0..30_000u64 {
+                if rng.below(3) == 0 {
+                    let req = Request {
+                        id,
+                        core: rng.below(4) as u32,
+                        loc: Loc {
+                            channel: 0,
+                            rank: 0,
+                            bank: rng.below(8) as u32,
+                            row: rng.below(32) as u32,
+                            col: rng.below(128) as u32,
+                        },
+                        is_write: rng.below(4) == 0,
+                        arrived: now,
+                    };
+                    if mc.enqueue(req, now) {
+                        id += 1;
+                    }
+                }
+                let wake = mc.next_event_at(now);
+                let quiet = wake > now;
+                let before = format!("{:?}", mc.stats());
+                done.clear();
+                mc.tick(now, &mut done);
+                if quiet {
+                    assert!(
+                        done.is_empty(),
+                        "[{sched:?}] completion in quiet cycle {now} (seed {seed})"
+                    );
+                    assert_eq!(
+                        before,
+                        format!("{:?}", mc.stats()),
+                        "[{sched:?}] stats moved at {now}, wake {wake} (seed {seed})"
+                    );
                 }
             }
-            let wake = mc.next_event_at(now);
-            let quiet = wake > now;
-            let before = format!("{:?}", mc.stats);
-            done.clear();
-            mc.tick(now, &mut done);
-            if quiet {
-                assert!(
-                    done.is_empty(),
-                    "completion delivered during declared-quiet cycle {now} (seed {seed})"
-                );
-                assert_eq!(
-                    before,
-                    format!("{:?}", mc.stats),
-                    "stats moved during declared-quiet cycle {now}, wake was {wake} (seed {seed})"
-                );
-            }
-        }
-    });
+        });
+    }
 }
 
 /// The mechanism ordering invariant at system level, across random small
