@@ -3,6 +3,17 @@
 //! Measures the simulator's inner loops in isolation (bank FSM, HCRAC,
 //! LLC, scheduler tick, trace generation) plus the end-to-end simulated
 //! cycles/second figure that bounds every experiment's wall time.
+//!
+//! Two modes:
+//!
+//! * default — the full suite; rewrites `BENCH_engine.json` at the repo
+//!   root with the strict-vs-event figures, the event-mode 4-core-mix
+//!   rate, and the per-policy controller-tick rates.
+//! * `--check` (CI regression gate) — runs only the event-mode
+//!   4-core-mix figure and compares it against the committed
+//!   `BENCH_engine.json`; exits nonzero on a >20% regression. A missing
+//!   or provisional baseline (`cycles_per_sec` absent or 0) passes with
+//!   a note, so the gate bootstraps cleanly.
 
 #[path = "harness.rs"]
 mod harness;
@@ -17,7 +28,13 @@ use chargecache::sim::engine::LoopMode;
 use chargecache::sim::{SimResult, System};
 use chargecache::trace::{Profile, SynthTrace, TraceSource, XorShift64};
 
+const BENCH_JSON_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+
 fn main() {
+    if std::env::args().skip(1).any(|a| a == "--check") {
+        check_against_committed();
+        return;
+    }
     let cfg = SystemConfig::default();
 
     // HCRAC ops.
@@ -156,8 +173,82 @@ fn main() {
     engine_vs_strict_tick(&policy_tick_cps);
 }
 
+/// The event-mode 4-core mix (the workload the wake index and the
+/// per-bank request indexing target: two channels, closed-row policy,
+/// deep queues). Returns `(cycles_per_sec, sim_cycles, wall_s)`.
+fn bench_mix4_event(reps: u32) -> (f64, u64, f64) {
+    let mix_insts = 25_000u64;
+    let mut mix_cfg = SystemConfig::eight_core();
+    mix_cfg.cpu.cores = 4;
+    mix_cfg.insts_per_core = mix_insts;
+    mix_cfg.warmup_cpu_cycles = 10_000;
+    let mut mix_cycles = 0u64;
+    let r = harness::bench("hotpath/mix4_event_driven", 1, reps, || {
+        let res = System::new_mix(&mix_cfg, MechanismKind::ChargeCache, 0).run();
+        mix_cycles = res.cpu_cycles;
+    });
+    r.report_throughput(mix_cycles as f64, "cpu-cycles");
+    let wall = r.mean.as_secs_f64();
+    (mix_cycles as f64 / wall, mix_cycles, wall)
+}
+
+/// Pull `four_core_mix_event.cycles_per_sec` out of the committed JSON
+/// without a JSON dependency (the bench writes the file, so the shape is
+/// under our control).
+fn extract_mix_rate(json: &str) -> Option<f64> {
+    let obj = json.split("\"four_core_mix_event\"").nth(1)?;
+    let after = obj.split("\"cycles_per_sec\":").nth(1)?;
+    let num: String = after
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
+        .collect();
+    num.parse().ok()
+}
+
+/// `--check`: the CI regression gate on the event-mode 4-core-mix rate.
+///
+/// The committed figure is wall-clock and therefore machine-bound, so
+/// the gate only *hard-fails* when the baseline itself was recorded on a
+/// CI runner (`"recorded_on_ci": true`, stamped by the full bench from
+/// the `CI` env var). A workstation-recorded or provisional baseline
+/// still gets measured and reported, but a slower CI machine comparing
+/// against fast-workstation numbers must not permanently redline the
+/// job.
+fn check_against_committed() {
+    let committed = std::fs::read_to_string(BENCH_JSON_PATH).ok();
+    let baseline = committed.as_deref().and_then(extract_mix_rate);
+    let ci_recorded = committed
+        .as_deref()
+        .map(|s| s.contains("\"recorded_on_ci\": true"))
+        .unwrap_or(false);
+    let (cps, _, _) = bench_mix4_event(2);
+    match baseline {
+        Some(base) if base > 0.0 => {
+            let ratio = cps / base;
+            println!(
+                "bench-check: mix4 event-mode {cps:.0} sim-cycles/s vs committed {base:.0} ({ratio:.2}x)"
+            );
+            if ratio < 0.8 {
+                if ci_recorded {
+                    eprintln!(
+                        "bench-check: REGRESSION — event-mode 4-core-mix rate fell >20% below the CI-recorded baseline"
+                    );
+                    std::process::exit(1);
+                }
+                eprintln!(
+                    "bench-check: >20% below the committed baseline, but the baseline was not CI-recorded (cross-machine wall clock) — not failing; re-record on CI to arm the gate"
+                );
+            }
+        }
+        _ => println!(
+            "bench-check: no committed baseline yet (provisional BENCH_engine.json) — measured {cps:.0} sim-cycles/s; run `cargo bench --bench hotpath` to record one"
+        ),
+    }
+}
+
 /// The event kernel vs the per-cycle loop on the memory-bound `mcf`
-/// profile, plus the event-mode 4-core mix (the per-bank-indexing
+/// profile, plus the event-mode 4-core mix (the wake-index/slab-path
 /// acceptance workload) and the per-policy controller-tick rates. Emits
 /// `BENCH_engine.json` (repo root) so future PRs have a perf trajectory
 /// to track.
@@ -184,30 +275,18 @@ fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)]) {
     let strict_cps = strict.cpu_cycles as f64 / strict_s;
     let event_cps = event.cpu_cycles as f64 / event_s;
     let speedup = event_cps / strict_cps;
-    let identical = strict.cpu_cycles == event.cpu_cycles
-        && strict.acts() == event.acts()
-        && strict.core_ipc == event.core_ipc
-        && strict.total_insts == event.total_insts;
+    // Full-state identity via the derived SimResult equality.
+    let identical = strict == event;
     println!(
         "engine speedup on mcf: {speedup:.2}x ({:.2}M -> {:.2}M sim-cycles/s), stats identical: {identical}",
         strict_cps / 1e6,
         event_cps / 1e6
     );
 
-    // Event-mode 4-core mix: the workload the per-bank request indexing
-    // targets (two channels, closed-row policy, deep queues).
-    let mix_insts = 25_000u64;
-    let mut mix_cfg = SystemConfig::eight_core();
-    mix_cfg.cpu.cores = 4;
-    mix_cfg.insts_per_core = mix_insts;
-    mix_cfg.warmup_cpu_cycles = 10_000;
-    let mut mix_cycles = 0u64;
-    let mix_r = harness::bench("hotpath/mix4_event_driven", 1, 3, || {
-        let res = System::new_mix(&mix_cfg, MechanismKind::ChargeCache, 0).run();
-        mix_cycles = res.cpu_cycles;
-    });
-    mix_r.report_throughput(mix_cycles as f64, "cpu-cycles");
-    let mix_cps = mix_cycles as f64 / mix_r.mean.as_secs_f64();
+    let (mix_cps, mix_cycles, mix_wall) = bench_mix4_event(3);
+    // Provenance marker for the --check gate: wall-clock figures only
+    // gate hard against baselines recorded on CI-class hardware.
+    let on_ci = std::env::var("CI").is_ok();
 
     let policies_json = policy_tick_cps
         .iter()
@@ -222,16 +301,15 @@ fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)]) {
          \"event_driven\": {{ \"wall_s\": {event_s:.6}, \"sim_cpu_cycles\": {}, \
          \"cycles_per_sec\": {event_cps:.0} }},\n  \
          \"speedup\": {speedup:.3},\n  \"stats_identical\": {identical},\n  \
-         \"four_core_mix_event\": {{ \"insts_per_core\": {mix_insts}, \
-         \"wall_s\": {:.6}, \"sim_cpu_cycles\": {mix_cycles}, \
+         \"recorded_on_ci\": {on_ci},\n  \
+         \"four_core_mix_event\": {{ \"insts_per_core\": 25000, \
+         \"wall_s\": {mix_wall:.6}, \"sim_cpu_cycles\": {mix_cycles}, \
          \"cycles_per_sec\": {mix_cps:.0} }},\n  \"policies\": {{\n{policies_json}\n  }}\n}}\n",
         strict.cpu_cycles,
         event.cpu_cycles,
-        mix_r.mean.as_secs_f64()
     );
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
-    match std::fs::write(path, &json) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+    match std::fs::write(BENCH_JSON_PATH, &json) {
+        Ok(()) => println!("wrote {BENCH_JSON_PATH}"),
+        Err(e) => eprintln!("could not write {BENCH_JSON_PATH}: {e}"),
     }
 }

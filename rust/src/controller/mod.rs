@@ -77,6 +77,9 @@ pub struct MemController {
     completions: BinaryHeap<Reverse<(u64, u64, u32)>>,
     /// Request classification (parallel to queue entries by id).
     class_of: std::collections::HashMap<u64, ReqClass>,
+    /// Scratch for ranks whose banks auto-precharged this tick (reused
+    /// across ticks — the hot loop must not allocate).
+    autopre_scratch: Vec<u32>,
     /// Per-rank open-bank count (active-standby energy accounting).
     rank_open: Vec<u32>,
     rank_active_since: Vec<u64>,
@@ -101,6 +104,7 @@ impl MemController {
             ref_drain: vec![false; cfg.dram.ranks],
             completions: BinaryHeap::new(),
             class_of: std::collections::HashMap::new(),
+            autopre_scratch: Vec::with_capacity(cfg.dram.ranks * cfg.dram.banks),
             rank_open: vec![0; cfg.dram.ranks],
             rank_active_since: vec![0; cfg.dram.ranks],
             rank_active_cycles: vec![0; cfg.dram.ranks],
@@ -327,19 +331,24 @@ impl MemController {
     }
 
     fn resolve_autopre(&mut self, now: u64) {
+        // Reused scratch (taken, not allocated): the hot loop stays
+        // allocation-free even on ticks that close banks.
+        let mut closed = std::mem::take(&mut self.autopre_scratch);
+        debug_assert!(closed.is_empty());
         let sink = &mut self.sink;
         let engine = &mut self.engine;
         let channel = self.channel;
-        let mut closed: Vec<u32> = Vec::new();
         self.dev.tick_autopre(now, |rank, bank, row, owner, cycle, act_cycle| {
             let key = RowKey::new_in_channel(channel, rank, bank, row);
             sink.on_precharge(cycle, owner, key, act_cycle);
             engine.on_row_closed(rank, bank);
             closed.push(rank);
         });
-        for rank in closed {
+        for &rank in &closed {
             self.rank_closed(rank as usize, now);
         }
+        closed.clear();
+        self.autopre_scratch = closed;
     }
 
     /// Refresh engine. Returns true if it consumed the command slot.
@@ -452,18 +461,18 @@ impl MemController {
             let queue = if serving_writes { &self.wq } else { &self.rq };
             self.policy.pick_column(&ctx, queue)
         };
-        if let Some(i) = picked {
-            let req = if serving_writes { self.wq.get(i) } else { self.rq.get(i) };
+        if let Some(key) = picked {
+            let req = if serving_writes { self.wq.get(key) } else { self.rq.get(key) };
             let kind = if req.is_write { CommandKind::Write } else { CommandKind::Read };
             let ready = self.dev.issue(Command { kind, loc: req.loc }, now, 0, 0, req.core);
             let class = self.class_of.remove(&req.id).unwrap_or(ReqClass::Hit);
             let read_latency = if req.is_write {
-                self.wq.remove(i);
+                self.wq.remove(key);
                 None
             } else {
                 let ready = ready.expect("read returns data-ready cycle");
                 self.completions.push(Reverse((ready, req.id, req.core)));
-                self.rq.remove(i);
+                self.rq.remove(key);
                 Some(ready - req.arrived)
             };
             self.engine.on_dequeue(&req.loc, self.dev.bank(&req.loc).open_row());
@@ -487,8 +496,8 @@ impl MemController {
             self.eager_precharge(now);
             return;
         }
-        if let Some((i, kind)) = picked {
-            let req = if serving_writes { self.wq.get(i) } else { self.rq.get(i) };
+        if let Some((key, kind)) = picked {
+            let req = if serving_writes { self.wq.get(key) } else { self.rq.get(key) };
             match kind {
                 CommandKind::Activate => {
                     let key = self.row_key(req.loc.rank, req.loc.bank, req.loc.row);

@@ -5,10 +5,10 @@
 //! schedulers is *which* request each pass picks and *when* the next pick
 //! could become legal. A policy supplies exactly those three decisions:
 //!
-//! * [`SchedPolicy::pick_column`] — pass 1: the queue index whose ready
-//!   column command (row hit) should issue this cycle;
-//! * [`SchedPolicy::pick_act_pre`] — pass 2: the queue index and command
-//!   (ACT or conflict-PRE) to issue when no column was ready;
+//! * [`SchedPolicy::pick_column`] — pass 1: the queue slot key whose
+//!   ready column command (row hit) should issue this cycle;
+//! * [`SchedPolicy::pick_act_pre`] — pass 2: the queue slot key and
+//!   command (ACT or conflict-PRE) to issue when no column was ready;
 //! * [`SchedPolicy::next_ready_at`] — the policy's contribution to the
 //!   controller's event-kernel wake bound: a conservative **lower** bound
 //!   on the earliest bus cycle at which either pass could issue anything.
@@ -100,16 +100,16 @@ pub struct SchedCtx<'a> {
 pub trait SchedPolicy: Send {
     fn kind(&self) -> SchedulerKind;
 
-    /// Pass 1: index of the request whose ready column command should
-    /// issue this cycle, or `None`.
-    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<usize>;
+    /// Pass 1: slot key ([`RequestQueue::iter_keyed`]) of the request
+    /// whose ready column command should issue this cycle, or `None`.
+    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<u32>;
 
-    /// Pass 2: `(index, Activate | Precharge)` to issue, or `None`.
+    /// Pass 2: `(slot key, Activate | Precharge)` to issue, or `None`.
     fn pick_act_pre(
         &mut self,
         ctx: &SchedCtx,
         queue: &RequestQueue,
-    ) -> Option<(usize, CommandKind)>;
+    ) -> Option<(u32, CommandKind)>;
 
     /// Wake-bound contribution (see module docs): a lower bound over both
     /// queues on the earliest cycle `>= ctx.now` at which this policy
@@ -194,8 +194,8 @@ impl SchedPolicy for FrFcfs {
         SchedulerKind::FrFcfs
     }
 
-    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<usize> {
-        for (i, req) in queue.iter().enumerate() {
+    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<u32> {
+        for (key, req) in queue.iter_keyed() {
             if ctx.ref_drain[req.loc.rank as usize] {
                 continue;
             }
@@ -203,7 +203,7 @@ impl SchedPolicy for FrFcfs {
                 continue;
             }
             if ctx.dev.can_issue(column_kind(req), &req.loc, ctx.now) {
-                return Some(i);
+                return Some(key);
             }
         }
         None
@@ -213,8 +213,8 @@ impl SchedPolicy for FrFcfs {
         &mut self,
         ctx: &SchedCtx,
         queue: &RequestQueue,
-    ) -> Option<(usize, CommandKind)> {
-        for (i, req) in queue.iter().enumerate() {
+    ) -> Option<(u32, CommandKind)> {
+        for (key, req) in queue.iter_keyed() {
             if ctx.ref_drain[req.loc.rank as usize] {
                 continue;
             }
@@ -225,7 +225,7 @@ impl SchedPolicy for FrFcfs {
             match bank.open_row() {
                 None => {
                     if ctx.dev.can_issue(CommandKind::Activate, &req.loc, ctx.now) {
-                        return Some((i, CommandKind::Activate));
+                        return Some((key, CommandKind::Activate));
                     }
                 }
                 Some(open) if open != req.loc.row => {
@@ -243,7 +243,7 @@ impl SchedPolicy for FrFcfs {
                         && (starving || !ctx.engine.open_row_has_hit(req.loc.rank, req.loc.bank))
                         && ctx.dev.can_issue(CommandKind::Precharge, &req.loc, ctx.now)
                     {
-                        return Some((i, CommandKind::Precharge));
+                        return Some((key, CommandKind::Precharge));
                     }
                 }
                 Some(_) => {} // row hit, column not ready yet
@@ -267,10 +267,9 @@ impl SchedPolicy for FrFcfs {
 pub struct Fcfs;
 
 /// The head candidate of one queue under strict FCFS.
-fn fcfs_candidate<'q>(ctx: &SchedCtx, queue: &'q RequestQueue) -> Option<(usize, &'q Request)> {
+fn fcfs_candidate<'q>(ctx: &SchedCtx, queue: &'q RequestQueue) -> Option<(u32, &'q Request)> {
     queue
-        .iter()
-        .enumerate()
+        .iter_keyed()
         .find(|(_, r)| !ctx.ref_drain[r.loc.rank as usize])
 }
 
@@ -279,12 +278,12 @@ impl SchedPolicy for Fcfs {
         SchedulerKind::Fcfs
     }
 
-    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<usize> {
-        let (i, req) = fcfs_candidate(ctx, queue)?;
+    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<u32> {
+        let (key, req) = fcfs_candidate(ctx, queue)?;
         if ctx.dev.bank(&req.loc).open_row() == Some(req.loc.row)
             && ctx.dev.can_issue(column_kind(req), &req.loc, ctx.now)
         {
-            Some(i)
+            Some(key)
         } else {
             None
         }
@@ -294,15 +293,15 @@ impl SchedPolicy for Fcfs {
         &mut self,
         ctx: &SchedCtx,
         queue: &RequestQueue,
-    ) -> Option<(usize, CommandKind)> {
-        let (i, req) = fcfs_candidate(ctx, queue)?;
+    ) -> Option<(u32, CommandKind)> {
+        let (key, req) = fcfs_candidate(ctx, queue)?;
         let bank = ctx.dev.bank(&req.loc);
         if bank.next_autopre_at().is_some() {
             return None;
         }
         match bank.open_row() {
             None if ctx.dev.can_issue(CommandKind::Activate, &req.loc, ctx.now) => {
-                Some((i, CommandKind::Activate))
+                Some((key, CommandKind::Activate))
             }
             // Head-of-queue conflicts close the row as soon as the PRE is
             // legal: strict FCFS has no row-hit-first protection and
@@ -311,7 +310,7 @@ impl SchedPolicy for Fcfs {
                 if open != req.loc.row
                     && ctx.dev.can_issue(CommandKind::Precharge, &req.loc, ctx.now) =>
             {
-                Some((i, CommandKind::Precharge))
+                Some((key, CommandKind::Precharge))
             }
             _ => None,
         }
@@ -422,10 +421,10 @@ impl SchedPolicy for Bliss {
         SchedulerKind::Bliss
     }
 
-    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<usize> {
+    fn pick_column(&mut self, ctx: &SchedCtx, queue: &RequestQueue) -> Option<u32> {
         self.maybe_clear(ctx.now);
         let mut fallback = None;
-        for (i, req) in queue.iter().enumerate() {
+        for (key, req) in queue.iter_keyed() {
             if ctx.ref_drain[req.loc.rank as usize] {
                 continue;
             }
@@ -434,10 +433,10 @@ impl SchedPolicy for Bliss {
             }
             if ctx.dev.can_issue(column_kind(req), &req.loc, ctx.now) {
                 if !self.listed(req.core) {
-                    return Some(i);
+                    return Some(key);
                 }
                 if fallback.is_none() {
-                    fallback = Some(i);
+                    fallback = Some(key);
                 }
             }
         }
@@ -448,19 +447,19 @@ impl SchedPolicy for Bliss {
         &mut self,
         ctx: &SchedCtx,
         queue: &RequestQueue,
-    ) -> Option<(usize, CommandKind)> {
+    ) -> Option<(u32, CommandKind)> {
         self.maybe_clear(ctx.now);
         let mut fallback = None;
-        for (i, req) in queue.iter().enumerate() {
+        for (key, req) in queue.iter_keyed() {
             if ctx.ref_drain[req.loc.rank as usize] {
                 continue;
             }
             if let Some(kind) = self.act_pre_of(ctx, req) {
                 if !self.listed(req.core) {
-                    return Some((i, kind));
+                    return Some((key, kind));
                 }
                 if fallback.is_none() {
-                    fallback = Some((i, kind));
+                    fallback = Some((key, kind));
                 }
             }
         }

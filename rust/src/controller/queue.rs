@@ -1,4 +1,5 @@
-//! Memory request queues (64-entry read + write queues per channel).
+//! Memory request queues (64-entry read + write queues per channel),
+//! slab-backed with stable slot keys.
 
 use crate::dram::command::Loc;
 
@@ -15,57 +16,157 @@ pub struct Request {
     pub arrived: u64,
 }
 
+/// Null slot link.
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    req: Request,
+    prev: u32,
+    next: u32,
+    /// Currently threaded into the arrival list. Guards (in debug
+    /// builds) against a policy handing back a stale key: the pre-slab
+    /// `Vec::remove(idx)` panicked on out-of-range, but a recycled slot
+    /// index would otherwise corrupt the freelist silently.
+    linked: bool,
+}
+
 /// FIFO-ordered request queue with capacity; FR-FCFS scans it in arrival
 /// order so "oldest first" falls out of iteration order.
+///
+/// Arrival order is an intrusive doubly-linked list threaded through a
+/// slab of slots: `push` appends at the tail, `remove(key)` unlinks in
+/// O(1) — the pre-slab `Vec<Request>` shifted every younger request left
+/// on each issued column command — and iteration follows the links, so
+/// FR-FCFS/FCFS/BLISS see exactly the arrival order the Vec gave them.
+/// Slot keys are stable while a request is queued (scheduler picks
+/// return them), and retired slots recycle through a freelist, so a warm
+/// queue never allocates.
 #[derive(Debug, Clone)]
 pub struct RequestQueue {
-    items: Vec<Request>,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    head: u32,
+    tail: u32,
+    len: usize,
     cap: usize,
 }
 
 impl RequestQueue {
     pub fn new(cap: usize) -> Self {
-        Self { items: Vec::with_capacity(cap), cap }
+        Self {
+            slots: Vec::with_capacity(cap),
+            free: Vec::with_capacity(cap),
+            head: NIL,
+            tail: NIL,
+            len: 0,
+            cap,
+        }
     }
 
     pub fn is_full(&self) -> bool {
-        self.items.len() >= self.cap
+        self.len >= self.cap
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.len == 0
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.len
     }
 
+    /// Append at the tail (arrival order). Returns false if full.
     pub fn push(&mut self, req: Request) -> bool {
         if self.is_full() {
             return false;
         }
-        self.items.push(req);
+        let slot = Slot { req, prev: self.tail, next: NIL, linked: true };
+        let key = match self.free.pop() {
+            Some(k) => {
+                debug_assert!(!self.slots[k as usize].linked, "freelist slot still linked");
+                self.slots[k as usize] = slot;
+                k
+            }
+            None => {
+                self.slots.push(slot);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        if self.tail == NIL {
+            self.head = key;
+        } else {
+            self.slots[self.tail as usize].next = key;
+        }
+        self.tail = key;
+        self.len += 1;
         true
     }
 
-    /// Remove by position (after the scheduler issued its column command).
-    pub fn remove(&mut self, idx: usize) -> Request {
-        self.items.remove(idx)
+    /// Remove by slot key (after the scheduler issued its column
+    /// command): O(1) unlink; the key is recycled.
+    pub fn remove(&mut self, key: u32) -> Request {
+        debug_assert!(self.len > 0, "remove from an empty queue");
+        debug_assert!(self.slots[key as usize].linked, "remove with a stale slot key");
+        self.slots[key as usize].linked = false;
+        let Slot { req, prev, next, .. } = self.slots[key as usize];
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev as usize].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next as usize].prev = prev;
+        }
+        self.free.push(key);
+        self.len -= 1;
+        req
     }
 
+    /// The request behind a (currently queued) slot key.
+    pub fn get(&self, key: u32) -> Request {
+        debug_assert!(self.slots[key as usize].linked, "get with a stale slot key");
+        self.slots[key as usize].req
+    }
+
+    /// Arrival-order iteration yielding `(slot key, request)` — the keys
+    /// the scheduler's picks hand back to [`RequestQueue::get`] /
+    /// [`RequestQueue::remove`].
+    pub fn iter_keyed(&self) -> IterKeyed<'_> {
+        IterKeyed { slots: &self.slots, cur: self.head }
+    }
+
+    /// Arrival-order iteration over the requests alone.
     pub fn iter(&self) -> impl Iterator<Item = &Request> {
-        self.items.iter()
-    }
-
-    /// Index access in arrival order (scheduler scans by position).
-    pub fn get(&self, idx: usize) -> Request {
-        self.items[idx]
+        self.iter_keyed().map(|(_, r)| r)
     }
 
     /// Is a request with this id still queued? (Classification-map sweep
     /// at `finalize`.)
     pub fn contains_id(&self, id: u64) -> bool {
-        self.items.iter().any(|r| r.id == id)
+        self.iter().any(|r| r.id == id)
+    }
+}
+
+/// Arrival-order iterator over `(slot key, request)` pairs.
+pub struct IterKeyed<'a> {
+    slots: &'a [Slot],
+    cur: u32,
+}
+
+impl<'a> Iterator for IterKeyed<'a> {
+    type Item = (u32, &'a Request);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.cur == NIL {
+            return None;
+        }
+        let key = self.cur;
+        let slot = &self.slots[key as usize];
+        self.cur = slot.next;
+        Some((key, &slot.req))
     }
 }
 
@@ -87,6 +188,10 @@ mod tests {
         }
     }
 
+    fn key_at(q: &RequestQueue, pos: usize) -> u32 {
+        q.iter_keyed().nth(pos).expect("position in range").0
+    }
+
     #[test]
     fn capacity_enforced() {
         let mut q = RequestQueue::new(2);
@@ -102,7 +207,8 @@ mod tests {
         q.push(req(7, 1, 10));
         assert!(q.contains_id(7));
         assert!(!q.contains_id(8));
-        q.remove(0);
+        let k = key_at(&q, 0);
+        q.remove(k);
         assert!(!q.contains_id(7));
     }
 
@@ -112,9 +218,55 @@ mod tests {
         for i in 0..4 {
             q.push(req(i, 0, i as u32));
         }
-        let r = q.remove(1);
+        let r = q.remove(key_at(&q, 1));
         assert_eq!(r.id, 1);
         let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn keys_are_stable_across_unrelated_removals() {
+        let mut q = RequestQueue::new(8);
+        for i in 0..4 {
+            q.push(req(i, 0, i as u32));
+        }
+        let key3 = q.iter_keyed().find(|(_, r)| r.id == 3).unwrap().0;
+        q.remove(key_at(&q, 0));
+        q.remove(key_at(&q, 0));
+        // Two older entries left; id 3's key still resolves to id 3.
+        assert_eq!(q.get(key3).id, 3);
+        assert_eq!(q.remove(key3).id, 3);
+    }
+
+    #[test]
+    fn recycled_slots_keep_arrival_order() {
+        let mut q = RequestQueue::new(4);
+        for i in 0..4 {
+            q.push(req(i, 0, 0));
+        }
+        // Remove from the middle and head, then refill: iteration must be
+        // pure arrival order regardless of which slab slots got reused.
+        q.remove(key_at(&q, 2));
+        q.remove(key_at(&q, 0));
+        assert!(q.push(req(10, 0, 0)));
+        assert!(q.push(req(11, 0, 0)));
+        let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3, 10, 11]);
+        assert!(q.is_full());
+    }
+
+    #[test]
+    fn drain_to_empty_and_reuse() {
+        let mut q = RequestQueue::new(3);
+        for round in 0..5u64 {
+            for i in 0..3 {
+                assert!(q.push(req(round * 10 + i, 0, 0)));
+            }
+            while !q.is_empty() {
+                q.remove(key_at(&q, 0));
+            }
+            assert_eq!(q.len(), 0);
+            assert!(q.iter().next().is_none());
+        }
     }
 }

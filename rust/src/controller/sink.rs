@@ -23,7 +23,7 @@ pub enum ReqClass {
 }
 
 /// Controller statistics (reset after warmup).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct McStats {
     pub acts: u64,
     pub acts_reduced: u64,

@@ -124,6 +124,13 @@ mod tests {
     }
 
     #[test]
+    fn parses_threads_pin() {
+        assert_eq!(args("fig4 --threads 3").get_usize("threads", 0).unwrap(), 3);
+        assert_eq!(args("fig4").get_usize("threads", 0).unwrap(), 0);
+        assert!(args("fig4 --threads many").get_usize("threads", 0).is_err());
+    }
+
+    #[test]
     fn defaults_apply() {
         let a = args("simulate");
         assert_eq!(a.get_u64("cores", 1).unwrap(), 1);

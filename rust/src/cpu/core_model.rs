@@ -67,6 +67,8 @@ pub struct Core {
     pending: Option<TraceEntry>,
     /// LLC-hit completions: (ready_cycle, seq).
     hit_queue: BinaryHeap<Reverse<(u64, u64)>>,
+    /// Reusable scratch for MSHR fills (hot path: no per-fill allocs).
+    fill_scratch: Vec<u64>,
     pub mshr: MshrFile,
     pub stats: CoreStats,
     /// Instruction target after warmup (0 = no target).
@@ -94,6 +96,7 @@ impl Core {
             bubbles_left: 0,
             pending: None,
             hit_queue: BinaryHeap::new(),
+            fill_scratch: Vec::new(),
             mshr: MshrFile::new(mshrs),
             stats: CoreStats::default(),
             target: 0,
@@ -110,11 +113,21 @@ impl Core {
         }
     }
 
-    /// DRAM (or forwarded) read completion for `line`.
-    pub fn complete_line(&mut self, line: u64) {
-        for seq in self.mshr.fill(line) {
+    /// DRAM (or forwarded) read completion for `line`. Returns true when
+    /// the fill marked at least one window slot done — the wake-bound
+    /// change report the system loop feeds into the event kernel's wake
+    /// index (see [`crate::sim::engine`]): a filled core may now retire
+    /// or issue, so its cached bound must drop to `now`.
+    pub fn complete_line(&mut self, line: u64) -> bool {
+        let mut scratch = std::mem::take(&mut self.fill_scratch);
+        scratch.clear();
+        self.mshr.fill_into(line, &mut scratch);
+        let woke = !scratch.is_empty();
+        for &seq in &scratch {
             self.mark_done(seq);
         }
+        self.fill_scratch = scratch;
+        woke
     }
 
     /// Earliest CPU cycle `>= now` at which ticking this core could

@@ -1,37 +1,48 @@
 //! Miss-status holding registers: track outstanding LLC misses per core,
 //! merging secondary misses to the same line.
+//!
+//! Slab-backed: the file is tiny (Table 1: 8 MSHRs/core), so a linear
+//! scan beats hashing, and each slot's waiter vector is recycled rather
+//! than reallocated — the pre-slab `HashMap<u64, Vec<u64>>` allocated a
+//! fresh waiter vector per primary miss and dropped it at fill, which
+//! was the last steady-state allocation on the core's miss path.
 
-use std::collections::HashMap;
+/// One MSHR slot: an outstanding line plus its waiting window slots.
+#[derive(Debug, Clone, Default)]
+struct Mshr {
+    line: u64,
+    live: bool,
+    waiters: Vec<u64>,
+}
 
 /// MSHR file for one core (Table 1: 8 MSHRs/core).
 #[derive(Debug, Clone)]
 pub struct MshrFile {
-    /// line address -> window slots (inst sequence numbers) waiting on it.
-    entries: HashMap<u64, Vec<u64>>,
-    cap: usize,
+    slots: Vec<Mshr>,
+    live: usize,
     pub merges: u64,
 }
 
 impl MshrFile {
     pub fn new(cap: usize) -> Self {
-        Self { entries: HashMap::new(), cap, merges: 0 }
+        Self { slots: vec![Mshr::default(); cap], live: 0, merges: 0 }
     }
 
     pub fn is_full(&self) -> bool {
-        self.entries.len() >= self.cap
+        self.live >= self.slots.len()
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.live == 0
     }
 
     /// True if a miss to `line` is already outstanding.
     pub fn contains(&self, line: u64) -> bool {
-        self.entries.contains_key(&line)
+        self.slots.iter().any(|s| s.live && s.line == line)
     }
 
     /// Allocate (primary miss) or merge (secondary). Returns:
@@ -39,21 +50,33 @@ impl MshrFile {
     /// * `Some(false)` — merged into an existing entry.
     /// * `None`        — MSHR file full; caller must stall.
     pub fn allocate(&mut self, line: u64, seq: u64) -> Option<bool> {
-        if let Some(waiters) = self.entries.get_mut(&line) {
-            waiters.push(seq);
+        if let Some(s) = self.slots.iter_mut().find(|s| s.live && s.line == line) {
+            s.waiters.push(seq);
             self.merges += 1;
             return Some(false);
         }
         if self.is_full() {
             return None;
         }
-        self.entries.insert(line, vec![seq]);
+        let s = self.slots.iter_mut().find(|s| !s.live).expect("file is not full");
+        debug_assert!(s.waiters.is_empty(), "recycled slot kept stale waiters");
+        s.line = line;
+        s.live = true;
+        s.waiters.push(seq);
+        self.live += 1;
         Some(true)
     }
 
-    /// Fill: release the entry, returning every waiting window slot.
-    pub fn fill(&mut self, line: u64) -> Vec<u64> {
-        self.entries.remove(&line).unwrap_or_default()
+    /// Fill: release the entry for `line`, draining every waiting window
+    /// slot into `out` (the caller's reusable scratch; the slot's waiter
+    /// storage is kept for recycling).
+    pub fn fill_into(&mut self, line: u64, out: &mut Vec<u64>) {
+        if let Some(i) = self.slots.iter().position(|s| s.live && s.line == line) {
+            let s = &mut self.slots[i];
+            out.extend(s.waiters.drain(..));
+            s.live = false;
+            self.live -= 1;
+        }
     }
 }
 
@@ -85,9 +108,34 @@ mod tests {
         m.allocate(9, 1);
         m.allocate(9, 2);
         m.allocate(9, 3);
-        let mut w = m.fill(9);
+        let mut w = Vec::new();
+        m.fill_into(9, &mut w);
         w.sort_unstable();
         assert_eq!(w, vec![1, 2, 3]);
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn fill_of_unknown_line_is_a_noop() {
+        let mut m = MshrFile::new(2);
+        m.allocate(5, 1);
+        let mut w = Vec::new();
+        m.fill_into(99, &mut w);
+        assert!(w.is_empty());
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn recycled_slot_starts_with_no_waiters() {
+        let mut m = MshrFile::new(1);
+        m.allocate(7, 1);
+        m.allocate(7, 2);
+        let mut w = Vec::new();
+        m.fill_into(7, &mut w);
+        assert_eq!(w.len(), 2);
+        assert_eq!(m.allocate(8, 9), Some(true));
+        w.clear();
+        m.fill_into(8, &mut w);
+        assert_eq!(w, vec![9], "fresh line must not inherit old waiters");
     }
 }

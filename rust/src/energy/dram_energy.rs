@@ -39,7 +39,7 @@ impl Default for DddIdd {
 }
 
 /// Energy totals in nanojoules.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct EnergyBreakdown {
     pub act_pre_nj: f64,
     pub read_nj: f64,

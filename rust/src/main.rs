@@ -16,6 +16,8 @@
 //! Every simulation runs on the event-driven kernel; pass `--strict-tick`
 //! to any simulating command to use the original per-cycle loop (the
 //! differential-testing oracle — results are bit-identical, only slower).
+//! `--threads N` (or the `PALLAS_THREADS` env var) pins the parallel
+//! runner's worker count for reproducible suite benchmarking.
 
 use chargecache::config::SystemConfig;
 use chargecache::coordinator::cli::Args;
@@ -49,6 +51,9 @@ fn scale_from(args: &Args) -> Result<ExperimentScale> {
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
+    // Worker-count pin for every parallel_map fan-out (reproducible
+    // benchmarking); 0 keeps the PALLAS_THREADS / machine fallback.
+    chargecache::coordinator::runner::set_threads(args.get_usize("threads", 0)?);
     match args.command.as_str() {
         "fig1" => cmd_fig1(&args),
         "fig3" => cmd_fig3(&args),
@@ -72,7 +77,8 @@ const HELP: &str = "chargecache — ChargeCache (HPCA'16) reproduction
 commands: fig1 fig3 fig4 fig5 area sweep-capacity sweep-duration
           sweep-temperature simulate gen-traces timing-table
 common options: --insts N --warmup N --mixes M --quick --strict-tick
-                --scheduler fr-fcfs|fcfs|bliss";
+                --scheduler fr-fcfs|fcfs|bliss
+                --threads N (or PALLAS_THREADS=N) pins the worker count";
 
 fn cmd_fig1(args: &Args) -> Result<()> {
     let scale = scale_from(args)?;

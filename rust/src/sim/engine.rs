@@ -61,7 +61,11 @@ pub trait EventDriven {
     /// Earliest CPU cycle `>= now` at which ticking could change state
     /// (the wake-time contract above). `u64::MAX` means "only an already
     /// scheduled wake of another component can unblock this one".
-    fn next_wake(&self, now: u64) -> u64;
+    /// Takes `&mut self` so implementations may serve the answer from an
+    /// incrementally maintained structure (the lazily-pruned
+    /// [`crate::sim::wake::WakeIndex`]) instead of rescanning every
+    /// component per jump.
+    fn next_wake(&mut self, now: u64) -> u64;
 }
 
 /// Drive `sim` from `now` until `done` reports completion or the clock
@@ -115,7 +119,7 @@ mod tests {
                 self.fired.push(now);
             }
         }
-        fn next_wake(&self, now: u64) -> u64 {
+        fn next_wake(&mut self, now: u64) -> u64 {
             self.events
                 .iter()
                 .copied()

@@ -5,6 +5,7 @@
 pub mod engine;
 pub mod stats;
 pub mod system;
+pub mod wake;
 
 pub use engine::LoopMode;
 pub use stats::SimResult;

@@ -5,7 +5,12 @@ use crate::controller::McStats;
 use crate::energy::EnergyBreakdown;
 
 /// Everything one simulation run produces.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is derived (through [`McStats`] and [`EnergyBreakdown`])
+/// so the strict-vs-event differential tests compare values directly and
+/// a divergence names the differing field — the pre-derive checks
+/// compared `format!("{a:?}")` strings and dumped both on failure.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
     /// Workload label (profile name or mix id).
     pub workload: String,

@@ -3,11 +3,14 @@
 //! 5:1 CPU:bus clock ratio (4 GHz / 800 MHz, Table 1).
 //!
 //! Time is advanced by the event kernel ([`crate::sim::engine`]): each
-//! component surfaces its next wake cycle and the clock fast-forwards to
-//! the global minimum. [`crate::sim::LoopMode::StrictTick`] keeps the
-//! original per-cycle loop; both produce bit-identical [`SimResult`]s.
-
-use std::collections::HashMap;
+//! component surfaces its next wake cycle through the incrementally
+//! maintained [`WakeIndex`] and the clock fast-forwards to the global
+//! minimum; components whose cached bound lies in the future are not
+//! even ticked (their ticks are no-ops by the wake contract).
+//! [`crate::sim::LoopMode::StrictTick`] keeps the original per-cycle
+//! loop — every controller and every core, every cycle, with no index
+//! bookkeeping — as the differential oracle; both modes produce
+//! bit-identical [`SimResult`]s.
 
 use crate::config::SystemConfig;
 use crate::controller::{AddressMapper, Completion, MapScheme, MemController, Request};
@@ -15,9 +18,72 @@ use crate::cpu::core_model::{Core, MemPort};
 use crate::cpu::Llc;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::latency::MechanismKind;
-use crate::sim::engine::{self, EventDriven};
+use crate::sim::engine::{self, EventDriven, LoopMode};
 use crate::sim::stats::SimResult;
+use crate::sim::wake::WakeIndex;
 use crate::trace::{profile::multicore_mix, Profile, SynthTrace, TraceSource};
+
+/// Writeback ids live in the upper id half-space so they can never
+/// collide with the slab-generated read ids (whose generation word is
+/// masked to 31 bits).
+const WRITEBACK_ID_BASE: u64 = 1 << 63;
+
+/// One in-flight read.
+#[derive(Debug, Clone, Copy)]
+struct InflightSlot {
+    generation: u32,
+    live: bool,
+    core: u32,
+    line: u64,
+}
+
+/// Generational-id slab for in-flight reads: the request id packs
+/// `generation << 32 | slot`, so matching a completion is an array index
+/// plus a generation check instead of the HashMap lookup the pre-slab
+/// code paid per completion, and retired slots are recycled through a
+/// freelist (zero steady-state allocation). The generation bumps at each
+/// release, so a stale id can never match a recycled slot; it is masked
+/// to 31 bits to keep the top id bit free for [`WRITEBACK_ID_BASE`].
+#[derive(Debug, Default)]
+struct InflightSlab {
+    slots: Vec<InflightSlot>,
+    free: Vec<u32>,
+}
+
+impl InflightSlab {
+    /// Register an in-flight read; returns its generational id.
+    fn insert(&mut self, core: u32, line: u64) -> u64 {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let e = &mut self.slots[s as usize];
+                debug_assert!(!e.live, "freelist returned a live slot");
+                e.live = true;
+                e.core = core;
+                e.line = line;
+                s
+            }
+            None => {
+                self.slots.push(InflightSlot { generation: 0, live: true, core, line });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        ((self.slots[slot as usize].generation as u64) << 32) | slot as u64
+    }
+
+    /// Resolve a completion id to `(core, line)` and release the slot.
+    fn remove(&mut self, id: u64) -> Option<(u32, u64)> {
+        let slot = (id & 0xFFFF_FFFF) as usize;
+        let generation = (id >> 32) as u32;
+        let e = self.slots.get_mut(slot)?;
+        if !e.live || e.generation != generation {
+            return None;
+        }
+        e.live = false;
+        e.generation = (e.generation + 1) & 0x7FFF_FFFF;
+        self.free.push(slot as u32);
+        Some((e.core, e.line))
+    }
+}
 
 /// LLC + controllers + mapper: the memory side of the system, split from
 /// the cores so each core can tick with a mutable borrow of this.
@@ -27,9 +93,13 @@ struct MemHierarchy {
     mapper: AddressMapper,
     /// Current bus cycle (updated by the system loop).
     bus_now: u64,
-    next_req_id: u64,
-    /// In-flight read id -> (core, line).
-    inflight: HashMap<u64, (u32, u64)>,
+    /// In-flight reads (id allocation + completion matching).
+    inflight: InflightSlab,
+    /// Id source for writebacks (offset by [`WRITEBACK_ID_BASE`]).
+    next_writeback_id: u64,
+    /// Per-channel: an enqueue landed since the wake index last saw this
+    /// controller — the event-kernel invalidation hook.
+    enqueued: Vec<bool>,
 }
 
 impl MemPort for MemHierarchy {
@@ -51,9 +121,8 @@ impl MemPort for MemHierarchy {
         if let crate::cpu::cache::LlcResult::Miss { writeback: Some(victim) } = res {
             self.send_write(victim);
         }
-        let id = self.next_req_id;
-        self.next_req_id += 1;
-        self.inflight.insert(id, (core, line));
+        let id = self.inflight.insert(core, line);
+        self.enqueued[loc.channel as usize] = true;
         let accepted = self.mcs[loc.channel as usize].enqueue(
             Request { id, core, loc, is_write: false, arrived: self.bus_now },
             self.bus_now,
@@ -78,8 +147,9 @@ impl MemPort for MemHierarchy {
 impl MemHierarchy {
     fn send_write(&mut self, line: u64) {
         let loc = self.mapper.map_line(line);
-        let id = self.next_req_id;
-        self.next_req_id += 1;
+        let id = WRITEBACK_ID_BASE + self.next_writeback_id;
+        self.next_writeback_id += 1;
+        self.enqueued[loc.channel as usize] = true;
         let accepted = self.mcs[loc.channel as usize].enqueue(
             Request { id, core: u32::MAX, loc, is_write: true, arrived: self.bus_now },
             self.bus_now,
@@ -98,6 +168,9 @@ pub struct System {
     workload: String,
     /// Scratch buffer for completion delivery (avoids per-tick allocs).
     completions: Vec<Completion>,
+    /// Cached wake bounds, CPU-cycle domain: cores at ids `0..cores`,
+    /// controllers at ids `cores..cores + channels`.
+    wake: WakeIndex,
 }
 
 impl System {
@@ -132,7 +205,7 @@ impl System {
         workload: String,
     ) -> Self {
         assert_eq!(traces.len(), cfg.cpu.cores);
-        let cores = traces
+        let cores: Vec<Core> = traces
             .into_iter()
             .enumerate()
             .map(|(i, t)| {
@@ -146,30 +219,152 @@ impl System {
                 )
             })
             .collect();
-        let mcs = (0..cfg.dram.channels)
+        let mcs: Vec<MemController> = (0..cfg.dram.channels)
             .map(|ch| MemController::new(cfg, kind, ch as u32))
             .collect();
+        let wake = WakeIndex::new(cores.len() + mcs.len());
         Self {
             cfg: cfg.clone(),
             kind,
             cores,
             hier: MemHierarchy {
                 llc: Llc::new(cfg.cpu.llc_bytes, cfg.cpu.llc_ways, cfg.dram.line_bytes),
+                enqueued: vec![false; mcs.len()],
                 mcs,
                 mapper: AddressMapper::new(&cfg.dram, MapScheme::RoRaBaColCh),
                 bus_now: 0,
-                next_req_id: 0,
-                inflight: HashMap::new(),
+                inflight: InflightSlab::default(),
+                next_writeback_id: 0,
             },
             cpu_cycle: 0,
             workload,
             completions: Vec::new(),
+            wake,
         }
     }
 
     /// Names of the workloads on each core.
     pub fn workload(&self) -> &str {
         &self.workload
+    }
+
+    /// Test oracle for the wake index: every cached bound must be no
+    /// later than the component's freshly recomputed `next_event_at` —
+    /// the "never late" half of the wake contract, the only direction
+    /// that can break strict/event bit-identity (an early bound merely
+    /// costs a no-op tick). Meaningful for event-driven systems; the
+    /// strict loop does not maintain the index.
+    pub fn assert_wake_bounds_conservative(&self, now: u64) {
+        let cpb = self.cfg.cpu.cpu_per_bus;
+        for (i, core) in self.cores.iter().enumerate() {
+            let cached = self.wake.bound(i);
+            let fresh = core.next_event_at(now);
+            assert!(
+                cached <= fresh,
+                "core {i}: cached wake {cached} is later than fresh bound {fresh} at {now}"
+            );
+        }
+        let bus_next = (now + cpb - 1) / cpb;
+        for (ci, mc) in self.hier.mcs.iter().enumerate() {
+            let cached = self.wake.bound(self.cores.len() + ci);
+            let fresh = mc.next_event_at(bus_next).max(bus_next).saturating_mul(cpb);
+            assert!(
+                cached <= fresh,
+                "mc {ci}: cached wake {cached} is later than fresh bound {fresh} at {now}"
+            );
+        }
+    }
+
+    /// Strict-tick step: every controller on bus boundaries, then every
+    /// core, every visited cycle — the original loop, deliberately free
+    /// of wake-index bookkeeping so it stays an *independent* oracle for
+    /// the indexed path (a late cached bound cannot corrupt both sides
+    /// of the differential tests at once).
+    fn tick_all(&mut self, now: u64) {
+        let cpb = self.cfg.cpu.cpu_per_bus;
+        // Floor semantics: between boundaries the strict loop kept the
+        // stale (floored) bus cycle, so recomputing it every visited
+        // cycle is equivalent.
+        self.hier.bus_now = now / cpb;
+        if now % cpb == 0 {
+            let bus = now / cpb;
+            let mut completions = std::mem::take(&mut self.completions);
+            completions.clear();
+            for mc in &mut self.hier.mcs {
+                mc.tick(bus, &mut completions);
+            }
+            for c in completions.drain(..) {
+                if let Some((core, line)) = self.hier.inflight.remove(c.req_id) {
+                    self.cores[core as usize].complete_line(line);
+                }
+            }
+            self.completions = completions;
+        }
+        for core in &mut self.cores {
+            core.tick(now, &mut self.hier);
+        }
+    }
+
+    /// Indexed step: identical component visit order (controllers on a
+    /// bus boundary first — completions land before cores tick — then
+    /// cores in index order), but a component whose cached wake bound is
+    /// still in the future is skipped outright: by the wake contract its
+    /// tick would be a no-op. Every mutation re-indexes its component:
+    ///
+    /// * a **ticked** component gets a freshly computed bound;
+    /// * a **completion** marks its core hot at `now` (the core ticks
+    ///   later this same cycle, as in the strict order);
+    /// * an **enqueue** (observed via `MemHierarchy::enqueued`) pulls the
+    ///   target controller's bound down to the next bus boundary, where
+    ///   its tick recomputes the true bound.
+    fn tick_indexed(&mut self, now: u64) {
+        let cpb = self.cfg.cpu.cpu_per_bus;
+        let n_cores = self.cores.len();
+        self.hier.bus_now = now / cpb;
+        if now % cpb == 0 {
+            let bus = now / cpb;
+            let mut completions = std::mem::take(&mut self.completions);
+            completions.clear();
+            for ci in 0..self.hier.mcs.len() {
+                if self.wake.bound(n_cores + ci) > now {
+                    continue;
+                }
+                self.hier.mcs[ci].tick(bus, &mut completions);
+                self.hier.enqueued[ci] = false;
+                let b = self.hier.mcs[ci].next_event_at(bus + 1).max(bus + 1);
+                self.wake.set(n_cores + ci, b.saturating_mul(cpb));
+            }
+            for c in completions.drain(..) {
+                if let Some((core, line)) = self.hier.inflight.remove(c.req_id) {
+                    let woke = self.cores[core as usize].complete_line(line);
+                    debug_assert!(woke, "completion filled no MSHR waiter");
+                    if woke {
+                        self.wake.set(core as usize, now);
+                    }
+                }
+            }
+            self.completions = completions;
+        }
+        for i in 0..self.cores.len() {
+            if self.wake.bound(i) > now {
+                continue;
+            }
+            self.cores[i].tick(now, &mut self.hier);
+            let bound = self.cores[i].next_event_at(now + 1);
+            self.wake.set(i, bound);
+        }
+        // Enqueues that landed during the core ticks: the controller can
+        // first act on them at the next bus boundary (a conservative
+        // early bound; its tick there recomputes the real one).
+        let next_bus_cpu = (now / cpb + 1).saturating_mul(cpb);
+        for ci in 0..self.hier.mcs.len() {
+            if self.hier.enqueued[ci] {
+                self.hier.enqueued[ci] = false;
+                let id = n_cores + ci;
+                let clamped = self.wake.bound(id).min(next_bus_cpu);
+                self.wake.set(id, clamped);
+            }
+        }
     }
 
     /// Run warmup + measured region; returns the result.
@@ -284,56 +479,21 @@ impl System {
 impl EventDriven for System {
     /// One simulation step at CPU cycle `now`: memory side first on bus
     /// boundaries (completions delivered before cores tick, as in the
-    /// original loop), then every core in index order. The clock is
-    /// owned by the loop driver.
+    /// original loop), then cores in index order. The clock is owned by
+    /// the loop driver; the strict oracle ticks every component, the
+    /// event kernel only those whose cached wake bound is due.
     fn tick_at(&mut self, now: u64) {
-        let cpb = self.cfg.cpu.cpu_per_bus;
-        // Floor semantics: between boundaries the strict loop kept the
-        // stale (floored) bus cycle, so recomputing it every visited
-        // cycle is equivalent.
-        self.hier.bus_now = now / cpb;
-        if now % cpb == 0 {
-            let bus = now / cpb;
-            let mut completions = std::mem::take(&mut self.completions);
-            completions.clear();
-            for mc in &mut self.hier.mcs {
-                mc.tick(bus, &mut completions);
-            }
-            for c in completions.drain(..) {
-                if let Some((core, line)) = self.hier.inflight.remove(&c.req_id) {
-                    self.cores[core as usize].complete_line(line);
-                }
-            }
-            self.completions = completions;
-        }
-        for core in &mut self.cores {
-            core.tick(now, &mut self.hier);
+        match self.cfg.loop_mode {
+            LoopMode::StrictTick => self.tick_all(now),
+            LoopMode::EventDriven => self.tick_indexed(now),
         }
     }
 
-    /// Global next-wake: the minimum over every core's wake cycle and
-    /// every controller's wake bus-cycle (mapped onto the CPU clock at
-    /// the next bus boundary `>= now`). Exits early once any component
-    /// is hot — the kernel then degrades to per-cycle ticking, which is
-    /// exactly the strict loop.
-    fn next_wake(&self, now: u64) -> u64 {
-        let mut wake = u64::MAX;
-        for core in &self.cores {
-            wake = wake.min(core.next_event_at(now));
-            if wake <= now {
-                return now;
-            }
-        }
-        let cpb = self.cfg.cpu.cpu_per_bus;
-        let bus_next = (now + cpb - 1) / cpb;
-        for mc in &self.hier.mcs {
-            let b = mc.next_event_at(bus_next).max(bus_next);
-            wake = wake.min(b.saturating_mul(cpb));
-            if wake <= now {
-                return now;
-            }
-        }
-        wake.max(now)
+    /// Global next-wake straight from the wake index: O(log n) amortized
+    /// instead of recomputing every core and controller bound per jump
+    /// (the controller bounds each cost a queue scan).
+    fn next_wake(&mut self, now: u64) -> u64 {
+        self.wake.min_bound().max(now)
     }
 }
 
@@ -354,7 +514,8 @@ mod tests {
     fn event_kernel_matches_strict_tick_exactly() {
         // The engine's headline invariant: bit-identical results. The
         // full matrix lives in tests/engine_equiv.rs; this is the fast
-        // in-crate smoke check.
+        // in-crate smoke check. `SimResult: PartialEq` makes a failure
+        // name the differing field instead of dumping two debug strings.
         let mut cfg = quick_cfg(30_000);
         cfg.warmup_cpu_cycles = 12_000;
         for name in ["mcf", "gcc"] {
@@ -363,7 +524,7 @@ mod tests {
             let a = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
             cfg.loop_mode = LoopMode::EventDriven;
             let b = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
-            assert_eq!(format!("{a:?}"), format!("{b:?}"), "{name} diverged");
+            assert_eq!(a, b, "{name} diverged");
         }
     }
 
@@ -438,5 +599,36 @@ mod tests {
         assert!(r.energy.total_nj() > 0.0);
         assert!(r.energy.background_nj > 0.0);
         assert!(r.energy.act_pre_nj > 0.0);
+    }
+
+    #[test]
+    fn inflight_slab_recycles_slots_with_fresh_generations() {
+        let mut slab = InflightSlab::default();
+        let a = slab.insert(1, 0x100);
+        let b = slab.insert(2, 0x200);
+        assert_ne!(a, b);
+        assert_eq!(slab.remove(a), Some((1, 0x100)));
+        // Stale id: the slot was released, so the old generation misses.
+        assert_eq!(slab.remove(a), None);
+        let c = slab.insert(3, 0x300);
+        assert_ne!(c, a, "recycled slot must carry a fresh generation");
+        assert_eq!(c & 0xFFFF_FFFF, a & 0xFFFF_FFFF, "slot index is reused");
+        assert_eq!(slab.remove(c), Some((3, 0x300)));
+        assert_eq!(slab.remove(b), Some((2, 0x200)));
+        // Slab read ids never reach the writeback half-space.
+        assert_eq!(c & WRITEBACK_ID_BASE, 0);
+    }
+
+    #[test]
+    fn wake_bounds_stay_conservative_through_an_event_run() {
+        let mut cfg = quick_cfg(0);
+        cfg.loop_mode = LoopMode::EventDriven;
+        let p = Profile::by_name("tpcc64").unwrap();
+        let mut sys = System::new(&cfg, MechanismKind::ChargeCache, &[p]);
+        let mut now = 0u64;
+        for chunk in [1u64, 7, 100, 1_000, 10_000, 50_000] {
+            now = engine::advance(&mut sys, LoopMode::EventDriven, now, now + chunk, |_| false);
+            sys.assert_wake_bounds_conservative(now);
+        }
     }
 }

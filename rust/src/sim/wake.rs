@@ -1,0 +1,166 @@
+//! WakeIndex — indexed wake scheduling for the event kernel.
+//!
+//! [`crate::sim::System::next_wake`] used to recompute every component's
+//! `next_event_at` bound on *every* event jump: O(cores + controllers)
+//! work per jump, with each controller bound itself costing a queue scan
+//! (`SchedPolicy::next_ready_at`). The index caches one bound per
+//! component and maintains it **incrementally**: a bound is recomputed
+//! only when its component is ticked, and pulled down (never pushed up)
+//! when an external mutation could wake the component earlier — a
+//! completion delivered to a core, or an enqueue landing in a
+//! controller. The global minimum then costs O(log n) amortized via a
+//! lazily-pruned min-heap instead of a rescan.
+//!
+//! ## Soundness
+//!
+//! The event kernel's wake contract ([`crate::sim::engine`]) tolerates
+//! *early* bounds (a too-early wake is a no-op tick) but never *late*
+//! ones. The index preserves that one-sidedness: cached values start at
+//! 0 (hot), are only ever replaced by a freshly computed `next_event_at`
+//! immediately after the component ticked, or clamped *down* by an
+//! invalidation. Stale heap entries are harmless — an entry is trusted
+//! only while it matches the component's current cached bound; anything
+//! else is discarded when it surfaces.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Cached per-component wake bounds with an O(log n) global minimum.
+///
+/// Component ids are dense `0..n` (the [`crate::sim::System`] maps cores
+/// first, then controllers). A bound of `u64::MAX` means "only an
+/// external invalidation can wake this component" and gets no heap
+/// entry at all.
+#[derive(Debug)]
+pub struct WakeIndex {
+    /// Current bound per component — the single source of truth.
+    bounds: Vec<u64>,
+    /// Min-heap of `(bound, component)` snapshots; entries whose bound
+    /// no longer matches `bounds` are stale and lazily discarded.
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+}
+
+impl WakeIndex {
+    /// All `n` components start hot at cycle 0.
+    pub fn new(n: usize) -> Self {
+        let mut heap = BinaryHeap::with_capacity(2 * n + 8);
+        for id in 0..n {
+            heap.push(Reverse((0, id as u32)));
+        }
+        Self { bounds: vec![0; n], heap }
+    }
+
+    /// Number of indexed components.
+    pub fn len(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bounds.is_empty()
+    }
+
+    /// The cached bound of component `id`.
+    #[inline]
+    pub fn bound(&self, id: usize) -> u64 {
+        self.bounds[id]
+    }
+
+    /// Replace component `id`'s bound.
+    pub fn set(&mut self, id: usize, bound: u64) {
+        if self.bounds[id] == bound {
+            return;
+        }
+        self.bounds[id] = bound;
+        if bound != u64::MAX {
+            self.heap.push(Reverse((bound, id as u32)));
+        }
+    }
+
+    /// The minimum cached bound over every component, or `u64::MAX` when
+    /// every component sleeps indefinitely. Amortized O(log n): each
+    /// discarded stale entry was paid for by the `set` that pushed it.
+    pub fn min_bound(&mut self) -> u64 {
+        while let Some(&Reverse((bound, id))) = self.heap.peek() {
+            if self.bounds[id as usize] == bound {
+                return bound;
+            }
+            self.heap.pop();
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_index_is_hot_everywhere() {
+        let mut w = WakeIndex::new(3);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.min_bound(), 0);
+        assert_eq!(w.bound(2), 0);
+    }
+
+    #[test]
+    fn min_tracks_updates_and_prunes_stale_entries() {
+        let mut w = WakeIndex::new(3);
+        w.set(0, 10);
+        w.set(1, 7);
+        w.set(2, 30);
+        assert_eq!(w.min_bound(), 7);
+        w.set(1, 40); // the (7, 1) entry becomes stale
+        assert_eq!(w.min_bound(), 10);
+        w.set(0, 50);
+        assert_eq!(w.min_bound(), 30);
+    }
+
+    #[test]
+    fn lowering_a_bound_takes_effect_immediately() {
+        let mut w = WakeIndex::new(2);
+        w.set(0, 100);
+        w.set(1, 200);
+        assert_eq!(w.min_bound(), 100);
+        w.set(1, 5);
+        assert_eq!(w.min_bound(), 5);
+    }
+
+    #[test]
+    fn max_bound_means_never_self_wakes() {
+        let mut w = WakeIndex::new(2);
+        w.set(0, u64::MAX);
+        w.set(1, u64::MAX);
+        assert_eq!(w.min_bound(), u64::MAX);
+        w.set(0, 9);
+        assert_eq!(w.min_bound(), 9);
+    }
+
+    #[test]
+    fn redundant_sets_are_noops() {
+        let mut w = WakeIndex::new(1);
+        w.set(0, 4);
+        w.set(0, 4);
+        w.set(0, 4);
+        assert_eq!(w.min_bound(), 4);
+        w.set(0, 6);
+        assert_eq!(w.min_bound(), 6);
+    }
+
+    #[test]
+    fn interleaved_raise_lower_sequences_stay_consistent() {
+        // Exercise the lazy heap with a deterministic pseudo-random walk
+        // against a naive rescan oracle.
+        let n = 8usize;
+        let mut w = WakeIndex::new(n);
+        let mut oracle = vec![0u64; n];
+        let mut state = 0x9E37_79B9u64;
+        for _ in 0..2000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let id = (state >> 33) as usize % n;
+            let bound = if state % 17 == 0 { u64::MAX } else { state % 10_000 };
+            w.set(id, bound);
+            oracle[id] = bound;
+            assert_eq!(w.min_bound(), *oracle.iter().min().unwrap());
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Steady-state allocation audit of the hot simulation loop.
+//!
+//! The zero-allocation request path (slab request queues, the
+//! generational inflight slab, the slab MSHR file, recycled scratch
+//! buffers, and the lazily-pruned wake index) promises **zero heap
+//! allocations per tick in steady state**. This binary installs a
+//! counting global allocator and drives a 4-core, two-channel mix on the
+//! event kernel: after a warm region long enough for every slab,
+//! freelist, heap, and row-keyed tracker to hit its high-water capacity,
+//! a measured region of the hot loop must perform no allocations at all.
+//!
+//! The workload is `gobmk` (5 MiB working set): it overflows the 4 MiB
+//! LLC — so the DRAM read/write/writeback path is exercised hard — while
+//! keeping the DRAM row footprint bounded, so the RLTL/reuse trackers'
+//! per-row maps stop growing once warm.
+
+use std::alloc::{GlobalAlloc, Layout, System as SystemAlloc};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use chargecache::config::SystemConfig;
+use chargecache::latency::MechanismKind;
+use chargecache::sim::engine::{advance, LoopMode};
+use chargecache::sim::System;
+use chargecache::trace::Profile;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        SystemAlloc.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        SystemAlloc.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        SystemAlloc.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn hot_loop_is_allocation_free_in_steady_state() {
+    let mut cfg = SystemConfig::eight_core();
+    cfg.cpu.cores = 4;
+    cfg.loop_mode = LoopMode::EventDriven;
+    let p = Profile::by_name("gobmk").unwrap();
+    let profiles = [p, p, p, p];
+    let mut sys = System::new(&cfg, MechanismKind::ChargeCache, &profiles);
+
+    // Warm region: fills the LLC, touches the whole row working set, and
+    // lets every reusable structure reach its high-water capacity.
+    let mut now = advance(&mut sys, LoopMode::EventDriven, 0, 2_000_000, |_| false);
+
+    // Measured steady state. Watermark growth is rare but legal *during
+    // warmup* (e.g. a hash map crossing its next capacity threshold on a
+    // late-seen row); if a window still observes it, extend the warm
+    // region and re-measure — what must never happen is allocation in a
+    // genuinely steady window.
+    let mut allocs = u64::MAX;
+    for _ in 0..4 {
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        let end = advance(&mut sys, LoopMode::EventDriven, now, now + 400_000, |_| false);
+        allocs = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+        assert_eq!(end, now + 400_000, "region must run to its bound");
+        now = end;
+        if allocs == 0 {
+            break;
+        }
+    }
+    assert_eq!(allocs, 0, "hot loop allocated {allocs} times in a steady-state window");
+
+    // The audited workload must actually stress DRAM for the audit to
+    // mean anything (guards against it silently going LLC-resident);
+    // checked on a fresh short run rather than the manually-advanced
+    // system, whose clock bookkeeping `run()` does not expect.
+    let mut check_cfg = cfg.clone();
+    check_cfg.insts_per_core = 20_000;
+    check_cfg.warmup_cpu_cycles = 10_000;
+    let r = System::new(&check_cfg, MechanismKind::ChargeCache, &profiles).run();
+    assert!(r.acts() > 100, "audit workload produced no real DRAM activity");
+}

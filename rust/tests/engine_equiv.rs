@@ -40,15 +40,15 @@ fn run_mix(kind: MechanismKind, mode: LoopMode) -> SimResult {
 }
 
 /// Assert full-state identity. The headline fields get their own
-/// assertions (readable failures); the Debug comparison then covers every
-/// remaining field — [`SimResult`] is plain data (u64 counters, f64
-/// metrics, stat structs), so equal Debug output is equal state.
+/// assertions (readable failures); the derived `SimResult: PartialEq`
+/// then covers every remaining field, so a divergence points at the
+/// differing field instead of dumping two Debug strings.
 fn assert_identical(strict: &SimResult, event: &SimResult, what: &str) {
     assert_eq!(strict.cpu_cycles, event.cpu_cycles, "{what}: cpu_cycles drift");
     assert_eq!(strict.acts(), event.acts(), "{what}: acts drift");
     assert_eq!(strict.total_insts, event.total_insts, "{what}: total_insts drift");
     assert_eq!(strict.core_ipc, event.core_ipc, "{what}: IPC drift");
-    assert_eq!(format!("{strict:?}"), format!("{event:?}"), "{what}: full-result drift");
+    assert_eq!(strict, event, "{what}: full-result drift");
 }
 
 #[test]

@@ -5,10 +5,12 @@
 //! seeds and shrink-free failures print the offending seed for replay.
 
 use chargecache::config::{RowPolicy, SystemConfig};
-use chargecache::controller::{MemController, Request, SchedulerKind};
+use chargecache::controller::{MemController, Request, RequestQueue, SchedulerKind};
 use chargecache::dram::command::Loc;
 use chargecache::latency::chargecache::ChargeCache;
 use chargecache::latency::{Mechanism, MechanismKind, RowKey};
+use chargecache::sim::engine::{advance, LoopMode};
+use chargecache::sim::System;
 use chargecache::trace::XorShift64;
 
 /// Run `body` for `cases` random seeds; panic messages carry the seed.
@@ -302,11 +304,87 @@ fn prop_wake_bound_is_never_late_for_any_policy() {
     }
 }
 
+/// The slab-backed request queue against a plain `Vec<Request>` oracle:
+/// under randomized push/remove interleavings (including full drains and
+/// slot recycling), acceptance, removal results, and — critically for
+/// FR-FCFS/FCFS/BLISS semantics — exact arrival-order iteration must
+/// match the Vec's behavior at every step.
+#[test]
+fn prop_slab_queue_matches_vec_oracle() {
+    property(25, |rng, seed| {
+        let cap = 1 + rng.below(64) as usize;
+        let mut q = RequestQueue::new(cap);
+        let mut oracle: Vec<Request> = Vec::new();
+        let mut id = 0u64;
+        for step in 0..1500u64 {
+            if rng.below(5) < 3 {
+                let req = Request {
+                    id,
+                    core: rng.below(8) as u32,
+                    loc: Loc {
+                        channel: 0,
+                        rank: 0,
+                        bank: rng.below(8) as u32,
+                        row: rng.below(64) as u32,
+                        col: rng.below(128) as u32,
+                    },
+                    is_write: rng.below(4) == 0,
+                    arrived: step,
+                };
+                let pushed = q.push(req);
+                assert_eq!(pushed, oracle.len() < cap, "push acceptance (seed {seed})");
+                if pushed {
+                    oracle.push(req);
+                    id += 1;
+                }
+            } else if !oracle.is_empty() {
+                // Remove the pos-th request in arrival order, exactly as
+                // a scheduler pick would: key from iteration, not index.
+                let pos = rng.below(oracle.len() as u64) as usize;
+                let key = q.iter_keyed().nth(pos).expect("pos in range").0;
+                let removed = q.remove(key);
+                let expected = oracle.remove(pos);
+                assert_eq!(removed, expected, "removed request (seed {seed})");
+            }
+            assert_eq!(q.len(), oracle.len(), "length drift (seed {seed})");
+            assert_eq!(q.is_empty(), oracle.is_empty());
+            assert_eq!(q.is_full(), oracle.len() >= cap);
+            let got: Vec<u64> = q.iter().map(|r| r.id).collect();
+            let want: Vec<u64> = oracle.iter().map(|r| r.id).collect();
+            assert_eq!(got, want, "iteration order drift (seed {seed})");
+        }
+    });
+}
+
+/// The wake index against a full component rescan, over random tick
+/// schedules: after event-driven advances of arbitrary (often tiny)
+/// chunks, every cached bound must still be conservative — no later than
+/// the freshly recomputed `next_event_at` of its component. A violation
+/// is a missed invalidation (the index failure mode that would silently
+/// break strict/event bit-identity).
+#[test]
+fn prop_wake_index_is_never_later_than_full_rescan() {
+    property(5, |rng, _seed| {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 2;
+        cfg.loop_mode = LoopMode::EventDriven;
+        let kinds = [MechanismKind::Baseline, MechanismKind::ChargeCache, MechanismKind::Nuat];
+        let kind = kinds[rng.below(3) as usize];
+        cfg.mc.scheduler = SchedulerKind::all()[rng.below(3) as usize];
+        let mut sys = System::new_mix(&cfg, kind, rng.below(8) as usize);
+        let mut now = 0u64;
+        for _ in 0..60 {
+            let chunk = 1 + rng.below(4_000);
+            now = advance(&mut sys, LoopMode::EventDriven, now, now + chunk, |_| false);
+            sys.assert_wake_bounds_conservative(now);
+        }
+    });
+}
+
 /// The mechanism ordering invariant at system level, across random small
 /// workloads: LL-DRAM cycles <= ChargeCache cycles <= ~Baseline cycles.
 #[test]
 fn prop_mechanism_ordering_on_random_workloads() {
-    use chargecache::sim::System;
     use chargecache::trace::PROFILES;
     property(4, |rng, seed| {
         let mut cfg = SystemConfig::default();
