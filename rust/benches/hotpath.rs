@@ -20,6 +20,10 @@ mod harness;
 
 use chargecache::config::SystemConfig;
 use chargecache::controller::{MemController, Request, SchedulerKind};
+use chargecache::coordinator::experiments::{
+    fig1_with, run_suite_with, sweep_capacity_with, ExperimentScale,
+};
+use chargecache::coordinator::jobs::JobEngine;
 use chargecache::cpu::Llc;
 use chargecache::dram::command::Loc;
 use chargecache::latency::chargecache::ChargeCache;
@@ -170,7 +174,70 @@ fn main() {
         r.report_throughput(cycles as f64, "cpu-cycles");
     }
 
-    engine_vs_strict_tick(&policy_tick_cps);
+    let memo = bench_suite_memo();
+    engine_vs_strict_tick(&policy_tick_cps, &memo);
+}
+
+/// Quick-suite memoization figures for `BENCH_engine.json`.
+struct SuiteMemoFigures {
+    insts_per_core: u64,
+    mixes: usize,
+    memo_wall_s: f64,
+    no_memo_wall_s: f64,
+    submitted: u64,
+    simulated: u64,
+}
+
+impl SuiteMemoFigures {
+    fn dedup_factor(&self) -> f64 {
+        self.submitted as f64 / self.simulated.max(1) as f64
+    }
+}
+
+/// Wall-clock of a `figures`-shaped quick suite (fig1 + single suite +
+/// full suite + capacity sweep) with the job-graph memoization on vs the
+/// `--no-memo` path that simulates every submitted leg — the tentpole
+/// perf claim, recorded alongside the per-loop figures.
+fn bench_suite_memo() -> SuiteMemoFigures {
+    let scale = ExperimentScale {
+        insts_per_core: 8_000,
+        warmup_cycles: 3_000,
+        mixes: 2,
+        ..ExperimentScale::default()
+    };
+    let run = |memo: bool| {
+        let mut eng = if memo { JobEngine::new() } else { JobEngine::no_memo() };
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(fig1_with(scale, &mut eng));
+        std::hint::black_box(run_suite_with(scale, false, &mut eng));
+        std::hint::black_box(run_suite_with(scale, true, &mut eng));
+        std::hint::black_box(sweep_capacity_with(scale, &[64, 128, 256], &mut eng));
+        (t0.elapsed().as_secs_f64(), eng.stats())
+    };
+    let (memo_wall_s, memo_stats) = run(true);
+    let (no_memo_wall_s, raw_stats) = run(false);
+    let figures = SuiteMemoFigures {
+        insts_per_core: scale.insts_per_core,
+        mixes: scale.mixes,
+        memo_wall_s,
+        no_memo_wall_s,
+        submitted: memo_stats.submitted,
+        simulated: memo_stats.simulated,
+    };
+    assert_eq!(
+        raw_stats.simulated, raw_stats.submitted,
+        "no-memo baseline must simulate every submission"
+    );
+    println!(
+        "hotpath/suite_memoization: {:.2}s memoized vs {:.2}s raw ({:.2}x), {} legs submitted / {} simulated ({:.2}x dedup)",
+        memo_wall_s,
+        no_memo_wall_s,
+        no_memo_wall_s / memo_wall_s.max(1e-9),
+        figures.submitted,
+        figures.simulated,
+        figures.dedup_factor()
+    );
+    figures
 }
 
 /// The event-mode 4-core mix (the workload the wake index and the
@@ -249,10 +316,10 @@ fn check_against_committed() {
 
 /// The event kernel vs the per-cycle loop on the memory-bound `mcf`
 /// profile, plus the event-mode 4-core mix (the wake-index/slab-path
-/// acceptance workload) and the per-policy controller-tick rates. Emits
-/// `BENCH_engine.json` (repo root) so future PRs have a perf trajectory
-/// to track.
-fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)]) {
+/// acceptance workload), the per-policy controller-tick rates, and the
+/// suite-memoization figures. Emits `BENCH_engine.json` (repo root) so
+/// future PRs have a perf trajectory to track.
+fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)], memo: &SuiteMemoFigures) {
     let insts = 150_000u64;
     let run_mode = |mode: LoopMode, label: &str| -> (f64, SimResult) {
         let p = Profile::by_name("mcf").unwrap();
@@ -304,9 +371,21 @@ fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)]) {
          \"recorded_on_ci\": {on_ci},\n  \
          \"four_core_mix_event\": {{ \"insts_per_core\": 25000, \
          \"wall_s\": {mix_wall:.6}, \"sim_cpu_cycles\": {mix_cycles}, \
-         \"cycles_per_sec\": {mix_cps:.0} }},\n  \"policies\": {{\n{policies_json}\n  }}\n}}\n",
+         \"cycles_per_sec\": {mix_cps:.0} }},\n  \
+         \"suite_memo\": {{ \"insts_per_core\": {}, \"mixes\": {}, \
+         \"memo_wall_s\": {:.6}, \"no_memo_wall_s\": {:.6}, \"speedup\": {:.3}, \
+         \"legs_submitted\": {}, \"legs_simulated\": {}, \"dedup_factor\": {:.3} }},\n  \
+         \"policies\": {{\n{policies_json}\n  }}\n}}\n",
         strict.cpu_cycles,
         event.cpu_cycles,
+        memo.insts_per_core,
+        memo.mixes,
+        memo.memo_wall_s,
+        memo.no_memo_wall_s,
+        memo.no_memo_wall_s / memo.memo_wall_s.max(1e-9),
+        memo.submitted,
+        memo.simulated,
+        memo.dedup_factor(),
     );
     match std::fs::write(BENCH_JSON_PATH, &json) {
         Ok(()) => println!("wrote {BENCH_JSON_PATH}"),

@@ -314,7 +314,211 @@ impl Default for SystemConfig {
     }
 }
 
+/// Stable 64-bit FNV-1a accumulator behind [`SystemConfig::fingerprint`].
+///
+/// Deliberately not `std::hash::Hasher`: `DefaultHasher` is randomly
+/// seeded per process and its algorithm is unspecified, while fingerprints
+/// key the on-disk result cache (`--result-cache`) and must be identical
+/// across invocations and builds. Floats are hashed by bit pattern.
+#[derive(Debug, Clone)]
+pub struct Fingerprint(u64);
+
+impl Fingerprint {
+    pub fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn push_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn push_usize(&mut self, v: usize) {
+        self.push_u64(v as u64);
+    }
+
+    pub fn push_f64(&mut self, v: f64) {
+        self.push_u64(v.to_bits());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fingerprint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl SystemConfig {
+    /// Stable structural hash of every simulation-relevant field — the
+    /// `cfg` component of a job-graph key (`coordinator::jobs::JobKey`).
+    ///
+    /// **Contract:** the whole config is destructured exhaustively, with
+    /// no `..` rest patterns, so adding a field to [`SystemConfig`] or any
+    /// nested struct without deciding how it hashes is a compile error.
+    /// New fields that influence simulation results must be pushed into
+    /// the accumulator; a field that provably cannot affect results may
+    /// instead be bound to `_` with a comment saying why. Two configs with
+    /// equal fingerprints are treated as interchangeable by the result
+    /// cache, including the on-disk one.
+    pub fn fingerprint(&self) -> u64 {
+        let SystemConfig {
+            dram,
+            timing,
+            mc,
+            cpu,
+            chargecache,
+            nuat,
+            mechanism,
+            temperature_c,
+            insts_per_core,
+            warmup_cpu_cycles,
+            measure_cycles,
+            seed,
+            loop_mode,
+        } = self;
+        let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
+        let Timing {
+            tck_ns,
+            trcd,
+            trp,
+            tras,
+            cl,
+            cwl,
+            tbl,
+            tccd,
+            trtp,
+            twr,
+            twtr,
+            trrd,
+            tfaw,
+            trfc,
+            trefi,
+        } = timing;
+        let McConfig {
+            read_queue,
+            write_queue,
+            write_hi_watermark,
+            write_lo_watermark,
+            row_policy,
+            scheduler,
+        } = mc;
+        let CpuConfig {
+            cores,
+            cpu_per_bus,
+            issue_width,
+            window,
+            mshrs,
+            llc_bytes,
+            llc_ways,
+            llc_hit_cycles,
+        } = cpu;
+        let ChargeCacheConfig {
+            entries_per_core,
+            ways,
+            duration_ms,
+            trcd_reduction,
+            tras_reduction,
+            sharing,
+            policy,
+        } = chargecache;
+        let NuatConfig {
+            window_ms,
+            trcd_reduction: nuat_trcd_reduction,
+            tras_reduction: nuat_tras_reduction,
+        } = nuat;
+
+        let mut h = Fingerprint::new();
+        // DramOrg.
+        h.push_usize(*channels);
+        h.push_usize(*ranks);
+        h.push_usize(*banks);
+        h.push_usize(*rows);
+        h.push_usize(*row_bytes);
+        h.push_usize(*line_bytes);
+        // Timing.
+        h.push_f64(*tck_ns);
+        for t in [trcd, trp, tras, cl, cwl, tbl, tccd, trtp, twr, twtr, trrd, tfaw, trfc, trefi] {
+            h.push_u64(*t);
+        }
+        // McConfig.
+        h.push_usize(*read_queue);
+        h.push_usize(*write_queue);
+        h.push_usize(*write_hi_watermark);
+        h.push_usize(*write_lo_watermark);
+        h.push_u64(match row_policy {
+            RowPolicy::Open => 0,
+            RowPolicy::Closed => 1,
+        });
+        h.push_u64(match scheduler {
+            SchedulerKind::FrFcfs => 0,
+            SchedulerKind::Fcfs => 1,
+            SchedulerKind::Bliss => 2,
+        });
+        // CpuConfig.
+        h.push_usize(*cores);
+        h.push_u64(*cpu_per_bus);
+        h.push_usize(*issue_width);
+        h.push_usize(*window);
+        h.push_usize(*mshrs);
+        h.push_usize(*llc_bytes);
+        h.push_usize(*llc_ways);
+        h.push_u64(*llc_hit_cycles);
+        // ChargeCacheConfig.
+        h.push_usize(*entries_per_core);
+        h.push_usize(*ways);
+        h.push_f64(*duration_ms);
+        h.push_u64(*trcd_reduction);
+        h.push_u64(*tras_reduction);
+        h.push_u64(match sharing {
+            HcracSharing::PerCore => 0,
+            HcracSharing::Shared => 1,
+        });
+        h.push_u64(match policy {
+            HcracPolicy::Lru => 0,
+            HcracPolicy::Bip => 1,
+        });
+        // NuatConfig.
+        h.push_f64(*window_ms);
+        h.push_u64(*nuat_trcd_reduction);
+        h.push_u64(*nuat_tras_reduction);
+        // Top-level scalars. `mechanism` is hashed even though jobs carry
+        // the mechanism separately (JobKey::mechanism): the field exists
+        // on the config, so leaving it out would silently alias configs
+        // that differ in it.
+        h.push_u64(match mechanism {
+            MechanismKind::Baseline => 0,
+            MechanismKind::ChargeCache => 1,
+            MechanismKind::Nuat => 2,
+            MechanismKind::ChargeCacheNuat => 3,
+            MechanismKind::LlDram => 4,
+        });
+        h.push_f64(*temperature_c);
+        h.push_u64(*insts_per_core);
+        h.push_u64(*warmup_cpu_cycles);
+        match measure_cycles {
+            None => h.push_u64(0),
+            Some(c) => {
+                h.push_u64(1);
+                h.push_u64(*c);
+            }
+        }
+        h.push_u64(*seed);
+        // Strict-tick and event-driven runs are bit-identical by the
+        // engine-equivalence contract, but the mode is hashed anyway:
+        // sharing cached results across modes would make the differential
+        // oracle silently compare a result against itself.
+        h.push_u64(match loop_mode {
+            LoopMode::EventDriven => 0,
+            LoopMode::StrictTick => 1,
+        });
+        h.finish()
+    }
+
     /// The paper's single-core configuration (Table 1): 1 channel, open-row.
     pub fn single_core() -> Self {
         Self::default()
@@ -388,6 +592,98 @@ mod tests {
         let t = Timing::default();
         assert_eq!(t.ms_to_cycles(1.0), 800_000);
         assert_eq!(t.cycles_to_ns(800_000) as u64, 1_000_000);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_field_sensitive() {
+        let a = SystemConfig::default();
+        // Deterministic: same config, same hash, across calls and clones.
+        assert_eq!(a.fingerprint(), a.fingerprint());
+        assert_eq!(a.fingerprint(), a.clone().fingerprint());
+
+        // Every class of field perturbation must move the hash.
+        let mut seen = vec![a.fingerprint()];
+        let perturbations: Vec<SystemConfig> = vec![
+            {
+                let mut c = a.clone();
+                c.dram.banks = 16;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.timing.trcd = 12;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.mc.row_policy = RowPolicy::Closed;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.mc.scheduler = SchedulerKind::Bliss;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.cpu.cores = 2;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.chargecache.entries_per_core = 256;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.chargecache.duration_ms = 2.0;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.nuat.window_ms = 2.0;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.temperature_c = 45.0;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.insts_per_core += 1;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.measure_cycles = Some(0);
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.seed ^= 1;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.loop_mode = LoopMode::StrictTick;
+                c
+            },
+        ];
+        for p in perturbations {
+            let fp = p.fingerprint();
+            assert!(!seen.contains(&fp), "fingerprint collision for {p:?}");
+            seen.push(fp);
+        }
+    }
+
+    #[test]
+    fn fingerprint_none_vs_zero_measure_cycles() {
+        // The Option tag must be hashed, not just the payload.
+        let none = SystemConfig::default();
+        let mut zero = none.clone();
+        zero.measure_cycles = Some(0);
+        assert_ne!(none.fingerprint(), zero.fingerprint());
     }
 
     #[test]

@@ -131,6 +131,17 @@ mod tests {
     }
 
     #[test]
+    fn memoization_flags() {
+        // `figures --result-cache DIR` / `--no-memo` (job-graph knobs).
+        let a = args("figures --result-cache /tmp/cc-results --no-memo");
+        assert_eq!(a.get("result-cache"), Some("/tmp/cc-results"));
+        assert!(a.flag("no-memo"));
+        let plain = args("figures");
+        assert!(plain.get("result-cache").is_none());
+        assert!(!plain.flag("no-memo"));
+    }
+
+    #[test]
     fn defaults_apply() {
         let a = args("simulate");
         assert_eq!(a.get_u64("cores", 1).unwrap(), 1);

@@ -1,5 +1,14 @@
 //! The paper's experiments, each mapped to a function that produces the
 //! rows of the corresponding figure/table (DESIGN.md §5 index).
+//!
+//! Every experiment executes through the fingerprint-keyed job graph
+//! ([`super::jobs`]): it submits [`JobSpec`]s, and the graph dedupes,
+//! serves repeats from the [`JobEngine`]'s cache, and fans the unique
+//! legs out through one cost-ordered `parallel_map` call. The `*_with`
+//! variants share a caller-provided engine (the `figures` command runs
+//! fig1 + both suites + the sweeps over one engine, so overlapping legs
+//! simulate exactly once); the plain-named wrappers keep the historical
+//! signatures with a private per-call engine.
 
 use std::collections::HashMap;
 
@@ -9,10 +18,10 @@ use crate::controller::SchedulerKind;
 use crate::latency::MechanismKind;
 use crate::sim::engine::LoopMode;
 use crate::sim::stats::weighted_speedup;
-use crate::sim::{SimResult, System};
+use crate::sim::SimResult;
 use crate::trace::{profile::multicore_mix, PROFILES};
 
-use super::runner::parallel_map;
+use super::jobs::{JobEngine, JobGraph, JobSpec};
 
 /// Simulation horizon knobs (the paper runs 1 B instructions; we scale
 /// down — RLTL/RMPKC are stationary properties of the generators).
@@ -101,45 +110,94 @@ const MECHS: [MechanismKind; 5] = [
     MechanismKind::LlDram,
 ];
 
+/// Submit every single-core (workload x mechanism) leg into `graph`;
+/// returns the tickets alongside their identifying pair.
+fn submit_singles(
+    scale: ExperimentScale,
+    graph: &mut JobGraph,
+) -> Vec<((usize, MechanismKind), super::jobs::JobTicket)> {
+    (0..PROFILES.len())
+        .flat_map(|w| MECHS.iter().map(move |&m| (w, m)))
+        .map(|(w, m)| ((w, m), graph.submit(JobSpec::single(scale.single_cfg(), m, w))))
+        .collect()
+}
+
+/// Submit every eight-core (mix x mechanism) leg into `graph`.
+fn submit_eights(
+    scale: ExperimentScale,
+    graph: &mut JobGraph,
+) -> Vec<((usize, MechanismKind), super::jobs::JobTicket)> {
+    (0..scale.mixes)
+        .flat_map(|mix| MECHS.iter().map(move |&m| (mix, m)))
+        .map(|(mix, m)| ((mix, m), graph.submit(JobSpec::mix(scale.eight_cfg(), m, mix))))
+        .collect()
+}
+
+/// Run every single-core (workload x mechanism) combination through the
+/// shared engine's job graph.
+pub fn run_single_suite_with(
+    scale: ExperimentScale,
+    eng: &mut JobEngine,
+) -> HashMap<(String, &'static str), SimResult> {
+    let mut graph = JobGraph::new();
+    let tickets = submit_singles(scale, &mut graph);
+    let res = eng.run(graph);
+    tickets
+        .into_iter()
+        .map(|((w, m), t)| ((PROFILES[w].name.to_string(), m.label()), res.get(t).clone()))
+        .collect()
+}
+
 /// Run every single-core (workload x mechanism) combination in parallel.
 pub fn run_single_suite(scale: ExperimentScale) -> HashMap<(String, &'static str), SimResult> {
-    let jobs: Vec<(usize, MechanismKind)> = (0..PROFILES.len())
-        .flat_map(|w| MECHS.iter().map(move |&m| (w, m)))
-        .collect();
-    let results = parallel_map(jobs.len(), |i| {
-        let (w, mech) = jobs[i];
-        let cfg = scale.single_cfg();
-        System::new(&cfg, mech, &[&PROFILES[w]]).run()
-    });
-    jobs.iter()
-        .zip(results)
-        .map(|((w, m), r)| ((PROFILES[*w].name.to_string(), m.label()), r))
-        .collect()
+    run_single_suite_with(scale, &mut JobEngine::new())
+}
+
+/// Run every eight-core (mix x mechanism) combination through the shared
+/// engine's job graph.
+pub fn run_eight_suite_with(
+    scale: ExperimentScale,
+    eng: &mut JobEngine,
+) -> HashMap<(usize, &'static str), SimResult> {
+    let mut graph = JobGraph::new();
+    let tickets = submit_eights(scale, &mut graph);
+    let res = eng.run(graph);
+    tickets.into_iter().map(|((mix, m), t)| ((mix, m.label()), res.get(t).clone())).collect()
 }
 
 /// Run every eight-core (mix x mechanism) combination in parallel.
 pub fn run_eight_suite(scale: ExperimentScale) -> HashMap<(usize, &'static str), SimResult> {
-    let jobs: Vec<(usize, MechanismKind)> = (0..scale.mixes)
-        .flat_map(|mix| MECHS.iter().map(move |&m| (mix, m)))
-        .collect();
-    let results = parallel_map(jobs.len(), |i| {
-        let (mix, mech) = jobs[i];
-        let cfg = scale.eight_cfg();
-        System::new_mix(&cfg, mech, mix).run()
-    });
-    jobs.iter().zip(results).map(|((mix, m), r)| ((*mix, m.label()), r)).collect()
+    run_eight_suite_with(scale, &mut JobEngine::new())
 }
 
-/// Full suite (single + eight core + alone-IPC table).
-pub fn run_suite(scale: ExperimentScale, eight: bool) -> SuiteResults {
-    let single = run_single_suite(scale);
+/// Full suite (single + eight core + alone-IPC table), sharing `eng`'s
+/// cache. Single- and eight-core legs go into **one** graph, so the
+/// whole suite is a single cost-ordered `parallel_map` fan-out with the
+/// eight-core mixes dispatched first.
+pub fn run_suite_with(scale: ExperimentScale, eight: bool, eng: &mut JobEngine) -> SuiteResults {
+    let mut graph = JobGraph::new();
+    let single_tickets = submit_singles(scale, &mut graph);
+    let eight_tickets = if eight { submit_eights(scale, &mut graph) } else { Vec::new() };
+    let res = eng.run(graph);
+    let single: HashMap<(String, &'static str), SimResult> = single_tickets
+        .into_iter()
+        .map(|((w, m), t)| ((PROFILES[w].name.to_string(), m.label()), res.get(t).clone()))
+        .collect();
     let alone_ipc = single
         .iter()
         .filter(|((_, m), _)| *m == MechanismKind::Baseline.label())
         .map(|((w, _), r)| (w.clone(), r.ipc()))
         .collect();
-    let eight_map = if eight { run_eight_suite(scale) } else { HashMap::new() };
+    let eight_map = eight_tickets
+        .into_iter()
+        .map(|((mix, m), t)| ((mix, m.label()), res.get(t).clone()))
+        .collect();
     SuiteResults { single, eight: eight_map, alone_ipc, scale }
+}
+
+/// Full suite (single + eight core + alone-IPC table).
+pub fn run_suite(scale: ExperimentScale, eight: bool) -> SuiteResults {
+    run_suite_with(scale, eight, &mut JobEngine::new())
 }
 
 impl SuiteResults {
@@ -231,19 +289,23 @@ impl SuiteResults {
     }
 }
 
-/// Fig. 1: average t-RLTL over the tracked intervals.
-/// Returns (interval_ms, avg_single, avg_eight).
-pub fn fig1(scale: ExperimentScale) -> Vec<(f64, f64, f64)> {
+/// Fig. 1 through a shared engine: average t-RLTL over the tracked
+/// intervals. The baseline legs here are structurally identical to the
+/// suite's Baseline legs, so under one engine (`figures`) they simulate
+/// zero extra jobs.
+pub fn fig1_with(scale: ExperimentScale, eng: &mut JobEngine) -> Vec<(f64, f64, f64)> {
+    let mut graph = JobGraph::new();
     // Single-core: baseline runs of all 22 workloads.
-    let single = parallel_map(PROFILES.len(), |w| {
-        let cfg = scale.single_cfg();
-        System::new(&cfg, MechanismKind::Baseline, &[&PROFILES[w]]).run()
-    });
-    let eight = parallel_map(scale.mixes, |mix| {
-        let cfg = scale.eight_cfg();
-        System::new_mix(&cfg, MechanismKind::Baseline, mix).run()
-    });
-    let avg = |rs: &[SimResult], i: usize| -> f64 {
+    let singles: Vec<_> = (0..PROFILES.len())
+        .map(|w| graph.submit(JobSpec::single(scale.single_cfg(), MechanismKind::Baseline, w)))
+        .collect();
+    let eights: Vec<_> = (0..scale.mixes)
+        .map(|m| graph.submit(JobSpec::mix(scale.eight_cfg(), MechanismKind::Baseline, m)))
+        .collect();
+    let res = eng.run(graph);
+    let single: Vec<&SimResult> = singles.iter().map(|&t| res.get(t)).collect();
+    let eight: Vec<&SimResult> = eights.iter().map(|&t| res.get(t)).collect();
+    let avg = |rs: &[&SimResult], i: usize| -> f64 {
         // Activation-weighted mean across workloads (matches the paper's
         // aggregate counting).
         let acts: u64 = rs.iter().map(|r| r.acts()).sum();
@@ -259,33 +321,65 @@ pub fn fig1(scale: ExperimentScale) -> Vec<(f64, f64, f64)> {
         .collect()
 }
 
+/// Fig. 1: average t-RLTL over the tracked intervals.
+/// Returns (interval_ms, avg_single, avg_eight).
+pub fn fig1(scale: ExperimentScale) -> Vec<(f64, f64, f64)> {
+    fig1_with(scale, &mut JobEngine::new())
+}
+
 /// Sensitivity: ChargeCache capacity sweep (entries per core).
 pub fn sweep_capacity(scale: ExperimentScale, entries: &[usize]) -> Vec<(usize, f64)> {
-    sweep_eight(scale, entries, |cfg, &e| cfg.chargecache.entries_per_core = e)
+    sweep_capacity_with(scale, entries, &mut JobEngine::new())
+}
+
+pub fn sweep_capacity_with(
+    scale: ExperimentScale,
+    entries: &[usize],
+    eng: &mut JobEngine,
+) -> Vec<(usize, f64)> {
+    sweep_eight(scale, entries, |cfg, &e| cfg.chargecache.entries_per_core = e, eng)
 }
 
 /// Sensitivity: caching duration sweep. The legal tRCD/tRAS reduction at
 /// each duration comes from the circuit layer (timing table) — longer
 /// durations keep rows cached longer but must assume more leakage.
 pub fn sweep_duration(scale: ExperimentScale, durations_ms: &[f64]) -> Vec<(f64, f64)> {
+    sweep_duration_with(scale, durations_ms, &mut JobEngine::new())
+}
+
+pub fn sweep_duration_with(
+    scale: ExperimentScale,
+    durations_ms: &[f64],
+    eng: &mut JobEngine,
+) -> Vec<(f64, f64)> {
     let (table, _) = crate::runtime::charge_model::timing_table_or_analytic(85.0, 1.25);
-    sweep_eight(scale, durations_ms, |cfg, &d| {
-        let (rcd, ras) = table.reduction_cycles(d * 1e-3);
-        cfg.chargecache.duration_ms = d;
-        cfg.chargecache.trcd_reduction = rcd.min(cfg.timing.trcd - 2);
-        cfg.chargecache.tras_reduction = ras.min(cfg.timing.tras - 2);
-    })
+    sweep_eight(
+        scale,
+        durations_ms,
+        |cfg, &d| {
+            let (rcd, ras) = table.reduction_cycles(d * 1e-3);
+            cfg.chargecache.duration_ms = d;
+            cfg.chargecache.trcd_reduction = rcd.min(cfg.timing.trcd - 2);
+            cfg.chargecache.tras_reduction = ras.min(cfg.timing.tras - 2);
+        },
+        eng,
+    )
 }
 
 /// Sensitivity: temperature sweep at fixed 1 ms duration (paper Sec. 8.3:
-/// ChargeCache works even at worst-case temperature). One flattened
-/// [`sweep_eight`] job set — every (temperature, mix) simulation runs in
-/// a single `parallel_map` fan-out instead of one serial sub-sweep per
-/// temperature. The timing table is derived once per temperature *before*
-/// the fan-out (under `pjrt` it executes the AOT artifact — startup-class
-/// work that must not repeat per job); jobs only copy the precomputed
-/// reduction cycles.
+/// ChargeCache works even at worst-case temperature). The timing table
+/// is derived once per temperature *before* submission (under `pjrt` it
+/// executes the AOT artifact — startup-class work that must not repeat
+/// per job); jobs only copy the precomputed reduction cycles.
 pub fn sweep_temperature(scale: ExperimentScale, temps_c: &[f64]) -> Vec<(f64, f64)> {
+    sweep_temperature_with(scale, temps_c, &mut JobEngine::new())
+}
+
+pub fn sweep_temperature_with(
+    scale: ExperimentScale,
+    temps_c: &[f64],
+    eng: &mut JobEngine,
+) -> Vec<(f64, f64)> {
     let points: Vec<(f64, u64, u64)> = temps_c
         .iter()
         .map(|&t| {
@@ -294,47 +388,57 @@ pub fn sweep_temperature(scale: ExperimentScale, temps_c: &[f64]) -> Vec<(f64, f
             (t, rcd, ras)
         })
         .collect();
-    sweep_eight(scale, &points, |cfg, &(temp, rcd, ras)| {
-        cfg.temperature_c = temp;
-        cfg.chargecache.trcd_reduction = rcd.min(cfg.timing.trcd - 2);
-        cfg.chargecache.tras_reduction = ras.min(cfg.timing.tras - 2);
-    })
+    sweep_eight(
+        scale,
+        &points,
+        |cfg, &(temp, rcd, ras)| {
+            cfg.temperature_c = temp;
+            cfg.chargecache.trcd_reduction = rcd.min(cfg.timing.trcd - 2);
+            cfg.chargecache.tras_reduction = ras.min(cfg.timing.tras - 2);
+        },
+        eng,
+    )
     .into_iter()
     .map(|((t, _, _), speedup)| (t, speedup))
     .collect()
 }
 
-/// Shared sweep machinery: average eight-core CC speedup per point.
+/// Shared sweep machinery: average eight-core CC speedup per point,
+/// through the job graph.
 ///
-/// The Baseline leg is **shared across sweep points**: every sweep here
-/// varies only ChargeCache knobs (`cfg.chargecache` capacity/duration
-/// reductions, `cfg.temperature_c` feeding the CC timing table), none of
-/// which a Baseline simulation reads — so one Baseline per mix suffices
-/// where the pre-dedupe code re-simulated an identical Baseline at every
-/// sweep point (DESIGN.md §5). Baselines and every (point, mix)
-/// ChargeCache run still fan out through a single `parallel_map` call.
-fn sweep_eight<P: Sync + Copy>(
+/// The pre-graph code hand-deduped the Baseline legs (one per mix,
+/// shared across sweep points, since no sweep here perturbs state a
+/// Baseline reads); the graph now subsumes that: Baselines are submitted
+/// once per mix, and any sweep point whose applied config collapses onto
+/// another leg's fingerprint (e.g. the capacity sweep's 128-entry point,
+/// which *is* the default config the suite already ran) dedupes
+/// automatically — including against legs a previous experiment on the
+/// same engine simulated. All unique legs still fan out through a single
+/// cost-ordered `parallel_map` call.
+fn sweep_eight<P: Copy>(
     scale: ExperimentScale,
     points: &[P],
-    apply: impl Fn(&mut SystemConfig, &P) + Sync,
+    apply: impl Fn(&mut SystemConfig, &P),
+    eng: &mut JobEngine,
 ) -> Vec<(P, f64)> {
     let mixes = scale.mixes;
-    // Job layout: [0, mixes) are the shared Baselines (one per mix);
-    // mixes + p * mixes + m is ChargeCache at sweep point p, mix m.
-    let n_jobs = mixes + points.len() * mixes;
-    let results = parallel_map(n_jobs, |i| {
-        if i < mixes {
-            let cfg = scale.eight_cfg();
-            System::new_mix(&cfg, MechanismKind::Baseline, i).run()
-        } else {
-            let j = i - mixes;
-            let (p, mix) = (j / mixes, j % mixes);
-            let mut cfg = scale.eight_cfg();
-            apply(&mut cfg, &points[p]);
-            System::new_mix(&cfg, MechanismKind::ChargeCache, mix).run()
-        }
-    });
-    let (base, cc) = results.split_at(mixes);
+    let mut graph = JobGraph::new();
+    let base: Vec<_> = (0..mixes)
+        .map(|m| graph.submit(JobSpec::mix(scale.eight_cfg(), MechanismKind::Baseline, m)))
+        .collect();
+    let cc: Vec<Vec<_>> = points
+        .iter()
+        .map(|p| {
+            (0..mixes)
+                .map(|m| {
+                    let mut cfg = scale.eight_cfg();
+                    apply(&mut cfg, p);
+                    graph.submit(JobSpec::mix(cfg, MechanismKind::ChargeCache, m))
+                })
+                .collect()
+        })
+        .collect();
+    let res = eng.run(graph);
     points
         .iter()
         .enumerate()
@@ -343,8 +447,8 @@ fn sweep_eight<P: Sync + Copy>(
             for mix in 0..mixes {
                 // Sum of per-core IPCs over same alone-set cancels into
                 // throughput ratio; adequate for sweep *trends*.
-                let tb: f64 = base[mix].core_ipc.iter().sum();
-                let tc: f64 = cc[p * mixes + mix].core_ipc.iter().sum();
+                let tb: f64 = res.get(base[mix]).core_ipc.iter().sum();
+                let tc: f64 = res.get(cc[p][mix]).core_ipc.iter().sum();
                 sum += tc / tb;
             }
             (point, sum / mixes as f64)

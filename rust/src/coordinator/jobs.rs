@@ -1,0 +1,936 @@
+//! Suite-wide simulation job graph with fingerprint-keyed memoization
+//! (DESIGN.md §5).
+//!
+//! Experiments no longer call [`parallel_map`] directly: they submit
+//! [`JobSpec`]s into a [`JobGraph`], which
+//!
+//! 1. **dedupes** structurally identical legs — the key is
+//!    `(SystemConfig::fingerprint(), mechanism, workload-or-mix)`, so two
+//!    experiments asking for the same simulation share one run;
+//! 2. serves repeated keys from the in-process [`SimCache`] (and, opted
+//!    in via `--result-cache DIR`, from a hand-rolled-JSON on-disk cache
+//!    that persists across invocations);
+//! 3. fans the remaining unique jobs out through **one** `parallel_map`
+//!    call, **cost-ordered** (estimated cycles, eight-core mixes first)
+//!    so a long mix never lands on the queue tail and strands a worker.
+//!
+//! Correctness rests on two facts: a simulation is a pure function of
+//! `(config, mechanism, workload)` (traces are seeded from the config),
+//! and the fingerprint covers *every* config field by exhaustive
+//! destructuring — see the contract on [`SystemConfig::fingerprint`].
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::config::SystemConfig;
+use crate::error::{Context, Result};
+use crate::latency::MechanismKind;
+use crate::sim::{SimResult, System};
+use crate::trace::PROFILES;
+
+use super::runner::parallel_map;
+
+/// What one job simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadId {
+    /// One workload from [`PROFILES`] on a single-core config.
+    Single(usize),
+    /// One of the paper's multiprogrammed mixes (`multicore_mix`).
+    Mix(usize),
+}
+
+impl WorkloadId {
+    /// Short slug for on-disk cache file names (`s3`, `m12`).
+    fn slug(&self) -> String {
+        match self {
+            WorkloadId::Single(w) => format!("s{w}"),
+            WorkloadId::Mix(m) => format!("m{m}"),
+        }
+    }
+}
+
+/// The memoization key: everything a simulation's result depends on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobKey {
+    pub cfg_fingerprint: u64,
+    pub mechanism: MechanismKind,
+    pub workload: WorkloadId,
+}
+
+/// One simulation an experiment wants run.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub cfg: SystemConfig,
+    pub mechanism: MechanismKind,
+    pub workload: WorkloadId,
+}
+
+impl JobSpec {
+    /// A single-core job running `PROFILES[workload]`.
+    pub fn single(cfg: SystemConfig, mechanism: MechanismKind, workload: usize) -> Self {
+        assert_eq!(cfg.cpu.cores, 1, "Single jobs take a single-core config");
+        assert!(workload < PROFILES.len(), "workload index out of range");
+        Self { cfg, mechanism, workload: WorkloadId::Single(workload) }
+    }
+
+    /// A multiprogrammed job running mix `mix` on `cfg.cpu.cores` cores.
+    pub fn mix(cfg: SystemConfig, mechanism: MechanismKind, mix: usize) -> Self {
+        Self { cfg, mechanism, workload: WorkloadId::Mix(mix) }
+    }
+
+    pub fn key(&self) -> JobKey {
+        JobKey {
+            cfg_fingerprint: self.cfg.fingerprint(),
+            mechanism: self.mechanism,
+            workload: self.workload,
+        }
+    }
+
+    /// Estimated cost in core-instructions, the dispatch sort key. Mixes
+    /// dominate by construction (8 cores and, under fixed-time
+    /// measurement, a deep cycle window), so sorting by this descending
+    /// schedules eight-core mixes first.
+    pub fn cost(&self) -> u64 {
+        let per_core = match self.cfg.measure_cycles {
+            // Fixed-time runs do work proportional to the window, not the
+            // instruction target (~5 CPU cycles per bus-visible event is
+            // a crude but rank-stable conversion).
+            Some(cycles) => self.cfg.insts_per_core.max(cycles / 5),
+            None => self.cfg.insts_per_core,
+        };
+        self.cfg.cpu.cores as u64 * per_core
+    }
+
+    /// Run the simulation this spec describes.
+    fn run(&self) -> SimResult {
+        match self.workload {
+            WorkloadId::Single(w) => {
+                System::new(&self.cfg, self.mechanism, &[&PROFILES[w]]).run()
+            }
+            WorkloadId::Mix(m) => System::new_mix(&self.cfg, self.mechanism, m).run(),
+        }
+    }
+}
+
+/// Cache/dedup telemetry, accumulated across every graph run through one
+/// [`SimCache`] and surfaced in suite output.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Jobs submitted to graphs.
+    pub submitted: u64,
+    /// Submissions collapsed onto an identical job in the same graph.
+    pub deduped: u64,
+    /// Unique jobs served from the in-process cache (a previous graph).
+    pub memory_hits: u64,
+    /// Unique jobs loaded from the on-disk cache (`--result-cache`).
+    pub disk_hits: u64,
+    /// Unique jobs actually simulated.
+    pub simulated: u64,
+}
+
+impl CacheStats {
+    /// Simulations avoided relative to the naive path that runs every
+    /// submission: in-graph dedup plus memory and disk cache hits.
+    pub fn eliminated(&self) -> u64 {
+        self.deduped + self.memory_hits + self.disk_hits
+    }
+
+    /// One-line summary for suite output (format is stable — CI greps it).
+    pub fn summary(&self) -> String {
+        format!(
+            "job graph: submitted {}, deduped {}, cache hits {} (memory {}, disk {}), simulated {} — {} redundant legs eliminated",
+            self.submitted,
+            self.deduped,
+            self.memory_hits + self.disk_hits,
+            self.memory_hits,
+            self.disk_hits,
+            self.simulated,
+            self.eliminated(),
+        )
+    }
+}
+
+/// In-process result cache keyed by [`JobKey`], optionally backed by an
+/// on-disk directory (`--result-cache DIR`) of hand-rolled JSON files —
+/// one per key, named `{fingerprint:016x}.{mech}.{workload}.json`.
+pub struct SimCache {
+    map: HashMap<JobKey, Arc<SimResult>>,
+    disk: Option<PathBuf>,
+    pub stats: CacheStats,
+}
+
+impl SimCache {
+    /// Purely in-process cache (the default).
+    pub fn in_memory() -> Self {
+        Self { map: HashMap::new(), disk: None, stats: CacheStats::default() }
+    }
+
+    /// Cache backed by `dir`: misses are simulated then persisted, and a
+    /// later invocation pointed at the same directory reloads them.
+    pub fn with_disk(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating result cache dir {dir:?}"))?;
+        Ok(Self { map: HashMap::new(), disk: Some(dir), stats: CacheStats::default() })
+    }
+
+    fn disk_path(&self, key: &JobKey) -> Option<PathBuf> {
+        self.disk.as_ref().map(|d| {
+            d.join(format!(
+                "{:016x}.{}.{}.json",
+                key.cfg_fingerprint,
+                mech_slug(key.mechanism),
+                key.workload.slug()
+            ))
+        })
+    }
+
+    /// Look `key` up: memory first, then disk. Counts the hit.
+    fn get(&mut self, key: &JobKey) -> Option<Arc<SimResult>> {
+        if let Some(r) = self.map.get(key) {
+            self.stats.memory_hits += 1;
+            return Some(r.clone());
+        }
+        let path = self.disk_path(key)?;
+        let text = std::fs::read_to_string(path).ok()?;
+        let result = diskjson::decode_result(&text)?;
+        // A decoded file must actually describe this key's simulation:
+        // the fingerprint in the file name hashes only the config, so a
+        // renamed/forged file (or a PROFILES reorder in a build that
+        // forgot to bump `diskjson::VERSION`) would otherwise serve the
+        // wrong workload's result. Mismatches are misses: the job
+        // re-simulates and the insert overwrites the bad file.
+        if result.workload != expected_workload(key.workload)
+            || result.mechanism != key.mechanism.label()
+        {
+            return None;
+        }
+        let arc = Arc::new(result);
+        self.map.insert(*key, arc.clone());
+        self.stats.disk_hits += 1;
+        Some(arc)
+    }
+
+    /// Record a freshly simulated result (and persist it if disk-backed).
+    fn insert(&mut self, key: JobKey, result: Arc<SimResult>) {
+        if let Some(path) = self.disk_path(&key) {
+            // Atomic publish — write a process-unique temp file, then
+            // rename (atomic within a directory), so an invocation
+            // sharing this cache dir never reads a half-written entry.
+            // Persistence stays best-effort: a read-only dir degrades to
+            // the in-memory cache rather than failing the suite.
+            let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+            if std::fs::write(&tmp, diskjson::encode_result(&result)).is_ok()
+                && std::fs::rename(&tmp, &path).is_err()
+            {
+                let _ = std::fs::remove_file(&tmp);
+            }
+        }
+        self.map.insert(key, result);
+    }
+
+    /// Unique results currently held in memory (tests/telemetry).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// The `SimResult::workload` label a key's simulation produces (what
+/// `System::new`/`new_mix` stamp); disk loads are validated against it.
+fn expected_workload(w: WorkloadId) -> String {
+    match w {
+        WorkloadId::Single(i) => PROFILES[i].name.to_string(),
+        WorkloadId::Mix(m) => format!("mix{m:02}"),
+    }
+}
+
+fn mech_slug(m: MechanismKind) -> &'static str {
+    match m {
+        MechanismKind::Baseline => "baseline",
+        MechanismKind::ChargeCache => "cc",
+        MechanismKind::Nuat => "nuat",
+        MechanismKind::ChargeCacheNuat => "ccnuat",
+        MechanismKind::LlDram => "lldram",
+    }
+}
+
+/// Handle returned by [`JobGraph::submit`]; redeem it against the
+/// [`JobResults`] of the graph run that issued it.
+#[derive(Debug, Clone, Copy)]
+pub struct JobTicket(usize);
+
+/// A batch of submitted jobs, deduped by [`JobKey`] at submission time.
+#[derive(Default)]
+pub struct JobGraph {
+    /// Unique specs in first-submission order.
+    specs: Vec<JobSpec>,
+    index: HashMap<JobKey, usize>,
+    /// Per-submission index into `specs`.
+    tickets: Vec<usize>,
+}
+
+impl JobGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit a job; identical keys collapse onto one slot.
+    pub fn submit(&mut self, spec: JobSpec) -> JobTicket {
+        let key = spec.key();
+        let slot = match self.index.get(&key) {
+            Some(&s) => s,
+            None => {
+                let s = self.specs.len();
+                self.specs.push(spec);
+                self.index.insert(key, s);
+                s
+            }
+        };
+        self.tickets.push(slot);
+        JobTicket(self.tickets.len() - 1)
+    }
+
+    /// Unique jobs currently in the graph.
+    pub fn unique_len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Total submissions (including duplicates).
+    pub fn submitted_len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    /// Run the graph memoized: cached keys are served from `cache`, the
+    /// rest fan out through one cost-ordered `parallel_map` call, and
+    /// fresh results are inserted back into `cache`.
+    pub fn run(self, cache: &mut SimCache) -> JobResults {
+        cache.stats.submitted += self.tickets.len() as u64;
+        cache.stats.deduped += (self.tickets.len() - self.specs.len()) as u64;
+
+        let mut slots: Vec<Option<Arc<SimResult>>> = vec![None; self.specs.len()];
+        let mut to_run: Vec<usize> = Vec::new();
+        for (i, spec) in self.specs.iter().enumerate() {
+            match cache.get(&spec.key()) {
+                Some(r) => slots[i] = Some(r),
+                None => to_run.push(i),
+            }
+        }
+
+        // Cost-ordered dispatch: most expensive first, submission order as
+        // the deterministic tie-break. The atomic-index runner consumes
+        // jobs in this order, so the long eight-core mixes start while
+        // every worker still has a deep queue behind it, instead of one
+        // worker dragging a tail-end mix alone.
+        to_run.sort_by_key(|&i| (std::cmp::Reverse(self.specs[i].cost()), i));
+
+        cache.stats.simulated += to_run.len() as u64;
+        let specs = &self.specs;
+        let order = &to_run;
+        let results = parallel_map(order.len(), |j| specs[order[j]].run());
+        for (j, r) in results.into_iter().enumerate() {
+            let i = to_run[j];
+            let arc = Arc::new(r);
+            cache.insert(self.specs[i].key(), arc.clone());
+            slots[i] = Some(arc);
+        }
+
+        JobResults {
+            tickets: self.tickets,
+            unique: slots.into_iter().map(|s| s.expect("every slot filled")).collect(),
+        }
+    }
+
+    /// Run every submission independently — no dedup, no cache reads or
+    /// writes, no cost ordering. This is the `--no-memo` escape hatch and
+    /// the bench baseline that reproduces the pre-job-graph behavior; it
+    /// still feeds the submission/simulation counters.
+    pub fn run_all(self, cache: &mut SimCache) -> JobResults {
+        cache.stats.submitted += self.tickets.len() as u64;
+        cache.stats.simulated += self.tickets.len() as u64;
+        let specs = &self.specs;
+        let tickets = &self.tickets;
+        let results = parallel_map(tickets.len(), |j| specs[tickets[j]].run());
+        JobResults {
+            tickets: (0..self.tickets.len()).collect(),
+            unique: results.into_iter().map(Arc::new).collect(),
+        }
+    }
+}
+
+/// Results of one graph run: redeem [`JobTicket`]s for shared
+/// [`SimResult`]s.
+pub struct JobResults {
+    tickets: Vec<usize>,
+    unique: Vec<Arc<SimResult>>,
+}
+
+impl JobResults {
+    pub fn get(&self, t: JobTicket) -> &SimResult {
+        self.unique[self.tickets[t.0]].as_ref()
+    }
+}
+
+/// Execution context threaded through every experiment: the shared
+/// result cache plus the memoization switch (`--no-memo`).
+pub struct JobEngine {
+    pub cache: SimCache,
+    /// When false, every graph runs through [`JobGraph::run_all`].
+    pub memo: bool,
+}
+
+impl JobEngine {
+    /// Memoizing engine with an in-process cache (the default).
+    pub fn new() -> Self {
+        Self { cache: SimCache::in_memory(), memo: true }
+    }
+
+    /// Non-memoizing engine: every submission simulates (`--no-memo`).
+    pub fn no_memo() -> Self {
+        Self { cache: SimCache::in_memory(), memo: false }
+    }
+
+    /// Memoizing engine persisted under `dir` (`--result-cache DIR`).
+    pub fn with_disk(dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Self { cache: SimCache::with_disk(dir)?, memo: true })
+    }
+
+    pub fn run(&mut self, graph: JobGraph) -> JobResults {
+        if self.memo {
+            graph.run(&mut self.cache)
+        } else {
+            graph.run_all(&mut self.cache)
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats
+    }
+}
+
+impl Default for JobEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Hand-rolled JSON codec for persisted [`SimResult`]s (the offline build
+/// has no serde). The format is versioned and fully under our control:
+///
+/// * every `f64` is stored as its IEEE-754 bit pattern (a JSON integer),
+///   so round-trips are bit-exact — the memoization acceptance criterion
+///   is bit-identity, and decimal printing cannot guarantee it;
+/// * `McStats` is a fixed-order 14-integer array per channel;
+/// * `EnergyBreakdown` is a fixed-order 5-integer (bits) array.
+///
+/// Any parse failure — wrong version, unknown mechanism label, malformed
+/// text — decodes to `None` and is treated as a cache miss, so a stale
+/// or corrupt cache directory degrades to re-simulation, never to a
+/// wrong result.
+mod diskjson {
+    use crate::controller::McStats;
+    use crate::energy::EnergyBreakdown;
+    use crate::latency::MechanismKind;
+    use crate::sim::SimResult;
+
+    /// Cache-entry version: covers the JSON layout **and** simulator
+    /// semantics. Bump it whenever the encoding changes *or* a code
+    /// change can alter any simulation's results (timing model, trace
+    /// generation, scheduler/mechanism behavior, PROFILES order) — the
+    /// config fingerprint in the file name cannot see code changes, so
+    /// this constant is what keeps an on-disk cache from serving results
+    /// an older build computed.
+    pub const VERSION: u64 = 1;
+
+    // ---- encoding ----
+
+    fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    fn bits_array(vals: &[f64]) -> String {
+        let items: Vec<String> = vals.iter().map(|v| v.to_bits().to_string()).collect();
+        format!("[{}]", items.join(","))
+    }
+
+    fn mc_array(m: &McStats) -> String {
+        // Fixed field order; bump VERSION if it ever changes.
+        format!(
+            "[{},{},{},{},{},{},{},{},{},{},{},{},{},{}]",
+            m.acts,
+            m.acts_reduced,
+            m.reads,
+            m.writes,
+            m.precharges,
+            m.refreshes,
+            m.row_hits,
+            m.row_misses,
+            m.row_conflicts,
+            m.read_latency_sum,
+            m.read_latency_cnt,
+            m.bank_open_cycles,
+            m.wq_forwards,
+            m.rejects
+        )
+    }
+
+    pub fn encode_result(r: &SimResult) -> String {
+        let mcs: Vec<String> = r.mc.iter().map(mc_array).collect();
+        let e = &r.energy;
+        let energy =
+            bits_array(&[e.act_pre_nj, e.read_nj, e.write_nj, e.refresh_nj, e.background_nj]);
+        format!(
+            "{{\n  \"version\": {VERSION},\n  \"workload\": \"{}\",\n  \"mechanism\": \"{}\",\n  \"core_ipc_bits\": {},\n  \"cpu_cycles\": {},\n  \"mc\": [{}],\n  \"rltl_bits\": {},\n  \"energy_bits\": {},\n  \"total_insts\": {},\n  \"llc_hits\": {},\n  \"llc_misses\": {}\n}}\n",
+            escape(&r.workload),
+            escape(r.mechanism),
+            bits_array(&r.core_ipc),
+            r.cpu_cycles,
+            mcs.join(","),
+            bits_array(&r.rltl),
+            energy,
+            r.total_insts,
+            r.llc_hits,
+            r.llc_misses
+        )
+    }
+
+    // ---- minimal JSON parser (objects, arrays, strings, u64 numbers) ----
+
+    #[derive(Debug, Clone)]
+    enum Val {
+        U64(u64),
+        Str(String),
+        Arr(Vec<Val>),
+        Obj(Vec<(String, Val)>),
+    }
+
+    struct Parser<'a> {
+        s: &'a [u8],
+        i: usize,
+    }
+
+    impl<'a> Parser<'a> {
+        fn new(s: &'a str) -> Self {
+            Self { s: s.as_bytes(), i: 0 }
+        }
+
+        fn ws(&mut self) {
+            while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+                self.i += 1;
+            }
+        }
+
+        fn eat(&mut self, b: u8) -> Option<()> {
+            self.ws();
+            if self.i < self.s.len() && self.s[self.i] == b {
+                self.i += 1;
+                Some(())
+            } else {
+                None
+            }
+        }
+
+        fn peek(&mut self) -> Option<u8> {
+            self.ws();
+            self.s.get(self.i).copied()
+        }
+
+        fn value(&mut self) -> Option<Val> {
+            match self.peek()? {
+                b'{' => self.object(),
+                b'[' => self.array(),
+                b'"' => self.string().map(Val::Str),
+                b'0'..=b'9' => self.number(),
+                _ => None,
+            }
+        }
+
+        fn number(&mut self) -> Option<Val> {
+            self.ws();
+            let start = self.i;
+            while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+            if self.i == start {
+                return None;
+            }
+            std::str::from_utf8(&self.s[start..self.i]).ok()?.parse().ok().map(Val::U64)
+        }
+
+        fn string(&mut self) -> Option<String> {
+            self.eat(b'"')?;
+            let mut out = String::new();
+            loop {
+                let b = *self.s.get(self.i)?;
+                self.i += 1;
+                match b {
+                    b'"' => return Some(out),
+                    b'\\' => {
+                        let e = *self.s.get(self.i)?;
+                        self.i += 1;
+                        match e {
+                            b'"' => out.push('"'),
+                            b'\\' => out.push('\\'),
+                            b'u' => {
+                                let hex = self.s.get(self.i..self.i + 4)?;
+                                self.i += 4;
+                                let code =
+                                    u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+                                out.push(char::from_u32(code)?);
+                            }
+                            _ => return None,
+                        }
+                    }
+                    b if b < 0x80 => out.push(b as char),
+                    _ => {
+                        // Multi-byte UTF-8: workload labels are ASCII, but
+                        // decode correctly anyway via str validation.
+                        let start = self.i - 1;
+                        let width = utf8_width(b)?;
+                        let bytes = self.s.get(start..start + width)?;
+                        self.i = start + width;
+                        out.push_str(std::str::from_utf8(bytes).ok()?);
+                    }
+                }
+            }
+        }
+
+        fn array(&mut self) -> Option<Val> {
+            self.eat(b'[')?;
+            let mut items = Vec::new();
+            if self.peek()? == b']' {
+                self.i += 1;
+                return Some(Val::Arr(items));
+            }
+            loop {
+                items.push(self.value()?);
+                match self.peek()? {
+                    b',' => {
+                        self.i += 1;
+                    }
+                    b']' => {
+                        self.i += 1;
+                        return Some(Val::Arr(items));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+
+        fn object(&mut self) -> Option<Val> {
+            self.eat(b'{')?;
+            let mut items = Vec::new();
+            if self.peek()? == b'}' {
+                self.i += 1;
+                return Some(Val::Obj(items));
+            }
+            loop {
+                let k = self.string()?;
+                self.eat(b':')?;
+                let v = self.value()?;
+                items.push((k, v));
+                match self.peek()? {
+                    b',' => {
+                        self.i += 1;
+                    }
+                    b'}' => {
+                        self.i += 1;
+                        return Some(Val::Obj(items));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+    }
+
+    fn utf8_width(lead: u8) -> Option<usize> {
+        match lead {
+            0xC0..=0xDF => Some(2),
+            0xE0..=0xEF => Some(3),
+            0xF0..=0xF7 => Some(4),
+            _ => None,
+        }
+    }
+
+    impl Val {
+        fn field(&self, name: &str) -> Option<&Val> {
+            match self {
+                Val::Obj(items) => items.iter().find(|(k, _)| k == name).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+
+        fn u64(&self) -> Option<u64> {
+            match self {
+                Val::U64(v) => Some(*v),
+                _ => None,
+            }
+        }
+
+        fn str(&self) -> Option<&str> {
+            match self {
+                Val::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        fn f64_bits_vec(&self) -> Option<Vec<f64>> {
+            match self {
+                Val::Arr(items) => {
+                    items.iter().map(|v| v.u64().map(f64::from_bits)).collect()
+                }
+                _ => None,
+            }
+        }
+
+        fn u64_vec(&self) -> Option<Vec<u64>> {
+            match self {
+                Val::Arr(items) => items.iter().map(Val::u64).collect(),
+                _ => None,
+            }
+        }
+    }
+
+    fn decode_mc(v: &Val) -> Option<McStats> {
+        let f = v.u64_vec()?;
+        if f.len() != 14 {
+            return None;
+        }
+        Some(McStats {
+            acts: f[0],
+            acts_reduced: f[1],
+            reads: f[2],
+            writes: f[3],
+            precharges: f[4],
+            refreshes: f[5],
+            row_hits: f[6],
+            row_misses: f[7],
+            row_conflicts: f[8],
+            read_latency_sum: f[9],
+            read_latency_cnt: f[10],
+            bank_open_cycles: f[11],
+            wq_forwards: f[12],
+            rejects: f[13],
+        })
+    }
+
+    pub fn decode_result(text: &str) -> Option<SimResult> {
+        let root = Parser::new(text).value()?;
+        if root.field("version")?.u64()? != VERSION {
+            return None;
+        }
+        // The mechanism label must map back onto the interned &'static str.
+        let label = root.field("mechanism")?.str()?;
+        let mechanism = MechanismKind::all().into_iter().find(|m| m.label() == label)?.label();
+        let mc = match root.field("mc")? {
+            Val::Arr(items) => items.iter().map(decode_mc).collect::<Option<Vec<_>>>()?,
+            _ => return None,
+        };
+        let e = root.field("energy_bits")?.f64_bits_vec()?;
+        if e.len() != 5 {
+            return None;
+        }
+        Some(SimResult {
+            workload: root.field("workload")?.str()?.to_string(),
+            mechanism,
+            core_ipc: root.field("core_ipc_bits")?.f64_bits_vec()?,
+            cpu_cycles: root.field("cpu_cycles")?.u64()?,
+            mc,
+            rltl: root.field("rltl_bits")?.f64_bits_vec()?,
+            energy: EnergyBreakdown {
+                act_pre_nj: e[0],
+                read_nj: e[1],
+                write_nj: e[2],
+                refresh_nj: e[3],
+                background_nj: e[4],
+            },
+            total_insts: root.field("total_insts")?.u64()?,
+            llc_hits: root.field("llc_hits")?.u64()?,
+            llc_misses: root.field("llc_misses")?.u64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiments::ExperimentScale;
+
+    fn tiny_scale() -> ExperimentScale {
+        ExperimentScale {
+            insts_per_core: 2_000,
+            warmup_cycles: 1_000,
+            mixes: 1,
+            ..ExperimentScale::default()
+        }
+    }
+
+    fn tiny_single(mech: MechanismKind, w: usize) -> JobSpec {
+        JobSpec::single(tiny_scale().single_cfg(), mech, w)
+    }
+
+    #[test]
+    fn duplicate_submissions_share_one_simulation() {
+        let mut g = JobGraph::new();
+        let a = g.submit(tiny_single(MechanismKind::Baseline, 0));
+        let b = g.submit(tiny_single(MechanismKind::Baseline, 0));
+        let c = g.submit(tiny_single(MechanismKind::ChargeCache, 0));
+        assert_eq!(g.unique_len(), 2);
+        assert_eq!(g.submitted_len(), 3);
+
+        let mut cache = SimCache::in_memory();
+        let res = g.run(&mut cache);
+        assert_eq!(cache.stats.submitted, 3);
+        assert_eq!(cache.stats.deduped, 1);
+        assert_eq!(cache.stats.simulated, 2);
+        // Duplicates share the same Arc, and the distinct mechanism does not.
+        assert!(std::ptr::eq(res.get(a), res.get(b)));
+        assert!(!std::ptr::eq(res.get(a), res.get(c)));
+    }
+
+    #[test]
+    fn second_graph_hits_in_process_cache() {
+        let mut cache = SimCache::in_memory();
+        let mut g1 = JobGraph::new();
+        let t1 = g1.submit(tiny_single(MechanismKind::Baseline, 1));
+        let r1 = g1.run(&mut cache);
+
+        let mut g2 = JobGraph::new();
+        let t2 = g2.submit(tiny_single(MechanismKind::Baseline, 1));
+        let r2 = g2.run(&mut cache);
+
+        assert_eq!(cache.stats.simulated, 1);
+        assert_eq!(cache.stats.memory_hits, 1);
+        assert_eq!(r1.get(t1), r2.get(t2));
+    }
+
+    #[test]
+    fn run_all_bypasses_dedup_and_cache() {
+        let mut cache = SimCache::in_memory();
+        let mut g = JobGraph::new();
+        let a = g.submit(tiny_single(MechanismKind::Baseline, 2));
+        let b = g.submit(tiny_single(MechanismKind::Baseline, 2));
+        let res = g.run_all(&mut cache);
+        assert_eq!(cache.stats.simulated, 2);
+        assert_eq!(cache.stats.deduped, 0);
+        assert!(cache.is_empty(), "run_all must not populate the cache");
+        // Independent simulations of the same spec are still bit-identical
+        // (simulations are pure functions of the spec).
+        assert_eq!(res.get(a), res.get(b));
+        assert!(!std::ptr::eq(res.get(a), res.get(b)));
+    }
+
+    #[test]
+    fn cost_orders_mixes_before_singles() {
+        let scale = tiny_scale();
+        let single = tiny_single(MechanismKind::Baseline, 0);
+        let mix = JobSpec::mix(scale.eight_cfg(), MechanismKind::Baseline, 0);
+        assert!(mix.cost() > single.cost(), "eight-core mixes must sort first");
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let mut g = JobGraph::new();
+        let t = g.submit(tiny_single(MechanismKind::ChargeCache, 3));
+        let mut cache = SimCache::in_memory();
+        let res = g.run(&mut cache);
+        let original = res.get(t);
+
+        let text = super::diskjson::encode_result(original);
+        let decoded = super::diskjson::decode_result(&text).expect("decodes");
+        assert_eq!(&decoded, original);
+        // Bit-exactness beyond PartialEq: every float's bit pattern.
+        for (a, b) in original.core_ipc.iter().zip(&decoded.core_ipc) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in original.rltl.iter().zip(&decoded.rltl) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(original.energy.total_nj().to_bits(), decoded.energy.total_nj().to_bits());
+    }
+
+    #[test]
+    fn corrupt_or_versioned_json_is_a_miss() {
+        assert!(super::diskjson::decode_result("").is_none());
+        assert!(super::diskjson::decode_result("{").is_none());
+        assert!(super::diskjson::decode_result("{\"version\": 999}").is_none());
+        assert!(super::diskjson::decode_result("[1,2,3]").is_none());
+    }
+
+    #[test]
+    fn disk_cache_round_trips_across_engines() {
+        let dir = std::env::temp_dir().join(format!("cc_simcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut first = SimCache::with_disk(&dir).unwrap();
+        let mut g1 = JobGraph::new();
+        let t1 = g1.submit(tiny_single(MechanismKind::Nuat, 4));
+        let r1 = g1.run(&mut first);
+        assert_eq!(first.stats.simulated, 1);
+
+        // A fresh cache over the same directory serves the job from disk.
+        let mut second = SimCache::with_disk(&dir).unwrap();
+        let mut g2 = JobGraph::new();
+        let t2 = g2.submit(tiny_single(MechanismKind::Nuat, 4));
+        let r2 = g2.run(&mut second);
+        assert_eq!(second.stats.simulated, 0);
+        assert_eq!(second.stats.disk_hits, 1);
+        assert_eq!(r1.get(t1), r2.get(t2), "disk round-trip must be bit-identical");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn forged_disk_entry_is_rejected_and_resimulated() {
+        // The fingerprint in the file name only hashes the config, so a
+        // file copied onto another key's path (or a stale cache from a
+        // build with different PROFILES) must be rejected by the
+        // workload check, not served as that key's result.
+        let dir = std::env::temp_dir().join(format!("cc_forged_cache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let spec_a = tiny_single(MechanismKind::Baseline, 5);
+        let spec_b = tiny_single(MechanismKind::Baseline, 6);
+        let mut cache = SimCache::with_disk(&dir).unwrap();
+        let mut g = JobGraph::new();
+        g.submit(spec_a.clone());
+        g.run(&mut cache);
+        // Forge: present workload 5's result under workload 6's key.
+        let pa = cache.disk_path(&spec_a.key()).unwrap();
+        let pb = cache.disk_path(&spec_b.key()).unwrap();
+        std::fs::copy(&pa, &pb).unwrap();
+
+        let mut fresh = SimCache::with_disk(&dir).unwrap();
+        let mut g2 = JobGraph::new();
+        let t = g2.submit(spec_b);
+        let res = g2.run(&mut fresh);
+        assert_eq!(fresh.stats.disk_hits, 0, "forged entry must not hit");
+        assert_eq!(fresh.stats.simulated, 1, "forged entry must re-simulate");
+        assert_eq!(res.get(t).workload, PROFILES[6].name);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn distinct_configs_do_not_alias() {
+        let mut g = JobGraph::new();
+        let mut hot = tiny_scale().single_cfg();
+        hot.temperature_c = 45.0;
+        g.submit(tiny_single(MechanismKind::Baseline, 0));
+        g.submit(JobSpec::single(hot, MechanismKind::Baseline, 0));
+        assert_eq!(g.unique_len(), 2, "config differences must split jobs");
+    }
+}

@@ -5,7 +5,9 @@
 pub mod cli;
 pub mod experiments;
 pub mod figures;
+pub mod jobs;
 pub mod runner;
 
 pub use experiments::{ExperimentScale, Fig4Row, SuiteResults};
+pub use jobs::{CacheStats, JobEngine, JobGraph, JobKey, JobSpec, SimCache, WorkloadId};
 pub use runner::parallel_map;

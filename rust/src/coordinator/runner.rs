@@ -9,7 +9,7 @@
 //! shared machines — results are index-pure either way.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::OnceLock;
 
 /// Worker-count pin for [`parallel_map`]; 0 means "not pinned".
 static THREAD_PIN: AtomicUsize = AtomicUsize::new(0);
@@ -40,14 +40,22 @@ fn default_threads() -> usize {
 
 /// Run `f(0..n)` across `threads` workers, preserving index order in the
 /// returned Vec. `f` must be pure w.r.t. the index.
+///
+/// Results land in per-slot [`OnceLock`]s: each index is claimed by
+/// exactly one worker (the atomic fetch-add hands out every index once),
+/// so the write is an uncontended lock-free store — the previous
+/// `Mutex<Option<T>>` slots paid a lock/unlock round-trip per job for
+/// mutual exclusion that the index claim already guarantees. The `Sync`
+/// bound on `T` comes with sharing the `OnceLock` slots across workers
+/// (`Mutex` needed only `Send`); every job payload here is plain data.
 pub fn parallel_map_threads<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
-    T: Send,
+    T: Send + Sync,
     F: Fn(usize) -> T + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
     let next = AtomicUsize::new(0);
-    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let out: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -56,12 +64,14 @@ where
                     break;
                 }
                 let v = f(i);
-                *out[i].lock().unwrap() = Some(v);
+                if out[i].set(v).is_err() {
+                    unreachable!("index {i} claimed twice");
+                }
             });
         }
     });
     out.into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .map(|c| c.into_inner().expect("worker filled every slot"))
         .collect()
 }
 
@@ -69,7 +79,7 @@ where
 /// `PALLAS_THREADS` > available parallelism).
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
-    T: Send,
+    T: Send + Sync,
     F: Fn(usize) -> T + Sync,
 {
     parallel_map_threads(n, default_threads(), f)

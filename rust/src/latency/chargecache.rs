@@ -83,10 +83,12 @@ impl CoreTable {
             e.lru = self.stamp;
             return;
         }
-        let victim = set
-            .iter_mut()
-            .min_by_key(|e| if e.valid { e.lru } else { 0 })
-            .expect("ways >= 1");
+        // Invalid ways win outright (false < true); among valid ways the
+        // lowest LRU stamp loses. Keying both on a bare `e.lru` would map
+        // an invalid way and a BIP-cold-inserted way (lru = 0) to the
+        // same key, letting `min_by_key`'s first-wins tie-break evict a
+        // live entry while an empty way sits in the set.
+        let victim = set.iter_mut().min_by_key(|e| (e.valid, e.lru)).expect("ways >= 1");
         let lru = if promote { self.stamp } else { 0 };
         *victim = Entry { valid: true, key: key.0, inserted_at: now, lru };
     }
@@ -275,6 +277,30 @@ mod tests {
         c.on_precharge(3, 0, key(3)); // evicts key(2)
         assert!(!c.on_activate(4, 0, key(2)).reduced);
         assert!(c.on_activate(4, 0, key(3)).reduced);
+    }
+
+    #[test]
+    fn cold_insert_never_evicts_over_an_empty_way() {
+        // Regression: a BIP cold insertion leaves an entry at lru = 0,
+        // the same victim key the old code gave invalid ways — so the
+        // next insert could evict the live cold entry while an empty way
+        // existed. Drive CoreTable directly (1 set x 2 ways).
+        let mut t = CoreTable::new(2, 2);
+        let k = |row: u32| RowKey::new(0, 0, row);
+        t.insert(k(1), 0, false); // cold insert: lands with lru = 0
+        assert_eq!(t.occupancy(), 1);
+        t.insert(k(2), 1, true); // must fill the empty way, not evict k1
+        assert_eq!(t.occupancy(), 2, "second insert must use the empty way");
+        assert!(t.lookup(k(1), 2, 1000), "cold entry survived");
+        assert!(t.lookup(k(2), 2, 1000));
+        // With the set now full, a further insert evicts the true LRU
+        // (the cold entry, which was never touched before the lookups
+        // above promoted it — so after touching k1 then k2, k1 is LRU).
+        t.insert(k(3), 3, true);
+        assert_eq!(t.occupancy(), 2);
+        assert!(!t.lookup(k(1), 4, 1000), "LRU entry evicted");
+        assert!(t.lookup(k(2), 4, 1000));
+        assert!(t.lookup(k(3), 4, 1000));
     }
 
     #[test]

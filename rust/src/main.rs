@@ -6,6 +6,7 @@
 //! chargecache fig3   [--csv path]                           Fig. 3  (bitline)
 //! chargecache fig4   --cores 1|8 [--insts N] [--quick]      Fig. 4  (speedup)
 //! chargecache fig5   --cores 1|8 [--insts N] [--quick]      Fig. 5  (energy)
+//! chargecache figures [--quick] [--result-cache DIR]        all of the above
 //! chargecache area                                          Sec. 6.5 overhead
 //! chargecache sweep-capacity | sweep-duration | sweep-temperature
 //! chargecache simulate --workload mcf --mechanism cc [--cores N]
@@ -18,13 +19,22 @@
 //! differential-testing oracle — results are bit-identical, only slower).
 //! `--threads N` (or the `PALLAS_THREADS` env var) pins the parallel
 //! runner's worker count for reproducible suite benchmarking.
+//!
+//! Every suite command executes through the fingerprint-keyed job graph
+//! (`coordinator::jobs`, DESIGN.md §5): structurally identical legs are
+//! deduplicated and memoized, so `figures` simulates each unique
+//! (config, mechanism, workload) exactly once across all its figures.
+//! `--result-cache DIR` persists results across invocations; `--no-memo`
+//! restores the naive one-simulation-per-leg behavior.
 
 use chargecache::config::SystemConfig;
 use chargecache::coordinator::cli::Args;
 use chargecache::coordinator::experiments::{
-    fig1, run_suite, sweep_capacity, sweep_duration, sweep_temperature, ExperimentScale,
+    fig1_with, run_suite_with, sweep_capacity_with, sweep_duration_with, sweep_temperature_with,
+    ExperimentScale,
 };
 use chargecache::coordinator::figures::{bar, f, pct, print_table, write_csv};
+use chargecache::coordinator::jobs::JobEngine;
 use chargecache::energy::HcracCost;
 use chargecache::error::{Context, Result};
 use chargecache::latency::MechanismKind;
@@ -49,20 +59,38 @@ fn scale_from(args: &Args) -> Result<ExperimentScale> {
     Ok(s)
 }
 
+/// Build the shared job engine from the memoization flags: every suite
+/// command executes through a fingerprint-keyed job graph that dedupes
+/// identical (config, mechanism, workload) legs.
+fn engine_from(args: &Args) -> Result<JobEngine> {
+    let mut eng = match args.get("result-cache") {
+        Some(dir) => JobEngine::with_disk(dir)?,
+        None => JobEngine::new(),
+    };
+    if args.flag("no-memo") {
+        eng.memo = false;
+    }
+    Ok(eng)
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     // Worker-count pin for every parallel_map fan-out (reproducible
     // benchmarking); 0 keeps the PALLAS_THREADS / machine fallback.
     chargecache::coordinator::runner::set_threads(args.get_usize("threads", 0)?);
+    // One engine per invocation: commands that run several experiments
+    // (`figures`) share its cache, so overlapping legs simulate once.
+    let mut eng = engine_from(&args)?;
     match args.command.as_str() {
-        "fig1" => cmd_fig1(&args),
+        "fig1" => cmd_fig1(&args, &mut eng),
         "fig3" => cmd_fig3(&args),
-        "fig4" => cmd_fig4(&args),
-        "fig5" => cmd_fig5(&args),
+        "fig4" => cmd_fig4(&args, &mut eng),
+        "fig5" => cmd_fig5(&args, &mut eng),
+        "figures" => cmd_figures(&args, &mut eng),
         "area" => cmd_area(&args),
-        "sweep-capacity" => cmd_sweep_capacity(&args),
-        "sweep-duration" => cmd_sweep_duration(&args),
-        "sweep-temperature" => cmd_sweep_temperature(&args),
+        "sweep-capacity" => cmd_sweep_capacity(&args, &mut eng),
+        "sweep-duration" => cmd_sweep_duration(&args, &mut eng),
+        "sweep-temperature" => cmd_sweep_temperature(&args, &mut eng),
         "simulate" => cmd_simulate(&args),
         "gen-traces" => cmd_gen_traces(&args),
         "timing-table" => cmd_timing_table(&args),
@@ -70,20 +98,36 @@ fn main() -> Result<()> {
             println!("{}", HELP);
             Ok(())
         }
+    }?;
+    // Dedup/hit telemetry for every command that ran the job graph.
+    if eng.stats().submitted > 0 {
+        println!("\n{}", eng.stats().summary());
     }
+    Ok(())
 }
 
 const HELP: &str = "chargecache — ChargeCache (HPCA'16) reproduction
-commands: fig1 fig3 fig4 fig5 area sweep-capacity sweep-duration
+commands: fig1 fig3 fig4 fig5 figures area sweep-capacity sweep-duration
           sweep-temperature simulate gen-traces timing-table
+
+  figures regenerates fig1 + fig4a/b + fig5 (1- and 8-core) + the
+  capacity sweep over ONE memoized job graph: legs shared between
+  figures (fig1's baselines, fig5's suite, the sweep's default point)
+  simulate exactly once; the run ends with dedup/hit counters.
+
 common options: --insts N --warmup N --mixes M --quick --strict-tick
                 --scheduler fr-fcfs|fcfs|bliss
-                --threads N (or PALLAS_THREADS=N) pins the worker count";
+                --threads N (or PALLAS_THREADS=N) pins the worker count
+memoization:    --result-cache DIR persists simulation results on disk,
+                keyed by config fingerprint — a re-run (same config)
+                loads instead of simulating
+                --no-memo disables dedup + caching (every submitted leg
+                simulates; the pre-job-graph behavior)";
 
-fn cmd_fig1(args: &Args) -> Result<()> {
+fn cmd_fig1(args: &Args, eng: &mut JobEngine) -> Result<()> {
     let scale = scale_from(args)?;
     println!("Fig. 1 — average t-RLTL ({} workloads, {} mixes)", PROFILES.len(), scale.mixes);
-    let rows_data = fig1(scale);
+    let rows_data = fig1_with(scale, eng);
     let rows: Vec<Vec<String>> = rows_data
         .iter()
         .map(|(ms, s, e)| {
@@ -205,16 +249,19 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fig4(args: &Args) -> Result<()> {
+fn cmd_fig4(args: &Args, eng: &mut JobEngine) -> Result<()> {
+    let eight = args.get_usize("cores", 1)? > 1;
+    render_fig4(args, eng, eight)
+}
+
+fn render_fig4(args: &Args, eng: &mut JobEngine, eight: bool) -> Result<()> {
     let scale = scale_from(args)?;
-    let cores = args.get_usize("cores", 1)?;
-    let eight = cores > 1;
     println!(
         "Fig. 4{} — speedup ({} insts/core)",
         if eight { "b" } else { "a" },
         scale.insts_per_core
     );
-    let suite = run_suite(scale, eight);
+    let suite = run_suite_with(scale, eight, eng);
     let rows = if eight { suite.fig4b() } else { suite.fig4a() };
 
     let table: Vec<Vec<String>> = rows
@@ -260,12 +307,15 @@ fn cmd_fig4(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fig5(args: &Args) -> Result<()> {
+fn cmd_fig5(args: &Args, eng: &mut JobEngine) -> Result<()> {
+    let eight = args.get_usize("cores", 8)? > 1;
+    render_fig5(args, eng, eight)
+}
+
+fn render_fig5(args: &Args, eng: &mut JobEngine, eight: bool) -> Result<()> {
     let scale = scale_from(args)?;
-    let cores = args.get_usize("cores", 8)?;
-    let eight = cores > 1;
     println!("Fig. 5 — DRAM energy reduction ({}-core)", if eight { 8 } else { 1 });
-    let suite = run_suite(scale, eight);
+    let suite = run_suite_with(scale, eight, eng);
     let data = suite.fig5(eight);
 
     let rows: Vec<Vec<String>> = data
@@ -329,11 +379,30 @@ fn cmd_area(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep_capacity(args: &Args) -> Result<()> {
+/// Regenerate every simulation-driven figure plus one sensitivity sweep
+/// over the shared memoized engine. Overlap is the point: fig1's
+/// baselines are a subset of the suite's Baseline legs, fig5 re-reads
+/// fig4's suite wholesale, and the capacity sweep's 128-entry point *is*
+/// the default configuration — each simulates exactly once.
+fn cmd_figures(args: &Args, eng: &mut JobEngine) -> Result<()> {
+    cmd_fig1(args, eng)?;
+    println!();
+    render_fig4(args, eng, false)?;
+    println!();
+    render_fig4(args, eng, true)?;
+    println!();
+    render_fig5(args, eng, false)?;
+    println!();
+    render_fig5(args, eng, true)?;
+    println!();
+    cmd_sweep_capacity(args, eng)
+}
+
+fn cmd_sweep_capacity(args: &Args, eng: &mut JobEngine) -> Result<()> {
     let scale = scale_from(args)?;
     let entries = [32usize, 64, 128, 256, 512, 1024];
     println!("Sensitivity — HCRAC capacity (8-core, CC speedup vs baseline)");
-    let rows = sweep_capacity(scale, &entries);
+    let rows = sweep_capacity_with(scale, &entries, eng);
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|(e, s)| vec![e.to_string(), f(*s, 4), bar(s - 1.0, 0.15, 30)])
@@ -347,11 +416,11 @@ fn cmd_sweep_capacity(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep_duration(args: &Args) -> Result<()> {
+fn cmd_sweep_duration(args: &Args, eng: &mut JobEngine) -> Result<()> {
     let scale = scale_from(args)?;
     let durations = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
     println!("Sensitivity — caching duration (reductions from the circuit layer)");
-    let rows = sweep_duration(scale, &durations);
+    let rows = sweep_duration_with(scale, &durations, eng);
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|(d, s)| vec![format!("{d} ms"), f(*s, 4), bar(s - 1.0, 0.15, 30)])
@@ -365,11 +434,11 @@ fn cmd_sweep_duration(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep_temperature(args: &Args) -> Result<()> {
+fn cmd_sweep_temperature(args: &Args, eng: &mut JobEngine) -> Result<()> {
     let scale = scale_from(args)?;
     let temps = [45.0, 55.0, 65.0, 75.0, 85.0];
     println!("Sensitivity — temperature (paper Sec. 8.3: CC works at worst case)");
-    let rows = sweep_temperature(scale, &temps);
+    let rows = sweep_temperature_with(scale, &temps, eng);
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|(t, s)| vec![format!("{t} C"), f(*s, 4), bar(s - 1.0, 0.15, 30)])

@@ -1,0 +1,115 @@
+//! Memoization correctness: the job graph (DESIGN.md §5) must be
+//! invisible in the results — a memoized suite is bit-identical to an
+//! uncached run — and its dedup/hit counters must match the leg counts
+//! the experiment structure predicts.
+
+use chargecache::coordinator::experiments::{
+    fig1_with, run_suite_with, sweep_capacity_with, ExperimentScale,
+};
+use chargecache::coordinator::jobs::JobEngine;
+use chargecache::trace::PROFILES;
+
+/// Mechanisms per suite leg (Baseline, CC, NUAT, CC+NUAT, LL-DRAM).
+const MECHS: u64 = 5;
+
+fn tiny(mixes: usize) -> ExperimentScale {
+    ExperimentScale {
+        insts_per_core: 2_000,
+        warmup_cycles: 1_000,
+        mixes,
+        ..ExperimentScale::default()
+    }
+}
+
+#[test]
+fn memoized_suite_is_bit_identical_to_uncached() {
+    let scale = tiny(1);
+    let singles = PROFILES.len() as u64;
+    let legs = singles * MECHS + MECHS;
+
+    let mut memo = JobEngine::new();
+    let memo_suite = run_suite_with(scale, true, &mut memo);
+    // All legs of one fresh suite are unique: memoization must neither
+    // skip nor repeat any.
+    assert_eq!(memo.stats().submitted, legs);
+    assert_eq!(memo.stats().simulated, legs);
+    assert_eq!(memo.stats().eliminated(), 0);
+
+    let mut raw = JobEngine::no_memo();
+    let raw_suite = run_suite_with(scale, true, &mut raw);
+    assert_eq!(raw.stats().simulated, legs);
+
+    // Bit-identical results (SimResult includes every counter, the f64
+    // IPC/RLTL vectors, and the energy breakdown).
+    assert_eq!(memo_suite.single, raw_suite.single);
+    assert_eq!(memo_suite.eight, raw_suite.eight);
+    assert_eq!(memo_suite.alone_ipc, raw_suite.alone_ipc);
+}
+
+#[test]
+fn figures_pipeline_simulates_each_unique_leg_once() {
+    // The `figures` execution shape: fig1, both suites, and a capacity
+    // sweep over ONE engine. Counter arithmetic is exact.
+    let mixes = 2u64;
+    let scale = tiny(mixes as usize);
+    let singles = PROFILES.len() as u64;
+
+    let mut eng = JobEngine::new();
+    let fig1_rows = fig1_with(scale, &mut eng);
+    assert!(!fig1_rows.is_empty());
+    let single_suite = run_suite_with(scale, false, &mut eng);
+    let full_suite = run_suite_with(scale, true, &mut eng);
+    let sweep = sweep_capacity_with(scale, &[64, 128], &mut eng);
+    assert_eq!(sweep.len(), 2);
+
+    // Submissions: fig1 runs every Baseline leg, the single suite all
+    // single legs, the full suite everything, the sweep one Baseline and
+    // two CC points per mix.
+    let submitted = (singles + mixes)
+        + singles * MECHS
+        + (singles * MECHS + mixes * MECHS)
+        + (mixes + 2 * mixes);
+    // Unique simulations: the full suite's legs plus the sweep's
+    // 64-entry CC point — fig1 is a subset of the suite's Baselines, and
+    // the sweep's 128-entry point IS the default configuration the suite
+    // already ran.
+    let unique = singles * MECHS + mixes * MECHS + mixes;
+
+    let s = eng.stats();
+    assert_eq!(s.submitted, submitted);
+    assert_eq!(s.simulated, unique);
+    assert_eq!(s.eliminated(), submitted - unique);
+    assert!(
+        s.eliminated() >= 40,
+        "a figures-shaped run must eliminate >= 40 redundant legs, got {}",
+        s.eliminated()
+    );
+
+    // Shared legs really are shared: the single-only suite and the full
+    // suite returned the same (cached) results.
+    assert_eq!(single_suite.single, full_suite.single);
+}
+
+#[test]
+fn result_cache_round_trips_suite_across_engines() {
+    let dir = std::env::temp_dir().join(format!("cc_result_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let scale = tiny(1);
+    let singles = PROFILES.len() as u64;
+    let legs = singles * MECHS + MECHS;
+
+    let mut first = JobEngine::with_disk(&dir).unwrap();
+    let suite_a = run_suite_with(scale, true, &mut first);
+    assert_eq!(first.stats().simulated, legs);
+
+    // A new engine (fresh process, conceptually) over the same directory
+    // must load every leg from disk, bit-identically, simulating nothing.
+    let mut second = JobEngine::with_disk(&dir).unwrap();
+    let suite_b = run_suite_with(scale, true, &mut second);
+    assert_eq!(second.stats().simulated, 0);
+    assert_eq!(second.stats().disk_hits, legs);
+    assert_eq!(suite_a.single, suite_b.single);
+    assert_eq!(suite_a.eight, suite_b.eight);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
