@@ -3,6 +3,8 @@
 //! Every experiment is a [`SystemConfig`]; presets mirror the paper's
 //! simulated system and the CLI layers overrides on top.
 
+pub mod schema;
+
 use crate::controller::SchedulerKind;
 use crate::latency::MechanismKind;
 use crate::sim::engine::LoopMode;
@@ -364,7 +366,10 @@ impl SystemConfig {
     /// the accumulator; a field that provably cannot affect results may
     /// instead be bound to `_` with a comment saying why. Two configs with
     /// equal fingerprints are treated as interchangeable by the result
-    /// cache, including the on-disk one.
+    /// cache, including the on-disk one. The parameter registry
+    /// ([`schema`]) enforces the same destructuring contract, so a new
+    /// field must simultaneously decide how it hashes *and* how it is
+    /// exposed to `--set`.
     pub fn fingerprint(&self) -> u64 {
         let SystemConfig {
             dram,

@@ -1,0 +1,770 @@
+//! Typed dotted-path registry over every [`SystemConfig`] field — the
+//! single mechanism behind `--set path=value` overrides, scenario-spec
+//! `set`/axis parameters, and `params` introspection (DESIGN.md §10).
+//!
+//! The registry is built by **exhaustively destructuring**
+//! `SystemConfig::default()` in the same style as
+//! [`SystemConfig::fingerprint`]: every field of the config and of every
+//! nested struct is bound by name (no `..` rest patterns), and every
+//! binding is consumed as its parameter's recorded default. Adding a
+//! config field without deciding how it is exposed therefore breaks the
+//! build — a removed/renamed field fails the destructure outright, and a
+//! new field trips `unused_variables`, which CI compiles with
+//! `-D warnings`. A field that must *not* be settable can be bound to
+//! `_` with a comment saying why (none currently qualify).
+//!
+//! Each [`ParamDef`] carries typed getter/setter function pointers;
+//! values parse according to the field's Rust type (enums through the
+//! same name tables the CLI uses), so a `--set` that parses is a `--set`
+//! that applies. Tests in this module assert that every registered path
+//! round-trips set→get and moves `SystemConfig::fingerprint()`.
+
+use std::sync::OnceLock;
+
+use crate::bail;
+use crate::config::{
+    ChargeCacheConfig, CpuConfig, DramOrg, HcracPolicy, HcracSharing, McConfig, NuatConfig,
+    RowPolicy, SystemConfig, Timing,
+};
+use crate::controller::{SchedulerKind, SCHEDULER_NAMES};
+use crate::error::Result;
+use crate::latency::{MechanismKind, MECHANISM_NAMES};
+use crate::sim::engine::LoopMode;
+
+/// Value shape of one parameter (drives parsing and `params` output).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    U64,
+    Usize,
+    F64,
+    /// `u64` or the literal `none` (e.g. `measure_cycles`).
+    OptU64,
+    /// Named choice; the canonical names (parsing also accepts the
+    /// aliases of the underlying name table).
+    Enum(&'static [&'static str]),
+}
+
+impl ParamKind {
+    /// Short type tag for `params` output.
+    pub fn describe(&self) -> String {
+        match self {
+            ParamKind::U64 => "u64".to_string(),
+            ParamKind::Usize => "usize".to_string(),
+            ParamKind::F64 => "f64".to_string(),
+            ParamKind::OptU64 => "u64|none".to_string(),
+            ParamKind::Enum(choices) => choices.join("|"),
+        }
+    }
+}
+
+/// Numeric config field: formatting, parsing, and its [`ParamKind`] tag.
+trait Scalar: Sized {
+    const KIND: ParamKind;
+    fn fmt(&self) -> String;
+    fn parse_scalar(s: &str) -> Option<Self>;
+}
+
+impl Scalar for u64 {
+    const KIND: ParamKind = ParamKind::U64;
+    fn fmt(&self) -> String {
+        self.to_string()
+    }
+    fn parse_scalar(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+impl Scalar for usize {
+    const KIND: ParamKind = ParamKind::Usize;
+    fn fmt(&self) -> String {
+        self.to_string()
+    }
+    fn parse_scalar(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+impl Scalar for f64 {
+    const KIND: ParamKind = ParamKind::F64;
+    fn fmt(&self) -> String {
+        // `Display` prints the shortest string that round-trips the bit
+        // pattern, so get→set→get is exact.
+        format!("{self}")
+    }
+    fn parse_scalar(s: &str) -> Option<Self> {
+        s.parse().ok().filter(|v: &f64| v.is_finite())
+    }
+}
+
+/// Enum config field: canonical names plus tolerated aliases.
+trait Choice: Sized + Copy {
+    const CHOICES: &'static [&'static str];
+    fn to_name(self) -> &'static str;
+    fn from_name(s: &str) -> Option<Self>;
+}
+
+impl Choice for RowPolicy {
+    const CHOICES: &'static [&'static str] = &["open", "closed"];
+    fn to_name(self) -> &'static str {
+        match self {
+            RowPolicy::Open => "open",
+            RowPolicy::Closed => "closed",
+        }
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "open" => Some(RowPolicy::Open),
+            "closed" => Some(RowPolicy::Closed),
+            _ => None,
+        }
+    }
+}
+
+impl Choice for SchedulerKind {
+    const CHOICES: &'static [&'static str] = &SCHEDULER_NAMES;
+    fn to_name(self) -> &'static str {
+        self.name()
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        SchedulerKind::parse(s)
+    }
+}
+
+impl Choice for MechanismKind {
+    const CHOICES: &'static [&'static str] = &MECHANISM_NAMES;
+    fn to_name(self) -> &'static str {
+        self.name()
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        MechanismKind::parse(s)
+    }
+}
+
+impl Choice for HcracSharing {
+    const CHOICES: &'static [&'static str] = &["per-core", "shared"];
+    fn to_name(self) -> &'static str {
+        match self {
+            HcracSharing::PerCore => "per-core",
+            HcracSharing::Shared => "shared",
+        }
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "per-core" | "percore" => Some(HcracSharing::PerCore),
+            "shared" => Some(HcracSharing::Shared),
+            _ => None,
+        }
+    }
+}
+
+impl Choice for HcracPolicy {
+    const CHOICES: &'static [&'static str] = &["lru", "bip"];
+    fn to_name(self) -> &'static str {
+        match self {
+            HcracPolicy::Lru => "lru",
+            HcracPolicy::Bip => "bip",
+        }
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(HcracPolicy::Lru),
+            "bip" => Some(HcracPolicy::Bip),
+            _ => None,
+        }
+    }
+}
+
+impl Choice for LoopMode {
+    const CHOICES: &'static [&'static str] = &["event-driven", "strict-tick"];
+    fn to_name(self) -> &'static str {
+        match self {
+            LoopMode::EventDriven => "event-driven",
+            LoopMode::StrictTick => "strict-tick",
+        }
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "event-driven" | "event" => Some(LoopMode::EventDriven),
+            "strict-tick" | "strict" => Some(LoopMode::StrictTick),
+            _ => None,
+        }
+    }
+}
+
+fn scalar_kind<T: Scalar>(_: &T) -> ParamKind {
+    T::KIND
+}
+
+fn choice_kind<T: Choice>(_: &T) -> ParamKind {
+    ParamKind::Enum(T::CHOICES)
+}
+
+fn set_scalar<T: Scalar>(slot: &mut T, path: &str, s: &str) -> Result<()> {
+    match T::parse_scalar(s) {
+        Some(v) => {
+            *slot = v;
+            Ok(())
+        }
+        None => bail!("invalid value {s:?} for {path}: expected {}", T::KIND.describe()),
+    }
+}
+
+fn set_choice<T: Choice>(slot: &mut T, path: &str, s: &str) -> Result<()> {
+    match T::from_name(s) {
+        Some(v) => {
+            *slot = v;
+            Ok(())
+        }
+        None => bail!("invalid value {s:?} for {path} (one of: {})", T::CHOICES.join(" | ")),
+    }
+}
+
+fn fmt_opt_u64(v: Option<u64>) -> String {
+    match v {
+        None => "none".to_string(),
+        Some(c) => c.to_string(),
+    }
+}
+
+fn parse_opt_u64(path: &str, s: &str) -> Result<Option<u64>> {
+    if s.eq_ignore_ascii_case("none") {
+        return Ok(None);
+    }
+    match s.parse() {
+        Ok(v) => Ok(Some(v)),
+        Err(_) => bail!("invalid value {s:?} for {path}: expected u64|none"),
+    }
+}
+
+/// One registered parameter: dotted path, type, doc line, the default
+/// config's value, and typed accessors.
+pub struct ParamDef {
+    pub path: &'static str,
+    pub kind: ParamKind,
+    pub doc: &'static str,
+    /// `SystemConfig::default()`'s value, canonically formatted.
+    pub default: String,
+    getter: fn(&SystemConfig) -> String,
+    setter: fn(&mut SystemConfig, &str) -> Result<()>,
+}
+
+impl ParamDef {
+    /// Current value, canonically formatted.
+    pub fn get(&self, cfg: &SystemConfig) -> String {
+        (self.getter)(cfg)
+    }
+
+    /// Parse `value` and assign it.
+    pub fn set(&self, cfg: &mut SystemConfig, value: &str) -> Result<()> {
+        (self.setter)(cfg, value)
+    }
+}
+
+/// Register one numeric field: `scalar_param!(defs, "mc.read_queue",
+/// read_queue, "doc", mc.read_queue)` — the third argument is the
+/// destructured default binding (consuming it is the build-breaking
+/// coverage check), the last the field access path.
+macro_rules! scalar_param {
+    ($defs:expr, $path:literal, $default:ident, $doc:literal, $($f:ident).+ $(,)?) => {
+        $defs.push(ParamDef {
+            path: $path,
+            kind: scalar_kind(&$default),
+            doc: $doc,
+            default: Scalar::fmt(&$default),
+            getter: |c| Scalar::fmt(&c.$($f).+),
+            setter: |c, s| set_scalar(&mut c.$($f).+, $path, s),
+        });
+    };
+}
+
+/// Register one enum field (see [`scalar_param!`]).
+macro_rules! choice_param {
+    ($defs:expr, $path:literal, $default:ident, $doc:literal, $($f:ident).+ $(,)?) => {
+        $defs.push(ParamDef {
+            path: $path,
+            kind: choice_kind(&$default),
+            doc: $doc,
+            default: Choice::to_name($default).to_string(),
+            getter: |c| Choice::to_name(c.$($f).+).to_string(),
+            setter: |c, s| set_choice(&mut c.$($f).+, $path, s),
+        });
+    };
+}
+
+/// Build every [`ParamDef`] (see the module docs for the exhaustiveness
+/// contract this function's destructuring enforces).
+fn build() -> Vec<ParamDef> {
+    let SystemConfig {
+        dram,
+        timing,
+        mc,
+        cpu,
+        chargecache,
+        nuat,
+        mechanism,
+        temperature_c,
+        insts_per_core,
+        warmup_cpu_cycles,
+        measure_cycles,
+        seed,
+        loop_mode,
+    } = SystemConfig::default();
+    let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
+    let Timing {
+        tck_ns,
+        trcd,
+        trp,
+        tras,
+        cl,
+        cwl,
+        tbl,
+        tccd,
+        trtp,
+        twr,
+        twtr,
+        trrd,
+        tfaw,
+        trfc,
+        trefi,
+    } = timing;
+    let McConfig {
+        read_queue,
+        write_queue,
+        write_hi_watermark,
+        write_lo_watermark,
+        row_policy,
+        scheduler,
+    } = mc;
+    let CpuConfig {
+        cores,
+        cpu_per_bus,
+        issue_width,
+        window,
+        mshrs,
+        llc_bytes,
+        llc_ways,
+        llc_hit_cycles,
+    } = cpu;
+    let ChargeCacheConfig {
+        entries_per_core,
+        ways,
+        duration_ms,
+        trcd_reduction,
+        tras_reduction,
+        sharing,
+        policy,
+    } = chargecache;
+    let NuatConfig {
+        window_ms,
+        trcd_reduction: nuat_trcd_reduction,
+        tras_reduction: nuat_tras_reduction,
+    } = nuat;
+
+    let mut defs: Vec<ParamDef> = Vec::new();
+    // DramOrg.
+    scalar_param!(defs, "dram.channels", channels, "Independent memory channels", dram.channels);
+    scalar_param!(defs, "dram.ranks", ranks, "Ranks per channel", dram.ranks);
+    scalar_param!(defs, "dram.banks", banks, "Banks per rank", dram.banks);
+    scalar_param!(defs, "dram.rows", rows, "Rows per bank", dram.rows);
+    scalar_param!(
+        defs,
+        "dram.row_bytes",
+        row_bytes,
+        "Row buffer (page) size in bytes",
+        dram.row_bytes,
+    );
+    scalar_param!(defs, "dram.line_bytes", line_bytes, "Cache-line size in bytes", dram.line_bytes);
+    // Timing.
+    scalar_param!(defs, "timing.tck_ns", tck_ns, "Bus clock period in nanoseconds", timing.tck_ns);
+    scalar_param!(defs, "timing.trcd", trcd, "ACT-to-column delay (bus cycles)", timing.trcd);
+    scalar_param!(defs, "timing.trp", trp, "Precharge time (bus cycles)", timing.trp);
+    scalar_param!(defs, "timing.tras", tras, "ACT-to-PRE minimum (bus cycles)", timing.tras);
+    scalar_param!(defs, "timing.cl", cl, "CAS (read) latency (bus cycles)", timing.cl);
+    scalar_param!(defs, "timing.cwl", cwl, "CAS write latency (bus cycles)", timing.cwl);
+    scalar_param!(defs, "timing.tbl", tbl, "Burst length (bus cycles)", timing.tbl);
+    scalar_param!(defs, "timing.tccd", tccd, "Column-to-column delay (bus cycles)", timing.tccd);
+    scalar_param!(defs, "timing.trtp", trtp, "Read-to-precharge (bus cycles)", timing.trtp);
+    scalar_param!(defs, "timing.twr", twr, "Write recovery (bus cycles)", timing.twr);
+    scalar_param!(defs, "timing.twtr", twtr, "Write-to-read turnaround (bus cycles)", timing.twtr);
+    scalar_param!(
+        defs,
+        "timing.trrd",
+        trrd,
+        "ACT-to-ACT, different banks (bus cycles)",
+        timing.trrd,
+    );
+    scalar_param!(defs, "timing.tfaw", tfaw, "Four-activate window (bus cycles)", timing.tfaw);
+    scalar_param!(defs, "timing.trfc", trfc, "Refresh cycle time (bus cycles)", timing.trfc);
+    scalar_param!(
+        defs,
+        "timing.trefi",
+        trefi,
+        "Average refresh interval (bus cycles)",
+        timing.trefi,
+    );
+    // McConfig.
+    scalar_param!(
+        defs,
+        "mc.read_queue",
+        read_queue,
+        "Read queue capacity per channel",
+        mc.read_queue,
+    );
+    scalar_param!(
+        defs,
+        "mc.write_queue",
+        write_queue,
+        "Write queue capacity per channel",
+        mc.write_queue,
+    );
+    scalar_param!(
+        defs,
+        "mc.write_hi_watermark",
+        write_hi_watermark,
+        "Start draining writes above this occupancy",
+        mc.write_hi_watermark,
+    );
+    scalar_param!(
+        defs,
+        "mc.write_lo_watermark",
+        write_lo_watermark,
+        "Stop draining writes below this occupancy",
+        mc.write_lo_watermark,
+    );
+    choice_param!(defs, "mc.row_policy", row_policy, "Row-buffer management policy", mc.row_policy);
+    choice_param!(defs, "mc.scheduler", scheduler, "Memory-scheduler policy", mc.scheduler);
+    // CpuConfig.
+    scalar_param!(defs, "cpu.cores", cores, "Number of CPU cores", cpu.cores);
+    scalar_param!(
+        defs,
+        "cpu.cpu_per_bus",
+        cpu_per_bus,
+        "CPU cycles per DRAM bus cycle",
+        cpu.cpu_per_bus,
+    );
+    scalar_param!(
+        defs,
+        "cpu.issue_width",
+        issue_width,
+        "Instructions issued per CPU cycle",
+        cpu.issue_width,
+    );
+    scalar_param!(defs, "cpu.window", window, "Reorder window entries", cpu.window);
+    scalar_param!(defs, "cpu.mshrs", mshrs, "MSHRs per core", cpu.mshrs);
+    scalar_param!(defs, "cpu.llc_bytes", llc_bytes, "Shared LLC size in bytes", cpu.llc_bytes);
+    scalar_param!(defs, "cpu.llc_ways", llc_ways, "LLC associativity", cpu.llc_ways);
+    scalar_param!(
+        defs,
+        "cpu.llc_hit_cycles",
+        llc_hit_cycles,
+        "LLC hit latency in CPU cycles",
+        cpu.llc_hit_cycles,
+    );
+    // ChargeCacheConfig.
+    scalar_param!(
+        defs,
+        "chargecache.entries_per_core",
+        entries_per_core,
+        "HCRAC entries per core",
+        chargecache.entries_per_core,
+    );
+    scalar_param!(defs, "chargecache.ways", ways, "HCRAC associativity", chargecache.ways);
+    scalar_param!(
+        defs,
+        "chargecache.duration_ms",
+        duration_ms,
+        "Caching duration in milliseconds",
+        chargecache.duration_ms,
+    );
+    scalar_param!(
+        defs,
+        "chargecache.trcd_reduction",
+        trcd_reduction,
+        "tRCD reduction on an HCRAC hit (bus cycles)",
+        chargecache.trcd_reduction,
+    );
+    scalar_param!(
+        defs,
+        "chargecache.tras_reduction",
+        tras_reduction,
+        "tRAS reduction on an HCRAC hit (bus cycles)",
+        chargecache.tras_reduction,
+    );
+    choice_param!(
+        defs,
+        "chargecache.sharing",
+        sharing,
+        "Per-core replicas or one shared table",
+        chargecache.sharing,
+    );
+    choice_param!(
+        defs,
+        "chargecache.policy",
+        policy,
+        "HCRAC insertion/replacement policy",
+        chargecache.policy,
+    );
+    // NuatConfig.
+    scalar_param!(
+        defs,
+        "nuat.window_ms",
+        window_ms,
+        "NUAT eligibility window after refresh (ms)",
+        nuat.window_ms,
+    );
+    scalar_param!(
+        defs,
+        "nuat.trcd_reduction",
+        nuat_trcd_reduction,
+        "NUAT tRCD reduction (bus cycles)",
+        nuat.trcd_reduction,
+    );
+    scalar_param!(
+        defs,
+        "nuat.tras_reduction",
+        nuat_tras_reduction,
+        "NUAT tRAS reduction (bus cycles)",
+        nuat.tras_reduction,
+    );
+    // Top-level scalars.
+    choice_param!(defs, "mechanism", mechanism, "Latency mechanism the simulation runs", mechanism);
+    scalar_param!(
+        defs,
+        "temperature_c",
+        temperature_c,
+        "DRAM operating temperature (Celsius)",
+        temperature_c,
+    );
+    scalar_param!(
+        defs,
+        "insts_per_core",
+        insts_per_core,
+        "Instructions to simulate per core",
+        insts_per_core,
+    );
+    scalar_param!(
+        defs,
+        "warmup_cpu_cycles",
+        warmup_cpu_cycles,
+        "Warmup CPU cycles before measurement",
+        warmup_cpu_cycles,
+    );
+    // measure_cycles: Option<u64> — the one field outside the two macro
+    // shapes ("none" restores fixed-work measurement).
+    defs.push(ParamDef {
+        path: "measure_cycles",
+        kind: ParamKind::OptU64,
+        doc: "Fixed-time window in CPU cycles, or none for fixed-work",
+        default: fmt_opt_u64(measure_cycles),
+        getter: |c| fmt_opt_u64(c.measure_cycles),
+        setter: |c, s| {
+            c.measure_cycles = parse_opt_u64("measure_cycles", s)?;
+            Ok(())
+        },
+    });
+    scalar_param!(defs, "seed", seed, "RNG seed for trace generation", seed);
+    choice_param!(
+        defs,
+        "loop_mode",
+        loop_mode,
+        "Event-driven kernel or per-cycle oracle",
+        loop_mode,
+    );
+    defs
+}
+
+/// The parameter registry: every dotted path with its typed accessors.
+pub struct Registry {
+    defs: Vec<ParamDef>,
+}
+
+impl Registry {
+    pub fn defs(&self) -> &[ParamDef] {
+        &self.defs
+    }
+
+    /// Find `path`'s definition; unknown paths get an error that lists
+    /// near matches (same prefix group or same leaf name) so a typo'd
+    /// `--set` is a one-round-trip fix.
+    pub fn lookup(&self, path: &str) -> Result<&ParamDef> {
+        if let Some(d) = self.defs.iter().find(|d| d.path == path) {
+            return Ok(d);
+        }
+        let head = path.split('.').next().unwrap_or(path);
+        let leaf = path.rsplit('.').next().unwrap_or(path);
+        let near: Vec<&str> = self
+            .defs
+            .iter()
+            .map(|d| d.path)
+            .filter(|&p| {
+                p.starts_with(head) || p.rsplit('.').next().unwrap_or(p).contains(leaf)
+            })
+            .collect();
+        if near.is_empty() {
+            bail!("unknown parameter {path:?}; run `chargecache params` for the full list")
+        }
+        bail!(
+            "unknown parameter {path:?}; close matches: {} (run `chargecache params` for all)",
+            near.join(", ")
+        )
+    }
+
+    pub fn set(&self, cfg: &mut SystemConfig, path: &str, value: &str) -> Result<()> {
+        self.lookup(path)?.set(cfg, value)
+    }
+
+    pub fn get(&self, cfg: &SystemConfig, path: &str) -> Result<String> {
+        Ok(self.lookup(path)?.get(cfg))
+    }
+
+    /// Apply `(path, value)` assignments in order (last wins on repeats).
+    pub fn apply(&self, cfg: &mut SystemConfig, sets: &[(String, String)]) -> Result<()> {
+        for (path, value) in sets {
+            self.set(cfg, path, value)?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse one `PATH=VALUE` assignment (the `--set` argument form).
+pub fn parse_assignment(s: &str) -> Result<(String, String)> {
+    match s.split_once('=') {
+        Some((p, v)) if !p.trim().is_empty() && !v.trim().is_empty() => {
+            Ok((p.trim().to_string(), v.trim().to_string()))
+        }
+        _ => bail!("--set expects PATH=VALUE, got {s:?}"),
+    }
+}
+
+/// The process-wide registry (built once; [`ParamDef`] accessors are
+/// stateless function pointers, so sharing is free).
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry { defs: build() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A valid value for `def` that differs from the default (drives the
+    /// exhaustive round-trip test below).
+    fn perturbed(def: &ParamDef) -> String {
+        match def.kind {
+            ParamKind::U64 | ParamKind::Usize => {
+                (def.default.parse::<u64>().unwrap() + 1).to_string()
+            }
+            ParamKind::F64 => {
+                let v: f64 = def.default.parse().unwrap();
+                format!("{}", v * 2.0 + 1.0)
+            }
+            ParamKind::OptU64 => {
+                if def.default == "none" {
+                    "123456".to_string()
+                } else {
+                    "none".to_string()
+                }
+            }
+            ParamKind::Enum(choices) => choices
+                .iter()
+                .find(|c| **c != def.default)
+                .expect("every enum has >= 2 choices")
+                .to_string(),
+        }
+    }
+
+    #[test]
+    fn every_param_round_trips_and_moves_the_fingerprint() {
+        let reg = registry();
+        // One def per config field (6 dram + 15 timing + 6 mc + 8 cpu +
+        // 7 chargecache + 3 nuat + 7 top-level). If this count moved,
+        // update it together with the new field's ParamDef.
+        assert_eq!(reg.defs().len(), 52, "registry must cover every SystemConfig field");
+        let base = SystemConfig::default();
+        for def in reg.defs() {
+            // The recorded default is the default config's value.
+            assert_eq!(def.get(&base), def.default, "{} default mismatch", def.path);
+            let alt = perturbed(def);
+            let mut cfg = base.clone();
+            reg.set(&mut cfg, def.path, &alt).unwrap_or_else(|e| {
+                panic!("setting {}={} failed: {}", def.path, alt, e)
+            });
+            // set→get round-trips canonically...
+            assert_eq!(def.get(&cfg), alt, "{} did not round-trip", def.path);
+            // ...and every parameter is simulation-relevant: it must move
+            // the structural fingerprint that keys the result cache.
+            assert_ne!(
+                cfg.fingerprint(),
+                base.fingerprint(),
+                "{} did not change SystemConfig::fingerprint()",
+                def.path
+            );
+        }
+    }
+
+    #[test]
+    fn paths_are_unique_and_dotted() {
+        let reg = registry();
+        let mut seen = std::collections::HashSet::new();
+        for def in reg.defs() {
+            assert!(seen.insert(def.path), "duplicate path {}", def.path);
+            assert!(!def.doc.is_empty(), "{} has no doc line", def.path);
+        }
+    }
+
+    #[test]
+    fn unknown_path_lists_near_matches() {
+        let reg = registry();
+        let err = reg.lookup("timing.trcdd").unwrap_err().to_string();
+        assert!(err.contains("timing.trcd"), "no suggestion in {err:?}");
+        let err = reg.lookup("chargecache.entries").unwrap_err().to_string();
+        assert!(err.contains("chargecache.entries_per_core"), "{err:?}");
+        assert!(reg.lookup("zzz.unknown").is_err());
+    }
+
+    #[test]
+    fn enum_params_parse_aliases_and_reject_garbage() {
+        let reg = registry();
+        let mut cfg = SystemConfig::default();
+        // Mechanism aliases come from the single name table.
+        reg.set(&mut cfg, "mechanism", "chargecache").unwrap();
+        assert_eq!(cfg.mechanism, MechanismKind::ChargeCache);
+        assert_eq!(reg.get(&cfg, "mechanism").unwrap(), "cc");
+        reg.set(&mut cfg, "mc.scheduler", "BLISS").unwrap();
+        assert_eq!(cfg.mc.scheduler, SchedulerKind::Bliss);
+        reg.set(&mut cfg, "loop_mode", "strict").unwrap();
+        assert_eq!(cfg.loop_mode, LoopMode::StrictTick);
+        let err = reg.set(&mut cfg, "mc.row_policy", "ajar").unwrap_err().to_string();
+        assert!(err.contains("open | closed"), "choices missing from {err:?}");
+    }
+
+    #[test]
+    fn option_and_float_values_parse() {
+        let reg = registry();
+        let mut cfg = SystemConfig::default();
+        reg.set(&mut cfg, "measure_cycles", "5000000").unwrap();
+        assert_eq!(cfg.measure_cycles, Some(5_000_000));
+        reg.set(&mut cfg, "measure_cycles", "none").unwrap();
+        assert_eq!(cfg.measure_cycles, None);
+        reg.set(&mut cfg, "chargecache.duration_ms", "0.125").unwrap();
+        assert_eq!(cfg.chargecache.duration_ms, 0.125);
+        assert!(reg.set(&mut cfg, "temperature_c", "inf").is_err());
+        assert!(reg.set(&mut cfg, "timing.trcd", "-3").is_err());
+        assert!(reg.set(&mut cfg, "timing.trcd", "4.5").is_err());
+    }
+
+    #[test]
+    fn assignment_syntax() {
+        assert_eq!(
+            parse_assignment("timing.trcd=12").unwrap(),
+            ("timing.trcd".to_string(), "12".to_string())
+        );
+        assert_eq!(
+            parse_assignment(" mc.scheduler = bliss ").unwrap().1,
+            "bliss"
+        );
+        assert!(parse_assignment("noequals").is_err());
+        assert!(parse_assignment("=v").is_err());
+        assert!(parse_assignment("p=").is_err());
+    }
+}

@@ -40,7 +40,7 @@ use crate::latency::{Mechanism, MechanismKind, RowKey};
 
 pub use bank_engine::BankEngine;
 pub use mapping::{AddressMapper, MapScheme};
-pub use policy::{build_policy, SchedCtx, SchedPolicy, SchedulerKind};
+pub use policy::{build_policy, SchedCtx, SchedPolicy, SchedulerKind, SCHEDULER_NAMES};
 pub use policy::{CONFLICT_AGE_CYCLES, STARVE_CAP_CYCLES};
 pub use queue::{Request, RequestQueue};
 pub use sink::{CommandSink, McStats, ReqClass};

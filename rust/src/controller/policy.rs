@@ -71,6 +71,11 @@ pub enum SchedulerKind {
     Bliss,
 }
 
+/// Canonical scheduler names in [`SchedulerKind::all`] order — the
+/// single source for CLI parsing (`--scheduler`), registry choices
+/// (`--set mc.scheduler=`), and scenario specs.
+pub const SCHEDULER_NAMES: [&str; 3] = ["fr-fcfs", "fcfs", "bliss"];
+
 impl SchedulerKind {
     pub fn all() -> [SchedulerKind; 3] {
         [SchedulerKind::FrFcfs, SchedulerKind::Fcfs, SchedulerKind::Bliss]
@@ -82,6 +87,30 @@ impl SchedulerKind {
             SchedulerKind::Fcfs => "FCFS",
             SchedulerKind::Bliss => "BLISS",
         }
+    }
+
+    /// Canonical lowercase name (the parse/print round-trip identity).
+    pub fn name(&self) -> &'static str {
+        SCHEDULER_NAMES[match self {
+            SchedulerKind::FrFcfs => 0,
+            SchedulerKind::Fcfs => 1,
+            SchedulerKind::Bliss => 2,
+        }]
+    }
+
+    /// Parse a scheduler name case-insensitively (`frfcfs` tolerated).
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fr-fcfs" | "frfcfs" => Some(SchedulerKind::FrFcfs),
+            "fcfs" => Some(SchedulerKind::Fcfs),
+            "bliss" => Some(SchedulerKind::Bliss),
+            _ => None,
+        }
+    }
+
+    /// `name | name | ...` list for unknown-scheduler error messages.
+    pub fn valid_names() -> String {
+        SCHEDULER_NAMES.join(" | ")
     }
 }
 

@@ -1,57 +1,201 @@
-//! Minimal CLI argument parser (offline build — no clap): a subcommand
-//! followed by `--key value` / `--flag` options.
+//! CLI v2 (offline build — no clap): typed subcommands over a
+//! declarative command table.
+//!
+//! The binary declares a [`CommandSpec`] per subcommand — name, aliases,
+//! summary, optional positional arguments, per-command [`FlagSpec`]s —
+//! plus a shared list of common flags accepted everywhere. Parsing is
+//! table-driven: unknown commands and flags are errors that list the
+//! valid choices, a flag's arity comes from its spec (so a boolean flag
+//! followed by a positional argument parses unambiguously), `--flag=v`
+//! and `--flag v` are equivalent, and repeatable flags (`--set`)
+//! accumulate. Help is rendered from the same table, so it cannot drift
+//! from what parses.
 
-use std::collections::HashMap;
-
-use crate::bail;
+use crate::config::schema;
 use crate::error::{Context, Result};
+use crate::{bail, ensure};
 
-/// Parsed command line.
-#[derive(Debug, Clone, Default)]
+/// One named option a command accepts.
+pub struct FlagSpec {
+    pub name: &'static str,
+    /// `None` = boolean flag; `Some(meta)` = takes one value, shown as
+    /// `--name META` in help.
+    pub value: Option<&'static str>,
+    pub doc: &'static str,
+    /// May be given more than once (occurrences accumulate).
+    pub repeat: bool,
+}
+
+impl FlagSpec {
+    pub const fn flag(name: &'static str, doc: &'static str) -> Self {
+        Self { name, value: None, doc, repeat: false }
+    }
+
+    pub const fn value(name: &'static str, meta: &'static str, doc: &'static str) -> Self {
+        Self { name, value: Some(meta), doc, repeat: false }
+    }
+
+    pub const fn repeated(name: &'static str, meta: &'static str, doc: &'static str) -> Self {
+        Self { name, value: Some(meta), doc, repeat: true }
+    }
+}
+
+/// One subcommand in the binary's table.
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    /// Positional-argument name, if the command takes any (one or more).
+    pub positional: Option<&'static str>,
+    /// Command-specific flags (common flags are accepted everywhere).
+    pub flags: &'static [FlagSpec],
+    /// `Some(replacement)`: parsing succeeds, the dispatcher warns and
+    /// forwards (thin deprecation alias).
+    pub deprecated: Option<&'static str>,
+}
+
+/// Parsed command line: the resolved command plus its typed options.
 pub struct Args {
+    /// Canonical command name (aliases resolved).
     pub command: String,
-    opts: HashMap<String, String>,
+    pub spec: &'static CommandSpec,
+    /// Valued options in occurrence order (`get` returns the last).
+    opts: Vec<(String, String)>,
     flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+fn resolve(
+    commands: &'static [CommandSpec],
+    raw: &str,
+) -> Result<&'static CommandSpec> {
+    // Leading-flag forms people type out of habit.
+    let raw = match raw {
+        "--help" | "-h" => "help",
+        "--list-params" => "params",
+        other => other,
+    };
+    if let Some(c) =
+        commands.iter().find(|c| c.name == raw || c.aliases.contains(&raw))
+    {
+        return Ok(c);
+    }
+    let names: Vec<&str> =
+        commands.iter().filter(|c| c.deprecated.is_none()).map(|c| c.name).collect();
+    bail!("unknown command {raw:?} (commands: {})", names.join(" "))
+}
+
+fn find_flag<'a>(
+    spec: &'a CommandSpec,
+    common: &'a [FlagSpec],
+    name: &str,
+) -> Result<&'a FlagSpec> {
+    if let Some(f) = spec.flags.iter().chain(common.iter()).find(|f| f.name == name) {
+        return Ok(f);
+    }
+    let valid: Vec<String> = spec
+        .flags
+        .iter()
+        .chain(common.iter())
+        .map(|f| format!("--{}", f.name))
+        .collect();
+    bail!(
+        "unknown option --{name} for `{}` (valid: {})",
+        spec.name,
+        valid.join(" ")
+    )
 }
 
 impl Args {
-    /// Parse from an iterator of argument strings (no program name).
-    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
-        let mut it = args.into_iter().peekable();
-        let command = it.next().unwrap_or_else(|| "help".to_string());
-        let mut opts = HashMap::new();
-        let mut flags = Vec::new();
-        while let Some(a) = it.next() {
-            let key = a
-                .strip_prefix("--")
-                .with_context(|| format!("expected --option, got {a:?}"))?
-                .to_string();
-            match it.peek() {
-                Some(v) if !v.starts_with("--") => {
-                    opts.insert(key, it.next().unwrap());
+    /// Parse from an iterator of argument strings (no program name)
+    /// against a command table.
+    pub fn parse_with<I: IntoIterator<Item = String>>(
+        args: I,
+        commands: &'static [CommandSpec],
+        common: &'static [FlagSpec],
+    ) -> Result<Self> {
+        let mut it = args.into_iter();
+        let raw_cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let spec = resolve(commands, &raw_cmd)?;
+        let mut opts: Vec<(String, String)> = Vec::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        #[allow(clippy::while_let_on_iterator)] // the body advances `it` too
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let fs = find_flag(spec, common, &name)?;
+                match fs.value {
+                    Some(meta) => {
+                        ensure!(
+                            fs.repeat || !opts.iter().any(|(k, _)| *k == name),
+                            "--{name} may be given only once"
+                        );
+                        // A valued flag consumes the next token
+                        // unconditionally (values may look like anything,
+                        // including a leading dash).
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it.next().with_context(|| {
+                                format!("--{name} expects a value ({meta})")
+                            })?,
+                        };
+                        opts.push((name, v));
+                    }
+                    None => {
+                        ensure!(
+                            inline.is_none(),
+                            "--{name} is a flag and takes no value"
+                        );
+                        ensure!(
+                            fs.repeat || !flags.iter().any(|f| *f == name),
+                            "--{name} may be given only once"
+                        );
+                        flags.push(name);
+                    }
                 }
-                _ => flags.push(key),
+            } else {
+                ensure!(
+                    spec.positional.is_some(),
+                    "unexpected argument {tok:?} for `{}`",
+                    spec.name
+                );
+                positionals.push(tok);
             }
         }
-        Ok(Self { command, opts, flags })
+        Ok(Self { command: spec.name.to_string(), spec, opts, flags, positionals })
     }
 
-    pub fn from_env() -> Result<Self> {
-        Self::parse(std::env::args().skip(1))
+    pub fn from_env(
+        commands: &'static [CommandSpec],
+        common: &'static [FlagSpec],
+    ) -> Result<Self> {
+        Self::parse_with(std::env::args().skip(1), commands, common)
     }
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Last occurrence of a valued option.
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.opts.get(name).map(|s| s.as_str())
+        self.opts.iter().rev().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Every occurrence of a repeatable option, in order.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.opts.iter().filter(|(k, _)| k == name).map(|(_, v)| v.as_str()).collect()
     }
 
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
-        match self.opts.get(name) {
+        match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+            Some(v) => {
+                v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}"))
+            }
         }
     }
 
@@ -60,9 +204,11 @@ impl Args {
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
-        match self.opts.get(name) {
+        match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{name} expects a number, got {v:?}")),
+            Some(v) => {
+                v.parse().with_context(|| format!("--{name} expects a number, got {v:?}"))
+            }
         }
     }
 
@@ -70,47 +216,178 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// Parse a scheduler policy name (`--scheduler`).
+    /// `--set PATH=VALUE` occurrences as parsed assignments.
+    pub fn set_overrides(&self) -> Result<Vec<(String, String)>> {
+        self.get_all("set").into_iter().map(schema::parse_assignment).collect()
+    }
+
+    /// Parse a scheduler policy name (`--scheduler`) via the policy
+    /// module's single name table.
     pub fn scheduler(
         &self,
         default: crate::controller::SchedulerKind,
     ) -> Result<crate::controller::SchedulerKind> {
-        use crate::controller::SchedulerKind as S;
+        use crate::controller::SchedulerKind;
         match self.get("scheduler") {
             None => Ok(default),
-            Some(s) => match s.to_ascii_lowercase().as_str() {
-                "fr-fcfs" | "frfcfs" => Ok(S::FrFcfs),
-                "fcfs" => Ok(S::Fcfs),
-                "bliss" => Ok(S::Bliss),
-                other => bail!("unknown scheduler {other:?} (fr-fcfs | fcfs | bliss)"),
-            },
+            Some(s) => SchedulerKind::parse(s).with_context(|| {
+                format!("unknown scheduler {s:?} ({})", SchedulerKind::valid_names())
+            }),
         }
     }
 
-    /// Parse a mechanism name.
-    pub fn mechanism(&self, default: crate::latency::MechanismKind) -> Result<crate::latency::MechanismKind> {
-        use crate::latency::MechanismKind as M;
+    /// Parse a mechanism name via the mechanism name table.
+    pub fn mechanism(
+        &self,
+        default: crate::latency::MechanismKind,
+    ) -> Result<crate::latency::MechanismKind> {
+        use crate::latency::MechanismKind;
         match self.get("mechanism") {
             None => Ok(default),
-            Some(s) => match s.to_ascii_lowercase().as_str() {
-                "baseline" | "base" => Ok(M::Baseline),
-                "chargecache" | "cc" => Ok(M::ChargeCache),
-                "nuat" => Ok(M::Nuat),
-                "cc+nuat" | "chargecachenuat" | "combined" => Ok(M::ChargeCacheNuat),
-                "lldram" | "ll-dram" | "ll" => Ok(M::LlDram),
-                other => bail!("unknown mechanism {other:?}"),
-            },
+            Some(s) => MechanismKind::parse(s).with_context(|| {
+                format!("unknown mechanism {s:?} ({})", MechanismKind::valid_names())
+            }),
         }
     }
+}
+
+/// Global help: usage, the command table, and the common flags.
+pub fn render_help(
+    title: &str,
+    commands: &'static [CommandSpec],
+    common: &'static [FlagSpec],
+) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push_str("\n\ncommands:\n");
+    let listed = || commands.iter().filter(|c| c.deprecated.is_none());
+    let width = listed().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in listed() {
+        out.push_str(&format!("  {:<width$}  {}\n", c.name, c.summary));
+    }
+    let deprecated: Vec<String> = commands
+        .iter()
+        .filter_map(|c| c.deprecated.map(|r| format!("{} -> `{}`", c.name, r)))
+        .collect();
+    if !deprecated.is_empty() {
+        out.push_str(&format!("\ndeprecated aliases: {}\n", deprecated.join(", ")));
+    }
+    out.push_str("\ncommon options (every command):\n");
+    out.push_str(&render_flag_list(common));
+    out.push_str("\nrun `chargecache help COMMAND` for per-command options,\n");
+    out.push_str("and `chargecache params` for every `--set` parameter.\n");
+    out
+}
+
+/// Per-command help: usage line, its flags, then the common flags.
+pub fn render_command_help(cmd: &CommandSpec, common: &'static [FlagSpec]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("chargecache {}", cmd.name));
+    if let Some(p) = cmd.positional {
+        out.push_str(&format!(" {p}..."));
+    }
+    out.push_str(&format!(" [options]\n  {}\n", cmd.summary));
+    if !cmd.aliases.is_empty() {
+        out.push_str(&format!("  aliases: {}\n", cmd.aliases.join(", ")));
+    }
+    if let Some(replacement) = cmd.deprecated {
+        out.push_str(&format!("  DEPRECATED: use `chargecache {replacement}`\n"));
+    }
+    if !cmd.flags.is_empty() {
+        out.push_str("\noptions:\n");
+        out.push_str(&render_flag_list(cmd.flags));
+    }
+    out.push_str("\ncommon options:\n");
+    out.push_str(&render_flag_list(common));
+    out
+}
+
+fn render_flag_list(flags: &[FlagSpec]) -> String {
+    let label = |f: &FlagSpec| match f.value {
+        Some(meta) => format!("--{} {}", f.name, meta),
+        None => format!("--{}", f.name),
+    };
+    let width = flags.iter().map(|f| label(f).len()).max().unwrap_or(0);
+    flags
+        .iter()
+        .map(|f| {
+            let repeat = if f.repeat { " (repeatable)" } else { "" };
+            format!("  {:<width$}  {}{repeat}\n", label(f), f.doc)
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::controller::SchedulerKind;
     use crate::latency::MechanismKind;
 
+    static TEST_COMMON: &[FlagSpec] = &[
+        FlagSpec::repeated("set", "PATH=VALUE", "override a config field"),
+        FlagSpec::value("threads", "N", "worker count"),
+        FlagSpec::value("insts", "N", "instructions per core"),
+        FlagSpec::value("result-cache", "DIR", "persist results"),
+        FlagSpec::flag("no-memo", "disable memoization"),
+        FlagSpec::flag("quick", "small horizon"),
+        FlagSpec::value("scheduler", "NAME", "scheduler policy"),
+        FlagSpec::value("duration", "MS", "caching duration"),
+        FlagSpec::value("workload", "NAME", "workload name"),
+        FlagSpec::value("mechanism", "NAME", "mechanism name"),
+    ];
+
+    static TEST_COMMANDS: &[CommandSpec] = &[
+        CommandSpec {
+            name: "fig4",
+            aliases: &[],
+            summary: "speedup figure",
+            positional: None,
+            flags: &[FlagSpec::value("cores", "N", "core count")],
+            deprecated: None,
+        },
+        CommandSpec {
+            name: "scenario",
+            aliases: &["scn"],
+            summary: "run a spec file",
+            positional: Some("FILE"),
+            flags: &[FlagSpec::flag("validate", "parse and expand only")],
+            deprecated: None,
+        },
+        CommandSpec {
+            name: "figures",
+            aliases: &[],
+            summary: "all figures",
+            positional: None,
+            flags: &[],
+            deprecated: None,
+        },
+        CommandSpec {
+            name: "simulate",
+            aliases: &[],
+            summary: "one simulation",
+            positional: None,
+            flags: &[],
+            deprecated: Some("run"),
+        },
+        CommandSpec {
+            name: "help",
+            aliases: &[],
+            summary: "help",
+            positional: Some("COMMAND"),
+            flags: &[],
+            deprecated: None,
+        },
+    ];
+
     fn args(s: &str) -> Args {
-        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+        Args::parse_with(s.split_whitespace().map(String::from), TEST_COMMANDS, TEST_COMMON)
+            .unwrap()
+    }
+
+    fn args_err(s: &str) -> String {
+        Args::parse_with(s.split_whitespace().map(String::from), TEST_COMMANDS, TEST_COMMON)
+            .unwrap_err()
+            .to_string()
     }
 
     #[test]
@@ -124,15 +401,58 @@ mod tests {
     }
 
     #[test]
-    fn parses_threads_pin() {
-        assert_eq!(args("fig4 --threads 3").get_usize("threads", 0).unwrap(), 3);
-        assert_eq!(args("fig4").get_usize("threads", 0).unwrap(), 0);
-        assert!(args("fig4 --threads many").get_usize("threads", 0).is_err());
+    fn flag_arity_comes_from_the_table() {
+        // A boolean flag followed by a positional must not eat it.
+        let a = args("scenario --validate specs/cap.json");
+        assert!(a.flag("validate"));
+        assert_eq!(a.positionals, vec!["specs/cap.json"]);
+        // Multiple positionals accumulate.
+        let a = args("scenario a.json b.json");
+        assert_eq!(a.positionals.len(), 2);
+        // Commands without positionals reject stray arguments.
+        assert!(args_err("fig4 stray").contains("unexpected argument"));
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let a = args("fig4 --set timing.trcd=12 --set mc.scheduler=bliss --cores=8");
+        assert_eq!(a.get("cores"), Some("8"));
+        let sets = a.set_overrides().unwrap();
+        assert_eq!(sets.len(), 2);
+        assert_eq!(sets[0], ("timing.trcd".to_string(), "12".to_string()));
+        assert_eq!(sets[1].1, "bliss");
+        // Only flags declared repeatable may repeat.
+        assert!(args_err("fig4 --cores 4 --cores 8").contains("only once"));
+    }
+
+    #[test]
+    fn unknown_commands_and_flags_list_choices() {
+        let e = args_err("bogus");
+        assert!(e.contains("unknown command"), "{e:?}");
+        assert!(e.contains("fig4"), "{e:?}");
+        assert!(!e.contains("simulate"), "deprecated aliases must not be advertised: {e:?}");
+        let e = args_err("fig4 --corse 8");
+        assert!(e.contains("--cores"), "valid flags missing: {e:?}");
+        // Missing value for a valued flag.
+        assert!(args_err("fig4 --cores").contains("expects a value"));
+        // Value handed to a boolean flag.
+        assert!(args_err("scenario --validate=yes x.json").contains("takes no value"));
+    }
+
+    #[test]
+    fn aliases_and_deprecated_commands_resolve() {
+        assert_eq!(args("scn x.json").command, "scenario");
+        let a = args("simulate");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.spec.deprecated, Some("run"));
+        // Bare invocation falls back to help; -h style too.
+        let a = Args::parse_with(std::iter::empty(), TEST_COMMANDS, TEST_COMMON).unwrap();
+        assert_eq!(a.command, "help");
+        assert_eq!(args("--help").command, "help");
     }
 
     #[test]
     fn memoization_flags() {
-        // `figures --result-cache DIR` / `--no-memo` (job-graph knobs).
         let a = args("figures --result-cache /tmp/cc-results --no-memo");
         assert_eq!(a.get("result-cache"), Some("/tmp/cc-results"));
         assert!(a.flag("no-memo"));
@@ -152,37 +472,57 @@ mod tests {
     #[test]
     fn mechanism_aliases() {
         assert_eq!(
-            args("x --mechanism cc").mechanism(MechanismKind::Baseline).unwrap(),
+            args("fig4 --mechanism cc").mechanism(MechanismKind::Baseline).unwrap(),
             MechanismKind::ChargeCache
         );
         assert_eq!(
-            args("x --mechanism ll-dram").mechanism(MechanismKind::Baseline).unwrap(),
+            args("fig4 --mechanism ll-dram").mechanism(MechanismKind::Baseline).unwrap(),
             MechanismKind::LlDram
         );
-        assert!(args("x --mechanism bogus").mechanism(MechanismKind::Baseline).is_err());
+        let e = args("fig4 --mechanism bogus")
+            .mechanism(MechanismKind::Baseline)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("cc+nuat"), "valid names missing from {e:?}");
     }
 
     #[test]
     fn scheduler_aliases() {
-        use crate::controller::SchedulerKind;
         assert_eq!(
-            args("x --scheduler fcfs").scheduler(SchedulerKind::FrFcfs).unwrap(),
+            args("fig4 --scheduler fcfs").scheduler(SchedulerKind::FrFcfs).unwrap(),
             SchedulerKind::Fcfs
         );
         assert_eq!(
-            args("x --scheduler BLISS").scheduler(SchedulerKind::FrFcfs).unwrap(),
+            args("fig4 --scheduler BLISS").scheduler(SchedulerKind::FrFcfs).unwrap(),
             SchedulerKind::Bliss
         );
         assert_eq!(
-            args("x").scheduler(SchedulerKind::FrFcfs).unwrap(),
+            args("fig4").scheduler(SchedulerKind::FrFcfs).unwrap(),
             SchedulerKind::FrFcfs
         );
-        assert!(args("x --scheduler lifo").scheduler(SchedulerKind::FrFcfs).is_err());
+        let e = args("fig4 --scheduler lifo")
+            .scheduler(SchedulerKind::FrFcfs)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("fr-fcfs | fcfs | bliss"), "{e:?}");
     }
 
     #[test]
-    fn bad_option_errors() {
-        assert!(Args::parse(vec!["cmd".into(), "oops".into()]).is_err());
-        assert!(args("x --insts abc").get_u64("insts", 0).is_err());
+    fn bad_numeric_options_error() {
+        assert!(args("fig4 --insts abc").get_u64("insts", 0).is_err());
+        assert!(args("fig4 --threads many").get_usize("threads", 0).is_err());
+    }
+
+    #[test]
+    fn help_renders_from_the_table() {
+        let help = render_help("title", TEST_COMMANDS, TEST_COMMON);
+        assert!(help.contains("fig4"));
+        assert!(help.contains("speedup figure"));
+        assert!(help.contains("--set PATH=VALUE"));
+        assert!(help.contains("deprecated aliases: simulate -> `run`"));
+        let cmd = render_command_help(&TEST_COMMANDS[1], TEST_COMMON);
+        assert!(cmd.contains("chargecache scenario FILE..."));
+        assert!(cmd.contains("--validate"));
+        assert!(cmd.contains("aliases: scn"));
     }
 }

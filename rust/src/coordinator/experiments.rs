@@ -39,6 +39,12 @@ pub struct ExperimentScale {
     /// Memory-scheduler policy for every controller in the suite
     /// (`--scheduler`).
     pub scheduler: SchedulerKind,
+    /// Registry overrides (`--set path=value`) applied to every leg's
+    /// config, after presets and the scale fields above (last wins).
+    /// Interned (`&'static`) so the scale stays `Copy`: the CLI parses
+    /// argv once per process and leaks one small allocation — see
+    /// [`ExperimentScale::with_overrides`].
+    pub overrides: &'static [(String, String)],
 }
 
 impl Default for ExperimentScale {
@@ -49,6 +55,7 @@ impl Default for ExperimentScale {
             mixes: 20,
             loop_mode: LoopMode::EventDriven,
             scheduler: SchedulerKind::FrFcfs,
+            overrides: &[],
         }
     }
 }
@@ -58,26 +65,74 @@ impl ExperimentScale {
         Self { insts_per_core: 60_000, warmup_cycles: 30_000, mixes: 4, ..Self::default() }
     }
 
-    pub fn single_cfg(&self) -> SystemConfig {
-        let mut cfg = SystemConfig::single_core();
+    /// Validate `sets` against the parameter registry and intern them
+    /// into this scale. Every leg config this scale builds applies them
+    /// last, so `--set` reaches suite legs, sweeps, and scenarios alike.
+    /// Leaks one small allocation per call; callers are CLI scale
+    /// construction (a handful of calls per invocation — `figures`
+    /// rebuilds its scale per sub-figure) and tests, never per-job
+    /// paths, so the total leak stays a few hundred bytes per process.
+    pub fn with_overrides(
+        mut self,
+        sets: Vec<(String, String)>,
+    ) -> crate::error::Result<Self> {
+        if sets.is_empty() {
+            return Ok(self);
+        }
+        for (path, _) in &sets {
+            // The simulator reads the mechanism from JobSpec.mechanism,
+            // not the config; overriding the (fingerprint-hashed) config
+            // field here would only fork every leg's fingerprint away
+            // from cache-mates while simulating nothing different.
+            crate::ensure!(
+                path != "mechanism",
+                "--set mechanism= has no effect on suite legs; pick mechanisms with \
+                 --mechanism (run) or a scenario \"mechanisms\" list"
+            );
+        }
+        // Dry-run once: value parsing is config-independent, so a set
+        // that applies cleanly here applies to every leg.
+        let mut probe = SystemConfig::default();
+        crate::config::schema::registry().apply(&mut probe, &sets)?;
+        self.overrides = Box::leak(sets.into_boxed_slice());
+        Ok(self)
+    }
+
+    fn apply_overrides(&self, cfg: &mut SystemConfig) {
+        if self.overrides.is_empty() {
+            return;
+        }
+        crate::config::schema::registry()
+            .apply(cfg, self.overrides)
+            .expect("overrides were validated by with_overrides");
+    }
+
+    /// Config for an `n`-core run at this scale: preset, horizon knobs,
+    /// the fixed-time window for multiprogrammed runs, then `--set`
+    /// overrides (which therefore win over everything scale-derived).
+    pub fn multi_cfg(&self, cores: usize) -> SystemConfig {
+        let mut cfg = SystemConfig::multi_core(cores);
         cfg.insts_per_core = self.insts_per_core;
         cfg.warmup_cpu_cycles = self.warmup_cycles;
         cfg.loop_mode = self.loop_mode;
         cfg.mc.scheduler = self.scheduler;
+        if cores > 1 {
+            // Multiprogrammed runs measure over a fixed time window (see
+            // SystemConfig::measure_cycles): ~10 cycles per target
+            // instruction gives every core a deep window at typical
+            // shared-system IPCs.
+            cfg.measure_cycles = Some(self.insts_per_core * 10);
+        }
+        self.apply_overrides(&mut cfg);
         cfg
     }
 
+    pub fn single_cfg(&self) -> SystemConfig {
+        self.multi_cfg(1)
+    }
+
     pub fn eight_cfg(&self) -> SystemConfig {
-        let mut cfg = SystemConfig::eight_core();
-        cfg.insts_per_core = self.insts_per_core;
-        cfg.warmup_cpu_cycles = self.warmup_cycles;
-        cfg.loop_mode = self.loop_mode;
-        cfg.mc.scheduler = self.scheduler;
-        // Multiprogrammed runs measure over a fixed time window (see
-        // SystemConfig::measure_cycles): ~10 cycles per target instruction
-        // gives every core a deep window at typical shared-system IPCs.
-        cfg.measure_cycles = Some(self.insts_per_core * 10);
-        cfg
+        self.multi_cfg(8)
     }
 }
 
@@ -328,6 +383,14 @@ pub fn fig1(scale: ExperimentScale) -> Vec<(f64, f64, f64)> {
 }
 
 /// Sensitivity: ChargeCache capacity sweep (entries per core).
+///
+/// The three `sweep_*` functions below are the **legacy reference
+/// implementations** of the sweeps: the CLI now runs them as declarative
+/// scenario specs (`examples/scenarios/sweep_*.json` through
+/// [`super::scenario`]), and `tests/scenario.rs` pins the scenario path
+/// bit-identical to these. They stay as the differential oracle (and as
+/// the bench entry points in `benches/sweeps.rs`); new sweeps should be
+/// scenario specs, not new functions here.
 pub fn sweep_capacity(scale: ExperimentScale, entries: &[usize]) -> Vec<(usize, f64)> {
     sweep_capacity_with(scale, entries, &mut JobEngine::new())
 }

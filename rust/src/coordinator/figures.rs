@@ -60,6 +60,14 @@ pub fn f(v: f64, decimals: usize) -> String {
     format!("{v:.decimals$}")
 }
 
+/// Filename-safe slug for result CSVs derived from user-provided names
+/// (scenario names reach file paths through this).
+pub fn slug(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
+}
+
 /// Percent formatting.
 pub fn pct(v: f64) -> String {
     format!("{:.1}%", v * 100.0)
@@ -75,6 +83,13 @@ mod tests {
         assert_eq!(bar(10.0, 10.0, 10), "##########");
         assert_eq!(bar(20.0, 10.0, 10), "##########"); // clamped
         assert_eq!(bar(1.0, 0.0, 10), "");
+    }
+
+    #[test]
+    fn slug_is_filename_safe() {
+        assert_eq!(slug("sweep-capacity"), "sweep_capacity");
+        assert_eq!(slug("Grid: sched/temp"), "grid__sched_temp");
+        assert_eq!(slug("plain"), "plain");
     }
 
     #[test]

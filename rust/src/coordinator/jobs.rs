@@ -250,13 +250,8 @@ fn expected_workload(w: WorkloadId) -> String {
 }
 
 fn mech_slug(m: MechanismKind) -> &'static str {
-    match m {
-        MechanismKind::Baseline => "baseline",
-        MechanismKind::ChargeCache => "cc",
-        MechanismKind::Nuat => "nuat",
-        MechanismKind::ChargeCacheNuat => "ccnuat",
-        MechanismKind::LlDram => "lldram",
-    }
+    // From the single mechanism name table (latency::MECHANISM_TABLE).
+    m.info().slug
 }
 
 /// Handle returned by [`JobGraph::submit`]; redeem it against the
@@ -418,12 +413,15 @@ impl Default for JobEngine {
     }
 }
 
-/// Hand-rolled JSON codec for persisted [`SimResult`]s (the offline build
-/// has no serde). The format is versioned and fully under our control:
+/// Hand-rolled JSON codec for persisted [`SimResult`]s, on the shared
+/// zero-dep parser (`coordinator::json`). The format is versioned and
+/// fully under our control:
 ///
 /// * every `f64` is stored as its IEEE-754 bit pattern (a JSON integer),
 ///   so round-trips are bit-exact — the memoization acceptance criterion
-///   is bit-identity, and decimal printing cannot guarantee it;
+///   is bit-identity, and decimal printing cannot guarantee it
+///   (`json::Val` keeps numeric tokens raw, so full-range `u64` bit
+///   patterns never round through `f64`);
 /// * `McStats` is a fixed-order 14-integer array per channel;
 /// * `EnergyBreakdown` is a fixed-order 5-integer (bits) array.
 ///
@@ -433,6 +431,7 @@ impl Default for JobEngine {
 /// wrong result.
 mod diskjson {
     use crate::controller::McStats;
+    use crate::coordinator::json::{parse_root, Val};
     use crate::energy::EnergyBreakdown;
     use crate::latency::MechanismKind;
     use crate::sim::SimResult;
@@ -444,7 +443,12 @@ mod diskjson {
     /// config fingerprint in the file name cannot see code changes, so
     /// this constant is what keeps an on-disk cache from serving results
     /// an older build computed.
-    pub const VERSION: u64 = 1;
+    ///
+    /// v2: `CombinedMech::on_activate` now grants the element-wise
+    /// minimum effective timing when both ChargeCache and NUAT reduce,
+    /// so CC+NUAT results from v1 builds may legitimately differ under
+    /// asymmetric reduction configs.
+    pub const VERSION: u64 = 2;
 
     // ---- encoding ----
 
@@ -507,205 +511,19 @@ mod diskjson {
         )
     }
 
-    // ---- minimal JSON parser (objects, arrays, strings, u64 numbers) ----
+    // ---- decoding (shared parser; bit-pattern array helpers) ----
 
-    #[derive(Debug, Clone)]
-    enum Val {
-        U64(u64),
-        Str(String),
-        Arr(Vec<Val>),
-        Obj(Vec<(String, Val)>),
+    /// Array of `u64` bit patterns decoded back to `f64`s.
+    fn f64_bits_vec(v: &Val) -> Option<Vec<f64>> {
+        v.arr()?.iter().map(|x| x.u64().map(f64::from_bits)).collect()
     }
 
-    struct Parser<'a> {
-        s: &'a [u8],
-        i: usize,
-    }
-
-    impl<'a> Parser<'a> {
-        fn new(s: &'a str) -> Self {
-            Self { s: s.as_bytes(), i: 0 }
-        }
-
-        fn ws(&mut self) {
-            while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
-                self.i += 1;
-            }
-        }
-
-        fn eat(&mut self, b: u8) -> Option<()> {
-            self.ws();
-            if self.i < self.s.len() && self.s[self.i] == b {
-                self.i += 1;
-                Some(())
-            } else {
-                None
-            }
-        }
-
-        fn peek(&mut self) -> Option<u8> {
-            self.ws();
-            self.s.get(self.i).copied()
-        }
-
-        fn value(&mut self) -> Option<Val> {
-            match self.peek()? {
-                b'{' => self.object(),
-                b'[' => self.array(),
-                b'"' => self.string().map(Val::Str),
-                b'0'..=b'9' => self.number(),
-                _ => None,
-            }
-        }
-
-        fn number(&mut self) -> Option<Val> {
-            self.ws();
-            let start = self.i;
-            while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
-                self.i += 1;
-            }
-            if self.i == start {
-                return None;
-            }
-            std::str::from_utf8(&self.s[start..self.i]).ok()?.parse().ok().map(Val::U64)
-        }
-
-        fn string(&mut self) -> Option<String> {
-            self.eat(b'"')?;
-            let mut out = String::new();
-            loop {
-                let b = *self.s.get(self.i)?;
-                self.i += 1;
-                match b {
-                    b'"' => return Some(out),
-                    b'\\' => {
-                        let e = *self.s.get(self.i)?;
-                        self.i += 1;
-                        match e {
-                            b'"' => out.push('"'),
-                            b'\\' => out.push('\\'),
-                            b'u' => {
-                                let hex = self.s.get(self.i..self.i + 4)?;
-                                self.i += 4;
-                                let code =
-                                    u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
-                                out.push(char::from_u32(code)?);
-                            }
-                            _ => return None,
-                        }
-                    }
-                    b if b < 0x80 => out.push(b as char),
-                    _ => {
-                        // Multi-byte UTF-8: workload labels are ASCII, but
-                        // decode correctly anyway via str validation.
-                        let start = self.i - 1;
-                        let width = utf8_width(b)?;
-                        let bytes = self.s.get(start..start + width)?;
-                        self.i = start + width;
-                        out.push_str(std::str::from_utf8(bytes).ok()?);
-                    }
-                }
-            }
-        }
-
-        fn array(&mut self) -> Option<Val> {
-            self.eat(b'[')?;
-            let mut items = Vec::new();
-            if self.peek()? == b']' {
-                self.i += 1;
-                return Some(Val::Arr(items));
-            }
-            loop {
-                items.push(self.value()?);
-                match self.peek()? {
-                    b',' => {
-                        self.i += 1;
-                    }
-                    b']' => {
-                        self.i += 1;
-                        return Some(Val::Arr(items));
-                    }
-                    _ => return None,
-                }
-            }
-        }
-
-        fn object(&mut self) -> Option<Val> {
-            self.eat(b'{')?;
-            let mut items = Vec::new();
-            if self.peek()? == b'}' {
-                self.i += 1;
-                return Some(Val::Obj(items));
-            }
-            loop {
-                let k = self.string()?;
-                self.eat(b':')?;
-                let v = self.value()?;
-                items.push((k, v));
-                match self.peek()? {
-                    b',' => {
-                        self.i += 1;
-                    }
-                    b'}' => {
-                        self.i += 1;
-                        return Some(Val::Obj(items));
-                    }
-                    _ => return None,
-                }
-            }
-        }
-    }
-
-    fn utf8_width(lead: u8) -> Option<usize> {
-        match lead {
-            0xC0..=0xDF => Some(2),
-            0xE0..=0xEF => Some(3),
-            0xF0..=0xF7 => Some(4),
-            _ => None,
-        }
-    }
-
-    impl Val {
-        fn field(&self, name: &str) -> Option<&Val> {
-            match self {
-                Val::Obj(items) => items.iter().find(|(k, _)| k == name).map(|(_, v)| v),
-                _ => None,
-            }
-        }
-
-        fn u64(&self) -> Option<u64> {
-            match self {
-                Val::U64(v) => Some(*v),
-                _ => None,
-            }
-        }
-
-        fn str(&self) -> Option<&str> {
-            match self {
-                Val::Str(s) => Some(s),
-                _ => None,
-            }
-        }
-
-        fn f64_bits_vec(&self) -> Option<Vec<f64>> {
-            match self {
-                Val::Arr(items) => {
-                    items.iter().map(|v| v.u64().map(f64::from_bits)).collect()
-                }
-                _ => None,
-            }
-        }
-
-        fn u64_vec(&self) -> Option<Vec<u64>> {
-            match self {
-                Val::Arr(items) => items.iter().map(Val::u64).collect(),
-                _ => None,
-            }
-        }
+    fn u64_vec(v: &Val) -> Option<Vec<u64>> {
+        v.arr()?.iter().map(Val::u64).collect()
     }
 
     fn decode_mc(v: &Val) -> Option<McStats> {
-        let f = v.u64_vec()?;
+        let f = u64_vec(v)?;
         if f.len() != 14 {
             return None;
         }
@@ -728,28 +546,25 @@ mod diskjson {
     }
 
     pub fn decode_result(text: &str) -> Option<SimResult> {
-        let root = Parser::new(text).value()?;
+        let root = parse_root(text)?;
         if root.field("version")?.u64()? != VERSION {
             return None;
         }
         // The mechanism label must map back onto the interned &'static str.
         let label = root.field("mechanism")?.str()?;
         let mechanism = MechanismKind::all().into_iter().find(|m| m.label() == label)?.label();
-        let mc = match root.field("mc")? {
-            Val::Arr(items) => items.iter().map(decode_mc).collect::<Option<Vec<_>>>()?,
-            _ => return None,
-        };
-        let e = root.field("energy_bits")?.f64_bits_vec()?;
+        let mc = root.field("mc")?.arr()?.iter().map(decode_mc).collect::<Option<Vec<_>>>()?;
+        let e = f64_bits_vec(root.field("energy_bits")?)?;
         if e.len() != 5 {
             return None;
         }
         Some(SimResult {
             workload: root.field("workload")?.str()?.to_string(),
             mechanism,
-            core_ipc: root.field("core_ipc_bits")?.f64_bits_vec()?,
+            core_ipc: f64_bits_vec(root.field("core_ipc_bits")?)?,
             cpu_cycles: root.field("cpu_cycles")?.u64()?,
             mc,
-            rltl: root.field("rltl_bits")?.f64_bits_vec()?,
+            rltl: f64_bits_vec(root.field("rltl_bits")?)?,
             energy: EnergyBreakdown {
                 act_pre_nj: e[0],
                 read_nj: e[1],

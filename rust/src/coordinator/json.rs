@@ -1,0 +1,325 @@
+//! Minimal zero-dependency JSON infrastructure, shared by the on-disk
+//! result cache (`jobs::diskjson`) and the scenario-spec loader
+//! ([`super::scenario`]). The offline build has no serde; this parser is
+//! deliberately small and fully under our control.
+//!
+//! Numbers are kept as **raw source tokens** ([`Val::Num`]) rather than
+//! eagerly converted: the result cache stores `f64` bit patterns as
+//! full-precision `u64`s that must not round through `f64`, while
+//! scenario specs read the very same token shape as `f64` (or hand it to
+//! the config registry as text). Each consumer parses the token at the
+//! precision it needs via [`Val::u64`] / [`Val::f64`] / [`Val::num_raw`].
+
+/// One parsed JSON value.
+#[derive(Debug, Clone)]
+pub enum Val {
+    /// Raw numeric token (optional sign, digits, fraction, exponent).
+    Num(String),
+    Bool(bool),
+    Null,
+    Str(String),
+    Arr(Vec<Val>),
+    Obj(Vec<(String, Val)>),
+}
+
+impl Val {
+    /// Object field lookup (first match).
+    pub fn field(&self, name: &str) -> Option<&Val> {
+        match self {
+            Val::Obj(items) => items.iter().find(|(k, _)| k == name).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Object entries, if this is an object.
+    pub fn entries(&self) -> Option<&[(String, Val)]> {
+        match self {
+            Val::Obj(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Array items, if this is an array.
+    pub fn arr(&self) -> Option<&[Val]> {
+        match self {
+            Val::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Numeric token parsed as `u64` — exact for the full 64-bit range
+    /// (bit-pattern storage relies on this; a fractional or signed token
+    /// is `None`, never a rounded value).
+    pub fn u64(&self) -> Option<u64> {
+        match self {
+            Val::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Numeric token parsed as `f64`.
+    pub fn f64(&self) -> Option<f64> {
+        match self {
+            Val::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn str(&self) -> Option<&str> {
+        match self {
+            Val::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document; trailing non-whitespace is a parse failure.
+pub fn parse_root(text: &str) -> Option<Val> {
+    let mut p = Parser::new(text);
+    let v = p.value()?;
+    p.ws();
+    if p.i == p.s.len() {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+/// Recursive-descent parser over the input bytes.
+pub struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    pub fn new(s: &'a str) -> Self {
+        Self { s: s.as_bytes(), i: 0 }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> Option<()> {
+        self.ws();
+        if self.i < self.s.len() && self.s[self.i] == b {
+            self.i += 1;
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.s.get(self.i).copied()
+    }
+
+    /// Consume `word` if it starts at the cursor.
+    fn literal(&mut self, word: &str) -> Option<()> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    pub fn value(&mut self) -> Option<Val> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string().map(Val::Str),
+            b'-' | b'0'..=b'9' => self.number(),
+            b't' => self.literal("true").map(|()| Val::Bool(true)),
+            b'f' => self.literal("false").map(|()| Val::Bool(false)),
+            b'n' => self.literal("null").map(|()| Val::Null),
+            _ => None,
+        }
+    }
+
+    fn number(&mut self) -> Option<Val> {
+        self.ws();
+        let start = self.i;
+        if self.s.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        let int_start = self.i;
+        while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        if self.i == int_start {
+            return None;
+        }
+        if self.s.get(self.i) == Some(&b'.') {
+            self.i += 1;
+            let frac_start = self.i;
+            while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+            if self.i == frac_start {
+                return None;
+            }
+        }
+        if matches!(self.s.get(self.i), Some(&b'e') | Some(&b'E')) {
+            self.i += 1;
+            if matches!(self.s.get(self.i), Some(&b'+') | Some(&b'-')) {
+                self.i += 1;
+            }
+            let exp_start = self.i;
+            while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+            if self.i == exp_start {
+                return None;
+            }
+        }
+        let tok = std::str::from_utf8(&self.s[start..self.i]).ok()?;
+        Some(Val::Num(tok.to_string()))
+    }
+
+    fn string(&mut self) -> Option<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = *self.s.get(self.i)?;
+            self.i += 1;
+            match b {
+                b'"' => return Some(out),
+                b'\\' => {
+                    let e = *self.s.get(self.i)?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self.s.get(self.i..self.i + 4)?;
+                            self.i += 4;
+                            let code =
+                                u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+                            out.push(char::from_u32(code)?);
+                        }
+                        _ => return None,
+                    }
+                }
+                b if b < 0x80 => out.push(b as char),
+                _ => {
+                    // Multi-byte UTF-8: decode via str validation.
+                    let start = self.i - 1;
+                    let width = utf8_width(b)?;
+                    let bytes = self.s.get(start..start + width)?;
+                    self.i = start + width;
+                    out.push_str(std::str::from_utf8(bytes).ok()?);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Option<Val> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Some(Val::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b']' => {
+                    self.i += 1;
+                    return Some(Val::Arr(items));
+                }
+                _ => return None,
+            }
+        }
+    }
+
+    fn object(&mut self) -> Option<Val> {
+        self.eat(b'{')?;
+        let mut items = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Some(Val::Obj(items));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.eat(b':')?;
+            let v = self.value()?;
+            items.push((k, v));
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Some(Val::Obj(items));
+                }
+                _ => return None,
+            }
+        }
+    }
+}
+
+fn utf8_width(lead: u8) -> Option<usize> {
+    match lead {
+        0xC0..=0xDF => Some(2),
+        0xE0..=0xEF => Some(3),
+        0xF0..=0xF7 => Some(4),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numbers_stay_exact_tokens() {
+        let v = parse_root("[18446744073709551615, 0.125, -3, 1e3]").unwrap();
+        let items = v.arr().unwrap();
+        // Full-range u64 survives (a round-trip through f64 would not),
+        // and the raw source token is preserved.
+        assert_eq!(items[0].u64(), Some(u64::MAX));
+        assert!(matches!(&items[0], Val::Num(s) if s == "18446744073709551615"));
+        assert_eq!(items[1].f64(), Some(0.125));
+        assert_eq!(items[1].u64(), None, "fractional token is not a u64");
+        assert_eq!(items[2].f64(), Some(-3.0));
+        assert_eq!(items[3].f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn objects_arrays_strings_and_literals() {
+        let v = parse_root(
+            r#"{ "name": "capA", "on": true, "off": false, "nil": null, "xs": [] }"#,
+        )
+        .unwrap();
+        assert_eq!(v.field("name").unwrap().str(), Some("capA"));
+        assert!(matches!(v.field("on"), Some(Val::Bool(true))));
+        assert!(matches!(v.field("off"), Some(Val::Bool(false))));
+        assert!(matches!(v.field("nil"), Some(Val::Null)));
+        assert_eq!(v.field("xs").unwrap().arr().unwrap().len(), 0);
+        assert!(v.field("missing").is_none());
+    }
+
+    #[test]
+    fn malformed_inputs_fail() {
+        for bad in ["", "{", "[1,]", "{\"a\" 1}", "1 2", "truex", "{\"a\":}", "--1", "1."] {
+            assert!(parse_root(bad).is_none(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn trailing_content_is_rejected() {
+        assert!(parse_root("{} trailing").is_none());
+        assert!(parse_root("  { \"a\": 1 }  ").is_some());
+    }
+}

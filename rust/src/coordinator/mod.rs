@@ -6,8 +6,11 @@ pub mod cli;
 pub mod experiments;
 pub mod figures;
 pub mod jobs;
+pub(crate) mod json;
 pub mod runner;
+pub mod scenario;
 
 pub use experiments::{ExperimentScale, Fig4Row, SuiteResults};
 pub use jobs::{CacheStats, JobEngine, JobGraph, JobKey, JobSpec, SimCache, WorkloadId};
 pub use runner::parallel_map;
+pub use scenario::{ScenarioPlan, ScenarioRun, ScenarioSpec};

@@ -1,0 +1,877 @@
+//! Declarative scenario API (DESIGN.md §10).
+//!
+//! A **scenario spec** is a small hand-rolled-JSON document (same
+//! zero-dep parsing infra as the result cache — [`super::json`])
+//! describing an experiment grid declaratively:
+//!
+//! * a **base** machine preset (`single` / `eight` / a core count),
+//! * config **overrides** applied through the typed parameter registry
+//!   ([`crate::config::schema`]),
+//! * the **mechanisms** to measure against Baseline,
+//! * the **workloads** (single-core profiles or multiprogrammed mixes),
+//! * zero or more **sweep axes** — each a registry path plus an explicit
+//!   value list or a linear/log range, optionally with a named
+//!   derivation rule for the computations the legacy sweeps performed
+//!   imperatively (circuit-layer tRCD/tRAS reductions).
+//!
+//! Expansion produces the cartesian product of the axes and submits one
+//! [`JobSpec`] per (point × mechanism × workload) through a shared
+//! [`JobEngine`], so legs shared across scenarios (every axis's
+//! Baseline, overlapping sweep points, suite legs from earlier commands
+//! in the same invocation) deduplicate automatically and
+//! `--result-cache` persists them. `tests/scenario.rs` pins the three
+//! legacy sweeps (`capacity`, `duration`, `temperature`) bit-identical
+//! to their checked-in spec files in `examples/scenarios/`.
+
+use std::collections::HashMap;
+
+use crate::config::schema;
+use crate::config::SystemConfig;
+use crate::error::{Context, Result};
+use crate::latency::{MechanismKind, TimingTable};
+use crate::runtime::charge_model::timing_table_or_analytic;
+use crate::trace::PROFILES;
+use crate::{bail, ensure};
+
+use super::experiments::ExperimentScale;
+use super::jobs::{JobEngine, JobGraph, JobSpec, JobTicket, WorkloadId};
+use super::json::{parse_root, Val};
+
+/// Base machine preset a scenario starts from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BasePreset {
+    /// Table 1 single-core system (1 channel, open-row).
+    Single,
+    /// Table 1 eight-core system (2 channels, closed-row, fixed-time).
+    Eight,
+    /// `multi_core(n)` preset.
+    Cores(usize),
+}
+
+impl BasePreset {
+    pub fn cores(&self) -> usize {
+        match self {
+            BasePreset::Single => 1,
+            BasePreset::Eight => 8,
+            BasePreset::Cores(n) => *n,
+        }
+    }
+}
+
+/// Which simulations a scenario measures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkloadSel {
+    /// Single-core workloads by [`PROFILES`] index.
+    Singles(Vec<usize>),
+    /// Multiprogrammed mixes `0..n` (`None` = the scale's mix count).
+    Mixes(Option<usize>),
+}
+
+/// Where the Baseline (speedup-denominator) legs run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineMode {
+    /// One Baseline per workload at the **base** config, shared across
+    /// all sweep points — the legacy sweep semantics. Correct whenever
+    /// no axis perturbs state a Baseline simulation reads (the
+    /// ChargeCache parameter sweeps); wrong for e.g. a scheduler axis.
+    Shared,
+    /// Baseline re-runs at every sweep point. Always correct; costs one
+    /// extra leg per (point × workload), which the job graph dedupes
+    /// whenever a point's config collapses onto the base.
+    PerPoint,
+}
+
+/// Named derivation applied after an axis value is set — the imperative
+/// computations of the legacy sweeps, made declarative by name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeriveRule {
+    /// ChargeCache tRCD/tRAS reductions from the circuit timing table at
+    /// the config's temperature, for the config's caching duration
+    /// (clamped to `timing - 2`). The legacy duration sweep.
+    CcTimingFromDuration,
+    /// Identical derivation, named for a temperature axis (the legacy
+    /// temperature sweep at the paper's default 1 ms duration).
+    CcTimingFromTemperature,
+}
+
+impl DeriveRule {
+    pub fn parse(s: &str) -> Option<DeriveRule> {
+        match s {
+            "cc-timing-from-duration" => Some(DeriveRule::CcTimingFromDuration),
+            "cc-timing-from-temperature" => Some(DeriveRule::CcTimingFromTemperature),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeriveRule::CcTimingFromDuration => "cc-timing-from-duration",
+            DeriveRule::CcTimingFromTemperature => "cc-timing-from-temperature",
+        }
+    }
+}
+
+/// One sweep axis: a registry path plus the values it takes (raw spec
+/// tokens, applied through the registry so enum axes work too).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AxisSpec {
+    pub param: String,
+    pub values: Vec<String>,
+    pub derive: Option<DeriveRule>,
+}
+
+/// A parsed scenario spec (see the module docs for the grammar).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    pub base: BasePreset,
+    /// Registry overrides applied to the base config, in spec order.
+    pub set: Vec<(String, String)>,
+    /// Mechanisms measured against Baseline (Baseline itself is the
+    /// implicit denominator and may not be listed).
+    pub mechanisms: Vec<MechanismKind>,
+    pub workloads: WorkloadSel,
+    pub baseline: BaselineMode,
+    pub axes: Vec<AxisSpec>,
+    /// Optional horizon pins (CLI flags override, scale fills the rest).
+    pub insts_per_core: Option<u64>,
+    pub warmup_cycles: Option<u64>,
+}
+
+const SPEC_KEYS: &[&str] = &[
+    "name",
+    "description",
+    "base",
+    "set",
+    "mechanisms",
+    "workloads",
+    "mixes",
+    "baseline",
+    "axes",
+    "insts_per_core",
+    "warmup_cycles",
+];
+
+/// Strict object-key validation: every key must be known, and no key may
+/// repeat (`Val::field` returns the first occurrence, so a duplicate
+/// would silently shadow the rest of the document).
+fn check_keys(obj: &[(String, Val)], allowed: &[&str], what: &str) -> Result<()> {
+    let mut seen = std::collections::HashSet::new();
+    for (k, _) in obj {
+        ensure!(
+            allowed.contains(&k.as_str()),
+            "{what}: unknown key {k:?} (expected one of: {})",
+            allowed.join(", ")
+        );
+        ensure!(seen.insert(k.as_str()), "{what}: duplicate key {k:?}");
+    }
+    Ok(())
+}
+
+/// A JSON scalar as the string token the registry consumes: numbers keep
+/// their raw source text, strings their contents.
+fn value_token(v: &Val) -> Option<String> {
+    match v {
+        Val::Num(s) => Some(s.clone()),
+        Val::Str(s) => Some(s.clone()),
+        _ => None,
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse a spec document. Syntax and vocabulary (keys, mechanism and
+    /// workload names, derive rules) are checked here; registry paths
+    /// and value types are checked in [`ScenarioSpec::expand`].
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = parse_root(text).context("scenario spec: malformed JSON")?;
+        let obj = root.entries().context("scenario spec: top level must be a JSON object")?;
+        check_keys(obj, SPEC_KEYS, "scenario spec")?;
+
+        let name = root
+            .field("name")
+            .and_then(Val::str)
+            .context("scenario spec: missing \"name\"")?
+            .to_string();
+        let description =
+            root.field("description").and_then(Val::str).unwrap_or_default().to_string();
+
+        let base = match root.field("base") {
+            None => BasePreset::Eight,
+            Some(v) => match (v.str(), v.u64()) {
+                (Some("single"), _) => BasePreset::Single,
+                (Some("eight"), _) => BasePreset::Eight,
+                (_, Some(n)) if n >= 1 => BasePreset::Cores(n as usize),
+                _ => bail!(
+                    "scenario {name}: \"base\" must be \"single\", \"eight\", or a core count"
+                ),
+            },
+        };
+
+        let mut set = Vec::new();
+        if let Some(v) = root.field("set") {
+            let entries = v.entries().with_context(|| {
+                format!("scenario {name}: \"set\" must be an object of path: value")
+            })?;
+            for (path, val) in entries {
+                let token = value_token(val).with_context(|| {
+                    format!("scenario {name}: set.{path} must be a number or string")
+                })?;
+                set.push((path.clone(), token));
+            }
+        }
+
+        let mechanisms = match root.field("mechanisms") {
+            None => vec![MechanismKind::ChargeCache],
+            Some(v) => {
+                let items = v.arr().with_context(|| {
+                    format!("scenario {name}: \"mechanisms\" must be an array of names")
+                })?;
+                let mut mechs = Vec::new();
+                for item in items {
+                    let s = item.str().with_context(|| {
+                        format!("scenario {name}: mechanism entries must be strings")
+                    })?;
+                    let m = MechanismKind::parse(s).with_context(|| {
+                        format!(
+                            "scenario {name}: unknown mechanism {s:?} (one of: {})",
+                            MechanismKind::valid_names()
+                        )
+                    })?;
+                    ensure!(
+                        m != MechanismKind::Baseline,
+                        "scenario {name}: Baseline is the implicit speedup denominator and \
+                         may not be listed in \"mechanisms\""
+                    );
+                    mechs.push(m);
+                }
+                ensure!(!mechs.is_empty(), "scenario {name}: \"mechanisms\" is empty");
+                mechs
+            }
+        };
+
+        ensure!(
+            root.field("workloads").is_none() || root.field("mixes").is_none(),
+            "scenario {name}: \"workloads\" (single-core) and \"mixes\" (multi-core) are \
+             mutually exclusive"
+        );
+        let workloads = if let Some(v) = root.field("workloads") {
+            if v.str() == Some("all") {
+                WorkloadSel::Singles((0..PROFILES.len()).collect())
+            } else {
+                let items = v.arr().with_context(|| {
+                    format!("scenario {name}: \"workloads\" must be \"all\" or an array of names")
+                })?;
+                let mut idx = Vec::new();
+                for item in items {
+                    let s = item.str().with_context(|| {
+                        format!("scenario {name}: workload entries must be strings")
+                    })?;
+                    let w = PROFILES.iter().position(|p| p.name == s).with_context(|| {
+                        format!(
+                            "scenario {name}: unknown workload {s:?} (valid: {})",
+                            PROFILES.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+                        )
+                    })?;
+                    idx.push(w);
+                }
+                ensure!(!idx.is_empty(), "scenario {name}: \"workloads\" is empty");
+                WorkloadSel::Singles(idx)
+            }
+        } else if let Some(v) = root.field("mixes") {
+            let n = v.u64().with_context(|| {
+                format!("scenario {name}: \"mixes\" must be a positive integer")
+            })? as usize;
+            ensure!(n >= 1, "scenario {name}: \"mixes\" must be >= 1");
+            WorkloadSel::Mixes(Some(n))
+        } else if base.cores() == 1 {
+            WorkloadSel::Singles((0..PROFILES.len()).collect())
+        } else {
+            WorkloadSel::Mixes(None)
+        };
+
+        let baseline = match root.field("baseline") {
+            None => BaselineMode::PerPoint,
+            Some(v) => match v.str() {
+                Some("per-point") => BaselineMode::PerPoint,
+                Some("shared") => BaselineMode::Shared,
+                _ => bail!(
+                    "scenario {name}: \"baseline\" must be \"shared\" or \"per-point\""
+                ),
+            },
+        };
+
+        let mut axes = Vec::new();
+        if let Some(v) = root.field("axes") {
+            let items = v
+                .arr()
+                .with_context(|| format!("scenario {name}: \"axes\" must be an array"))?;
+            for item in items {
+                axes.push(parse_axis(&name, item)?);
+            }
+        }
+
+        let insts_per_core = match root.field("insts_per_core") {
+            None => None,
+            Some(v) => Some(v.u64().with_context(|| {
+                format!("scenario {name}: \"insts_per_core\" must be an integer")
+            })?),
+        };
+        let warmup_cycles = match root.field("warmup_cycles") {
+            None => None,
+            Some(v) => Some(v.u64().with_context(|| {
+                format!("scenario {name}: \"warmup_cycles\" must be an integer")
+            })?),
+        };
+
+        Ok(ScenarioSpec {
+            name,
+            description,
+            base,
+            set,
+            mechanisms,
+            workloads,
+            baseline,
+            axes,
+            insts_per_core,
+            warmup_cycles,
+        })
+    }
+
+    /// Expand into a runnable plan: build the base config from `scale`
+    /// (spec horizon pins win over the scale's, CLI `--set` overrides
+    /// win over the spec's `set`), validate every registry path, and
+    /// materialize the cartesian product of the axes.
+    pub fn expand(&self, scale: &ExperimentScale) -> Result<ScenarioPlan> {
+        let reg = schema::registry();
+        let mut scale = *scale;
+        if let Some(n) = self.insts_per_core {
+            scale.insts_per_core = n;
+        }
+        if let Some(w) = self.warmup_cycles {
+            scale.warmup_cycles = w;
+        }
+
+        // The mechanism is selected by the "mechanisms" list and carried
+        // on JobSpec/JobKey; the config's own (fingerprint-hashed) field
+        // is never read by the simulator, so a "mechanism" set/axis
+        // would relabel rows without changing what simulates.
+        for (path, _) in &self.set {
+            ensure!(
+                path != "mechanism",
+                "scenario {}: set \"mechanism\" via the \"mechanisms\" list, not a config path",
+                self.name
+            );
+        }
+        for axis in &self.axes {
+            ensure!(
+                axis.param != "mechanism",
+                "scenario {}: sweep mechanisms via the \"mechanisms\" list, not an axis",
+                self.name
+            );
+        }
+
+        let cores = self.base.cores();
+        ensure!(cores >= 1, "scenario {}: base core count must be >= 1", self.name);
+        let mut base_cfg = scale.multi_cfg(cores);
+        reg.apply(&mut base_cfg, &self.set)
+            .with_context(|| format!("scenario {}: applying \"set\"", self.name))?;
+        // CLI `--set` wins over the spec's `set`: re-apply the scale's
+        // interned overrides on top (idempotent — multi_cfg already
+        // applied them once, before the spec's).
+        reg.apply(&mut base_cfg, scale.overrides)?;
+
+        // Checked against the post-override config, not the preset, so a
+        // `--set cpu.cores=...` cannot smuggle a mismatch past expand.
+        let units: Vec<WorkloadId> = match &self.workloads {
+            WorkloadSel::Singles(idx) => {
+                ensure!(
+                    base_cfg.cpu.cores == 1,
+                    "scenario {}: single-core \"workloads\" need a 1-core config",
+                    self.name
+                );
+                idx.iter().map(|&w| WorkloadId::Single(w)).collect()
+            }
+            WorkloadSel::Mixes(n) => {
+                ensure!(
+                    base_cfg.cpu.cores > 1,
+                    "scenario {}: \"mixes\" need a multi-core config",
+                    self.name
+                );
+                (0..n.unwrap_or(scale.mixes)).map(WorkloadId::Mix).collect()
+            }
+        };
+        ensure!(!units.is_empty(), "scenario {}: no workloads selected", self.name);
+
+        // Cartesian product, first axis slowest (row-major); zero axes
+        // mean one point at the base config (a pure mechanism compare).
+        // Timing tables are memoized per (temperature, tCK) across the
+        // whole expansion: table derivation is startup-class work under
+        // `pjrt`, and the legacy sweeps derived once per temperature.
+        let mut tables: HashMap<(u64, u64), TimingTable> = HashMap::new();
+        let mut points = vec![ScenarioPoint { coords: Vec::new(), cfg: base_cfg.clone() }];
+        for axis in &self.axes {
+            ensure!(
+                !axis.values.is_empty(),
+                "scenario {}: axis {} has no values",
+                self.name,
+                axis.param
+            );
+            let mut next = Vec::with_capacity(points.len() * axis.values.len());
+            for point in &points {
+                for value in &axis.values {
+                    let mut cfg = point.cfg.clone();
+                    reg.set(&mut cfg, &axis.param, value).with_context(|| {
+                        format!("scenario {}: axis {}", self.name, axis.param)
+                    })?;
+                    if axis.derive.is_some() {
+                        apply_derive(&mut cfg, &mut tables);
+                    }
+                    let mut coords = point.coords.clone();
+                    coords.push((axis.param.clone(), value.clone()));
+                    next.push(ScenarioPoint { coords, cfg });
+                }
+            }
+            points = next;
+        }
+        // Axes can move cpu.cores too (a legitimate scaling study for
+        // mixes), but single-workload jobs are pinned to one core — catch
+        // that at expand, not as an assert inside a parallel_map worker.
+        if matches!(self.workloads, WorkloadSel::Singles(_)) {
+            for point in &points {
+                ensure!(
+                    point.cfg.cpu.cores == 1,
+                    "scenario {}: point {:?} sets cpu.cores != 1 under single-core workloads",
+                    self.name,
+                    point.coords
+                );
+            }
+        }
+
+        Ok(ScenarioPlan {
+            name: self.name.clone(),
+            description: self.description.clone(),
+            mechanisms: self.mechanisms.clone(),
+            baseline: self.baseline,
+            axes: self.axes.iter().map(|a| a.param.clone()).collect(),
+            base_cfg,
+            points,
+            units,
+        })
+    }
+}
+
+fn parse_axis(name: &str, item: &Val) -> Result<AxisSpec> {
+    const AXIS_KEYS: &[&str] = &["param", "values", "range", "derive"];
+    let entries =
+        item.entries().with_context(|| format!("scenario {name}: axes entries must be objects"))?;
+    check_keys(entries, AXIS_KEYS, &format!("scenario {name}: axis"))?;
+    let param = item
+        .field("param")
+        .and_then(Val::str)
+        .with_context(|| format!("scenario {name}: every axis needs a \"param\" path"))?
+        .to_string();
+    ensure!(
+        item.field("values").is_none() || item.field("range").is_none(),
+        "scenario {name}: axis {param}: \"values\" and \"range\" are mutually exclusive"
+    );
+    let values = if let Some(v) = item.field("values") {
+        let items = v.arr().with_context(|| {
+            format!("scenario {name}: axis {param}: \"values\" must be an array")
+        })?;
+        let mut tokens = Vec::new();
+        for val in items {
+            tokens.push(value_token(val).with_context(|| {
+                format!("scenario {name}: axis {param}: values must be numbers or strings")
+            })?);
+        }
+        tokens
+    } else if let Some(r) = item.field("range") {
+        parse_range(name, &param, r)?
+    } else {
+        bail!("scenario {name}: axis {param} needs \"values\" or \"range\"")
+    };
+    let derive = match item.field("derive").and_then(Val::str) {
+        None => None,
+        Some(s) => Some(DeriveRule::parse(s).with_context(|| {
+            format!(
+                "scenario {name}: axis {param}: unknown derive rule {s:?} \
+                 (cc-timing-from-duration | cc-timing-from-temperature)"
+            )
+        })?),
+    };
+    Ok(AxisSpec { param, values, derive })
+}
+
+fn parse_range(name: &str, param: &str, r: &Val) -> Result<Vec<String>> {
+    const RANGE_KEYS: &[&str] = &["from", "to", "steps", "spacing"];
+    let entries = r
+        .entries()
+        .with_context(|| format!("scenario {name}: axis {param}: \"range\" must be an object"))?;
+    check_keys(entries, RANGE_KEYS, &format!("scenario {name}: axis {param} range"))?;
+    let get = |key: &str| -> Result<f64> {
+        r.field(key).and_then(Val::f64).with_context(|| {
+            format!("scenario {name}: axis {param}: range needs numeric \"{key}\"")
+        })
+    };
+    let from = get("from")?;
+    let to = get("to")?;
+    let steps = r
+        .field("steps")
+        .and_then(Val::u64)
+        .with_context(|| format!("scenario {name}: axis {param}: range needs integer \"steps\""))?
+        as usize;
+    ensure!(steps >= 1, "scenario {name}: axis {param}: \"steps\" must be >= 1");
+    let log = match r.field("spacing").and_then(Val::str) {
+        None | Some("linear") => false,
+        Some("log") => true,
+        Some(other) => {
+            bail!("scenario {name}: axis {param}: spacing must be linear|log, got {other:?}")
+        }
+    };
+    range_values(from, to, steps, log)
+        .with_context(|| format!("scenario {name}: axis {param}"))
+}
+
+/// Expand a linear or logarithmic range into axis value tokens (spec
+/// `range` objects and the CLI's `sweep --from/--to/--steps`).
+pub fn range_values(from: f64, to: f64, steps: usize, log: bool) -> Result<Vec<String>> {
+    ensure!(steps >= 1, "range needs at least one step");
+    // A one-step range would silently ignore `to` — surface the mistake.
+    ensure!(
+        steps >= 2 || from == to,
+        "a 1-step range never reaches \"to\" ({to}); use steps >= 2 or an explicit value list"
+    );
+    if log {
+        ensure!(from > 0.0 && to > 0.0, "log spacing needs positive bounds");
+    }
+    if steps == 1 {
+        return Ok(vec![format!("{from}")]);
+    }
+    Ok((0..steps)
+        .map(|i| {
+            // Linear spacing multiplies before dividing so integral grids
+            // (9..12 in 4 steps) land exactly on integers; `Display`
+            // prints the shortest round-trip form, so those values
+            // format as integers and parse exactly.
+            let v = if log {
+                from * (to / from).powf(i as f64 / (steps - 1) as f64)
+            } else {
+                from + (to - from) * i as f64 / (steps - 1) as f64
+            };
+            format!("{v}")
+        })
+        .collect())
+}
+
+/// The legacy sweeps' circuit-layer computation: derive the legal
+/// tRCD/tRAS reductions from the charge→timing table, for the config's
+/// caching duration at the config's temperature. (The two
+/// [`DeriveRule`] names exist so specs read as "what this axis
+/// perturbs"; both re-derive from the same physical inputs, so e.g. a
+/// temperature axis over a `set`-lengthened duration stays consistent.)
+/// Derivation runs at **expansion** time (never per job), and `tables`
+/// memoizes one derivation per (temperature, tCK).
+fn apply_derive(cfg: &mut SystemConfig, tables: &mut HashMap<(u64, u64), TimingTable>) {
+    let (temp, tck) = (cfg.temperature_c, cfg.timing.tck_ns);
+    let table = tables
+        .entry((temp.to_bits(), tck.to_bits()))
+        .or_insert_with(|| timing_table_or_analytic(temp, tck).0);
+    let age_s = cfg.chargecache.duration_ms * 1e-3;
+    let (rcd, ras) = table.reduction_cycles(age_s);
+    // Saturating: the registry makes timing.trcd/tras user-settable, so
+    // trcd < 2 must clamp the reduction to 0, not wrap (the legacy
+    // sweeps' plain subtraction only ever saw the 11/28 presets).
+    cfg.chargecache.trcd_reduction = rcd.min(cfg.timing.trcd.saturating_sub(2));
+    cfg.chargecache.tras_reduction = ras.min(cfg.timing.tras.saturating_sub(2));
+}
+
+/// One fully-expanded sweep point.
+#[derive(Debug, Clone)]
+pub struct ScenarioPoint {
+    /// `(registry path, value token)` per axis, in spec axis order.
+    pub coords: Vec<(String, String)>,
+    cfg: SystemConfig,
+}
+
+impl ScenarioPoint {
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.cfg
+    }
+}
+
+/// A validated, fully-expanded scenario ready to run.
+pub struct ScenarioPlan {
+    pub name: String,
+    pub description: String,
+    pub mechanisms: Vec<MechanismKind>,
+    pub baseline: BaselineMode,
+    /// Axis registry paths, spec order (table headers).
+    pub axes: Vec<String>,
+    pub base_cfg: SystemConfig,
+    pub points: Vec<ScenarioPoint>,
+    pub units: Vec<WorkloadId>,
+}
+
+/// One measured row: sweep-point coordinates × mechanism → speedup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioRow {
+    pub coords: Vec<(String, String)>,
+    pub mechanism: MechanismKind,
+    /// Throughput speedup vs Baseline averaged over the workload units
+    /// (the sum-of-core-IPC ratio — the legacy sweeps' metric).
+    pub speedup: f64,
+}
+
+/// Results of one scenario run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioRun {
+    pub rows: Vec<ScenarioRow>,
+    pub points: usize,
+    pub legs_submitted: usize,
+}
+
+impl ScenarioPlan {
+    fn job(cfg: &SystemConfig, mech: MechanismKind, unit: WorkloadId) -> JobSpec {
+        match unit {
+            WorkloadId::Single(w) => JobSpec::single(cfg.clone(), mech, w),
+            WorkloadId::Mix(m) => JobSpec::mix(cfg.clone(), mech, m),
+        }
+    }
+
+    /// Total legs one run submits (before dedup) — `--validate` output.
+    pub fn leg_count(&self) -> usize {
+        let mech_legs = self.points.len() * self.mechanisms.len() * self.units.len();
+        match self.baseline {
+            BaselineMode::Shared => self.units.len() + mech_legs,
+            BaselineMode::PerPoint => self.points.len() * self.units.len() + mech_legs,
+        }
+    }
+
+    /// Submit every leg through `eng`'s job graph and fold the results
+    /// into per-(point × mechanism) speedup rows. Workload units are
+    /// folded in submission order (mix 0, 1, ... — bit-compatible with
+    /// the legacy sweeps' arithmetic).
+    pub fn run_with(&self, eng: &mut JobEngine) -> ScenarioRun {
+        let mut graph = JobGraph::new();
+        // Baseline (denominator) legs: one per unit, either shared at
+        // the base config or per sweep point.
+        let shared_base: Vec<JobTicket> = match self.baseline {
+            BaselineMode::Shared => self
+                .units
+                .iter()
+                .map(|&u| graph.submit(Self::job(&self.base_cfg, MechanismKind::Baseline, u)))
+                .collect(),
+            BaselineMode::PerPoint => Vec::new(),
+        };
+        let point_base: Vec<Vec<JobTicket>> = match self.baseline {
+            BaselineMode::Shared => Vec::new(),
+            BaselineMode::PerPoint => self
+                .points
+                .iter()
+                .map(|p| {
+                    self.units
+                        .iter()
+                        .map(|&u| graph.submit(Self::job(&p.cfg, MechanismKind::Baseline, u)))
+                        .collect()
+                })
+                .collect(),
+        };
+        let mech_tickets: Vec<Vec<Vec<JobTicket>>> = self
+            .points
+            .iter()
+            .map(|p| {
+                self.mechanisms
+                    .iter()
+                    .map(|&m| {
+                        self.units
+                            .iter()
+                            .map(|&u| graph.submit(Self::job(&p.cfg, m, u)))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let legs_submitted = graph.submitted_len();
+        let res = eng.run(graph);
+
+        let mut rows = Vec::with_capacity(self.points.len() * self.mechanisms.len());
+        for (pi, point) in self.points.iter().enumerate() {
+            for (mi, &mech) in self.mechanisms.iter().enumerate() {
+                let mut sum = 0.0;
+                for ui in 0..self.units.len() {
+                    let bt = match self.baseline {
+                        BaselineMode::Shared => shared_base[ui],
+                        BaselineMode::PerPoint => point_base[pi][ui],
+                    };
+                    let tb: f64 = res.get(bt).core_ipc.iter().sum();
+                    let tc: f64 = res.get(mech_tickets[pi][mi][ui]).core_ipc.iter().sum();
+                    sum += tc / tb;
+                }
+                rows.push(ScenarioRow {
+                    coords: point.coords.clone(),
+                    mechanism: mech,
+                    speedup: sum / self.units.len() as f64,
+                });
+            }
+        }
+        ScenarioRun { rows, points: self.points.len(), legs_submitted }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExperimentScale {
+        ExperimentScale {
+            insts_per_core: 2_000,
+            warmup_cycles: 1_000,
+            mixes: 1,
+            ..ExperimentScale::default()
+        }
+    }
+
+    #[test]
+    fn minimal_spec_defaults() {
+        let spec = ScenarioSpec::parse(r#"{ "name": "m" }"#).unwrap();
+        assert_eq!(spec.base, BasePreset::Eight);
+        assert_eq!(spec.mechanisms, vec![MechanismKind::ChargeCache]);
+        assert_eq!(spec.workloads, WorkloadSel::Mixes(None));
+        assert_eq!(spec.baseline, BaselineMode::PerPoint);
+        assert!(spec.axes.is_empty());
+        // Zero axes expand to one point at the base config.
+        let plan = spec.expand(&tiny()).unwrap();
+        assert_eq!(plan.points.len(), 1);
+        assert_eq!(plan.units.len(), 1);
+        assert_eq!(plan.leg_count(), 2); // baseline + cc on one mix
+    }
+
+    #[test]
+    fn unknown_keys_and_vocab_are_rejected() {
+        assert!(ScenarioSpec::parse(r#"{ "name": "x", "bogus": 1 }"#).is_err());
+        let err = ScenarioSpec::parse(r#"{ "name": "x", "name": "y" }"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err:?}");
+        let err = ScenarioSpec::parse(r#"{ "name": "x", "mechanisms": ["warp"] }"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cc+nuat"), "valid names missing from {err:?}");
+        let err = ScenarioSpec::parse(r#"{ "name": "x", "mechanisms": ["baseline"] }"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("denominator"), "{err:?}");
+        let err = ScenarioSpec::parse(
+            r#"{ "name": "x", "base": "single", "workloads": ["mfc"] }"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("mcf"), "workload list missing from {err:?}");
+        assert!(ScenarioSpec::parse(
+            r#"{ "name": "x", "workloads": ["mcf"], "mixes": 2 }"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn axis_expansion_is_cartesian_row_major() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "name": "grid",
+              "base": "eight",
+              "mixes": 1,
+              "axes": [
+                { "param": "chargecache.entries_per_core", "values": [64, 128] },
+                { "param": "chargecache.ways", "values": [2, 4, 8] }
+              ]
+            }"#,
+        )
+        .unwrap();
+        let plan = spec.expand(&tiny()).unwrap();
+        assert_eq!(plan.points.len(), 6);
+        // First axis slowest: entries=64 rows come first.
+        assert_eq!(plan.points[0].coords, vec![
+            ("chargecache.entries_per_core".to_string(), "64".to_string()),
+            ("chargecache.ways".to_string(), "2".to_string()),
+        ]);
+        assert_eq!(plan.points[5].coords[0].1, "128");
+        assert_eq!(plan.points[5].coords[1].1, "8");
+        assert_eq!(plan.points[3].cfg().chargecache.entries_per_core, 128);
+        assert_eq!(plan.points[3].cfg().chargecache.ways, 2);
+    }
+
+    #[test]
+    fn range_axes_expand_linear_and_log() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "name": "r",
+              "axes": [
+                { "param": "timing.trcd", "range": { "from": 9, "to": 12, "steps": 4 } }
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.axes[0].values, vec!["9", "10", "11", "12"]);
+
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "name": "r2",
+              "axes": [
+                { "param": "chargecache.duration_ms",
+                  "range": { "from": 0.125, "to": 8, "steps": 7, "spacing": "log" } }
+              ]
+            }"#,
+        )
+        .unwrap();
+        let vals: Vec<f64> =
+            spec.axes[0].values.iter().map(|v| v.parse().unwrap()).collect();
+        assert_eq!(vals.len(), 7);
+        assert!(vals.windows(2).all(|w| w[0] < w[1]), "log range must ascend: {vals:?}");
+        assert!((vals[0] - 0.125).abs() < 1e-12);
+        assert!((vals[6] - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spec_set_applies_and_cli_overrides_win() {
+        let spec = ScenarioSpec::parse(
+            r#"{ "name": "s", "set": { "timing.trcd": 13, "mc.scheduler": "bliss" } }"#,
+        )
+        .unwrap();
+        let plan = spec.expand(&tiny()).unwrap();
+        assert_eq!(plan.base_cfg.timing.trcd, 13);
+        assert_eq!(plan.base_cfg.mc.scheduler.label(), "BLISS");
+
+        // CLI --set (interned scale overrides) beats the spec's set.
+        let scale = tiny()
+            .with_overrides(vec![("timing.trcd".to_string(), "12".to_string())])
+            .unwrap();
+        let plan = spec.expand(&scale).unwrap();
+        assert_eq!(plan.base_cfg.timing.trcd, 12);
+        assert_eq!(plan.base_cfg.mc.scheduler.label(), "BLISS");
+    }
+
+    #[test]
+    fn bad_registry_paths_fail_at_expand() {
+        let spec = ScenarioSpec::parse(
+            r#"{ "name": "b", "axes": [ { "param": "chargecache.entires", "values": [1] } ] }"#,
+        )
+        .unwrap();
+        let err = spec.expand(&tiny()).unwrap_err().to_string();
+        assert!(err.contains("unknown parameter"), "{err:?}");
+
+        let spec = ScenarioSpec::parse(
+            r#"{ "name": "b2", "set": { "timing.trcd": 4.5 } }"#,
+        )
+        .unwrap();
+        assert!(spec.expand(&tiny()).is_err(), "fractional u64 must fail");
+    }
+
+    #[test]
+    fn derive_rules_round_trip_names() {
+        for rule in [DeriveRule::CcTimingFromDuration, DeriveRule::CcTimingFromTemperature] {
+            assert_eq!(DeriveRule::parse(rule.name()), Some(rule));
+        }
+        assert_eq!(DeriveRule::parse("nope"), None);
+    }
+}

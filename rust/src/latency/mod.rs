@@ -88,6 +88,73 @@ pub enum MechanismKind {
     LlDram,
 }
 
+/// One row of the mechanism name table: every string a mechanism is
+/// known by, in one place. CLI parsing (`--mechanism`), scenario specs,
+/// the config registry, figure labels, and result-cache file slugs all
+/// derive from this table — there is deliberately no second list of
+/// mechanism names anywhere in the crate.
+#[derive(Debug, Clone, Copy)]
+pub struct MechanismInfo {
+    pub kind: MechanismKind,
+    /// Canonical lowercase name (CLI `--mechanism`, scenario specs,
+    /// `--set mechanism=`).
+    pub name: &'static str,
+    /// Display label (figure/table output, `SimResult::mechanism`).
+    pub label: &'static str,
+    /// Filename-safe slug (on-disk result-cache entries).
+    pub slug: &'static str,
+    /// Additional accepted spellings (parsing only, never printed).
+    pub aliases: &'static [&'static str],
+}
+
+/// The single source of truth for mechanism names (see [`MechanismInfo`]).
+pub const MECHANISM_TABLE: [MechanismInfo; 5] = [
+    MechanismInfo {
+        kind: MechanismKind::Baseline,
+        name: "baseline",
+        label: "Baseline",
+        slug: "baseline",
+        aliases: &["base"],
+    },
+    MechanismInfo {
+        kind: MechanismKind::ChargeCache,
+        name: "cc",
+        label: "ChargeCache",
+        slug: "cc",
+        aliases: &["chargecache"],
+    },
+    MechanismInfo {
+        kind: MechanismKind::Nuat,
+        name: "nuat",
+        label: "NUAT",
+        slug: "nuat",
+        aliases: &[],
+    },
+    MechanismInfo {
+        kind: MechanismKind::ChargeCacheNuat,
+        name: "cc+nuat",
+        label: "CC+NUAT",
+        slug: "ccnuat",
+        aliases: &["chargecachenuat", "combined", "ccnuat"],
+    },
+    MechanismInfo {
+        kind: MechanismKind::LlDram,
+        name: "ll-dram",
+        label: "LL-DRAM",
+        slug: "lldram",
+        aliases: &["lldram", "ll"],
+    },
+];
+
+/// Canonical mechanism names in table order (CLI help, registry choices).
+pub const MECHANISM_NAMES: [&str; 5] = [
+    MECHANISM_TABLE[0].name,
+    MECHANISM_TABLE[1].name,
+    MECHANISM_TABLE[2].name,
+    MECHANISM_TABLE[3].name,
+    MECHANISM_TABLE[4].name,
+];
+
 impl MechanismKind {
     pub fn all() -> [MechanismKind; 5] {
         [
@@ -98,14 +165,38 @@ impl MechanismKind {
             MechanismKind::LlDram,
         ]
     }
+
+    /// This mechanism's row in the name table.
+    pub fn info(&self) -> MechanismInfo {
+        *MECHANISM_TABLE.iter().find(|i| i.kind == *self).expect("every kind has a table row")
+    }
+
     pub fn label(&self) -> &'static str {
-        match self {
-            MechanismKind::Baseline => "Baseline",
-            MechanismKind::ChargeCache => "ChargeCache",
-            MechanismKind::Nuat => "NUAT",
-            MechanismKind::ChargeCacheNuat => "CC+NUAT",
-            MechanismKind::LlDram => "LL-DRAM",
-        }
+        self.info().label
+    }
+
+    /// Canonical lowercase name (the parse/print round-trip identity).
+    pub fn name(&self) -> &'static str {
+        self.info().name
+    }
+
+    /// Parse any accepted spelling — canonical name, display label, or
+    /// alias — case-insensitively.
+    pub fn parse(s: &str) -> Option<MechanismKind> {
+        let lower = s.to_ascii_lowercase();
+        MECHANISM_TABLE
+            .iter()
+            .find(|i| {
+                i.name == lower
+                    || i.label.eq_ignore_ascii_case(&lower)
+                    || i.aliases.contains(&lower.as_str())
+            })
+            .map(|i| i.kind)
+    }
+
+    /// `name | name | ...` list for unknown-mechanism error messages.
+    pub fn valid_names() -> String {
+        MECHANISM_NAMES.join(" | ")
     }
 }
 
@@ -174,12 +265,22 @@ impl Mechanism for CombinedMech {
     fn on_activate(&mut self, now: u64, core: u32, key: RowKey) -> TimingGrant {
         let g_cc = self.cc.on_activate(now, core, key);
         let g_nu = self.nuat.on_activate(now, core, key);
-        if g_cc.reduced {
-            g_cc
-        } else if g_nu.reduced {
-            g_nu
-        } else {
-            g_cc
+        // Both components track the same physical fact (the row's cells
+        // are highly charged), so when both grant, the activation is
+        // entitled to the better of the two reductions. Taking the
+        // element-wise minimum matters when the configs are asymmetric
+        // (e.g. a NUAT sensitivity point with a deeper tRCD reduction
+        // than ChargeCache's); with the default symmetric 4/8-cycle
+        // reductions the minimum equals either grant.
+        match (g_cc.reduced, g_nu.reduced) {
+            (true, true) => TimingGrant {
+                trcd: g_cc.trcd.min(g_nu.trcd),
+                tras: g_cc.tras.min(g_nu.tras),
+                reduced: true,
+            },
+            (true, false) => g_cc,
+            (false, true) => g_nu,
+            (false, false) => g_cc,
         }
     }
     fn on_precharge(&mut self, now: u64, core: u32, key: RowKey) {
@@ -250,5 +351,51 @@ mod tests {
         assert!(g.reduced);
         assert_eq!(g.trcd, 7);
         assert_eq!(g.tras, 20);
+    }
+
+    #[test]
+    fn name_table_round_trips_every_kind() {
+        for kind in MechanismKind::all() {
+            assert_eq!(MechanismKind::parse(kind.name()), Some(kind));
+            assert_eq!(MechanismKind::parse(kind.label()), Some(kind));
+            for &alias in kind.info().aliases {
+                assert_eq!(MechanismKind::parse(alias), Some(kind), "alias {alias}");
+            }
+        }
+        assert_eq!(MechanismKind::parse("CC"), Some(MechanismKind::ChargeCache));
+        assert_eq!(MechanismKind::parse("bogus"), None);
+        assert!(MechanismKind::valid_names().contains("cc+nuat"));
+    }
+
+    #[test]
+    fn combined_grant_takes_the_minimum_effective_timing() {
+        // Regression: with asymmetric reductions (NUAT deeper than CC),
+        // a row both mechanisms cover must get the better grant, not
+        // unconditionally ChargeCache's.
+        let mut cfg = SystemConfig::default();
+        cfg.nuat.trcd_reduction = 6; // 11 - 6 = 5 < CC's 11 - 4 = 7
+        cfg.nuat.tras_reduction = 10; // 28 - 10 = 18 < CC's 28 - 8 = 20
+        let mut m = CombinedMech { cc: ChargeCache::new(&cfg), nuat: Nuat::new(&cfg) };
+        // REF #0 covers rows 0..8 (assumed issued at cycle 0) — NUAT
+        // eligibility; the precharge makes the same row a CC hit.
+        m.on_refresh(0, 0, 1);
+        let key = RowKey::new(0, 0, 3);
+        m.on_precharge(0, 0, key);
+        let g = m.on_activate(10, 0, key);
+        assert!(g.reduced);
+        assert_eq!(g.trcd, 5, "must take NUAT's deeper tRCD reduction");
+        assert_eq!(g.tras, 18, "must take NUAT's deeper tRAS reduction");
+
+        // CC-only hit (row outside the refreshed group) still grants CC's
+        // reduction, and a NUAT-only hit grants NUAT's.
+        let cc_only = RowKey::new(0, 0, 5000);
+        m.on_precharge(20, 0, cc_only);
+        let g_cc = m.on_activate(30, 0, cc_only);
+        assert!(g_cc.reduced);
+        assert_eq!((g_cc.trcd, g_cc.tras), (7, 20));
+        let nuat_only = RowKey::new(0, 0, 4); // refreshed, never precharged
+        let g_nu = m.on_activate(30, 0, nuat_only);
+        assert!(g_nu.reduced);
+        assert_eq!((g_nu.trcd, g_nu.tras), (5, 18));
     }
 }

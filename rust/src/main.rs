@@ -1,40 +1,48 @@
-//! ChargeCache CLI — regenerates every figure/table of the paper and runs
-//! ad-hoc simulations.
+//! ChargeCache CLI — regenerates every figure/table of the paper, runs
+//! ad-hoc simulations, and executes declarative scenario specs.
 //!
 //! ```text
-//! chargecache fig1   [--insts N] [--mixes M] [--quick]      Fig. 1  (RLTL)
-//! chargecache fig3   [--csv path]                           Fig. 3  (bitline)
-//! chargecache fig4   --cores 1|8 [--insts N] [--quick]      Fig. 4  (speedup)
-//! chargecache fig5   --cores 1|8 [--insts N] [--quick]      Fig. 5  (energy)
-//! chargecache figures [--quick] [--result-cache DIR]        all of the above
-//! chargecache area                                          Sec. 6.5 overhead
-//! chargecache sweep-capacity | sweep-duration | sweep-temperature
-//! chargecache simulate --workload mcf --mechanism cc [--cores N]
-//! chargecache gen-traces --out dir [--insts N]              trace files
-//! chargecache timing-table [--temp C]                       codesign bridge
+//! chargecache run      [--workload W | --mix M] [--mechanism M] [--cores N]
+//! chargecache suite    [--cores 1|8]                 fig4 + fig5 views
+//! chargecache figures  [--quick] [--result-cache DIR]   every figure
+//! chargecache fig1 | fig3 | fig4 | fig5 | area | timing-table | gen-traces
+//! chargecache sweep    capacity|duration|temperature | --param PATH ...
+//! chargecache scenario FILE... [--validate]
+//! chargecache params                                 every --set parameter
+//! chargecache help [COMMAND]
 //! ```
 //!
+//! The command table ([`COMMANDS`]) is the single source for parsing
+//! *and* help: `chargecache help` renders from it, `help COMMAND` shows
+//! per-command flags. Every command accepts `--set path=value` overrides
+//! for any [`SystemConfig`] field (see `chargecache params` for the
+//! registry) plus the common horizon/memoization flags below.
+//!
 //! Every simulation runs on the event-driven kernel; pass `--strict-tick`
-//! to any simulating command to use the original per-cycle loop (the
-//! differential-testing oracle — results are bit-identical, only slower).
-//! `--threads N` (or the `PALLAS_THREADS` env var) pins the parallel
-//! runner's worker count for reproducible suite benchmarking.
+//! to use the original per-cycle loop (the differential-testing oracle —
+//! results are bit-identical, only slower). `--threads N` (or the
+//! `PALLAS_THREADS` env var) pins the parallel runner's worker count.
 //!
 //! Every suite command executes through the fingerprint-keyed job graph
 //! (`coordinator::jobs`, DESIGN.md §5): structurally identical legs are
 //! deduplicated and memoized, so `figures` simulates each unique
-//! (config, mechanism, workload) exactly once across all its figures.
+//! (config, mechanism, workload) exactly once across all its figures and
+//! scenarios sharing legs with earlier commands reuse them.
 //! `--result-cache DIR` persists results across invocations; `--no-memo`
 //! restores the naive one-simulation-per-leg behavior.
+//!
+//! The legacy `sweep-capacity` / `sweep-duration` / `sweep-temperature`
+//! commands are thin deprecation aliases for `sweep <builtin>`, which
+//! runs the checked-in scenario specs in `examples/scenarios/` —
+//! bit-identical to the old bespoke sweep code (pinned by
+//! `tests/scenario.rs`).
 
-use chargecache::config::SystemConfig;
-use chargecache::coordinator::cli::Args;
-use chargecache::coordinator::experiments::{
-    fig1_with, run_suite_with, sweep_capacity_with, sweep_duration_with, sweep_temperature_with,
-    ExperimentScale,
-};
-use chargecache::coordinator::figures::{bar, f, pct, print_table, write_csv};
-use chargecache::coordinator::jobs::JobEngine;
+use chargecache::config::{schema, SystemConfig};
+use chargecache::coordinator::cli::{self, Args, CommandSpec, FlagSpec};
+use chargecache::coordinator::experiments::{fig1_with, run_suite_with, ExperimentScale};
+use chargecache::coordinator::figures::{bar, f, pct, print_table, slug, write_csv};
+use chargecache::coordinator::jobs::{JobEngine, JobGraph, JobSpec};
+use chargecache::coordinator::scenario::{ScenarioPlan, ScenarioRun, ScenarioSpec, WorkloadSel};
 use chargecache::energy::HcracCost;
 use chargecache::error::{Context, Result};
 use chargecache::latency::MechanismKind;
@@ -42,6 +50,227 @@ use chargecache::runtime::charge_model::timing_table_or_analytic;
 use chargecache::sim::engine::LoopMode;
 use chargecache::sim::System;
 use chargecache::trace::{file::write_trace, Profile, SynthTrace, PROFILES};
+use chargecache::{bail, ensure};
+
+/// Flags every command accepts.
+const COMMON_FLAGS: &[FlagSpec] = &[
+    FlagSpec::repeated("set", "PATH=VALUE", "Override any config field (see `params`)"),
+    FlagSpec::value("insts", "N", "Instructions per core in the measured region"),
+    FlagSpec::value("warmup", "N", "Warmup CPU cycles"),
+    FlagSpec::value("mixes", "M", "Number of eight-core mixes"),
+    FlagSpec::flag("quick", "Small horizon preset for smoke runs"),
+    FlagSpec::value("scheduler", "NAME", "Memory scheduler (fr-fcfs | fcfs | bliss)"),
+    FlagSpec::flag("strict-tick", "Per-cycle loop oracle instead of the event kernel"),
+    FlagSpec::value("threads", "N", "Pin the parallel runner's worker count"),
+    FlagSpec::value("result-cache", "DIR", "Persist simulation results on disk"),
+    FlagSpec::flag("no-memo", "Disable job dedup + caching (naive path)"),
+    FlagSpec::flag("list-params", "Print the --set parameter registry and exit"),
+    FlagSpec::flag("help", "Show this command's options and exit"),
+];
+
+const RUN_FLAGS: &[FlagSpec] = &[
+    FlagSpec::value("workload", "NAME", "Single workload to run (default mcf)"),
+    FlagSpec::value("mix", "M", "Run multiprogrammed mix M instead of a workload"),
+    FlagSpec::value("mechanism", "NAME", "Mechanism (baseline | cc | nuat | cc+nuat | ll-dram)"),
+    FlagSpec::value("cores", "N", "Core count (default 1)"),
+    FlagSpec::value("entries", "N", "HCRAC entries per core (default 128)"),
+    FlagSpec::value("duration", "MS", "Caching duration in ms (default 1.0)"),
+];
+
+const CORES_FLAG: &[FlagSpec] =
+    &[FlagSpec::value("cores", "N", "1 = single-core, >1 = eight-core")];
+
+const FIG3_FLAGS: &[FlagSpec] =
+    &[FlagSpec::value("csv", "PATH", "Trajectory CSV path (default results/fig3_bitline.csv)")];
+
+const AREA_FLAGS: &[FlagSpec] = &[
+    FlagSpec::value("cores", "N", "Core count (default 8)"),
+    FlagSpec::value("access-rate", "HZ", "ACT+PRE rate for dynamic power (default 170e6)"),
+];
+
+const SWEEP_FLAGS: &[FlagSpec] = &[
+    FlagSpec::value("param", "PATH", "Registry path to sweep (alternative to a builtin name)"),
+    FlagSpec::value("values", "V1,V2,...", "Explicit sweep values (comma-separated)"),
+    FlagSpec::value("from", "X", "Range start (with --to/--steps)"),
+    FlagSpec::value("to", "X", "Range end"),
+    FlagSpec::value("steps", "N", "Range point count"),
+    FlagSpec::flag("log", "Logarithmic range spacing"),
+    FlagSpec::value("derive", "RULE", "cc-timing-from-duration | cc-timing-from-temperature"),
+    FlagSpec::value("mechanism", "NAME", "Mechanism to measure (default cc)"),
+    FlagSpec::value("base", "PRESET", "single | eight | core count (default eight)"),
+    FlagSpec::flag("shared-baseline", "One Baseline at the base config (legacy sweep semantics)"),
+    FlagSpec::flag("validate", "Expand and report the plan without simulating"),
+];
+
+const SCENARIO_FLAGS: &[FlagSpec] =
+    &[FlagSpec::flag("validate", "Parse and expand the spec(s) without simulating")];
+
+const GEN_TRACES_FLAGS: &[FlagSpec] =
+    &[FlagSpec::value("out", "DIR", "Output directory (default traces)")];
+
+const TIMING_TABLE_FLAGS: &[FlagSpec] =
+    &[FlagSpec::value("temp", "C", "DRAM temperature in Celsius (default 85)")];
+
+const NO_FLAGS: &[FlagSpec] = &[];
+
+/// The subcommand table — parsing and `help` both render from it.
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "run",
+        aliases: &["simulate"],
+        summary: "Run one simulation and print its stats",
+        positional: None,
+        flags: RUN_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "suite",
+        aliases: &[],
+        summary: "Full evaluation suite: Fig. 4 speedups + Fig. 5 energy",
+        positional: None,
+        flags: CORES_FLAG,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "figures",
+        aliases: &[],
+        summary: "Every figure + the capacity sweep over one memoized job graph",
+        positional: None,
+        flags: NO_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "fig1",
+        aliases: &[],
+        summary: "Fig. 1 — average t-RLTL (row-level temporal locality)",
+        positional: None,
+        flags: NO_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "fig3",
+        aliases: &[],
+        summary: "Fig. 3 — bitline voltage trajectories and ready times",
+        positional: None,
+        flags: FIG3_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "fig4",
+        aliases: &[],
+        summary: "Fig. 4 — per-mechanism speedup over baseline",
+        positional: None,
+        flags: CORES_FLAG,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "fig5",
+        aliases: &[],
+        summary: "Fig. 5 — DRAM energy reduction",
+        positional: None,
+        flags: CORES_FLAG,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "area",
+        aliases: &[],
+        summary: "Sec. 6.5 — HCRAC storage/area/power overhead",
+        positional: None,
+        flags: AREA_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "sweep",
+        aliases: &[],
+        summary: "Sweep parameters: a builtin (capacity | duration | temperature) or --param",
+        positional: Some("BUILTIN"),
+        flags: SWEEP_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "scenario",
+        aliases: &[],
+        summary: "Run declarative scenario spec file(s) through the job graph",
+        positional: Some("FILE"),
+        flags: SCENARIO_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "params",
+        aliases: &[],
+        summary: "List every --set parameter (dotted path, type, default)",
+        positional: None,
+        flags: NO_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "gen-traces",
+        aliases: &[],
+        summary: "Write synthetic trace files for every workload",
+        positional: None,
+        flags: GEN_TRACES_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "timing-table",
+        aliases: &[],
+        summary: "Charge -> timing table (codesign bridge)",
+        positional: None,
+        flags: TIMING_TABLE_FLAGS,
+        deprecated: None,
+    },
+    CommandSpec {
+        name: "help",
+        aliases: &[],
+        summary: "Show help (optionally for one command)",
+        positional: Some("COMMAND"),
+        flags: NO_FLAGS,
+        deprecated: None,
+    },
+    // Thin deprecation aliases for the pre-scenario sweep commands: same
+    // flags, same results (bit-identity pinned by tests/scenario.rs),
+    // forwarded to the scenario engine with a warning.
+    CommandSpec {
+        name: "sweep-capacity",
+        aliases: &[],
+        summary: "",
+        positional: None,
+        flags: NO_FLAGS,
+        deprecated: Some("sweep capacity"),
+    },
+    CommandSpec {
+        name: "sweep-duration",
+        aliases: &[],
+        summary: "",
+        positional: None,
+        flags: NO_FLAGS,
+        deprecated: Some("sweep duration"),
+    },
+    CommandSpec {
+        name: "sweep-temperature",
+        aliases: &[],
+        summary: "",
+        positional: None,
+        flags: NO_FLAGS,
+        deprecated: Some("sweep temperature"),
+    },
+];
+
+const TITLE: &str = "chargecache — ChargeCache (HPCA'16) reproduction\n\
+\n\
+  `figures` regenerates fig1 + fig4a/b + fig5 (1- and 8-core) + the\n\
+  capacity sweep over ONE memoized job graph; `scenario FILE` runs any\n\
+  declarative experiment grid (see examples/scenarios/) through the\n\
+  same graph, so shared legs simulate exactly once.";
+
+/// Builtin sweeps: the checked-in scenario specs, embedded so they work
+/// from any working directory. `examples/scenarios/` is the source of
+/// truth; CI validates every file there parses and expands.
+const BUILTIN_SCENARIOS: &[(&str, &str)] = &[
+    ("capacity", include_str!("../../examples/scenarios/sweep_capacity.json")),
+    ("duration", include_str!("../../examples/scenarios/sweep_duration.json")),
+    ("temperature", include_str!("../../examples/scenarios/sweep_temperature.json")),
+];
 
 fn scale_from(args: &Args) -> Result<ExperimentScale> {
     let mut s = if args.flag("quick") {
@@ -56,7 +285,9 @@ fn scale_from(args: &Args) -> Result<ExperimentScale> {
     if args.flag("strict-tick") {
         s.loop_mode = LoopMode::StrictTick;
     }
-    Ok(s)
+    // `--set` overrides are validated once and interned into the scale;
+    // every leg config the scale builds applies them last.
+    s.with_overrides(args.set_overrides()?)
 }
 
 /// Build the shared job engine from the memoization flags: every suite
@@ -74,30 +305,49 @@ fn engine_from(args: &Args) -> Result<JobEngine> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env()?;
+    let args = Args::from_env(COMMANDS, COMMON_FLAGS)?;
+    if args.flag("help") {
+        // `chargecache CMD --help` — same output as `help CMD`.
+        println!("{}", cli::render_command_help(args.spec, COMMON_FLAGS));
+        return Ok(());
+    }
+    if args.flag("list-params") {
+        return cmd_params();
+    }
+    if let Some(replacement) = args.spec.deprecated {
+        eprintln!(
+            "warning: `{}` is deprecated; use `chargecache {replacement}`. Simulation \
+             results are bit-identical via the scenario engine, but the CSV now lands \
+             at results/scenario_<name>.csv with axis-path headers.",
+            args.command
+        );
+    }
     // Worker-count pin for every parallel_map fan-out (reproducible
     // benchmarking); 0 keeps the PALLAS_THREADS / machine fallback.
     chargecache::coordinator::runner::set_threads(args.get_usize("threads", 0)?);
     // One engine per invocation: commands that run several experiments
-    // (`figures`) share its cache, so overlapping legs simulate once.
+    // (`figures`, multi-spec `scenario`) share its cache, so overlapping
+    // legs simulate once.
     let mut eng = engine_from(&args)?;
     match args.command.as_str() {
+        "run" => cmd_run(&args, &mut eng),
+        "suite" => cmd_suite(&args, &mut eng),
+        "figures" => cmd_figures(&args, &mut eng),
         "fig1" => cmd_fig1(&args, &mut eng),
         "fig3" => cmd_fig3(&args),
         "fig4" => cmd_fig4(&args, &mut eng),
         "fig5" => cmd_fig5(&args, &mut eng),
-        "figures" => cmd_figures(&args, &mut eng),
         "area" => cmd_area(&args),
-        "sweep-capacity" => cmd_sweep_capacity(&args, &mut eng),
-        "sweep-duration" => cmd_sweep_duration(&args, &mut eng),
-        "sweep-temperature" => cmd_sweep_temperature(&args, &mut eng),
-        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args, &mut eng),
+        "scenario" => cmd_scenario(&args, &mut eng),
+        "params" => cmd_params(),
         "gen-traces" => cmd_gen_traces(&args),
         "timing-table" => cmd_timing_table(&args),
-        _ => {
-            println!("{}", HELP);
-            Ok(())
-        }
+        "help" => cmd_help(&args),
+        "sweep-capacity" => run_builtin_scenario("capacity", &args, &mut eng),
+        "sweep-duration" => run_builtin_scenario("duration", &args, &mut eng),
+        "sweep-temperature" => run_builtin_scenario("temperature", &args, &mut eng),
+        other => bail!("unhandled command {other:?} (table/dispatch mismatch)"),
     }?;
     // Dedup/hit telemetry for every command that ran the job graph.
     if eng.stats().submitted > 0 {
@@ -106,23 +356,33 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-const HELP: &str = "chargecache — ChargeCache (HPCA'16) reproduction
-commands: fig1 fig3 fig4 fig5 figures area sweep-capacity sweep-duration
-          sweep-temperature simulate gen-traces timing-table
+fn cmd_help(args: &Args) -> Result<()> {
+    match args.positionals.first() {
+        None => println!("{}", cli::render_help(TITLE, COMMANDS, COMMON_FLAGS)),
+        Some(name) => {
+            let cmd = COMMANDS
+                .iter()
+                .find(|c| c.name == name.as_str() || c.aliases.contains(&name.as_str()))
+                .with_context(|| format!("unknown command {name:?}"))?;
+            println!("{}", cli::render_command_help(cmd, COMMON_FLAGS));
+        }
+    }
+    Ok(())
+}
 
-  figures regenerates fig1 + fig4a/b + fig5 (1- and 8-core) + the
-  capacity sweep over ONE memoized job graph: legs shared between
-  figures (fig1's baselines, fig5's suite, the sweep's default point)
-  simulate exactly once; the run ends with dedup/hit counters.
-
-common options: --insts N --warmup N --mixes M --quick --strict-tick
-                --scheduler fr-fcfs|fcfs|bliss
-                --threads N (or PALLAS_THREADS=N) pins the worker count
-memoization:    --result-cache DIR persists simulation results on disk,
-                keyed by config fingerprint — a re-run (same config)
-                loads instead of simulating
-                --no-memo disables dedup + caching (every submitted leg
-                simulates; the pre-job-graph behavior)";
+fn cmd_params() -> Result<()> {
+    let reg = schema::registry();
+    println!("--set parameters ({} total, from the exhaustive registry):\n", reg.defs().len());
+    let rows: Vec<Vec<String>> = reg
+        .defs()
+        .iter()
+        .map(|d| {
+            vec![d.path.to_string(), d.kind.describe(), d.default.clone(), d.doc.to_string()]
+        })
+        .collect();
+    print_table(&["path", "type", "default", "description"], &rows);
+    Ok(())
+}
 
 fn cmd_fig1(args: &Args, eng: &mut JobEngine) -> Result<()> {
     let scale = scale_from(args)?;
@@ -352,6 +612,15 @@ fn render_fig5(args: &Args, eng: &mut JobEngine, eight: bool) -> Result<()> {
     Ok(())
 }
 
+/// `suite` — the full evaluation matrix rendered as Fig. 4 + Fig. 5
+/// views over one memoized engine (the second render reuses every leg).
+fn cmd_suite(args: &Args, eng: &mut JobEngine) -> Result<()> {
+    let eight = args.get_usize("cores", 8)? > 1;
+    render_fig4(args, eng, eight)?;
+    println!();
+    render_fig5(args, eng, eight)
+}
+
 fn cmd_area(args: &Args) -> Result<()> {
     let cores = args.get_usize("cores", 8)?;
     let cfg = SystemConfig::multi_core(cores);
@@ -382,8 +651,8 @@ fn cmd_area(args: &Args) -> Result<()> {
 /// Regenerate every simulation-driven figure plus one sensitivity sweep
 /// over the shared memoized engine. Overlap is the point: fig1's
 /// baselines are a subset of the suite's Baseline legs, fig5 re-reads
-/// fig4's suite wholesale, and the capacity sweep's 128-entry point *is*
-/// the default configuration — each simulates exactly once.
+/// fig4's suite wholesale, and the capacity scenario's shared baselines
+/// and 128-entry point collapse onto legs the suite already ran.
 fn cmd_figures(args: &Args, eng: &mut JobEngine) -> Result<()> {
     cmd_fig1(args, eng)?;
     println!();
@@ -395,85 +664,271 @@ fn cmd_figures(args: &Args, eng: &mut JobEngine) -> Result<()> {
     println!();
     render_fig5(args, eng, true)?;
     println!();
-    cmd_sweep_capacity(args, eng)
+    run_builtin_scenario("capacity", args, eng)
 }
 
-fn cmd_sweep_capacity(args: &Args, eng: &mut JobEngine) -> Result<()> {
-    let scale = scale_from(args)?;
-    let entries = [32usize, 64, 128, 256, 512, 1024];
-    println!("Sensitivity — HCRAC capacity (8-core, CC speedup vs baseline)");
-    let rows = sweep_capacity_with(scale, &entries, eng);
-    let table: Vec<Vec<String>> = rows
-        .iter()
-        .map(|(e, s)| vec![e.to_string(), f(*s, 4), bar(s - 1.0, 0.15, 30)])
-        .collect();
-    print_table(&["entries/core", "speedup", ""], &table);
-    write_csv(
-        "results/sweep_capacity.csv",
-        &["entries", "speedup"],
-        &rows.iter().map(|(e, s)| vec![e.to_string(), s.to_string()]).collect::<Vec<_>>(),
+/// `sweep` — a builtin scenario by name, or a one-axis scenario built
+/// from `--param` + `--values`/`--from --to --steps`.
+fn cmd_sweep(args: &Args, eng: &mut JobEngine) -> Result<()> {
+    if let Some(name) = args.positionals.first() {
+        ensure!(
+            args.positionals.len() == 1,
+            "sweep takes one builtin name, got {:?}",
+            args.positionals
+        );
+        // A builtin is a complete spec; axis-building flags would be
+        // silently ignored, so reject the combination outright.
+        for flag in ["param", "values", "from", "to", "steps", "derive", "base", "mechanism"] {
+            ensure!(
+                args.get(flag).is_none(),
+                "--{flag} conflicts with the builtin sweep {name:?} (drop the builtin name \
+                 to build an ad-hoc sweep, or edit examples/scenarios/)"
+            );
+        }
+        ensure!(
+            !args.flag("log") && !args.flag("shared-baseline"),
+            "--log/--shared-baseline conflict with the builtin sweep {name:?}"
+        );
+        return run_builtin_scenario(name, args, eng);
+    }
+    let param = args.get("param").context(
+        "sweep needs a builtin name (capacity | duration | temperature) or --param PATH",
     )?;
+    let values: Vec<String> = match args.get("values") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => {
+            let from = args.get_f64("from", f64::NAN)?;
+            let to = args.get_f64("to", f64::NAN)?;
+            let steps = args.get_usize("steps", 0)?;
+            ensure!(
+                from.is_finite() && to.is_finite() && steps >= 1,
+                "sweep --param needs --values V1,V2,... or --from X --to Y --steps N"
+            );
+            chargecache::coordinator::scenario::range_values(from, to, steps, args.flag("log"))?
+        }
+    };
+    ensure!(!values.is_empty(), "sweep has no values");
+    let derive = match args.get("derive") {
+        None => None,
+        Some(s) => Some(
+            chargecache::coordinator::scenario::DeriveRule::parse(s).with_context(|| {
+                format!(
+                    "unknown derive rule {s:?} \
+                     (cc-timing-from-duration | cc-timing-from-temperature)"
+                )
+            })?,
+        ),
+    };
+    let base = match args.get("base") {
+        None | Some("eight") => chargecache::coordinator::scenario::BasePreset::Eight,
+        Some("single") => chargecache::coordinator::scenario::BasePreset::Single,
+        Some(n) => {
+            let n: usize =
+                n.parse().with_context(|| format!("--base expects single|eight|N, got {n:?}"))?;
+            chargecache::coordinator::scenario::BasePreset::Cores(n)
+        }
+    };
+    let mechanism = args.mechanism(MechanismKind::ChargeCache)?;
+    ensure!(
+        mechanism != MechanismKind::Baseline,
+        "Baseline is the implicit speedup denominator; pick a mechanism to measure"
+    );
+    let spec = ScenarioSpec {
+        name: format!("sweep-{}", slug(param)),
+        description: format!("ad-hoc sweep of {param}"),
+        base,
+        set: Vec::new(),
+        mechanisms: vec![mechanism],
+        workloads: if base.cores() == 1 {
+            WorkloadSel::Singles((0..PROFILES.len()).collect())
+        } else {
+            WorkloadSel::Mixes(None)
+        },
+        baseline: if args.flag("shared-baseline") {
+            chargecache::coordinator::scenario::BaselineMode::Shared
+        } else {
+            chargecache::coordinator::scenario::BaselineMode::PerPoint
+        },
+        axes: vec![chargecache::coordinator::scenario::AxisSpec {
+            param: param.to_string(),
+            values,
+            derive,
+        }],
+        insts_per_core: None,
+        warmup_cycles: None,
+    };
+    run_scenario_spec(spec, args, eng)
+}
+
+/// `scenario FILE...` — run (or `--validate`) spec files in order over
+/// one shared engine, so legs shared between specs simulate once.
+fn cmd_scenario(args: &Args, eng: &mut JobEngine) -> Result<()> {
+    ensure!(
+        !args.positionals.is_empty(),
+        "scenario needs at least one spec FILE (see examples/scenarios/)"
+    );
+    for (i, file) in args.positionals.iter().enumerate() {
+        if i > 0 {
+            println!();
+        }
+        let text = std::fs::read_to_string(file)
+            .with_context(|| format!("reading scenario spec {file:?}"))?;
+        let spec = ScenarioSpec::parse(&text)?;
+        run_scenario_spec(spec, args, eng)?;
+    }
     Ok(())
 }
 
-fn cmd_sweep_duration(args: &Args, eng: &mut JobEngine) -> Result<()> {
-    let scale = scale_from(args)?;
-    let durations = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
-    println!("Sensitivity — caching duration (reductions from the circuit layer)");
-    let rows = sweep_duration_with(scale, &durations, eng);
-    let table: Vec<Vec<String>> = rows
+fn run_builtin_scenario(name: &str, args: &Args, eng: &mut JobEngine) -> Result<()> {
+    let text = BUILTIN_SCENARIOS
         .iter()
-        .map(|(d, s)| vec![format!("{d} ms"), f(*s, 4), bar(s - 1.0, 0.15, 30)])
+        .find(|(n, _)| *n == name)
+        .map(|(_, t)| *t)
+        .with_context(|| {
+            format!("unknown builtin sweep {name:?} (capacity | duration | temperature)")
+        })?;
+    run_scenario_spec(ScenarioSpec::parse(text).expect("builtin specs parse"), args, eng)
+}
+
+/// Shared scenario execution: CLI horizon flags beat spec pins, then
+/// expand, optionally stop at `--validate`, run, render, CSV.
+fn run_scenario_spec(mut spec: ScenarioSpec, args: &Args, eng: &mut JobEngine) -> Result<()> {
+    // Explicit CLI flags — including --quick — override the spec's
+    // horizon pins (scale_from bakes the flags into the scale the pins
+    // would otherwise beat).
+    if args.get("insts").is_some() || args.flag("quick") {
+        spec.insts_per_core = None;
+    }
+    if args.get("warmup").is_some() || args.flag("quick") {
+        spec.warmup_cycles = None;
+    }
+    if args.get("mixes").is_some() {
+        if let WorkloadSel::Mixes(m) = &mut spec.workloads {
+            *m = None;
+        }
+    }
+    let scale = scale_from(args)?;
+    let plan = spec.expand(&scale)?;
+    if args.flag("validate") {
+        println!(
+            "{}: OK — {} point(s) x {} mechanism(s) x {} workload(s) = {} legs ({} baseline)",
+            plan.name,
+            plan.points.len(),
+            plan.mechanisms.len(),
+            plan.units.len(),
+            plan.leg_count(),
+            match plan.baseline {
+                chargecache::coordinator::scenario::BaselineMode::Shared => "shared",
+                chargecache::coordinator::scenario::BaselineMode::PerPoint => "per-point",
+            }
+        );
+        return Ok(());
+    }
+    let run = plan.run_with(eng);
+    render_scenario(&plan, &run)
+}
+
+fn render_scenario(plan: &ScenarioPlan, run: &ScenarioRun) -> Result<()> {
+    println!(
+        "Scenario {} — {}",
+        plan.name,
+        if plan.description.is_empty() { "(no description)" } else { &plan.description }
+    );
+    println!(
+        "{} point(s) x {} mechanism(s), {} workload unit(s), {} legs submitted",
+        run.points,
+        plan.mechanisms.len(),
+        plan.units.len(),
+        run.legs_submitted
+    );
+    let mut headers: Vec<&str> = plan.axes.iter().map(|a| a.as_str()).collect();
+    headers.push("mechanism");
+    headers.push("speedup");
+    headers.push("");
+    let rows: Vec<Vec<String>> = run
+        .rows
+        .iter()
+        .map(|r| {
+            let mut row: Vec<String> = r.coords.iter().map(|(_, v)| v.clone()).collect();
+            row.push(r.mechanism.label().to_string());
+            row.push(f(r.speedup, 4));
+            row.push(bar(r.speedup - 1.0, 0.15, 30));
+            row
+        })
         .collect();
-    print_table(&["duration", "speedup", ""], &table);
-    write_csv(
-        "results/sweep_duration.csv",
-        &["duration_ms", "speedup"],
-        &rows.iter().map(|(d, s)| vec![d.to_string(), s.to_string()]).collect::<Vec<_>>(),
-    )?;
+    print_table(&headers, &rows);
+
+    let path = format!("results/scenario_{}.csv", slug(&plan.name));
+    let mut csv_headers: Vec<&str> = plan.axes.iter().map(|a| a.as_str()).collect();
+    csv_headers.push("mechanism");
+    csv_headers.push("speedup");
+    let csv_rows: Vec<Vec<String>> = run
+        .rows
+        .iter()
+        .map(|r| {
+            let mut row: Vec<String> = r.coords.iter().map(|(_, v)| v.clone()).collect();
+            row.push(r.mechanism.name().to_string());
+            row.push(r.speedup.to_string());
+            row
+        })
+        .collect();
+    write_csv(&path, &csv_headers, &csv_rows)?;
+    println!("CSV: {path}");
     Ok(())
 }
 
-fn cmd_sweep_temperature(args: &Args, eng: &mut JobEngine) -> Result<()> {
-    let scale = scale_from(args)?;
-    let temps = [45.0, 55.0, 65.0, 75.0, 85.0];
-    println!("Sensitivity — temperature (paper Sec. 8.3: CC works at worst case)");
-    let rows = sweep_temperature_with(scale, &temps, eng);
-    let table: Vec<Vec<String>> = rows
-        .iter()
-        .map(|(t, s)| vec![format!("{t} C"), f(*s, 4), bar(s - 1.0, 0.15, 30)])
-        .collect();
-    print_table(&["temp", "speedup", ""], &table);
-    write_csv(
-        "results/sweep_temperature.csv",
-        &["temp_c", "speedup"],
-        &rows.iter().map(|(t, s)| vec![t.to_string(), s.to_string()]).collect::<Vec<_>>(),
-    )?;
-    Ok(())
-}
-
-fn cmd_simulate(args: &Args) -> Result<()> {
+fn cmd_run(args: &Args, eng: &mut JobEngine) -> Result<()> {
     let cores = args.get_usize("cores", 1)?;
+    let quick = args.flag("quick");
     let mut cfg = SystemConfig::multi_core(cores);
-    cfg.insts_per_core = args.get_u64("insts", 500_000)?;
-    cfg.warmup_cpu_cycles = args.get_u64("warmup", 250_000)?;
+    cfg.insts_per_core = args.get_u64("insts", if quick { 60_000 } else { 500_000 })?;
+    cfg.warmup_cpu_cycles = args.get_u64("warmup", if quick { 30_000 } else { 250_000 })?;
     cfg.chargecache.duration_ms = args.get_f64("duration", 1.0)?;
     cfg.chargecache.entries_per_core = args.get_usize("entries", 128)?;
     cfg.mc.scheduler = args.scheduler(cfg.mc.scheduler)?;
     if args.flag("strict-tick") {
         cfg.loop_mode = LoopMode::StrictTick;
     }
-    let kind = args.mechanism(MechanismKind::ChargeCache)?;
+    cfg.mechanism = args.mechanism(MechanismKind::ChargeCache)?;
+    // `--set` wins over every convenience flag above (including
+    // `--mechanism`, via the `mechanism` path).
+    schema::registry().apply(&mut cfg, &args.set_overrides()?)?;
+    let kind = cfg.mechanism;
+    // Normalize before submission: JobKey carries the mechanism, and
+    // suite/scenario legs leave cfg.mechanism at its Baseline default —
+    // keeping `kind` in the config would fork the fingerprint and
+    // defeat cache sharing with those legs.
+    cfg.mechanism = MechanismKind::Baseline;
 
+    // Route through the shared engine wherever the run is expressible as
+    // a graph workload unit, so `--result-cache` serves repeated ad-hoc
+    // runs from disk.
     let name = args.get_str("workload", "mcf");
     let result = if let Some(mix) = args.get("mix") {
         let mix: usize = mix.parse()?;
-        System::new_mix(&cfg, kind, mix).run()
+        let mut graph = JobGraph::new();
+        let t = graph.submit(JobSpec::mix(cfg.clone(), kind, mix));
+        eng.run(graph).get(t).clone()
     } else {
         let p = Profile::by_name(name)
             .with_context(|| format!("unknown workload {name:?}"))?;
-        let profiles: Vec<&Profile> = (0..cores).map(|_| p).collect();
-        System::new(&cfg, kind, &profiles).run()
+        if cfg.cpu.cores == 1 {
+            let w = PROFILES.iter().position(|q| q.name == p.name).expect("by_name found it");
+            let mut graph = JobGraph::new();
+            let t = graph.submit(JobSpec::single(cfg.clone(), kind, w));
+            eng.run(graph).get(t).clone()
+        } else {
+            // One replica per core, from the post-override core count (so
+            // `--set cpu.cores=4` works without also passing `--cores`).
+            // Same-profile replicas aren't a graph workload unit, so this
+            // shape runs directly (no memoization).
+            let profiles: Vec<&Profile> = (0..cfg.cpu.cores).map(|_| p).collect();
+            System::new(&cfg, kind, &profiles).run()
+        }
     };
 
     println!("workload  : {}", result.workload);

@@ -3,6 +3,14 @@
 //! [`SimResult`]s across mechanisms, core counts, row policies, and
 //! measurement modes — plus determinism of the parallel experiment runner
 //! across worker counts.
+//!
+//! Note on CC+NUAT: `CombinedMech::on_activate` now grants the
+//! element-wise *minimum* effective timing when both components reduce
+//! (it used to always prefer the ChargeCache grant). Strict-vs-event
+//! equivalence is unaffected — both loops run the same mechanism — but
+//! CC+NUAT rows recorded by pre-fix builds may legitimately differ under
+//! asymmetric reduction configs, which is why `diskjson::VERSION` was
+//! bumped with the change.
 
 use chargecache::config::{RowPolicy, SystemConfig};
 use chargecache::controller::SchedulerKind;

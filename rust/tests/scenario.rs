@@ -1,0 +1,197 @@
+//! Scenario-API correctness (DESIGN.md §10): the checked-in declarative
+//! specs must reproduce the legacy sweep implementations **bit for
+//! bit** through the shared JobEngine, scenario legs must dedupe and
+//! memoize with the exact counter arithmetic the structure predicts
+//! (mirroring `tests/memo.rs`), and every example spec must stay
+//! parseable and expandable.
+
+use chargecache::coordinator::experiments::{
+    run_suite_with, sweep_capacity_with, sweep_duration_with, sweep_temperature_with,
+    ExperimentScale,
+};
+use chargecache::coordinator::jobs::JobEngine;
+use chargecache::coordinator::scenario::ScenarioSpec;
+use chargecache::latency::MechanismKind;
+use chargecache::trace::PROFILES;
+
+const CAPACITY: &str = include_str!("../../examples/scenarios/sweep_capacity.json");
+const DURATION: &str = include_str!("../../examples/scenarios/sweep_duration.json");
+const TEMPERATURE: &str = include_str!("../../examples/scenarios/sweep_temperature.json");
+
+fn tiny(mixes: usize) -> ExperimentScale {
+    ExperimentScale {
+        insts_per_core: 2_000,
+        warmup_cycles: 1_000,
+        mixes,
+        ..ExperimentScale::default()
+    }
+}
+
+#[test]
+fn capacity_scenario_matches_legacy_sweep_bit_for_bit() {
+    let scale = tiny(2);
+    let entries = [32usize, 64, 128, 256, 512, 1024];
+    // Independent engines on both sides: each path simulates its own
+    // legs, so equality below is bit-identity of two real runs, not one
+    // cache read.
+    let legacy = sweep_capacity_with(scale, &entries, &mut JobEngine::new());
+
+    let plan = ScenarioSpec::parse(CAPACITY).unwrap().expand(&scale).unwrap();
+    let run = plan.run_with(&mut JobEngine::new());
+
+    assert_eq!(run.rows.len(), legacy.len());
+    for (row, (e, s)) in run.rows.iter().zip(&legacy) {
+        assert_eq!(row.mechanism, MechanismKind::ChargeCache);
+        assert_eq!(row.coords[0].0, "chargecache.entries_per_core");
+        assert_eq!(row.coords[0].1.parse::<usize>().unwrap(), *e);
+        assert_eq!(
+            row.speedup.to_bits(),
+            s.to_bits(),
+            "entries {e}: scenario {} vs legacy {s}",
+            row.speedup
+        );
+    }
+}
+
+#[test]
+fn duration_scenario_matches_legacy_sweep_bit_for_bit() {
+    let scale = tiny(1);
+    let durations = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
+    let legacy = sweep_duration_with(scale, &durations, &mut JobEngine::new());
+
+    let plan = ScenarioSpec::parse(DURATION).unwrap().expand(&scale).unwrap();
+    let run = plan.run_with(&mut JobEngine::new());
+
+    assert_eq!(run.rows.len(), legacy.len());
+    for (row, (d, s)) in run.rows.iter().zip(&legacy) {
+        assert_eq!(row.coords[0].1.parse::<f64>().unwrap(), *d);
+        assert_eq!(
+            row.speedup.to_bits(),
+            s.to_bits(),
+            "duration {d} ms: scenario {} vs legacy {s}",
+            row.speedup
+        );
+    }
+}
+
+#[test]
+fn temperature_scenario_matches_legacy_sweep_bit_for_bit() {
+    let scale = tiny(1);
+    let temps = [45.0, 55.0, 65.0, 75.0, 85.0];
+    let legacy = sweep_temperature_with(scale, &temps, &mut JobEngine::new());
+
+    let plan = ScenarioSpec::parse(TEMPERATURE).unwrap().expand(&scale).unwrap();
+    let run = plan.run_with(&mut JobEngine::new());
+
+    assert_eq!(run.rows.len(), legacy.len());
+    for (row, (t, s)) in run.rows.iter().zip(&legacy) {
+        assert_eq!(row.coords[0].0, "temperature_c");
+        assert_eq!(row.coords[0].1.parse::<f64>().unwrap(), *t);
+        assert_eq!(
+            row.speedup.to_bits(),
+            s.to_bits(),
+            "temperature {t} C: scenario {} vs legacy {s}",
+            row.speedup
+        );
+    }
+}
+
+#[test]
+fn scenario_legs_dedupe_and_memoize_with_exact_counters() {
+    let mixes = 2usize;
+    let scale = tiny(mixes);
+    let plan = ScenarioSpec::parse(CAPACITY).unwrap().expand(&scale).unwrap();
+    let points = 6u64;
+
+    let mut eng = JobEngine::new();
+    let first = plan.run_with(&mut eng);
+    // Shared-baseline layout: one Baseline per mix + one CC leg per
+    // (point x mix); a fresh engine simulates every unique leg.
+    let legs = mixes as u64 + points * mixes as u64;
+    assert_eq!(first.legs_submitted as u64, legs);
+    assert_eq!(eng.stats().submitted, legs);
+    assert_eq!(eng.stats().simulated, legs);
+    assert_eq!(eng.stats().eliminated(), 0);
+
+    // Re-running the same plan on the same engine simulates nothing and
+    // reproduces the rows bit-identically from memory.
+    let second = plan.run_with(&mut eng);
+    assert_eq!(eng.stats().submitted, 2 * legs);
+    assert_eq!(eng.stats().simulated, legs);
+    assert_eq!(eng.stats().memory_hits, legs);
+    assert_eq!(first, second);
+}
+
+#[test]
+fn scenario_shares_legs_with_a_prior_suite_run() {
+    // The engine-sharing payoff: after the full suite, the capacity
+    // scenario's shared baselines and its 128-entry point (the default
+    // config the suite already ran as its CC legs) all come from cache.
+    let mixes = 1usize;
+    let scale = tiny(mixes);
+    let singles = PROFILES.len() as u64;
+    let mechs = 5u64;
+
+    let mut eng = JobEngine::new();
+    run_suite_with(scale, true, &mut eng);
+    let suite_legs = singles * mechs + mixes as u64 * mechs;
+    assert_eq!(eng.stats().simulated, suite_legs);
+
+    let plan = ScenarioSpec::parse(CAPACITY).unwrap().expand(&scale).unwrap();
+    plan.run_with(&mut eng);
+    // New simulations: only the five non-default capacity points.
+    assert_eq!(eng.stats().simulated, suite_legs + 5 * mixes as u64);
+    // Cache served the baseline(s) and the 128-entry point.
+    assert_eq!(eng.stats().memory_hits, 2 * mixes as u64);
+}
+
+#[test]
+fn example_specs_parse_and_expand() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(dir).expect("examples/scenarios exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let spec = ScenarioSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("{path:?} does not parse: {e}"));
+        let plan = spec
+            .expand(&tiny(1))
+            .unwrap_or_else(|e| panic!("{path:?} does not expand: {e}"));
+        assert!(plan.leg_count() > 0, "{path:?} expands to zero legs");
+        seen += 1;
+    }
+    assert!(seen >= 4, "expected the checked-in example specs, found {seen}");
+}
+
+#[test]
+fn grid_scenario_crosses_axes_with_per_point_baseline() {
+    // The two-axis example: scheduler x temperature with a per-point
+    // baseline (the scheduler perturbs Baseline behavior).
+    let text = include_str!("../../examples/scenarios/scheduler_temperature_grid.json");
+    let scale = tiny(1);
+    let plan = ScenarioSpec::parse(text).unwrap().expand(&scale).unwrap();
+    assert_eq!(plan.points.len(), 6, "3 schedulers x 2 temperatures");
+    // Per-point baseline: one Baseline per point plus two mechanisms.
+    assert_eq!(plan.leg_count(), 6 + 6 * 2);
+
+    let mut eng = JobEngine::new();
+    let run = plan.run_with(&mut eng);
+    assert_eq!(run.rows.len(), 12);
+    // FR-FCFS at the paper's worst-case temperature must appear, and
+    // every speedup must be a sane ratio.
+    assert!(run
+        .rows
+        .iter()
+        .any(|r| r.coords[0].1 == "fr-fcfs" && r.coords[1].1 == "85.0"));
+    for row in &run.rows {
+        assert!(
+            row.speedup > 0.5 && row.speedup < 2.0,
+            "implausible speedup {} at {:?}",
+            row.speedup,
+            row.coords
+        );
+    }
+}
