@@ -8,12 +8,13 @@
 //!
 //! * default — the full suite; rewrites `BENCH_engine.json` at the repo
 //!   root with the strict-vs-event figures, the event-mode 4-core-mix
-//!   rate, and the per-policy controller-tick rates.
+//!   rate, the per-policy controller-tick rates, and the shard-scaling
+//!   rows (64-core/8-channel mix at 1/2/4/8 channel shards).
 //! * `--check` (CI regression gate) — runs only the event-mode
 //!   4-core-mix figure and compares it against the committed
 //!   `BENCH_engine.json`; exits nonzero on a >20% regression. A missing
-//!   or provisional baseline (`cycles_per_sec` absent or 0) passes with
-//!   a note, so the gate bootstraps cleanly.
+//!   or provisional baseline (`cycles_per_sec` absent or 0) passes but
+//!   warns loudly on stderr that the gate is unarmed.
 
 #[path = "harness.rs"]
 mod harness;
@@ -175,7 +176,45 @@ fn main() {
     }
 
     let memo = bench_suite_memo();
-    engine_vs_strict_tick(&policy_tick_cps, &memo);
+    let shard_rows = bench_shard_scaling();
+    engine_vs_strict_tick(&policy_tick_cps, &memo, &shard_rows);
+}
+
+/// Shard-scaling rows for the channel-sharded event loop (`sim::shard`):
+/// the 64-core / 8-channel mix at 1/2/4/8 shards. Returns
+/// `(shards, cycles_per_sec, sim_cycles, wall_s)` per row. Bit-identity
+/// across shard counts is re-asserted here — the equivalence suite pins
+/// it, but a perf run that silently drifted would poison the figures.
+fn bench_shard_scaling() -> Vec<(usize, f64, u64, f64)> {
+    let mut rows = Vec::new();
+    let mut baseline: Option<SimResult> = None;
+    for shards in [1usize, 2, 4, 8] {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 64;
+        cfg.dram.channels = 8;
+        cfg.insts_per_core = 10_000;
+        cfg.warmup_cpu_cycles = 5_000;
+        cfg.sim_threads = shards;
+        let mut res: Option<SimResult> = None;
+        let r = harness::bench(&format!("hotpath/mix64_8ch_shards_{shards}"), 1, 2, || {
+            res = Some(System::new_mix(&cfg, MechanismKind::ChargeCache, 1).run());
+        });
+        let res = res.unwrap();
+        r.report_throughput(res.cpu_cycles as f64, "cpu-cycles");
+        let wall = r.mean.as_secs_f64();
+        rows.push((shards, res.cpu_cycles as f64 / wall, res.cpu_cycles, wall));
+        match &baseline {
+            None => baseline = Some(res),
+            Some(b) => assert_eq!(b, &res, "{shards}-shard run drifted from 1-shard"),
+        }
+    }
+    if let (Some((_, one, _, _)), Some((_, four, _, _))) =
+        (rows.first().copied(), rows.iter().find(|r| r.0 == 4).copied())
+    {
+        println!("shard scaling at 4 shards: {:.2}x ({:.2}M -> {:.2}M sim-cycles/s)",
+            four / one, one / 1e6, four / 1e6);
+    }
+    rows
 }
 
 /// Quick-suite memoization figures for `BENCH_engine.json`.
@@ -308,8 +347,11 @@ fn check_against_committed() {
                 );
             }
         }
-        _ => println!(
-            "bench-check: no committed baseline yet (provisional BENCH_engine.json) — measured {cps:.0} sim-cycles/s; run `cargo bench --bench hotpath` to record one"
+        _ => eprintln!(
+            "bench-check: WARNING — BENCH_engine.json is missing or provisional (zero-valued \
+             baseline); the regression gate is NOT armed and this pass is vacuous. Measured \
+             {cps:.0} sim-cycles/s; run `cargo bench --bench hotpath` on CI to record a real \
+             baseline"
         ),
     }
 }
@@ -319,7 +361,11 @@ fn check_against_committed() {
 /// acceptance workload), the per-policy controller-tick rates, and the
 /// suite-memoization figures. Emits `BENCH_engine.json` (repo root) so
 /// future PRs have a perf trajectory to track.
-fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)], memo: &SuiteMemoFigures) {
+fn engine_vs_strict_tick(
+    policy_tick_cps: &[(&'static str, f64)],
+    memo: &SuiteMemoFigures,
+    shard_rows: &[(usize, f64, u64, f64)],
+) {
     let insts = 150_000u64;
     let run_mode = |mode: LoopMode, label: &str| -> (f64, SimResult) {
         let p = Profile::by_name("mcf").unwrap();
@@ -360,6 +406,20 @@ fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)], memo: &SuiteMe
         .map(|(label, cps)| format!("    \"{label}\": {{ \"tick_cycles_per_sec\": {cps:.0} }}"))
         .collect::<Vec<_>>()
         .join(",\n");
+    let shard_json = shard_rows
+        .iter()
+        .map(|(s, cps, cycles, wall)| {
+            format!(
+                "      {{ \"shards\": {s}, \"wall_s\": {wall:.6}, \
+                 \"sim_cpu_cycles\": {cycles}, \"cycles_per_sec\": {cps:.0} }}"
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let shard_speedup_4 = match (shard_rows.first(), shard_rows.iter().find(|r| r.0 == 4)) {
+        (Some((_, one, _, _)), Some((_, four, _, _))) if *one > 0.0 => four / one,
+        _ => 0.0,
+    };
     let json = format!(
         "{{\n  \"bench\": \"engine_vs_strict_tick\",\n  \"workload\": \"mcf\",\n  \
          \"mechanism\": \"ChargeCache\",\n  \"insts_per_core\": {insts},\n  \
@@ -375,6 +435,8 @@ fn engine_vs_strict_tick(policy_tick_cps: &[(&'static str, f64)], memo: &SuiteMe
          \"suite_memo\": {{ \"insts_per_core\": {}, \"mixes\": {}, \
          \"memo_wall_s\": {:.6}, \"no_memo_wall_s\": {:.6}, \"speedup\": {:.3}, \
          \"legs_submitted\": {}, \"legs_simulated\": {}, \"dedup_factor\": {:.3} }},\n  \
+         \"shard_scaling\": {{ \"workload\": \"mix64_8ch\", \"insts_per_core\": 10000, \
+         \"speedup_at_4\": {shard_speedup_4:.3}, \"rows\": [\n{shard_json}\n    ] }},\n  \
          \"policies\": {{\n{policies_json}\n  }}\n}}\n",
         strict.cpu_cycles,
         event.cpu_cycles,

@@ -100,23 +100,83 @@ impl Timing {
 
 impl Default for Timing {
     fn default() -> Self {
-        // DDR3-1600K (11-11-11-28), 4Gb-class tRFC.
-        Self {
-            tck_ns: 1.25,
-            trcd: 11,
-            trp: 11,
-            tras: 28,
-            cl: 11,
-            cwl: 8,
-            tbl: 4,
-            tccd: 4,
-            trtp: 6,
-            twr: 12,
-            twtr: 6,
-            trrd: 5,
-            tfaw: 24,
-            trfc: 208, // 260 ns
-            trefi: 6240, // 7.8 us
+        DramGeneration::Ddr3_1600.timing()
+    }
+}
+
+/// Named DRAM device generations: registry-selectable timing presets
+/// (`--set dram.generation=...`), so scaling claims can be made against
+/// more than one device. Selecting a generation replaces the whole
+/// [`Timing`] table; individual `timing.*` overrides still apply on top
+/// when set *after* the generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DramGeneration {
+    /// DDR3-1600K (11-11-11-28) — Table 1 of the paper, the default.
+    Ddr3_1600,
+    /// DDR3-1333H (9-9-9-24) — the paper's companion speed grade.
+    Ddr3_1333,
+    /// DDR4-2400-class (17-17-17-39), 8Gb-class tRFC.
+    Ddr4_2400,
+}
+
+impl DramGeneration {
+    /// The full timing table for this generation, in bus cycles.
+    pub fn timing(self) -> Timing {
+        match self {
+            // DDR3-1600K (11-11-11-28), 4Gb-class tRFC.
+            DramGeneration::Ddr3_1600 => Timing {
+                tck_ns: 1.25,
+                trcd: 11,
+                trp: 11,
+                tras: 28,
+                cl: 11,
+                cwl: 8,
+                tbl: 4,
+                tccd: 4,
+                trtp: 6,
+                twr: 12,
+                twtr: 6,
+                trrd: 5,
+                tfaw: 24,
+                trfc: 208, // 260 ns
+                trefi: 6240, // 7.8 us
+            },
+            // DDR3-1333H (9-9-9-24), 4Gb-class tRFC, tCK = 1.5 ns.
+            DramGeneration::Ddr3_1333 => Timing {
+                tck_ns: 1.5,
+                trcd: 9,
+                trp: 9,
+                tras: 24,
+                cl: 9,
+                cwl: 7,
+                tbl: 4,
+                tccd: 4,
+                trtp: 5,
+                twr: 10,
+                twtr: 5,
+                trrd: 4,
+                tfaw: 20,
+                trfc: 174, // 260 ns
+                trefi: 5200, // 7.8 us
+            },
+            // DDR4-2400 (17-17-17-39), 8Gb-class tRFC, tCK = 0.833 ns.
+            DramGeneration::Ddr4_2400 => Timing {
+                tck_ns: 0.833,
+                trcd: 17,
+                trp: 17,
+                tras: 39,
+                cl: 17,
+                cwl: 12,
+                tbl: 4,
+                tccd: 6,
+                trtp: 9,
+                twr: 18,
+                twtr: 9,
+                trrd: 6,
+                tfaw: 26,
+                trfc: 420, // 350 ns
+                trefi: 9363, // 7.8 us
+            },
         }
     }
 }
@@ -269,6 +329,10 @@ impl Default for NuatConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
     pub dram: DramOrg,
+    /// Device generation the `timing` table was derived from. Selecting
+    /// one via `--set dram.generation=...` replaces `timing` wholesale;
+    /// later `timing.*` overrides refine it.
+    pub generation: DramGeneration,
     pub timing: Timing,
     pub mc: McConfig,
     pub cpu: CpuConfig,
@@ -294,12 +358,20 @@ pub struct SystemConfig {
     /// [`LoopMode::StrictTick`] keeps the original per-cycle loop as the
     /// differential-testing oracle (CLI: `--strict-tick`).
     pub loop_mode: LoopMode,
+    /// Shard count for the channel-sharded parallel event loop
+    /// (registry: `sim.threads`). `0` (default) defers to the
+    /// process-wide `--sim-threads` / `PALLAS_SIM_THREADS` knob; `1`
+    /// forces the exact single-threaded event path. Sharded runs are
+    /// bit-identical to single-threaded ones by construction
+    /// ([`crate::sim::shard`]), so this knob trades wall-clock only.
+    pub sim_threads: usize,
 }
 
 impl Default for SystemConfig {
     fn default() -> Self {
         Self {
             dram: DramOrg::default(),
+            generation: DramGeneration::Ddr3_1600,
             timing: Timing::default(),
             mc: McConfig::default(),
             cpu: CpuConfig::default(),
@@ -312,6 +384,7 @@ impl Default for SystemConfig {
             measure_cycles: None,
             seed: 42,
             loop_mode: LoopMode::EventDriven,
+            sim_threads: 0,
         }
     }
 }
@@ -373,6 +446,7 @@ impl SystemConfig {
     pub fn fingerprint(&self) -> u64 {
         let SystemConfig {
             dram,
+            generation,
             timing,
             mc,
             cpu,
@@ -385,6 +459,7 @@ impl SystemConfig {
             measure_cycles,
             seed,
             loop_mode,
+            sim_threads,
         } = self;
         let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
         let Timing {
@@ -445,6 +520,15 @@ impl SystemConfig {
         h.push_usize(*rows);
         h.push_usize(*row_bytes);
         h.push_usize(*line_bytes);
+        // Generation label. The derived timing table is hashed field by
+        // field below, so this only distinguishes a named preset from an
+        // identical hand-rolled table — cheap, and it keeps the registry
+        // round-trip invariant (every settable param moves the hash).
+        h.push_u64(match generation {
+            DramGeneration::Ddr3_1600 => 0,
+            DramGeneration::Ddr3_1333 => 1,
+            DramGeneration::Ddr4_2400 => 2,
+        });
         // Timing.
         h.push_f64(*tck_ns);
         for t in [trcd, trp, tras, cl, cwl, tbl, tccd, trtp, twr, twtr, trrd, tfaw, trfc, trefi] {
@@ -521,6 +605,11 @@ impl SystemConfig {
             LoopMode::EventDriven => 0,
             LoopMode::StrictTick => 1,
         });
+        // Sharded and single-threaded runs are bit-identical by the shard
+        // determinism contract, but hashed for the same reason as
+        // loop_mode: the equivalence tests must never compare a cached
+        // result against itself.
+        h.push_usize(*sim_threads);
         h.finish()
     }
 
@@ -674,6 +763,18 @@ mod tests {
                 c.loop_mode = LoopMode::StrictTick;
                 c
             },
+            {
+                let mut c = a.clone();
+                c.sim_threads = 4;
+                c
+            },
+            {
+                // Same timing table, different generation label: the tag
+                // itself must move the hash (registry round-trip).
+                let mut c = a.clone();
+                c.generation = DramGeneration::Ddr3_1333;
+                c
+            },
         ];
         for p in perturbations {
             let fp = p.fingerprint();
@@ -689,6 +790,19 @@ mod tests {
         let mut zero = none.clone();
         zero.measure_cycles = Some(0);
         assert_ne!(none.fingerprint(), zero.fingerprint());
+    }
+
+    #[test]
+    fn generation_presets() {
+        // The default table IS the DDR3-1600 preset — pinned results
+        // must not shift under the generation refactor.
+        assert_eq!(DramGeneration::Ddr3_1600.timing(), Timing::default());
+        let d1333 = DramGeneration::Ddr3_1333.timing();
+        assert_eq!(d1333.trcd, 9);
+        assert_eq!(d1333.trc(), 33);
+        let d4 = DramGeneration::Ddr4_2400.timing();
+        assert_eq!(d4.trcd, 17);
+        assert!(d4.tck_ns < d1333.tck_ns, "DDR4-2400 clocks faster");
     }
 
     #[test]

@@ -23,8 +23,8 @@ use std::sync::OnceLock;
 
 use crate::bail;
 use crate::config::{
-    ChargeCacheConfig, CpuConfig, DramOrg, HcracPolicy, HcracSharing, McConfig, NuatConfig,
-    RowPolicy, SystemConfig, Timing,
+    ChargeCacheConfig, CpuConfig, DramGeneration, DramOrg, HcracPolicy, HcracSharing, McConfig,
+    NuatConfig, RowPolicy, SystemConfig, Timing,
 };
 use crate::controller::{SchedulerKind, SCHEDULER_NAMES};
 use crate::error::Result;
@@ -174,6 +174,25 @@ impl Choice for HcracPolicy {
     }
 }
 
+impl Choice for DramGeneration {
+    const CHOICES: &'static [&'static str] = &["ddr3-1600", "ddr3-1333", "ddr4-2400"];
+    fn to_name(self) -> &'static str {
+        match self {
+            DramGeneration::Ddr3_1600 => "ddr3-1600",
+            DramGeneration::Ddr3_1333 => "ddr3-1333",
+            DramGeneration::Ddr4_2400 => "ddr4-2400",
+        }
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ddr3-1600" | "ddr3_1600" => Some(DramGeneration::Ddr3_1600),
+            "ddr3-1333" | "ddr3_1333" => Some(DramGeneration::Ddr3_1333),
+            "ddr4-2400" | "ddr4_2400" | "ddr4" => Some(DramGeneration::Ddr4_2400),
+            _ => None,
+        }
+    }
+}
+
 impl Choice for LoopMode {
     const CHOICES: &'static [&'static str] = &["event-driven", "strict-tick"];
     fn to_name(self) -> &'static str {
@@ -296,6 +315,7 @@ macro_rules! choice_param {
 fn build() -> Vec<ParamDef> {
     let SystemConfig {
         dram,
+        generation,
         timing,
         mc,
         cpu,
@@ -308,6 +328,7 @@ fn build() -> Vec<ParamDef> {
         measure_cycles,
         seed,
         loop_mode,
+        sim_threads,
     } = SystemConfig::default();
     let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
     let Timing {
@@ -374,6 +395,21 @@ fn build() -> Vec<ParamDef> {
         dram.row_bytes,
     );
     scalar_param!(defs, "dram.line_bytes", line_bytes, "Cache-line size in bytes", dram.line_bytes);
+    // dram.generation: setting it applies the generation's full timing
+    // table (later `timing.*` overrides still refine it), so it needs a
+    // hand-rolled setter instead of `choice_param!`.
+    defs.push(ParamDef {
+        path: "dram.generation",
+        kind: choice_kind(&generation),
+        doc: "Named device generation; selecting one applies its timing table",
+        default: Choice::to_name(generation).to_string(),
+        getter: |c| Choice::to_name(c.generation).to_string(),
+        setter: |c, s| {
+            set_choice(&mut c.generation, "dram.generation", s)?;
+            c.timing = c.generation.timing();
+            Ok(())
+        },
+    });
     // Timing.
     scalar_param!(defs, "timing.tck_ns", tck_ns, "Bus clock period in nanoseconds", timing.tck_ns);
     scalar_param!(defs, "timing.trcd", trcd, "ACT-to-column delay (bus cycles)", timing.trcd);
@@ -570,6 +606,13 @@ fn build() -> Vec<ParamDef> {
         "Event-driven kernel or per-cycle oracle",
         loop_mode,
     );
+    scalar_param!(
+        defs,
+        "sim.threads",
+        sim_threads,
+        "Shard count for the channel-sharded event loop (0 = --sim-threads/PALLAS_SIM_THREADS)",
+        sim_threads,
+    );
     defs
 }
 
@@ -676,10 +719,11 @@ mod tests {
     #[test]
     fn every_param_round_trips_and_moves_the_fingerprint() {
         let reg = registry();
-        // One def per config field (6 dram + 15 timing + 6 mc + 8 cpu +
-        // 7 chargecache + 3 nuat + 7 top-level). If this count moved,
-        // update it together with the new field's ParamDef.
-        assert_eq!(reg.defs().len(), 52, "registry must cover every SystemConfig field");
+        // One def per config field (6 dram org + generation + 15 timing +
+        // 6 mc + 8 cpu + 7 chargecache + 3 nuat + 8 top-level incl.
+        // sim.threads). If this count moved, update it together with the
+        // new field's ParamDef.
+        assert_eq!(reg.defs().len(), 54, "registry must cover every SystemConfig field");
         let base = SystemConfig::default();
         for def in reg.defs() {
             // The recorded default is the default config's value.
@@ -736,6 +780,24 @@ mod tests {
         assert_eq!(cfg.loop_mode, LoopMode::StrictTick);
         let err = reg.set(&mut cfg, "mc.row_policy", "ajar").unwrap_err().to_string();
         assert!(err.contains("open | closed"), "choices missing from {err:?}");
+    }
+
+    #[test]
+    fn generation_applies_timing_preset() {
+        let reg = registry();
+        let mut cfg = SystemConfig::default();
+        reg.set(&mut cfg, "dram.generation", "ddr3-1333").unwrap();
+        assert_eq!(cfg.generation, DramGeneration::Ddr3_1333);
+        assert_eq!(cfg.timing.trcd, 9);
+        assert_eq!(cfg.timing.tck_ns, 1.5);
+        // A later timing.* override refines the selected preset.
+        reg.set(&mut cfg, "timing.trcd", "10").unwrap();
+        assert_eq!(cfg.timing.trcd, 10);
+        assert_eq!(cfg.timing.trp, 9, "other preset fields must survive");
+        // The alias parses too.
+        reg.set(&mut cfg, "dram.generation", "ddr4").unwrap();
+        assert_eq!(reg.get(&cfg, "dram.generation").unwrap(), "ddr4-2400");
+        assert_eq!(cfg.timing.trfc, 420);
     }
 
     #[test]

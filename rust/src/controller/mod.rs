@@ -85,6 +85,14 @@ pub struct MemController {
     rank_active_since: Vec<u64>,
     /// Cycles each rank spent with >= 1 bank open.
     pub rank_active_cycles: Vec<u64>,
+    /// Locations of writes issued (drained from the write queue) by the
+    /// most recent [`MemController::tick`]. The sharded runner mirrors
+    /// write-queue contents on the coordinating thread for exact
+    /// write-to-read forwarding decisions; this log is how a drain
+    /// propagates back to that mirror at the epoch barrier. Cleared at
+    /// the start of every tick, so it holds at most one entry (one
+    /// command per bus cycle) and never grows.
+    wq_drained: Vec<Loc>,
 }
 
 impl MemController {
@@ -108,6 +116,7 @@ impl MemController {
             rank_open: vec![0; cfg.dram.ranks],
             rank_active_since: vec![0; cfg.dram.ranks],
             rank_active_cycles: vec![0; cfg.dram.ranks],
+            wq_drained: Vec::new(),
         }
     }
 
@@ -168,6 +177,19 @@ impl MemController {
         (self.rq.len(), self.wq.len())
     }
 
+    /// Write locations drained from the write queue by the most recent
+    /// [`MemController::tick`] (at most one — one command per cycle).
+    pub fn drained_writes(&self) -> &[Loc] {
+        &self.wq_drained
+    }
+
+    /// Current write-queue locations, in queue-slot order. Used by the
+    /// sharded runner to seed its coordinator-side write-queue mirror
+    /// (exact write-to-read forwarding without touching the controller).
+    pub fn write_queue_locs(&self) -> impl Iterator<Item = Loc> + '_ {
+        self.wq.iter().map(|r| r.loc)
+    }
+
     /// True if a read can be accepted right now.
     pub fn can_accept_read(&self) -> bool {
         !self.rq.is_full()
@@ -215,6 +237,7 @@ impl MemController {
     /// engine, issue at most one command, then drain due completions into
     /// `out`.
     pub fn tick(&mut self, now: u64, out: &mut Vec<Completion>) {
+        self.wq_drained.clear();
         self.resolve_autopre(now);
         if !self.refresh_engine(now) {
             self.schedule(now);
@@ -468,6 +491,7 @@ impl MemController {
             let class = self.class_of.remove(&req.id).unwrap_or(ReqClass::Hit);
             let read_latency = if req.is_write {
                 self.wq.remove(key);
+                self.wq_drained.push(req.loc);
                 None
             } else {
                 let ready = ready.expect("read returns data-ready cycle");

@@ -7,12 +7,22 @@
 //! `PALLAS_THREADS` environment variable, then the machine's available
 //! parallelism. Pinning exists so benchmark suites can be reproduced on
 //! shared machines — results are index-pure either way.
+//!
+//! The two threading knobs compose: `--threads` controls how many *jobs*
+//! run concurrently; `--sim-threads` ([`set_sim_threads`] /
+//! `PALLAS_SIM_THREADS`) controls how many channel shards each job's
+//! simulation uses ([`crate::sim::shard`]). Total worker threads is
+//! their product, so [`default_threads`] divides available parallelism
+//! by the shard count instead of silently oversubscribing.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// Worker-count pin for [`parallel_map`]; 0 means "not pinned".
 static THREAD_PIN: AtomicUsize = AtomicUsize::new(0);
+
+/// Shard-count pin for the channel-sharded simulation loop; 0 = unset.
+static SIM_THREAD_PIN: AtomicUsize = AtomicUsize::new(0);
 
 /// Pin the worker count for every subsequent [`parallel_map`] call
 /// (CLI `--threads N`). Passing 0 clears the pin, restoring the
@@ -21,21 +31,65 @@ pub fn set_threads(n: usize) {
     THREAD_PIN.store(n, Ordering::Relaxed);
 }
 
-/// Resolve the worker count: pin, then `PALLAS_THREADS`, then the
-/// machine.
-fn default_threads() -> usize {
-    let pinned = THREAD_PIN.load(Ordering::Relaxed);
+/// Pin the per-simulation shard count (CLI `--sim-threads N`). Passing 0
+/// clears the pin, restoring the `PALLAS_SIM_THREADS` / single-threaded
+/// fallback chain. Consulted by [`crate::sim::System`] when a config
+/// leaves `sim.threads` at its 0 (auto) default.
+pub fn set_sim_threads(n: usize) {
+    SIM_THREAD_PIN.store(n, Ordering::Relaxed);
+}
+
+/// Resolve the per-simulation shard count: pin, then
+/// `PALLAS_SIM_THREADS`, then 1 (the exact single-threaded event path —
+/// sharding is opt-in, unlike job parallelism).
+pub fn sim_threads() -> usize {
+    let pinned = SIM_THREAD_PIN.load(Ordering::Relaxed);
     if pinned > 0 {
         return pinned;
     }
-    if let Ok(v) = std::env::var("PALLAS_THREADS") {
+    if let Ok(v) = std::env::var("PALLAS_SIM_THREADS") {
         if let Ok(n) = v.trim().parse::<usize>() {
             if n > 0 {
                 return n;
             }
         }
     }
-    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    1
+}
+
+/// Resolve the job worker count: pin, then `PALLAS_THREADS`, then the
+/// machine — divided by the shard count so jobs × shards stays within
+/// available parallelism. An explicit pin or env setting is honored as
+/// given (the user asked for it), but still warned about when the
+/// product oversubscribes.
+fn default_threads() -> usize {
+    let shards = sim_threads().max(1);
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let explicit = {
+        let pinned = THREAD_PIN.load(Ordering::Relaxed);
+        if pinned > 0 {
+            Some(pinned)
+        } else {
+            std::env::var("PALLAS_THREADS")
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+        }
+    };
+    match explicit {
+        Some(n) => {
+            if n.saturating_mul(shards) > avail {
+                eprintln!(
+                    "warning: --threads {n} x --sim-threads {shards} = {} worker threads \
+                     exceeds available parallelism ({avail}); expect contention",
+                    n * shards
+                );
+            }
+            n
+        }
+        // Auto: cap jobs so jobs x shards <= available parallelism.
+        None => (avail / shards).max(1),
+    }
 }
 
 /// Run `f(0..n)` across `threads` workers, preserving index order in the

@@ -20,8 +20,14 @@
 //!
 //! Every simulation runs on the event-driven kernel; pass `--strict-tick`
 //! to use the original per-cycle loop (the differential-testing oracle —
-//! results are bit-identical, only slower). `--threads N` (or the
-//! `PALLAS_THREADS` env var) pins the parallel runner's worker count.
+//! results are bit-identical, only slower). Two threading knobs compose:
+//! `--threads N` (env `PALLAS_THREADS`) pins how many *jobs* run
+//! concurrently, and `--sim-threads N` (env `PALLAS_SIM_THREADS`,
+//! registry `sim.threads`) shards each simulation's memory channels
+//! across N worker threads — bit-identical to `--sim-threads 1` by the
+//! epoch-barrier determinism contract (`sim::shard`). When only
+//! `--sim-threads` is given, the job worker count is divided down so
+//! jobs × shards stays within available parallelism.
 //!
 //! Every suite command executes through the fingerprint-keyed job graph
 //! (`coordinator::jobs`, DESIGN.md §5): structurally identical legs are
@@ -61,7 +67,8 @@ const COMMON_FLAGS: &[FlagSpec] = &[
     FlagSpec::flag("quick", "Small horizon preset for smoke runs"),
     FlagSpec::value("scheduler", "NAME", "Memory scheduler (fr-fcfs | fcfs | bliss)"),
     FlagSpec::flag("strict-tick", "Per-cycle loop oracle instead of the event kernel"),
-    FlagSpec::value("threads", "N", "Pin the parallel runner's worker count"),
+    FlagSpec::value("threads", "N", "Pin the parallel runner's job worker count"),
+    FlagSpec::value("sim-threads", "N", "Channel shards per simulation (1 = single-threaded)"),
     FlagSpec::value("result-cache", "DIR", "Persist simulation results on disk"),
     FlagSpec::flag("no-memo", "Disable job dedup + caching (naive path)"),
     FlagSpec::flag("list-params", "Print the --set parameter registry and exit"),
@@ -325,6 +332,10 @@ fn main() -> Result<()> {
     // Worker-count pin for every parallel_map fan-out (reproducible
     // benchmarking); 0 keeps the PALLAS_THREADS / machine fallback.
     chargecache::coordinator::runner::set_threads(args.get_usize("threads", 0)?);
+    // Shard-count pin for the channel-sharded simulation loop; a pin
+    // (rather than a config field) so memoized results stay shared
+    // across shard counts — sharded runs are bit-identical by contract.
+    chargecache::coordinator::runner::set_sim_threads(args.get_usize("sim-threads", 0)?);
     // One engine per invocation: commands that run several experiments
     // (`figures`, multi-spec `scenario`) share its cache, so overlapping
     // legs simulate once.

@@ -3,6 +3,7 @@
 //! experiment consumes.
 
 pub mod engine;
+pub mod shard;
 pub mod stats;
 pub mod system;
 pub mod wake;

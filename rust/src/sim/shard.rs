@@ -1,0 +1,207 @@
+//! Channel-sharded parallel execution of one simulation.
+//!
+//! Memory channels are architecturally independent below the enqueue
+//! boundary: a [`MemController`] and its DRAM devices never read another
+//! channel's state. This module partitions the controllers into
+//! contiguous per-shard domains, each advanced by a worker thread with
+//! its **own bus-domain [`WakeIndex`]**, and synchronizes them with the
+//! coordinator (which owns the cores, LLC, mapper, and in-flight slab)
+//! at deterministic *epoch barriers*.
+//!
+//! ## Epochs and the quantum
+//!
+//! An epoch is one visited bus-cycle boundary. The minimum cross-shard
+//! latency in the system is exactly one bus cycle: a request enqueued at
+//! bus cycle `t` is first visible to its controller at `t + 1` (the
+//! sequential event loop's trailing enqueue clamp encodes the same
+//! fact), and a completion drained at bus cycle `t` reaches its core at
+//! CPU cycle `t * cpu_per_bus` — the very boundary at which it is
+//! exchanged. The epoch quantum is therefore one bus cycle: no message
+//! can ever arrive in a shard's past, because every message is handed
+//! over at the first boundary at which the receiver may act on it.
+//!
+//! ## Canonical exchange order
+//!
+//! Determinism (bit-identity with the single-threaded event loop) holds
+//! because every exchange is ordered canonically, independent of thread
+//! timing:
+//!
+//! * the coordinator flushes staged enqueues to shard inboxes in the
+//!   order the cores issued them (core index order within a cycle);
+//! * each shard ticks its due channels in ascending channel order,
+//!   appending completions in that order;
+//! * the coordinator applies shard outputs in ascending shard order, so
+//!   the concatenation is ascending **global channel order** — exactly
+//!   the order `System::tick_indexed` drains completions in, which in
+//!   turn fixes the in-flight slab's freelist recycling order.
+//!
+//! Within a shard, per-channel wake bounds follow the exact sequential
+//! update rules (recompute after a tick, clamp to `enqueue_bus + 1` on
+//! an enqueue), so each channel ticks at precisely the same bus cycles
+//! as under the single-threaded loop.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::controller::{Completion, MemController, Request};
+use crate::dram::command::Loc;
+use crate::sim::wake::WakeIndex;
+
+/// A core→channel request crossing a shard boundary: enqueued on the
+/// coordinator at bus cycle `bus`, delivered to the owning shard at the
+/// next epoch (bus cycle `bus + 1` — the enqueue clamp guarantees that
+/// boundary is visited).
+#[derive(Debug, Clone, Copy)]
+pub struct EnqMsg {
+    /// Global channel index.
+    pub ch: u32,
+    /// Bus cycle at which the coordinator staged the enqueue.
+    pub bus: u64,
+    pub req: Request,
+}
+
+/// Everything a shard publishes at an epoch barrier, in canonical order.
+#[derive(Debug, Default)]
+pub struct EpochOut {
+    /// Completions drained this epoch, ascending local-channel order.
+    pub completions: Vec<Completion>,
+    /// Write locations drained from write queues this epoch (feeds the
+    /// coordinator's write-queue mirror for forwarding decisions).
+    pub drained: Vec<(u32, Loc)>,
+    /// `(channel, rq_len, wq_len)` for every channel ticked this epoch
+    /// (authoritative refresh of the coordinator's occupancy mirror).
+    pub occ: Vec<(u32, u32, u32)>,
+    /// The shard's minimum wake bound after the epoch, bus domain.
+    pub min_bound_bus: u64,
+}
+
+impl EpochOut {
+    fn clear(&mut self) {
+        self.completions.clear();
+        self.drained.clear();
+        self.occ.clear();
+        self.min_bound_bus = u64::MAX;
+    }
+}
+
+/// One shard's owned state: a contiguous run of controllers starting at
+/// global channel `base`, plus their bus-domain wake index.
+pub struct ShardState {
+    /// Global channel index of local channel 0.
+    pub base: usize,
+    pub mcs: Vec<MemController>,
+    /// Per-local-channel wake bounds, **bus-cycle** domain — maintained
+    /// by the same rules as the sequential loop's controller entries.
+    pub wake: WakeIndex,
+}
+
+impl ShardState {
+    /// Build a shard over `mcs`, every channel hot at bus cycle 0 — an
+    /// early bound is a no-op tick, so starting hot is always sound.
+    pub fn new(base: usize, mcs: Vec<MemController>) -> Self {
+        let wake = WakeIndex::new(mcs.len());
+        Self { base, mcs, wake }
+    }
+
+    /// Run one epoch at bus cycle `bus`: deliver inbound enqueues, tick
+    /// every due channel in ascending order, publish outputs into `out`.
+    pub fn run_epoch(&mut self, inbox: &mut Vec<EnqMsg>, bus: u64, out: &mut EpochOut) {
+        out.clear();
+        for m in inbox.drain(..) {
+            let li = m.ch as usize - self.base;
+            let accepted = self.mcs[li].enqueue(m.req, m.bus);
+            debug_assert!(accepted, "admission was pre-checked on the coordinator");
+            // The sequential trailing clamp: the controller may first act
+            // on the enqueue at the next bus boundary after it landed.
+            let clamped = self.wake.bound(li).min(m.bus + 1);
+            self.wake.set(li, clamped);
+        }
+        for li in 0..self.mcs.len() {
+            if self.wake.bound(li) > bus {
+                continue;
+            }
+            let ch = (self.base + li) as u32;
+            let mc = &mut self.mcs[li];
+            mc.tick(bus, &mut out.completions);
+            for &loc in mc.drained_writes() {
+                out.drained.push((ch, loc));
+            }
+            let (rq, wq) = mc.occupancy();
+            out.occ.push((ch, rq as u32, wq as u32));
+            let b = mc.next_event_at(bus + 1).max(bus + 1);
+            self.wake.set(li, b);
+        }
+        out.min_bound_bus = self.wake.min_bound();
+    }
+}
+
+/// Coordinator↔worker mailbox for one shard. The coordinator publishes
+/// an epoch by writing `bus` then bumping `epoch`; the worker runs the
+/// epoch and acknowledges by storing the same value to `done`. Payloads
+/// travel through the mutex-guarded buffers, exchanged by `mem::swap` so
+/// capacities recycle and the steady state allocates nothing.
+pub struct ShardSlot {
+    /// Epoch sequence number, bumped by the coordinator (Release).
+    pub epoch: AtomicU64,
+    /// Last epoch the worker finished (worker stores with Release).
+    pub done: AtomicU64,
+    /// Bus cycle of the pending epoch (written before `epoch` bumps).
+    pub bus: AtomicU64,
+    /// Coordinator sets this after the last epoch; the worker returns.
+    pub stop: AtomicBool,
+    /// Inbound enqueues for the pending epoch.
+    pub inbox: Mutex<Vec<EnqMsg>>,
+    /// The finished epoch's outputs.
+    pub out: Mutex<EpochOut>,
+}
+
+impl Default for ShardSlot {
+    fn default() -> Self {
+        Self {
+            epoch: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            bus: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            inbox: Mutex::new(Vec::new()),
+            out: Mutex::new(EpochOut::default()),
+        }
+    }
+}
+
+/// Worker thread body: spin (with yield fallback) for epoch requests,
+/// run them, and hand the shard state back when stopped so the
+/// coordinator can reassemble `MemHierarchy::mcs`.
+pub fn worker_loop(mut st: ShardState, slot: &ShardSlot) -> ShardState {
+    let mut seen = 0u64;
+    let mut inbox: Vec<EnqMsg> = Vec::new();
+    let mut out = EpochOut::default();
+    let mut spins = 0u32;
+    loop {
+        let e = slot.epoch.load(Ordering::Acquire);
+        if e == seen {
+            if slot.stop.load(Ordering::Acquire) {
+                return st;
+            }
+            spins += 1;
+            if spins > 1_000 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+            continue;
+        }
+        spins = 0;
+        seen = e;
+        let bus = slot.bus.load(Ordering::Acquire);
+        {
+            let mut shared = slot.inbox.lock().unwrap();
+            std::mem::swap(&mut *shared, &mut inbox);
+        }
+        st.run_epoch(&mut inbox, bus, &mut out);
+        {
+            let mut shared = slot.out.lock().unwrap();
+            std::mem::swap(&mut *shared, &mut out);
+        }
+        slot.done.store(e, Ordering::Release);
+    }
+}

@@ -12,16 +12,25 @@
 //! bookkeeping — as the differential oracle; both modes produce
 //! bit-identical [`SimResult`]s.
 
+use std::sync::atomic::Ordering;
+
 use crate::config::SystemConfig;
 use crate::controller::{AddressMapper, Completion, MapScheme, MemController, Request};
 use crate::cpu::core_model::{Core, MemPort};
 use crate::cpu::Llc;
+use crate::dram::command::Loc;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::latency::MechanismKind;
 use crate::sim::engine::{self, EventDriven, LoopMode};
+use crate::sim::shard::{worker_loop, EnqMsg, EpochOut, ShardSlot, ShardState};
 use crate::sim::stats::SimResult;
 use crate::sim::wake::WakeIndex;
 use crate::trace::{profile::multicore_mix, Profile, SynthTrace, TraceSource};
+
+/// Completion predicate for a measured region. A plain function pointer
+/// (not a generic) so the warmup/measure phase driver can hand it
+/// through a `dyn FnMut` advance callback.
+type DoneFn = fn(&System) -> bool;
 
 /// Writeback ids live in the upper id half-space so they can never
 /// collide with the slab-generated read ids (whose generation word is
@@ -368,13 +377,56 @@ impl System {
     }
 
     /// Run warmup + measured region; returns the result.
+    ///
+    /// Time is advanced by the single-threaded event kernel, the strict
+    /// per-cycle oracle, or — when the shard plan selects two or more
+    /// shards — the channel-sharded parallel loop ([`advance_sharded`]).
+    /// All three produce bit-identical results; `--sim-threads 1` (the
+    /// default) is the exact pre-existing event path.
+    ///
+    /// [`advance_sharded`]: System::advance_sharded
     pub fn run(&mut self) -> SimResult {
         let mode = self.cfg.loop_mode;
+        let shards = self.shard_plan();
+        let measure_start = if shards >= 2 {
+            self.measure_phases(&mut move |sys, start, end, done| {
+                sys.advance_sharded(shards, start, end, done)
+            })
+        } else {
+            self.measure_phases(&mut move |sys, start, end, done| {
+                engine::advance(sys, mode, start, end, done)
+            })
+        };
+        self.collect(measure_start)
+    }
 
+    /// Shard count for this run: `sim.threads` from the config when set,
+    /// else the process-wide `--sim-threads` / `PALLAS_SIM_THREADS` knob,
+    /// capped at the channel count (a shard with no channels is dead
+    /// weight). Only the event kernel shards; `--strict-tick` stays the
+    /// untouched single-threaded oracle.
+    fn shard_plan(&self) -> usize {
+        if self.cfg.loop_mode != LoopMode::EventDriven {
+            return 1;
+        }
+        let req = if self.cfg.sim_threads > 0 {
+            self.cfg.sim_threads
+        } else {
+            crate::coordinator::runner::sim_threads()
+        };
+        req.max(1).min(self.hier.mcs.len())
+    }
+
+    /// Warmup + measured region through the given advance callback;
+    /// returns the measured region's start cycle for [`System::collect`].
+    fn measure_phases(
+        &mut self,
+        adv: &mut dyn FnMut(&mut System, u64, u64, DoneFn) -> u64,
+    ) -> u64 {
         // Warmup: caches, HCRAC, and DRAM state get warm; stats reset after.
         let start = self.cpu_cycle;
         let warmup_end = self.cfg.warmup_cpu_cycles;
-        self.cpu_cycle = engine::advance(self, mode, start, warmup_end, |_| false);
+        self.cpu_cycle = adv(self, start, warmup_end, |_| false);
         for core in &mut self.cores {
             core.reset_stats();
             core.target = self.cfg.insts_per_core;
@@ -384,7 +436,6 @@ impl System {
         }
         self.hier.llc.reset_stats();
         let measure_start = self.cpu_cycle;
-        let bus_start = self.cpu_cycle / self.cfg.cpu.cpu_per_bus;
 
         // Measured region. Fixed-time: run exactly `measure_cycles` (the
         // stable basis for multiprogrammed comparisons). Fixed-work: run
@@ -396,17 +447,23 @@ impl System {
                     core.target = 0; // no finish target in fixed-time mode
                 }
                 let end = measure_start + n;
-                self.cpu_cycle = engine::advance(self, mode, measure_start, end, |_| false);
+                self.cpu_cycle = adv(self, measure_start, end, |_| false);
             }
             None => {
                 let cap = measure_start
                     + self.cfg.insts_per_core * 400
                     + 10 * self.cfg.warmup_cpu_cycles;
-                self.cpu_cycle = engine::advance(self, mode, measure_start, cap, |s| {
+                self.cpu_cycle = adv(self, measure_start, cap, |s| {
                     s.cores.iter().all(|c| c.stats.finished_at.is_some())
                 });
             }
         }
+        measure_start
+    }
+
+    /// Assemble the [`SimResult`] after the measured region.
+    fn collect(&mut self, measure_start: u64) -> SimResult {
+        let bus_start = measure_start / self.cfg.cpu.cpu_per_bus;
         let end = self.cpu_cycle;
         let bus_end = end / self.cfg.cpu.cpu_per_bus;
         for mc in &mut self.hier.mcs {
@@ -473,6 +530,350 @@ impl System {
             llc_hits: self.hier.llc.hits,
             llc_misses: self.hier.llc.misses,
         }
+    }
+
+    /// Channel-sharded event loop (see [`crate::sim::shard`]): the
+    /// controllers are partitioned into contiguous per-shard domains,
+    /// each advanced by its own thread with a bus-domain wake index,
+    /// synchronized at every visited bus boundary. Shard 0 runs inline
+    /// on this thread; shards `1..` run on scoped workers that borrow
+    /// the controllers for the duration of this call and hand them back
+    /// at the end, so everything outside (stat resets, finalize, result
+    /// assembly) is oblivious to the sharding.
+    ///
+    /// Control flow mirrors [`engine::advance`] exactly — same done
+    /// checks, same end clamping — so the return value and every visited
+    /// cycle match the single-threaded event loop bit for bit.
+    fn advance_sharded(&mut self, shards: usize, mut now: u64, end: u64, done: DoneFn) -> u64 {
+        let cpb = self.cfg.cpu.cpu_per_bus;
+        let n_cores = self.cores.len();
+        let n_ch = self.hier.mcs.len();
+        let chunk = (n_ch + shards - 1) / shards;
+        let shards = (n_ch + chunk - 1) / chunk; // drop empty tail shards
+        let rq_cap = self.cfg.mc.read_queue;
+        let wq_cap = self.cfg.mc.write_queue;
+
+        // Coordinator-side queue mirrors (exact — see [`ShardedPort`]).
+        let mut rq_len: Vec<usize> = Vec::with_capacity(n_ch);
+        let mut wq_len: Vec<usize> = Vec::with_capacity(n_ch);
+        let mut wq_lines: Vec<Vec<Loc>> = Vec::with_capacity(n_ch);
+        for mc in &self.hier.mcs {
+            let (rq, wq) = mc.occupancy();
+            rq_len.push(rq);
+            wq_len.push(wq);
+            wq_lines.push(mc.write_queue_locs().collect());
+        }
+        let mut staged: Vec<Vec<EnqMsg>> = (0..shards).map(|_| Vec::new()).collect();
+        // Per-shard wake bounds, CPU-cycle domain. Hot at start: an early
+        // bound costs a no-op epoch, never correctness.
+        let mut shard_bound: Vec<u64> = vec![0; shards];
+
+        // The controllers' entries in the CPU-domain wake index are owned
+        // by `shard_bound` for the duration of this call.
+        for ci in 0..n_ch {
+            self.wake.set(n_cores + ci, u64::MAX);
+        }
+
+        // Lend the controllers out: shard 0 stays on this thread, the
+        // rest move into scoped workers until this call returns.
+        let mut remaining = std::mem::take(&mut self.hier.mcs);
+        let mut worker_states: Vec<ShardState> = Vec::with_capacity(shards - 1);
+        let mut shard0 = None;
+        for s in 0..shards {
+            let take = chunk.min(remaining.len());
+            let rest = remaining.split_off(take);
+            let st = ShardState::new(s * chunk, remaining);
+            remaining = rest;
+            if s == 0 {
+                shard0 = Some(st);
+            } else {
+                worker_states.push(st);
+            }
+        }
+        let mut shard0 = shard0.expect("at least one shard");
+        let slots: Vec<ShardSlot> = (1..shards).map(|_| ShardSlot::default()).collect();
+
+        let states: Vec<ShardState> = std::thread::scope(|scope| {
+            let handles: Vec<_> = worker_states
+                .into_iter()
+                .zip(slots.iter())
+                .map(|(st, slot)| scope.spawn(move || worker_loop(st, slot)))
+                .collect();
+
+            let mut epoch = 0u64;
+            let mut inbox0: Vec<EnqMsg> = Vec::new();
+            let mut out0 = EpochOut::default();
+            let mut out_scratch = EpochOut::default();
+
+            // The engine::advance control flow with the tick body inlined
+            // (epoch barrier on bus boundaries, then core ticks).
+            loop {
+                if now >= end || done(self) {
+                    break;
+                }
+                self.hier.bus_now = now / cpb;
+                if now % cpb == 0 {
+                    let bus = now / cpb;
+                    epoch += 1;
+                    // Signal due worker shards first: their epochs run
+                    // concurrently with shard 0's inline one.
+                    for s in 1..shards {
+                        if shard_bound[s] <= now {
+                            let slot = &slots[s - 1];
+                            {
+                                let mut shared = slot.inbox.lock().unwrap();
+                                std::mem::swap(&mut *shared, &mut staged[s]);
+                            }
+                            slot.bus.store(bus, Ordering::Release);
+                            slot.epoch.store(epoch, Ordering::Release);
+                        }
+                    }
+                    if shard_bound[0] <= now {
+                        std::mem::swap(&mut inbox0, &mut staged[0]);
+                        shard0.run_epoch(&mut inbox0, bus, &mut out0);
+                        self.apply_epoch_out(&out0, now, &mut rq_len, &mut wq_len, &mut wq_lines);
+                        shard_bound[0] = out0.min_bound_bus.saturating_mul(cpb);
+                    }
+                    // Collect worker outputs in ascending shard order —
+                    // concatenation is ascending global channel order, the
+                    // canonical completion-delivery order.
+                    for s in 1..shards {
+                        if shard_bound[s] <= now {
+                            let slot = &slots[s - 1];
+                            let mut spins = 0u32;
+                            while slot.done.load(Ordering::Acquire) != epoch {
+                                spins += 1;
+                                if spins > 1_000 {
+                                    std::thread::yield_now();
+                                } else {
+                                    std::hint::spin_loop();
+                                }
+                            }
+                            {
+                                let mut shared = slot.out.lock().unwrap();
+                                std::mem::swap(&mut *shared, &mut out_scratch);
+                            }
+                            self.apply_epoch_out(
+                                &out_scratch,
+                                now,
+                                &mut rq_len,
+                                &mut wq_len,
+                                &mut wq_lines,
+                            );
+                            shard_bound[s] = out_scratch.min_bound_bus.saturating_mul(cpb);
+                        }
+                    }
+                }
+                {
+                    let mut port = ShardedPort {
+                        llc: &mut self.hier.llc,
+                        mapper: &self.hier.mapper,
+                        inflight: &mut self.hier.inflight,
+                        next_writeback_id: &mut self.hier.next_writeback_id,
+                        bus_now: self.hier.bus_now,
+                        chunk,
+                        rq_cap,
+                        wq_cap,
+                        rq_len: &mut rq_len,
+                        wq_len: &mut wq_len,
+                        wq_lines: &mut wq_lines,
+                        staged: &mut staged,
+                    };
+                    for i in 0..n_cores {
+                        if self.wake.bound(i) > now {
+                            continue;
+                        }
+                        self.cores[i].tick(now, &mut port);
+                        let bound = self.cores[i].next_event_at(now + 1);
+                        self.wake.set(i, bound);
+                    }
+                }
+                // Trailing enqueue clamp at shard granularity: a staged
+                // message forces its shard's epoch at the next boundary,
+                // where delivery pulls the target channel's local bound
+                // down — the sharded form of the sequential clamp.
+                let next_bus_cpu = (now / cpb + 1).saturating_mul(cpb);
+                for s in 0..shards {
+                    if !staged[s].is_empty() {
+                        shard_bound[s] = shard_bound[s].min(next_bus_cpu);
+                    }
+                }
+                now += 1;
+                if done(self) || now >= end {
+                    break;
+                }
+                // Event jump: cores from the CPU-domain index, channels
+                // from the per-shard bounds — the same global minimum the
+                // sequential index would report.
+                let mut wk = self.wake.min_bound();
+                for &b in &shard_bound {
+                    wk = wk.min(b);
+                }
+                now = wk.max(now).min(end - 1);
+            }
+
+            for slot in &slots {
+                slot.stop.store(true, Ordering::Release);
+            }
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+
+        // Reassemble the hierarchy in channel order and restore the
+        // controllers' CPU-domain wake entries from the shard-local ones.
+        let mut mcs: Vec<MemController> = Vec::with_capacity(n_ch);
+        for st in std::iter::once(shard0).chain(states) {
+            for li in 0..st.mcs.len() {
+                let b = st.wake.bound(li);
+                self.wake.set(n_cores + st.base + li, b.saturating_mul(cpb));
+            }
+            mcs.extend(st.mcs);
+        }
+        self.hier.mcs = mcs;
+        // Enqueues staged after the last visited boundary: the sequential
+        // loop would already have them queued, so deliver them before
+        // returning — the forwarding check still sees the same write
+        // queues (no controller ticked in between).
+        for msgs in &mut staged {
+            for m in msgs.drain(..) {
+                let ci = m.ch as usize;
+                let accepted = self.hier.mcs[ci].enqueue(m.req, m.bus);
+                debug_assert!(accepted, "admission was pre-checked");
+                let id = n_cores + ci;
+                let clamped = self.wake.bound(id).min((m.bus + 1).saturating_mul(cpb));
+                self.wake.set(id, clamped);
+            }
+        }
+        now
+    }
+
+    /// Apply one shard's epoch outputs on the coordinator: deliver
+    /// completions through the in-flight slab (waking filled cores),
+    /// retire drained writes from the write-queue mirror, and refresh
+    /// the occupancy mirror for every channel the shard ticked.
+    fn apply_epoch_out(
+        &mut self,
+        out: &EpochOut,
+        now: u64,
+        rq_len: &mut [usize],
+        wq_len: &mut [usize],
+        wq_lines: &mut [Vec<Loc>],
+    ) {
+        for c in &out.completions {
+            if let Some((core, line)) = self.hier.inflight.remove(c.req_id) {
+                let woke = self.cores[core as usize].complete_line(line);
+                debug_assert!(woke, "completion filled no MSHR waiter");
+                if woke {
+                    self.wake.set(core as usize, now);
+                }
+            }
+        }
+        for &(ch, loc) in &out.drained {
+            let lines = &mut wq_lines[ch as usize];
+            let idx = lines
+                .iter()
+                .position(|w| *w == loc)
+                .expect("drained write missing from the coordinator mirror");
+            lines.swap_remove(idx);
+        }
+        for &(ch, rq, wq) in &out.occ {
+            rq_len[ch as usize] = rq as usize;
+            wq_len[ch as usize] = wq as usize;
+        }
+    }
+}
+
+/// The cores' memory port during a sharded advance. The coordinator owns
+/// the LLC, mapper, and in-flight slab outright; controller queue state
+/// is **mirrored** (occupancy counts plus write-queue locations) so
+/// admission control and write-to-read forwarding decide exactly what
+/// the live controller will decide at delivery. Accepted requests are
+/// staged per shard and flushed to the owning shard's inbox at the next
+/// epoch barrier.
+///
+/// The mirrors are exact, not approximate: controllers mutate their
+/// queues only inside epochs (enqueues from the delivered inbox,
+/// dequeues from `schedule`), every epoch reports post-tick occupancy
+/// and drained write locations for each ticked channel, and every
+/// channel holding a staged enqueue is guaranteed to tick at the next
+/// boundary (the enqueue clamp) — so between barriers the mirror equals
+/// the queue state the sequential loop would hold at the same cycle.
+struct ShardedPort<'a> {
+    llc: &'a mut Llc,
+    mapper: &'a AddressMapper,
+    inflight: &'a mut InflightSlab,
+    next_writeback_id: &'a mut u64,
+    bus_now: u64,
+    /// Channels per shard (`shard_of(ch) = ch / chunk`).
+    chunk: usize,
+    rq_cap: usize,
+    wq_cap: usize,
+    rq_len: &'a mut [usize],
+    wq_len: &'a mut [usize],
+    wq_lines: &'a mut [Vec<Loc>],
+    staged: &'a mut [Vec<EnqMsg>],
+}
+
+impl ShardedPort<'_> {
+    fn send_write(&mut self, line: u64) {
+        let loc = self.mapper.map_line(line);
+        let id = WRITEBACK_ID_BASE + *self.next_writeback_id;
+        *self.next_writeback_id += 1;
+        let ch = loc.channel as usize;
+        self.wq_len[ch] += 1;
+        self.wq_lines[ch].push(loc);
+        self.staged[ch / self.chunk].push(EnqMsg {
+            ch: loc.channel,
+            bus: self.bus_now,
+            req: Request { id, core: u32::MAX, loc, is_write: true, arrived: self.bus_now },
+        });
+    }
+}
+
+impl MemPort for ShardedPort<'_> {
+    fn load(&mut self, core: u32, line: u64, _seq: u64) -> Result<bool, ()> {
+        if self.llc.probe(line) {
+            self.llc.access(line, false);
+            return Ok(true);
+        }
+        let loc = self.mapper.map_line(line);
+        let ch = loc.channel as usize;
+        // Admission control against the mirrors — the same predicate
+        // MemHierarchy::load evaluates against the live queues.
+        if self.rq_len[ch] >= self.rq_cap || self.wq_len.iter().any(|&w| w >= self.wq_cap) {
+            return Err(());
+        }
+        let res = self.llc.access(line, false);
+        if let crate::cpu::cache::LlcResult::Miss { writeback: Some(victim) } = res {
+            self.send_write(victim);
+        }
+        let id = self.inflight.insert(core, line);
+        // The controller forwards a read matching a queued write without
+        // consuming a read-queue slot; mirror that decision so the
+        // occupancy mirror stays exact between epochs.
+        let fwd = self.wq_lines[ch].iter().any(|w| {
+            w.rank == loc.rank && w.bank == loc.bank && w.row == loc.row && w.col == loc.col
+        });
+        if !fwd {
+            self.rq_len[ch] += 1;
+        }
+        self.staged[ch / self.chunk].push(EnqMsg {
+            ch: loc.channel,
+            bus: self.bus_now,
+            req: Request { id, core, loc, is_write: false, arrived: self.bus_now },
+        });
+        Ok(false)
+    }
+
+    fn store(&mut self, core: u32, line: u64) -> Result<(), ()> {
+        if self.wq_len.iter().any(|&w| w >= self.wq_cap) {
+            return Err(());
+        }
+        let _ = core;
+        let res = self.llc.access(line, true);
+        if let crate::cpu::cache::LlcResult::Miss { writeback: Some(victim) } = res {
+            self.send_write(victim);
+        }
+        Ok(())
     }
 }
 

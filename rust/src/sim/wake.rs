@@ -21,6 +21,14 @@
 //! invalidation. Stale heap entries are harmless — an entry is trusted
 //! only while it matches the component's current cached bound; anything
 //! else is discarded when it surfaces.
+//!
+//! The channel-sharded loop ([`crate::sim::shard`], DESIGN.md §11)
+//! reuses the same structure per shard: each `ShardState` holds a
+//! private `WakeIndex` over its local controllers, indexed by local
+//! channel id and kept in the **bus-cycle** domain (the coordinator
+//! converts to CPU cycles). The soundness argument is unchanged — and
+//! because early bounds are free, the sharded path may start every lend
+//! hot at 0 rather than translating the sequential index's entries.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

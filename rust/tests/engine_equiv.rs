@@ -155,6 +155,60 @@ fn fcfs_and_bliss_four_core_mix_are_bit_identical() {
 }
 
 #[test]
+fn sharded_64_core_mix_is_bit_identical_across_shard_counts() {
+    // The channel-sharded event loop (`sim::shard`) must be a pure
+    // parallelization: the paper's large shape (64 cores, 8 channels)
+    // run at 1/2/4/8 shards and under the strict per-cycle oracle may
+    // not drift by a bit. 1 shard takes the exact sequential event
+    // path, so t1 vs strict also re-pins the event-loop contract on
+    // this shape.
+    let run = |kind: MechanismKind, mode: LoopMode, shards: usize| -> SimResult {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 64;
+        cfg.dram.channels = 8;
+        cfg.insts_per_core = 800;
+        cfg.warmup_cpu_cycles = 1_500;
+        cfg.loop_mode = mode;
+        cfg.sim_threads = shards;
+        System::new_mix(&cfg, kind, 1).run()
+    };
+    for kind in [MechanismKind::Baseline, MechanismKind::ChargeCache] {
+        let strict = run(kind, LoopMode::StrictTick, 1);
+        let t1 = run(kind, LoopMode::EventDriven, 1);
+        assert_identical(&strict, &t1, &format!("64-core/{}/event", kind.label()));
+        for shards in [2usize, 4, 8] {
+            let tn = run(kind, LoopMode::EventDriven, shards);
+            assert_identical(&t1, &tn, &format!("64-core/{}/{shards}-shard", kind.label()));
+        }
+    }
+}
+
+#[test]
+fn sharding_ignores_strict_tick_and_uneven_channel_splits() {
+    // `sim.threads` > 1 under StrictTick must silently take the oracle
+    // path (the knob only applies to the event loop), and a shard count
+    // that doesn't divide the channel count (3 shards, 2 channels ->
+    // capped; 3 shards over 8 channels -> uneven chunks) must still be
+    // bit-identical.
+    let run = |mode: LoopMode, channels: usize, shards: usize| -> SimResult {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 4;
+        cfg.dram.channels = channels;
+        cfg.insts_per_core = 4_000;
+        cfg.warmup_cpu_cycles = 2_000;
+        cfg.loop_mode = mode;
+        cfg.sim_threads = shards;
+        System::new_mix(&cfg, MechanismKind::ChargeCache, 1).run()
+    };
+    let strict = run(LoopMode::StrictTick, 2, 3);
+    let capped = run(LoopMode::EventDriven, 2, 3);
+    assert_identical(&strict, &capped, "3-shards-over-2-channels");
+    let strict8 = run(LoopMode::StrictTick, 8, 1);
+    let uneven = run(LoopMode::EventDriven, 8, 3);
+    assert_identical(&strict8, &uneven, "3-shards-over-8-channels");
+}
+
+#[test]
 fn parallel_map_threads_is_deterministic_across_thread_counts() {
     // Real simulation payload (the same jobs the experiment suites run),
     // mapped across 1, 2, and 8 workers: index-pure + in-order results.

@@ -381,6 +381,40 @@ fn prop_wake_index_is_never_later_than_full_rescan() {
     });
 }
 
+/// The epoch-barrier exchange contract of the channel-sharded loop
+/// (`sim::shard`), over random small configs: a cross-shard message may
+/// never be delivered *earlier* than its single-thread event-mode time
+/// (nor later — staged enqueues land at exactly the next bus boundary,
+/// the same cycle the sequential trailing wake clamp guarantees). Early
+/// or late delivery would shift queue occupancy, scheduler picks, and
+/// completion times, so the observable form of the property is full
+/// `SimResult` bit-identity between N-shard and 1-shard event runs.
+#[test]
+fn prop_sharded_delivery_times_match_event_mode() {
+    property(6, |rng, seed| {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 2 + 2 * rng.below(2) as usize; // 2 or 4
+        cfg.dram.channels = [2, 4, 8][rng.below(3) as usize];
+        cfg.mc.scheduler = SchedulerKind::all()[rng.below(3) as usize];
+        cfg.mc.row_policy = if rng.below(2) == 0 { RowPolicy::Open } else { RowPolicy::Closed };
+        cfg.insts_per_core = 2_000 + rng.below(2_000);
+        cfg.warmup_cpu_cycles = 1_000 + rng.below(1_000);
+        cfg.loop_mode = LoopMode::EventDriven;
+        let kinds = [MechanismKind::Baseline, MechanismKind::ChargeCache, MechanismKind::Nuat];
+        let kind = kinds[rng.below(3) as usize];
+        let mix = rng.below(8) as usize;
+        cfg.sim_threads = 1;
+        let seq = System::new_mix(&cfg, kind, mix).run();
+        cfg.sim_threads = 2 + rng.below(3) as usize; // 2..=4 shards
+        let sharded = System::new_mix(&cfg, kind, mix).run();
+        assert_eq!(
+            seq, sharded,
+            "sharded run drifted from event mode ({} shards, seed {seed})",
+            cfg.sim_threads
+        );
+    });
+}
+
 /// The mechanism ordering invariant at system level, across random small
 /// workloads: LL-DRAM cycles <= ChargeCache cycles <= ~Baseline cycles.
 #[test]
