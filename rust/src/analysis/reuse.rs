@@ -49,6 +49,54 @@ impl ReuseTracker {
         }
     }
 
+    /// Checkpoint: both maps sorted by key for a canonical stream.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::REUSE);
+        let mut acts: Vec<(u64, u64)> = self.bank_acts.iter().map(|(&k, &v)| (k, v)).collect();
+        acts.sort_unstable();
+        enc.usize(acts.len());
+        for (k, v) in acts {
+            enc.u64(k);
+            enc.u64(v);
+        }
+        let mut last: Vec<(u64, u64)> = self.last_act.iter().map(|(k, &v)| (k.0, v)).collect();
+        last.sort_unstable();
+        enc.usize(last.len());
+        for (k, v) in last {
+            enc.u64(k);
+            enc.u64(v);
+        }
+        for &h in &self.hist {
+            enc.u64(h);
+        }
+        enc.u64(self.samples);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::REUSE)?;
+        let n = dec.usize()?;
+        self.bank_acts.clear();
+        for _ in 0..n {
+            let k = dec.u64()?;
+            let v = dec.u64()?;
+            self.bank_acts.insert(k, v);
+        }
+        let m = dec.usize()?;
+        self.last_act.clear();
+        for _ in 0..m {
+            let k = dec.u64()?;
+            let v = dec.u64()?;
+            self.last_act.insert(RowKey(k), v);
+        }
+        for h in self.hist.iter_mut() {
+            *h = dec.u64()?;
+        }
+        self.samples = dec.u64()?;
+        Some(())
+    }
+
     /// Mean reuse-distance bucket midpoint (coarse scalar for reporting).
     pub fn mean_bucket(&self) -> f64 {
         if self.samples == 0 {

@@ -83,6 +83,45 @@ impl RltlTracker {
         self.counts.iter_mut().for_each(|c| *c = 0);
         self.activations = 0;
     }
+
+    /// Checkpoint: map entries sorted by packed key for a canonical
+    /// stream (iteration order itself never affects simulation).
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::RLTL);
+        let mut pres: Vec<(u64, u64)> = self.last_pre.iter().map(|(k, &v)| (k.0, v)).collect();
+        pres.sort_unstable();
+        enc.usize(pres.len());
+        for (k, v) in pres {
+            enc.u64(k);
+            enc.u64(v);
+        }
+        enc.usize(self.counts.len());
+        for &c in &self.counts {
+            enc.u64(c);
+        }
+        enc.u64(self.activations);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::RLTL)?;
+        let n = dec.usize()?;
+        self.last_pre.clear();
+        for _ in 0..n {
+            let k = dec.u64()?;
+            let v = dec.u64()?;
+            self.last_pre.insert(RowKey(k), v);
+        }
+        if dec.usize()? != self.counts.len() {
+            return None; // bucket count is tck-derived shape
+        }
+        for c in self.counts.iter_mut() {
+            *c = dec.u64()?;
+        }
+        self.activations = dec.u64()?;
+        Some(())
+    }
 }
 
 #[cfg(test)]

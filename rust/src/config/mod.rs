@@ -325,6 +325,44 @@ impl Default for NuatConfig {
     }
 }
 
+/// SimPoint-style interval sampling of the measured region
+/// ([`crate::sim::sample`]). Off by default; requires fixed-time mode
+/// (`measure_cycles`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleConfig {
+    /// CPU cycles simulated in detail at the start of each period
+    /// (registry: `sample.detail_cycles`; 0 disables sampling).
+    pub detail_cycles: u64,
+    /// Period length in CPU cycles: detail interval + functional
+    /// fast-forward (registry: `sample.period_cycles`).
+    pub period_cycles: u64,
+}
+
+impl Default for SampleConfig {
+    fn default() -> Self {
+        Self { detail_cycles: 0, period_cycles: 1_000_000 }
+    }
+}
+
+/// Warmup-checkpoint forking in the job graph
+/// ([`crate::coordinator::jobs`]): sweep legs whose warmup identities
+/// agree simulate warmup once and fork.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointConfig {
+    /// Fork sweep legs from a shared warmed-up snapshot (registry:
+    /// `checkpoint.warmup_fork`).
+    pub warmup_fork: bool,
+    /// Minimum number of legs sharing a warmup identity before a
+    /// snapshot is worth taking (registry: `checkpoint.min_fork_group`).
+    pub min_fork_group: usize,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        Self { warmup_fork: true, min_fork_group: 2 }
+    }
+}
+
 /// Full system configuration for one simulation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -365,6 +403,11 @@ pub struct SystemConfig {
     /// bit-identical to single-threaded ones by construction
     /// ([`crate::sim::shard`]), so this knob trades wall-clock only.
     pub sim_threads: usize,
+    /// Interval sampling of the measured region (registry: `sample.*`).
+    pub sample: SampleConfig,
+    /// Warmup-checkpoint forking in the job graph (registry:
+    /// `checkpoint.*`).
+    pub checkpoint: CheckpointConfig,
 }
 
 impl Default for SystemConfig {
@@ -385,6 +428,8 @@ impl Default for SystemConfig {
             seed: 42,
             loop_mode: LoopMode::EventDriven,
             sim_threads: 0,
+            sample: SampleConfig::default(),
+            checkpoint: CheckpointConfig::default(),
         }
     }
 }
@@ -460,6 +505,8 @@ impl SystemConfig {
             seed,
             loop_mode,
             sim_threads,
+            sample,
+            checkpoint,
         } = self;
         let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
         let Timing {
@@ -511,6 +558,8 @@ impl SystemConfig {
             trcd_reduction: nuat_trcd_reduction,
             tras_reduction: nuat_tras_reduction,
         } = nuat;
+        let SampleConfig { detail_cycles, period_cycles } = sample;
+        let CheckpointConfig { warmup_fork, min_fork_group } = checkpoint;
 
         let mut h = Fingerprint::new();
         // DramOrg.
@@ -610,7 +659,67 @@ impl SystemConfig {
         // loop_mode: the equivalence tests must never compare a cached
         // result against itself.
         h.push_usize(*sim_threads);
+        // Sampling replaces stretches of the measured region with
+        // functional fast-forward, so sampled and full results are NOT
+        // interchangeable. Checkpoint forking is bit-identical to cold
+        // runs by the fork-equivalence contract, but hashed for the same
+        // reason as loop_mode: the equivalence tests (and the CI
+        // checkpoint-equiv job) must never compare a cached result
+        // against itself.
+        h.push_u64(*detail_cycles);
+        h.push_u64(*period_cycles);
+        h.push_u64(*warmup_fork as u64);
+        h.push_usize(*min_fork_group);
         h.finish()
+    }
+
+    /// Stable hash of the **warmup-relevant** configuration slice for
+    /// `mechanism` — the identity under which warmed-up snapshots are
+    /// shared ([`crate::sim::checkpoint::SimSnapshot`], job-graph warmup
+    /// forking). Two runs with equal warmup fingerprints, mechanism, and
+    /// workload reach bit-identical system state at the end of warmup,
+    /// so one leg's snapshot can seed the others.
+    ///
+    /// Implemented by canonicalizing the measure-phase-only fields and
+    /// re-using [`SystemConfig::fingerprint`], so the exhaustive
+    /// destructuring contract carries over: a new field is decided there
+    /// and, if measure-only, neutralized here.
+    ///
+    /// Excluded (canonicalized): `insts_per_core`, `measure_cycles`,
+    /// `sample.*` and `checkpoint.*` (all measure/orchestration only),
+    /// `temperature_c` (a label for externally derived timing
+    /// reductions — the simulation never reads it; the reductions
+    /// themselves are hashed via the mechanism blocks), and the
+    /// `mechanism` field (jobs carry the simulated mechanism separately;
+    /// the `mechanism` argument is hashed in its place). Mechanism
+    /// parameter blocks the chosen mechanism never reads are also
+    /// canonicalized: `chargecache.*` counts only for
+    /// ChargeCache/combined (LL-DRAM reads just the two reduction
+    /// fields), `nuat.*` only for NUAT/combined.
+    pub fn warmup_fingerprint(&self, mechanism: MechanismKind) -> u64 {
+        let mut c = self.clone();
+        c.mechanism = mechanism;
+        c.temperature_c = 0.0;
+        c.insts_per_core = 0;
+        c.measure_cycles = None;
+        c.sample = SampleConfig::default();
+        c.checkpoint = CheckpointConfig::default();
+        let reads_cc =
+            matches!(mechanism, MechanismKind::ChargeCache | MechanismKind::ChargeCacheNuat);
+        let reads_nuat = matches!(mechanism, MechanismKind::Nuat | MechanismKind::ChargeCacheNuat);
+        if !reads_cc {
+            let (rcd, ras) = (self.chargecache.trcd_reduction, self.chargecache.tras_reduction);
+            c.chargecache = ChargeCacheConfig::default();
+            if matches!(mechanism, MechanismKind::LlDram) {
+                // LL-DRAM applies the two reduction fields to every ACT.
+                c.chargecache.trcd_reduction = rcd;
+                c.chargecache.tras_reduction = ras;
+            }
+        }
+        if !reads_nuat {
+            c.nuat = NuatConfig::default();
+        }
+        c.fingerprint()
     }
 
     /// The paper's single-core configuration (Table 1): 1 channel, open-row.
@@ -775,6 +884,26 @@ mod tests {
                 c.generation = DramGeneration::Ddr3_1333;
                 c
             },
+            {
+                let mut c = a.clone();
+                c.sample.detail_cycles = 10_000;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.sample.period_cycles = 500_000;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.checkpoint.warmup_fork = false;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.checkpoint.min_fork_group = 3;
+                c
+            },
         ];
         for p in perturbations {
             let fp = p.fingerprint();
@@ -790,6 +919,92 @@ mod tests {
         let mut zero = none.clone();
         zero.measure_cycles = Some(0);
         assert_ne!(none.fingerprint(), zero.fingerprint());
+    }
+
+    #[test]
+    fn warmup_fingerprint_ignores_measure_phase_knobs() {
+        let a = SystemConfig::default();
+        let base = a.warmup_fingerprint(MechanismKind::ChargeCache);
+        for tweak in [
+            (|c: &mut SystemConfig| c.temperature_c = 45.0) as fn(&mut SystemConfig),
+            |c| c.insts_per_core += 1,
+            |c| c.measure_cycles = Some(123_456),
+            |c| c.sample.detail_cycles = 10_000,
+            |c| c.sample.period_cycles = 500_000,
+            |c| c.checkpoint.warmup_fork = false,
+            |c| c.checkpoint.min_fork_group = 7,
+            |c| c.mechanism = MechanismKind::Nuat,
+        ] {
+            let mut c = a.clone();
+            tweak(&mut c);
+            assert_eq!(c.warmup_fingerprint(MechanismKind::ChargeCache), base);
+        }
+    }
+
+    #[test]
+    fn warmup_fingerprint_moves_with_warmup_relevant_knobs() {
+        let a = SystemConfig::default();
+        let base = a.warmup_fingerprint(MechanismKind::ChargeCache);
+        for tweak in [
+            (|c: &mut SystemConfig| c.seed ^= 1) as fn(&mut SystemConfig),
+            |c| c.timing.trcd = 12,
+            |c| c.warmup_cpu_cycles += 1,
+            |c| c.cpu.cores = 2,
+            |c| c.loop_mode = LoopMode::StrictTick,
+            |c| c.sim_threads = 4,
+            |c| c.chargecache.duration_ms = 2.0,
+        ] {
+            let mut c = a.clone();
+            tweak(&mut c);
+            assert_ne!(c.warmup_fingerprint(MechanismKind::ChargeCache), base);
+        }
+        // The mechanism argument itself is part of the identity.
+        assert_ne!(base, a.warmup_fingerprint(MechanismKind::Baseline));
+        assert_ne!(base, a.warmup_fingerprint(MechanismKind::Nuat));
+    }
+
+    #[test]
+    fn warmup_fingerprint_masks_unread_mechanism_blocks() {
+        let a = SystemConfig::default();
+        let mut b = a.clone();
+        b.chargecache.duration_ms = 8.0;
+        b.chargecache.entries_per_core = 512;
+        // Baseline and NUAT never consult the HCRAC parameters...
+        assert_eq!(
+            a.warmup_fingerprint(MechanismKind::Baseline),
+            b.warmup_fingerprint(MechanismKind::Baseline)
+        );
+        assert_eq!(
+            a.warmup_fingerprint(MechanismKind::Nuat),
+            b.warmup_fingerprint(MechanismKind::Nuat)
+        );
+        // ...but ChargeCache does.
+        assert_ne!(
+            a.warmup_fingerprint(MechanismKind::ChargeCache),
+            b.warmup_fingerprint(MechanismKind::ChargeCache)
+        );
+        // LL-DRAM reads only the reduction fields.
+        let mut r = a.clone();
+        r.chargecache.trcd_reduction = 6;
+        assert_eq!(
+            b.warmup_fingerprint(MechanismKind::LlDram),
+            a.warmup_fingerprint(MechanismKind::LlDram)
+        );
+        assert_ne!(
+            r.warmup_fingerprint(MechanismKind::LlDram),
+            a.warmup_fingerprint(MechanismKind::LlDram)
+        );
+        // NUAT parameters count only for NUAT/combined.
+        let mut n = a.clone();
+        n.nuat.window_ms = 4.0;
+        assert_eq!(
+            n.warmup_fingerprint(MechanismKind::ChargeCache),
+            a.warmup_fingerprint(MechanismKind::ChargeCache)
+        );
+        assert_ne!(
+            n.warmup_fingerprint(MechanismKind::Nuat),
+            a.warmup_fingerprint(MechanismKind::Nuat)
+        );
     }
 
     #[test]

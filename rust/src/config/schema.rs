@@ -23,8 +23,8 @@ use std::sync::OnceLock;
 
 use crate::bail;
 use crate::config::{
-    ChargeCacheConfig, CpuConfig, DramGeneration, DramOrg, HcracPolicy, HcracSharing, McConfig,
-    NuatConfig, RowPolicy, SystemConfig, Timing,
+    ChargeCacheConfig, CheckpointConfig, CpuConfig, DramGeneration, DramOrg, HcracPolicy,
+    HcracSharing, McConfig, NuatConfig, RowPolicy, SampleConfig, SystemConfig, Timing,
 };
 use crate::controller::{SchedulerKind, SCHEDULER_NAMES};
 use crate::error::Result;
@@ -101,6 +101,24 @@ trait Choice: Sized + Copy {
     const CHOICES: &'static [&'static str];
     fn to_name(self) -> &'static str;
     fn from_name(s: &str) -> Option<Self>;
+}
+
+impl Choice for bool {
+    const CHOICES: &'static [&'static str] = &["off", "on"];
+    fn to_name(self) -> &'static str {
+        if self {
+            "on"
+        } else {
+            "off"
+        }
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => Some(true),
+            "off" | "false" | "0" => Some(false),
+            _ => None,
+        }
+    }
 }
 
 impl Choice for RowPolicy {
@@ -329,6 +347,8 @@ fn build() -> Vec<ParamDef> {
         seed,
         loop_mode,
         sim_threads,
+        sample,
+        checkpoint,
     } = SystemConfig::default();
     let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
     let Timing {
@@ -380,6 +400,8 @@ fn build() -> Vec<ParamDef> {
         trcd_reduction: nuat_trcd_reduction,
         tras_reduction: nuat_tras_reduction,
     } = nuat;
+    let SampleConfig { detail_cycles, period_cycles } = sample;
+    let CheckpointConfig { warmup_fork, min_fork_group } = checkpoint;
 
     let mut defs: Vec<ParamDef> = Vec::new();
     // DramOrg.
@@ -613,6 +635,36 @@ fn build() -> Vec<ParamDef> {
         "Shard count for the channel-sharded event loop (0 = --sim-threads/PALLAS_SIM_THREADS)",
         sim_threads,
     );
+    // SampleConfig.
+    scalar_param!(
+        defs,
+        "sample.detail_cycles",
+        detail_cycles,
+        "Detailed cycles per sampling period (0 = full-detail run)",
+        sample.detail_cycles,
+    );
+    scalar_param!(
+        defs,
+        "sample.period_cycles",
+        period_cycles,
+        "Sampling period in CPU cycles (detail + fast-forward)",
+        sample.period_cycles,
+    );
+    // CheckpointConfig.
+    choice_param!(
+        defs,
+        "checkpoint.warmup_fork",
+        warmup_fork,
+        "Fork sweep legs from a shared warmed-up snapshot",
+        checkpoint.warmup_fork,
+    );
+    scalar_param!(
+        defs,
+        "checkpoint.min_fork_group",
+        min_fork_group,
+        "Legs sharing a warmup identity before a snapshot is built",
+        checkpoint.min_fork_group,
+    );
     defs
 }
 
@@ -720,10 +772,10 @@ mod tests {
     fn every_param_round_trips_and_moves_the_fingerprint() {
         let reg = registry();
         // One def per config field (6 dram org + generation + 15 timing +
-        // 6 mc + 8 cpu + 7 chargecache + 3 nuat + 8 top-level incl.
-        // sim.threads). If this count moved, update it together with the
-        // new field's ParamDef.
-        assert_eq!(reg.defs().len(), 54, "registry must cover every SystemConfig field");
+        // 6 mc + 8 cpu + 7 chargecache + 3 nuat + 2 sample +
+        // 2 checkpoint + 8 top-level incl. sim.threads). If this count
+        // moved, update it together with the new field's ParamDef.
+        assert_eq!(reg.defs().len(), 58, "registry must cover every SystemConfig field");
         let base = SystemConfig::default();
         for def in reg.defs() {
             // The recorded default is the default config's value.
@@ -780,6 +832,13 @@ mod tests {
         assert_eq!(cfg.loop_mode, LoopMode::StrictTick);
         let err = reg.set(&mut cfg, "mc.row_policy", "ajar").unwrap_err().to_string();
         assert!(err.contains("open | closed"), "choices missing from {err:?}");
+        // Bool params take on/off with the usual aliases.
+        reg.set(&mut cfg, "checkpoint.warmup_fork", "off").unwrap();
+        assert!(!cfg.checkpoint.warmup_fork);
+        reg.set(&mut cfg, "checkpoint.warmup_fork", "true").unwrap();
+        assert!(cfg.checkpoint.warmup_fork);
+        assert_eq!(reg.get(&cfg, "checkpoint.warmup_fork").unwrap(), "on");
+        assert!(reg.set(&mut cfg, "checkpoint.warmup_fork", "maybe").is_err());
     }
 
     #[test]

@@ -618,6 +618,120 @@ impl MemController {
         self.sink.reset_stats();
     }
 
+    /// Checkpoint: device, both queues (slab-verbatim), sink (mechanism
+    /// tables + trackers + stats), policy, and the controller's own
+    /// bookkeeping. The BankEngine is *not* serialized — it is an index
+    /// over queues + open rows and is re-derived on import by replaying
+    /// `on_enqueue` for every queued request (the exact recipe
+    /// `debug_assert_consistent` checks against). `autopre_scratch` and
+    /// `wq_drained` are cleared at the top of every tick and carry no
+    /// information across the snapshot boundary.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::MC);
+        self.dev.export_state(enc);
+        self.rq.export_state(enc);
+        self.wq.export_state(enc);
+        self.sink.export_state(enc);
+        self.policy.export_state(enc);
+        enc.bool(self.write_drain);
+        enc.usize(self.ref_drain.len());
+        for &d in &self.ref_drain {
+            enc.bool(d);
+        }
+        let mut comps: Vec<(u64, u64, u32)> =
+            self.completions.iter().map(|Reverse(t)| *t).collect();
+        comps.sort_unstable();
+        enc.usize(comps.len());
+        for (ready, id, core) in comps {
+            enc.u64(ready);
+            enc.u64(id);
+            enc.u32(core);
+        }
+        let mut classes: Vec<(u64, u64)> = self
+            .class_of
+            .iter()
+            .map(|(&id, &c)| {
+                (
+                    id,
+                    match c {
+                        ReqClass::Hit => 0u64,
+                        ReqClass::Miss => 1,
+                        ReqClass::Conflict => 2,
+                    },
+                )
+            })
+            .collect();
+        classes.sort_unstable();
+        enc.usize(classes.len());
+        for (id, c) in classes {
+            enc.u64(id);
+            enc.u64(c);
+        }
+        for &o in &self.rank_open {
+            enc.u32(o);
+        }
+        for &s in &self.rank_active_since {
+            enc.u64(s);
+        }
+        for &c in &self.rank_active_cycles {
+            enc.u64(c);
+        }
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::MC)?;
+        self.dev.import_state(dec)?;
+        self.rq.import_state(dec)?;
+        self.wq.import_state(dec)?;
+        self.sink.import_state(dec)?;
+        self.policy.import_state(dec)?;
+        self.write_drain = dec.bool()?;
+        if dec.usize()? != self.ref_drain.len() {
+            return None; // rank count is config-derived shape
+        }
+        for d in self.ref_drain.iter_mut() {
+            *d = dec.bool()?;
+        }
+        self.completions.clear();
+        for _ in 0..dec.usize()? {
+            let ready = dec.u64()?;
+            let id = dec.u64()?;
+            let core = dec.u32()?;
+            self.completions.push(Reverse((ready, id, core)));
+        }
+        self.class_of.clear();
+        for _ in 0..dec.usize()? {
+            let id = dec.u64()?;
+            let class = match dec.u64()? {
+                0 => ReqClass::Hit,
+                1 => ReqClass::Miss,
+                2 => ReqClass::Conflict,
+                _ => return None,
+            };
+            self.class_of.insert(id, class);
+        }
+        for o in self.rank_open.iter_mut() {
+            *o = dec.u32()?;
+        }
+        for s in self.rank_active_since.iter_mut() {
+            *s = dec.u64()?;
+        }
+        for c in self.rank_active_cycles.iter_mut() {
+            *c = dec.u64()?;
+        }
+        self.wq_drained.clear();
+        // Re-derive the BankEngine index from restored queues + open rows
+        // (mirror of the enqueue path).
+        let mut engine = BankEngine::new(self.dev.org.ranks, self.dev.org.banks);
+        for req in self.rq.iter().chain(self.wq.iter()) {
+            engine.on_enqueue(&req.loc, self.dev.bank(&req.loc).open_row());
+        }
+        self.engine = engine;
+        Some(())
+    }
+
     /// Test hook: re-derive the BankEngine indexes from queue + device
     /// state and assert they match (debug builds only).
     #[cfg(test)]
@@ -979,6 +1093,78 @@ mod tests {
             1,
             "channel-3 PRE-insert and ACT-lookup keys must agree"
         );
+    }
+
+    /// Checkpoint identity at the controller layer: snapshot mid-traffic
+    /// (in-flight completions, queued requests, open rows, refresh drain
+    /// possibly pending), restore into a fresh controller, then drive both
+    /// with the same request stream — every completion and stat must
+    /// match, and the rebuilt BankEngine must pass its oracle.
+    #[test]
+    fn checkpoint_restore_is_bit_identical_under_traffic() {
+        use crate::sim::checkpoint::{Dec, Enc};
+        for kind in [MechanismKind::Baseline, MechanismKind::ChargeCache, MechanismKind::Nuat] {
+            let c = cfg();
+            let mut rng = crate::trace::XorShift64::new(0xC0DE);
+            let mut mc = MemController::new(&c, kind, 0);
+            let mut done = Vec::new();
+            let mut id = 0u64;
+            fn traffic(
+                mc: &mut MemController,
+                now: u64,
+                rng: &mut crate::trace::XorShift64,
+                id: &mut u64,
+            ) {
+                if rng.below(3) == 0 {
+                    let req = Request {
+                        id: *id,
+                        core: rng.below(4) as u32,
+                        loc: Loc {
+                            channel: 0,
+                            rank: 0,
+                            bank: rng.below(8) as u32,
+                            row: rng.below(16) as u32,
+                            col: rng.below(128) as u32,
+                        },
+                        is_write: rng.below(4) == 0,
+                        arrived: now,
+                    };
+                    if mc.enqueue(req, now) {
+                        *id += 1;
+                    }
+                }
+            }
+            for now in 0..8_000u64 {
+                traffic(&mut mc, now, &mut rng, &mut id);
+                done.clear();
+                mc.tick(now, &mut done);
+            }
+
+            let mut enc = Enc::new();
+            mc.export_state(&mut enc);
+            let words = enc.into_words();
+            let mut fresh = MemController::new(&c, kind, 0);
+            let mut dec = Dec::new(&words);
+            fresh.import_state(&mut dec).expect("import must succeed");
+            assert!(dec.finished());
+            fresh.assert_engine_consistent();
+
+            // Same future on both sides, same RNG stream.
+            let rng_words = rng.state();
+            let mut rng2 = crate::trace::XorShift64::from_state(rng_words);
+            let mut id2 = id;
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for now in 8_000..16_000u64 {
+                traffic(&mut mc, now, &mut rng, &mut id);
+                traffic(&mut fresh, now, &mut rng2, &mut id2);
+                mc.tick(now, &mut a);
+                fresh.tick(now, &mut b);
+            }
+            let pairs: Vec<(u64, u64)> = a.iter().map(|c| (c.req_id, c.ready)).collect();
+            let pairs2: Vec<(u64, u64)> = b.iter().map(|c| (c.req_id, c.ready)).collect();
+            assert_eq!(pairs, pairs2, "completions diverged after restore ({kind:?})");
+            assert_eq!(mc.stats(), fresh.stats(), "stats diverged after restore ({kind:?})");
+        }
     }
 
     /// Randomized cross-check of the BankEngine's incremental indexes

@@ -148,6 +148,15 @@ pub trait SchedPolicy: Send {
 
     /// A column command issued for `core`'s request (BLISS bookkeeping).
     fn on_column_issued(&mut self, _now: u64, _core: u32) {}
+
+    /// Checkpoint hook: stateless policies (FR-FCFS, FCFS) keep the
+    /// defaults, which write/consume nothing.
+    fn export_state(&self, _enc: &mut crate::sim::checkpoint::Enc) {}
+
+    /// Restore what [`SchedPolicy::export_state`] wrote.
+    fn import_state(&mut self, _dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        Some(())
+    }
 }
 
 /// Build the policy instance for one controller.
@@ -520,6 +529,34 @@ impl SchedPolicy for Bliss {
             self.last_core = Some(core);
             self.streak = 1;
         }
+    }
+
+    fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::POLICY);
+        let mut listed: Vec<u32> = self.blacklist.iter().copied().collect();
+        listed.sort_unstable();
+        enc.usize(listed.len());
+        for c in listed {
+            enc.u32(c);
+        }
+        enc.opt_u32(self.last_core);
+        enc.u32(self.streak);
+        enc.u64(self.next_clear);
+    }
+
+    fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::POLICY)?;
+        let n = dec.usize()?;
+        self.blacklist.clear();
+        for _ in 0..n {
+            self.blacklist.insert(dec.u32()?);
+        }
+        self.last_core = dec.opt_u32()?;
+        self.streak = dec.u32()?;
+        self.next_clear = dec.u64()?;
+        Some(())
     }
 }
 

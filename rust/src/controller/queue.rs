@@ -148,6 +148,79 @@ impl RequestQueue {
     pub fn contains_id(&self, id: u64) -> bool {
         self.iter().any(|r| r.id == id)
     }
+
+    /// Checkpoint: the slab is serialized verbatim — slot order and the
+    /// freelist pin which keys future pushes hand out, and stale (freed)
+    /// slots keep their last contents so the restored slab is
+    /// word-identical to the captured one.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::QUEUE);
+        enc.usize(self.slots.len());
+        for s in &self.slots {
+            enc.u64(s.req.id);
+            enc.u32(s.req.core);
+            enc.u32(s.req.loc.channel);
+            enc.u32(s.req.loc.rank);
+            enc.u32(s.req.loc.bank);
+            enc.u32(s.req.loc.row);
+            enc.u32(s.req.loc.col);
+            enc.bool(s.req.is_write);
+            enc.u64(s.req.arrived);
+            enc.u32(s.prev);
+            enc.u32(s.next);
+            enc.bool(s.linked);
+        }
+        enc.usize(self.free.len());
+        for &k in &self.free {
+            enc.u32(k);
+        }
+        enc.u32(self.head);
+        enc.u32(self.tail);
+        enc.usize(self.len);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::dram::command::Loc;
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::QUEUE)?;
+        let n = dec.usize()?;
+        if n > self.cap {
+            return None; // capacity is config-derived shape
+        }
+        self.slots.clear();
+        for _ in 0..n {
+            let req = Request {
+                id: dec.u64()?,
+                core: dec.u32()?,
+                loc: Loc {
+                    channel: dec.u32()?,
+                    rank: dec.u32()?,
+                    bank: dec.u32()?,
+                    row: dec.u32()?,
+                    col: dec.u32()?,
+                },
+                is_write: dec.bool()?,
+                arrived: dec.u64()?,
+            };
+            let prev = dec.u32()?;
+            let next = dec.u32()?;
+            let linked = dec.bool()?;
+            self.slots.push(Slot { req, prev, next, linked });
+        }
+        let free_n = dec.usize()?;
+        self.free.clear();
+        for _ in 0..free_n {
+            self.free.push(dec.u32()?);
+        }
+        self.head = dec.u32()?;
+        self.tail = dec.u32()?;
+        self.len = dec.usize()?;
+        if self.len > self.cap {
+            return None;
+        }
+        Some(())
+    }
 }
 
 /// Arrival-order iterator over `(slot key, request)` pairs.
@@ -253,6 +326,37 @@ mod tests {
         let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![1, 3, 10, 11]);
         assert!(q.is_full());
+    }
+
+    #[test]
+    fn checkpoint_restores_slab_keys_exactly() {
+        use crate::sim::checkpoint::{Dec, Enc};
+        let mut q = RequestQueue::new(4);
+        for i in 0..4 {
+            q.push(req(i, 0, i as u32));
+        }
+        q.remove(key_at(&q, 2));
+        q.remove(key_at(&q, 0));
+        q.push(req(10, 1, 5));
+        let mut enc = Enc::new();
+        q.export_state(&mut enc);
+        let words = enc.into_words();
+        let mut fresh = RequestQueue::new(4);
+        let mut dec = Dec::new(&words);
+        fresh.import_state(&mut dec).unwrap();
+        assert!(dec.finished());
+        let mut enc2 = Enc::new();
+        fresh.export_state(&mut enc2);
+        assert_eq!(enc2.into_words(), words, "re-export must be word-identical");
+        // Future pushes must hand out the same recycled keys.
+        assert!(fresh.push(req(20, 0, 1)));
+        assert!(q.push(req(20, 0, 1)));
+        let keys = |qq: &RequestQueue| qq.iter_keyed().map(|(k, r)| (k, r.id)).collect::<Vec<_>>();
+        assert_eq!(keys(&fresh), keys(&q));
+        // A slab bigger than the capacity is rejected.
+        let mut tiny = RequestQueue::new(2);
+        let mut dec2 = Dec::new(&words);
+        assert!(tiny.import_state(&mut dec2).is_none());
     }
 
     #[test]

@@ -120,6 +120,65 @@ impl CommandSink {
         self.stats = McStats::default();
         self.rltl.reset_counts();
     }
+
+    /// Checkpoint: mechanism tables (with their expiry clocks), both
+    /// trackers, and the stat counters, in a fixed field order.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::SINK);
+        enc.tag(tags::MECH);
+        self.mech.export_state(enc);
+        self.rltl.export_state(enc);
+        self.reuse.export_state(enc);
+        let s = &self.stats;
+        for v in [
+            s.acts,
+            s.acts_reduced,
+            s.reads,
+            s.writes,
+            s.precharges,
+            s.refreshes,
+            s.row_hits,
+            s.row_misses,
+            s.row_conflicts,
+            s.read_latency_sum,
+            s.read_latency_cnt,
+            s.bank_open_cycles,
+            s.wq_forwards,
+            s.rejects,
+        ] {
+            enc.u64(v);
+        }
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::SINK)?;
+        dec.tag(tags::MECH)?;
+        self.mech.import_state(dec)?;
+        self.rltl.import_state(dec)?;
+        self.reuse.import_state(dec)?;
+        let s = &mut self.stats;
+        for v in [
+            &mut s.acts,
+            &mut s.acts_reduced,
+            &mut s.reads,
+            &mut s.writes,
+            &mut s.precharges,
+            &mut s.refreshes,
+            &mut s.row_hits,
+            &mut s.row_misses,
+            &mut s.row_conflicts,
+            &mut s.read_latency_sum,
+            &mut s.read_latency_cnt,
+            &mut s.bank_open_cycles,
+            &mut s.wq_forwards,
+            &mut s.rejects,
+        ] {
+            *v = dec.u64()?;
+        }
+        Some(())
+    }
 }
 
 #[cfg(test)]

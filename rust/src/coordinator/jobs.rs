@@ -18,6 +18,14 @@
 //! `(config, mechanism, workload)` (traces are seeded from the config),
 //! and the fingerprint covers *every* config field by exhaustive
 //! destructuring — see the contract on [`SystemConfig::fingerprint`].
+//!
+//! On top of whole-result memoization sits **warmup forking** (DESIGN.md
+//! §12): sweep legs that disagree only in measure-phase knobs share a
+//! warmup identity ([`SystemConfig::warmup_fingerprint`]), so the graph
+//! simulates their common warmup once, snapshots it
+//! ([`SimSnapshot`]), and forks every leg from the snapshot. Forked legs
+//! are bit-identical to cold runs by the checkpoint round-trip contract
+//! (tests/checkpoint.rs), so this is purely a wall-clock optimization.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -26,7 +34,7 @@ use std::sync::Arc;
 use crate::config::SystemConfig;
 use crate::error::{Context, Result};
 use crate::latency::MechanismKind;
-use crate::sim::{SimResult, System};
+use crate::sim::{SimResult, SimSnapshot, System};
 use crate::trace::PROFILES;
 
 use super::runner::parallel_map;
@@ -54,6 +62,17 @@ impl WorkloadId {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct JobKey {
     pub cfg_fingerprint: u64,
+    pub mechanism: MechanismKind,
+    pub workload: WorkloadId,
+}
+
+/// The warmup-sharing key: legs with equal [`WarmupKey`]s reach
+/// bit-identical state at the end of warmup and can fork from one
+/// snapshot. Strictly coarser than [`JobKey`]: it hashes only the
+/// warmup-relevant config slice ([`SystemConfig::warmup_fingerprint`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WarmupKey {
+    pub warmup_fingerprint: u64,
     pub mechanism: MechanismKind,
     pub workload: WorkloadId,
 }
@@ -87,6 +106,15 @@ impl JobSpec {
         }
     }
 
+    /// The warmup-sharing identity of this leg.
+    pub fn warmup_key(&self) -> WarmupKey {
+        WarmupKey {
+            warmup_fingerprint: self.cfg.warmup_fingerprint(self.mechanism),
+            mechanism: self.mechanism,
+            workload: self.workload,
+        }
+    }
+
     /// Estimated cost in core-instructions, the dispatch sort key. Mixes
     /// dominate by construction (8 cores and, under fixed-time
     /// measurement, a deep cycle window), so sorting by this descending
@@ -102,13 +130,30 @@ impl JobSpec {
         self.cfg.cpu.cores as u64 * per_core
     }
 
-    /// Run the simulation this spec describes.
-    fn run(&self) -> SimResult {
+    /// Build the (cold, unwarmed) system this spec describes.
+    fn build_system(&self) -> System {
         match self.workload {
-            WorkloadId::Single(w) => {
-                System::new(&self.cfg, self.mechanism, &[&PROFILES[w]]).run()
-            }
-            WorkloadId::Mix(m) => System::new_mix(&self.cfg, self.mechanism, m).run(),
+            WorkloadId::Single(w) => System::new(&self.cfg, self.mechanism, &[&PROFILES[w]]),
+            WorkloadId::Mix(m) => System::new_mix(&self.cfg, self.mechanism, m),
+        }
+    }
+
+    /// Run the simulation this spec describes, warmup included.
+    fn run(&self) -> SimResult {
+        self.build_system().run()
+    }
+
+    /// Run this leg forked from a warmed-up snapshot: restore, then
+    /// measure. Returns `(result, true)` on a successful fork; a snapshot
+    /// that fails to restore (corrupt or mismatched on-disk entry)
+    /// degrades to a cold [`JobSpec::run`] and returns `(result, false)`
+    /// — never a wrong result.
+    fn run_forked(&self, snap: &SimSnapshot) -> (SimResult, bool) {
+        let mut sys = self.build_system();
+        if snap.restore_into(&mut sys).is_some() {
+            (sys.run_measure(), true)
+        } else {
+            (self.run(), false)
         }
     }
 }
@@ -127,6 +172,18 @@ pub struct CacheStats {
     pub disk_hits: u64,
     /// Unique jobs actually simulated.
     pub simulated: u64,
+    /// Warmup phases actually simulated for fork groups: snapshot builds
+    /// plus cold fallbacks after a failed restore.
+    pub warmup_sims: u64,
+    /// Legs forked from a warmed-up snapshot instead of simulating their
+    /// own warmup.
+    pub warmup_forks: u64,
+    /// CPU cycles of warmup simulated for fork groups (see
+    /// [`CacheStats::warmup_sims`]).
+    pub warmup_cycles_simulated: u64,
+    /// CPU cycles of warmup forked legs skipped by restoring a snapshot —
+    /// what the naive path would have re-simulated.
+    pub warmup_cycles_forked: u64,
 }
 
 impl CacheStats {
@@ -136,10 +193,12 @@ impl CacheStats {
         self.deduped + self.memory_hits + self.disk_hits
     }
 
-    /// One-line summary for suite output (format is stable — CI greps it).
+    /// One-line summary for suite output (format is stable — CI greps it;
+    /// the warmup clause is appended after the original text so older
+    /// greps keep matching).
     pub fn summary(&self) -> String {
         format!(
-            "job graph: submitted {}, deduped {}, cache hits {} (memory {}, disk {}), simulated {} — {} redundant legs eliminated",
+            "job graph: submitted {}, deduped {}, cache hits {} (memory {}, disk {}), simulated {} — {} redundant legs eliminated; warmup: {} forked, {} simulated ({} cycles reused, {} simulated)",
             self.submitted,
             self.deduped,
             self.memory_hits + self.disk_hits,
@@ -147,6 +206,10 @@ impl CacheStats {
             self.disk_hits,
             self.simulated,
             self.eliminated(),
+            self.warmup_forks,
+            self.warmup_sims,
+            self.warmup_cycles_forked,
+            self.warmup_cycles_simulated,
         )
     }
 }
@@ -156,6 +219,9 @@ impl CacheStats {
 /// one per key, named `{fingerprint:016x}.{mech}.{workload}.json`.
 pub struct SimCache {
     map: HashMap<JobKey, Arc<SimResult>>,
+    /// Warmed-up snapshots shared across graphs (and, disk-backed,
+    /// across invocations) — `{warmup_fp:016x}.{mech}.{workload}.ckpt.json`.
+    snaps: HashMap<WarmupKey, Arc<SimSnapshot>>,
     disk: Option<PathBuf>,
     pub stats: CacheStats,
 }
@@ -163,7 +229,12 @@ pub struct SimCache {
 impl SimCache {
     /// Purely in-process cache (the default).
     pub fn in_memory() -> Self {
-        Self { map: HashMap::new(), disk: None, stats: CacheStats::default() }
+        Self {
+            map: HashMap::new(),
+            snaps: HashMap::new(),
+            disk: None,
+            stats: CacheStats::default(),
+        }
     }
 
     /// Cache backed by `dir`: misses are simulated then persisted, and a
@@ -172,7 +243,12 @@ impl SimCache {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating result cache dir {dir:?}"))?;
-        Ok(Self { map: HashMap::new(), disk: Some(dir), stats: CacheStats::default() })
+        Ok(Self {
+            map: HashMap::new(),
+            snaps: HashMap::new(),
+            disk: Some(dir),
+            stats: CacheStats::default(),
+        })
     }
 
     fn disk_path(&self, key: &JobKey) -> Option<PathBuf> {
@@ -228,6 +304,53 @@ impl SimCache {
             }
         }
         self.map.insert(key, result);
+    }
+
+    fn snapshot_path(&self, key: &WarmupKey) -> Option<PathBuf> {
+        self.disk.as_ref().map(|d| {
+            d.join(format!(
+                "{:016x}.{}.{}.ckpt.json",
+                key.warmup_fingerprint,
+                mech_slug(key.mechanism),
+                key.workload.slug()
+            ))
+        })
+    }
+
+    /// Look a warmed-up snapshot up: memory first, then disk. Disk loads
+    /// are validated against the key's full identity triple — the
+    /// fingerprint in the file name hashes only the config, so a renamed
+    /// file must not seed another key's legs (restore would reject it
+    /// anyway, but catching it here avoids burning a fork slot).
+    fn get_snapshot(&mut self, key: &WarmupKey) -> Option<Arc<SimSnapshot>> {
+        if let Some(s) = self.snaps.get(key) {
+            return Some(s.clone());
+        }
+        let path = self.snapshot_path(key)?;
+        let text = std::fs::read_to_string(path).ok()?;
+        let snap = SimSnapshot::decode(&text)?;
+        if snap.warmup_fingerprint != key.warmup_fingerprint
+            || snap.mechanism != key.mechanism
+            || snap.workload != expected_workload(key.workload)
+        {
+            return None;
+        }
+        let arc = Arc::new(snap);
+        self.snaps.insert(*key, arc.clone());
+        Some(arc)
+    }
+
+    /// Record a freshly captured snapshot (and persist it if disk-backed;
+    /// same atomic-publish, best-effort discipline as [`SimCache::insert`]).
+    fn insert_snapshot(&mut self, key: WarmupKey, snap: Arc<SimSnapshot>) {
+        if let Some(path) = self.snapshot_path(&key) {
+            let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+            if std::fs::write(&tmp, snap.encode()).is_ok() && std::fs::rename(&tmp, &path).is_err()
+            {
+                let _ = std::fs::remove_file(&tmp);
+            }
+        }
+        self.snaps.insert(key, snap);
     }
 
     /// Unique results currently held in memory (tests/telemetry).
@@ -301,8 +424,16 @@ impl JobGraph {
     }
 
     /// Run the graph memoized: cached keys are served from `cache`, the
-    /// rest fan out through one cost-ordered `parallel_map` call, and
-    /// fresh results are inserted back into `cache`.
+    /// rest fan out through cost-ordered `parallel_map` calls, and fresh
+    /// results are inserted back into `cache`.
+    ///
+    /// Two phases. **Warmup** (only when forking applies): legs that miss
+    /// the result cache are grouped by [`WarmupKey`]; a group whose
+    /// snapshot is already cached forks unconditionally, and a group of
+    /// at least `checkpoint.min_fork_group` legs simulates its shared
+    /// warmup once and snapshots it. **Measure**: every missing leg runs
+    /// — forked legs restore and measure, the rest run cold — in one
+    /// cost-ordered dispatch.
     pub fn run(self, cache: &mut SimCache) -> JobResults {
         cache.stats.submitted += self.tickets.len() as u64;
         cache.stats.deduped += (self.tickets.len() - self.specs.len()) as u64;
@@ -316,19 +447,92 @@ impl JobGraph {
             }
         }
 
-        // Cost-ordered dispatch: most expensive first, submission order as
-        // the deterministic tie-break. The atomic-index runner consumes
-        // jobs in this order, so the long eight-core mixes start while
-        // every worker still has a deep queue behind it, instead of one
-        // worker dragging a tail-end mix alone.
+        // Group the misses by warmup identity, in first-submission order
+        // so snapshot construction is deterministic.
+        let mut gindex: HashMap<WarmupKey, usize> = HashMap::new();
+        let mut groups: Vec<(WarmupKey, Vec<usize>)> = Vec::new();
+        for &i in &to_run {
+            let spec = &self.specs[i];
+            if !spec.cfg.checkpoint.warmup_fork || spec.cfg.warmup_cpu_cycles == 0 {
+                continue;
+            }
+            let key = spec.warmup_key();
+            let gi = *gindex.entry(key).or_insert_with(|| {
+                groups.push((key, Vec::new()));
+                groups.len() - 1
+            });
+            groups[gi].1.push(i);
+        }
+
+        // Resolve snapshots: a cached one (earlier graph, or disk) is
+        // free, so even a lone leg forks from it; building one only pays
+        // off when `min_fork_group` legs will share it. Legs of one group
+        // can disagree on `min_fork_group` (it is measure-side, outside
+        // the warmup fingerprint); the first-submitted leg's value wins.
+        let mut snap_for: HashMap<usize, Arc<SimSnapshot>> = HashMap::new();
+        let mut to_build: Vec<usize> = Vec::new();
+        for (gi, (key, legs)) in groups.iter().enumerate() {
+            if let Some(s) = cache.get_snapshot(key) {
+                for &i in legs {
+                    snap_for.insert(i, s.clone());
+                }
+            } else if legs.len() >= self.specs[legs[0]].cfg.checkpoint.min_fork_group {
+                to_build.push(gi);
+            }
+        }
+
+        // Phase 1: simulate each group's shared warmup once, in parallel.
+        if !to_build.is_empty() {
+            let specs = &self.specs;
+            let groups_ref = &groups;
+            let build = &to_build;
+            let built = parallel_map(build.len(), |j| {
+                let (_, legs) = &groups_ref[build[j]];
+                let mut sys = specs[legs[0]].build_system();
+                sys.run_warmup();
+                SimSnapshot::capture(&sys)
+            });
+            for (j, snap) in built.into_iter().enumerate() {
+                let (key, legs) = &groups[to_build[j]];
+                cache.stats.warmup_sims += 1;
+                cache.stats.warmup_cycles_simulated += self.specs[legs[0]].cfg.warmup_cpu_cycles;
+                let arc = Arc::new(snap);
+                cache.insert_snapshot(*key, arc.clone());
+                for &i in legs {
+                    snap_for.insert(i, arc.clone());
+                }
+            }
+        }
+
+        // Phase 2, cost-ordered dispatch: most expensive first, submission
+        // order as the deterministic tie-break. The atomic-index runner
+        // consumes jobs in this order, so the long eight-core mixes start
+        // while every worker still has a deep queue behind it, instead of
+        // one worker dragging a tail-end mix alone.
         to_run.sort_by_key(|&i| (std::cmp::Reverse(self.specs[i].cost()), i));
 
         cache.stats.simulated += to_run.len() as u64;
         let specs = &self.specs;
         let order = &to_run;
-        let results = parallel_map(order.len(), |j| specs[order[j]].run());
-        for (j, r) in results.into_iter().enumerate() {
+        let snaps = &snap_for;
+        let results = parallel_map(order.len(), |j| {
+            let i = order[j];
+            match snaps.get(&i) {
+                Some(s) => specs[i].run_forked(s),
+                None => (specs[i].run(), false),
+            }
+        });
+        for (j, (r, forked)) in results.into_iter().enumerate() {
             let i = to_run[j];
+            let warmup = self.specs[i].cfg.warmup_cpu_cycles;
+            if forked {
+                cache.stats.warmup_forks += 1;
+                cache.stats.warmup_cycles_forked += warmup;
+            } else if snap_for.contains_key(&i) {
+                // Failed restore fell back to a cold run.
+                cache.stats.warmup_sims += 1;
+                cache.stats.warmup_cycles_simulated += warmup;
+            }
             let arc = Arc::new(r);
             cache.insert(self.specs[i].key(), arc.clone());
             slots[i] = Some(arc);
@@ -434,6 +638,7 @@ mod diskjson {
     use crate::coordinator::json::{parse_root, Val};
     use crate::energy::EnergyBreakdown;
     use crate::latency::MechanismKind;
+    use crate::sim::sample::SampleSummary;
     use crate::sim::SimResult;
 
     /// Cache-entry version: covers the JSON layout **and** simulator
@@ -448,7 +653,11 @@ mod diskjson {
     /// minimum effective timing when both ChargeCache and NUAT reduce,
     /// so CC+NUAT results from v1 builds may legitimately differ under
     /// asymmetric reduction configs.
-    pub const VERSION: u64 = 2;
+    ///
+    /// v3: results carry the interval-sampling summary
+    /// (`SimResult::sampled`) as the fixed-order 7-integer `sampled`
+    /// array (empty = not sampled); v2 entries lack the field.
+    pub const VERSION: u64 = 3;
 
     // ---- encoding ----
 
@@ -491,13 +700,32 @@ mod diskjson {
         )
     }
 
+    /// `SimResult::sampled` as a fixed-order 7-integer array (empty when
+    /// the run was not sampled): intervals, detailed_insts,
+    /// skipped_insts, then the four summary floats as bit patterns.
+    fn sampled_array(s: &Option<SampleSummary>) -> String {
+        match s {
+            None => "[]".to_string(),
+            Some(s) => format!(
+                "[{},{},{},{},{},{},{}]",
+                s.intervals,
+                s.detailed_insts,
+                s.skipped_insts,
+                s.ipc_mean.to_bits(),
+                s.ipc_ci95.to_bits(),
+                s.latency_mean.to_bits(),
+                s.latency_ci95.to_bits()
+            ),
+        }
+    }
+
     pub fn encode_result(r: &SimResult) -> String {
         let mcs: Vec<String> = r.mc.iter().map(mc_array).collect();
         let e = &r.energy;
         let energy =
             bits_array(&[e.act_pre_nj, e.read_nj, e.write_nj, e.refresh_nj, e.background_nj]);
         format!(
-            "{{\n  \"version\": {VERSION},\n  \"workload\": \"{}\",\n  \"mechanism\": \"{}\",\n  \"core_ipc_bits\": {},\n  \"cpu_cycles\": {},\n  \"mc\": [{}],\n  \"rltl_bits\": {},\n  \"energy_bits\": {},\n  \"total_insts\": {},\n  \"llc_hits\": {},\n  \"llc_misses\": {}\n}}\n",
+            "{{\n  \"version\": {VERSION},\n  \"workload\": \"{}\",\n  \"mechanism\": \"{}\",\n  \"core_ipc_bits\": {},\n  \"cpu_cycles\": {},\n  \"mc\": [{}],\n  \"rltl_bits\": {},\n  \"energy_bits\": {},\n  \"total_insts\": {},\n  \"llc_hits\": {},\n  \"llc_misses\": {},\n  \"sampled\": {}\n}}\n",
             escape(&r.workload),
             escape(r.mechanism),
             bits_array(&r.core_ipc),
@@ -507,7 +735,8 @@ mod diskjson {
             energy,
             r.total_insts,
             r.llc_hits,
-            r.llc_misses
+            r.llc_misses,
+            sampled_array(&r.sampled)
         )
     }
 
@@ -545,6 +774,23 @@ mod diskjson {
         })
     }
 
+    fn decode_sampled(v: &Val) -> Option<Option<SampleSummary>> {
+        let f = u64_vec(v)?;
+        match f.len() {
+            0 => Some(None),
+            7 => Some(Some(SampleSummary {
+                intervals: f[0],
+                detailed_insts: f[1],
+                skipped_insts: f[2],
+                ipc_mean: f64::from_bits(f[3]),
+                ipc_ci95: f64::from_bits(f[4]),
+                latency_mean: f64::from_bits(f[5]),
+                latency_ci95: f64::from_bits(f[6]),
+            })),
+            _ => None,
+        }
+    }
+
     pub fn decode_result(text: &str) -> Option<SimResult> {
         let root = parse_root(text)?;
         if root.field("version")?.u64()? != VERSION {
@@ -575,6 +821,7 @@ mod diskjson {
             total_insts: root.field("total_insts")?.u64()?,
             llc_hits: root.field("llc_hits")?.u64()?,
             llc_misses: root.field("llc_misses")?.u64()?,
+            sampled: decode_sampled(root.field("sampled")?)?,
         })
     }
 }
@@ -735,6 +982,150 @@ mod tests {
         assert_eq!(fresh.stats.disk_hits, 0, "forged entry must not hit");
         assert_eq!(fresh.stats.simulated, 1, "forged entry must re-simulate");
         assert_eq!(res.get(t).workload, PROFILES[6].name);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Legs differing only in a measure-phase knob, sharing one warmup.
+    fn sweep_legs(n: u64) -> Vec<SystemConfig> {
+        (0..n)
+            .map(|k| {
+                let mut c = tiny_scale().single_cfg();
+                c.measure_cycles = Some(3_000 + 500 * k);
+                c
+            })
+            .collect()
+    }
+
+    #[test]
+    fn forked_legs_are_bit_identical_to_cold_runs() {
+        let legs = sweep_legs(5);
+
+        // Cold reference: forking disabled (a distinct fingerprint, so
+        // nothing is shared with the forked pass below).
+        let mut cold_cache = SimCache::in_memory();
+        let mut g = JobGraph::new();
+        let cold_tickets: Vec<_> = legs
+            .iter()
+            .map(|c| {
+                let mut c = c.clone();
+                c.checkpoint.warmup_fork = false;
+                g.submit(JobSpec::single(c, MechanismKind::ChargeCache, 0))
+            })
+            .collect();
+        let cold = g.run(&mut cold_cache);
+        assert_eq!(cold_cache.stats.warmup_sims, 0);
+        assert_eq!(cold_cache.stats.warmup_forks, 0);
+
+        let mut cache = SimCache::in_memory();
+        let mut g = JobGraph::new();
+        let tickets: Vec<_> = legs
+            .iter()
+            .map(|c| g.submit(JobSpec::single(c.clone(), MechanismKind::ChargeCache, 0)))
+            .collect();
+        let res = g.run(&mut cache);
+        assert_eq!(cache.stats.warmup_sims, 1, "one shared warmup simulated");
+        assert_eq!(cache.stats.warmup_forks, 5, "every leg forked");
+        assert_eq!(cache.stats.warmup_cycles_simulated, 1_000);
+        assert_eq!(cache.stats.warmup_cycles_forked, 5_000);
+        for (a, b) in cold_tickets.iter().zip(&tickets) {
+            assert_eq!(cold.get(*a), res.get(*b), "fork must be bit-identical to cold");
+        }
+    }
+
+    #[test]
+    fn lone_legs_build_no_snapshot_but_reuse_cached_ones() {
+        let legs = sweep_legs(3);
+        let mut cache = SimCache::in_memory();
+
+        // One leg alone: below min_fork_group, so no snapshot is built.
+        let mut g = JobGraph::new();
+        g.submit(JobSpec::single(legs[0].clone(), MechanismKind::Baseline, 0));
+        g.run(&mut cache);
+        assert_eq!(cache.stats.warmup_sims, 0);
+        assert_eq!(cache.stats.warmup_forks, 0);
+
+        // Two more legs form a group: the snapshot is built once...
+        let mut g = JobGraph::new();
+        g.submit(JobSpec::single(legs[1].clone(), MechanismKind::Baseline, 0));
+        g.submit(JobSpec::single(legs[2].clone(), MechanismKind::Baseline, 0));
+        g.run(&mut cache);
+        assert_eq!(cache.stats.warmup_sims, 1);
+        assert_eq!(cache.stats.warmup_forks, 2);
+
+        // ...and a later lone leg forks from it for free.
+        let mut lone = tiny_scale().single_cfg();
+        lone.measure_cycles = Some(9_999);
+        let mut g = JobGraph::new();
+        g.submit(JobSpec::single(lone, MechanismKind::Baseline, 0));
+        g.run(&mut cache);
+        assert_eq!(cache.stats.warmup_sims, 1, "cached snapshot reused, not rebuilt");
+        assert_eq!(cache.stats.warmup_forks, 3);
+    }
+
+    #[test]
+    fn snapshots_persist_through_the_disk_cache() {
+        let dir = std::env::temp_dir().join(format!("cc_ckptcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let legs = sweep_legs(2);
+
+        let mut first = SimCache::with_disk(&dir).unwrap();
+        let mut g = JobGraph::new();
+        for c in &legs {
+            g.submit(JobSpec::single(c.clone(), MechanismKind::Nuat, 1));
+        }
+        g.run(&mut first);
+        assert_eq!(first.stats.warmup_sims, 1);
+
+        // A fresh cache over the same directory forks a new leg straight
+        // from the persisted snapshot — zero warmup simulated.
+        let mut second = SimCache::with_disk(&dir).unwrap();
+        let mut third = tiny_scale().single_cfg();
+        third.measure_cycles = Some(7_777);
+        let mut g = JobGraph::new();
+        g.submit(JobSpec::single(third, MechanismKind::Nuat, 1));
+        g.run(&mut second);
+        assert_eq!(second.stats.warmup_sims, 0);
+        assert_eq!(second.stats.warmup_forks, 1);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_falls_back_to_cold_run() {
+        let dir = std::env::temp_dir().join(format!("cc_badckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let legs = sweep_legs(2);
+
+        let mut first = SimCache::with_disk(&dir).unwrap();
+        let mut g = JobGraph::new();
+        for c in &legs {
+            g.submit(JobSpec::single(c.clone(), MechanismKind::ChargeCache, 2));
+        }
+        let _ = g.run(&mut first);
+
+        // Truncate the persisted snapshot: decode fails, so a fresh cache
+        // re-simulates the warmup rather than serving garbage.
+        let key = JobSpec::single(legs[0].clone(), MechanismKind::ChargeCache, 2).warmup_key();
+        let path = first.snapshot_path(&key).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+
+        let mut second = SimCache::with_disk(&dir).unwrap();
+        let mut again = tiny_scale().single_cfg();
+        again.measure_cycles = Some(8_888);
+        let mut g = JobGraph::new();
+        let t = g.submit(JobSpec::single(again.clone(), MechanismKind::ChargeCache, 2));
+        let res = g.run(&mut second);
+        assert_eq!(second.stats.warmup_forks, 0, "corrupt snapshot must not fork");
+        // The result is still correct: identical to a cold simulation.
+        let mut cold_cache = SimCache::in_memory();
+        let mut cold = again;
+        cold.checkpoint.warmup_fork = false;
+        let mut g = JobGraph::new();
+        let tc = g.submit(JobSpec::single(cold, MechanismKind::ChargeCache, 2));
+        let cold_res = g.run(&mut cold_cache);
+        assert_eq!(res.get(t), cold_res.get(tc));
 
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -297,6 +297,24 @@ mod tests {
     }
 
     #[test]
+    fn u64_extremes_round_trip_exactly() {
+        // The checkpoint codec stores f64 state as `to_bits()` words, so
+        // the parser must round-trip every u64 — including 2^63 (the bit
+        // pattern of -0.0) and u64::MAX, both of which a detour through
+        // f64 would corrupt.
+        let extremes = [0u64, u64::MAX, 9_223_372_036_854_775_808];
+        assert_eq!(extremes[2], (-0.0f64).to_bits());
+        for v in extremes {
+            let text = format!("{{ \"w\": {v}, \"ws\": [{v}, {v}] }}");
+            let root = parse_root(&text).unwrap();
+            assert_eq!(root.field("w").unwrap().u64(), Some(v));
+            for item in root.field("ws").unwrap().arr().unwrap() {
+                assert_eq!(item.u64(), Some(v));
+            }
+        }
+    }
+
+    #[test]
     fn objects_arrays_strings_and_literals() {
         let v = parse_root(
             r#"{ "name": "capA", "on": true, "off": false, "nil": null, "xs": [] }"#,

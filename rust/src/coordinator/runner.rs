@@ -16,7 +16,7 @@
 //! by the shard count instead of silently oversubscribing.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Once, OnceLock};
 
 /// Worker-count pin for [`parallel_map`]; 0 means "not pinned".
 static THREAD_PIN: AtomicUsize = AtomicUsize::new(0);
@@ -79,11 +79,17 @@ fn default_threads() -> usize {
     match explicit {
         Some(n) => {
             if n.saturating_mul(shards) > avail {
-                eprintln!(
-                    "warning: --threads {n} x --sim-threads {shards} = {} worker threads \
-                     exceeds available parallelism ({avail}); expect contention",
-                    n * shards
-                );
+                // Once per process: `parallel_map` runs per experiment
+                // phase, and a suite would otherwise repeat this dozens
+                // of times for one decision the user already made.
+                static OVERSUBSCRIBED: Once = Once::new();
+                OVERSUBSCRIBED.call_once(|| {
+                    eprintln!(
+                        "warning: --threads {n} x --sim-threads {shards} = {} worker threads \
+                         exceeds available parallelism ({avail}); expect contention",
+                        n * shards
+                    );
+                });
             }
             n
         }

@@ -87,6 +87,43 @@ impl Llc {
         self.misses = 0;
         self.writebacks = 0;
     }
+
+    /// Checkpoint: every line (valid, dirty, tag, LRU stamp) plus the
+    /// global stamp and counters; geometry is config-derived.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::LLC);
+        enc.usize(self.lines.len());
+        for l in &self.lines {
+            enc.bool(l.valid);
+            enc.bool(l.dirty);
+            enc.u64(l.tag);
+            enc.u64(l.lru);
+        }
+        enc.u64(self.stamp);
+        enc.u64(self.hits);
+        enc.u64(self.misses);
+        enc.u64(self.writebacks);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::LLC)?;
+        if dec.usize()? != self.lines.len() {
+            return None;
+        }
+        for l in self.lines.iter_mut() {
+            l.valid = dec.bool()?;
+            l.dirty = dec.bool()?;
+            l.tag = dec.u64()?;
+            l.lru = dec.u64()?;
+        }
+        self.stamp = dec.u64()?;
+        self.hits = dec.u64()?;
+        self.misses = dec.u64()?;
+        self.writebacks = dec.u64()?;
+        Some(())
+    }
 }
 
 #[cfg(test)]

@@ -299,6 +299,145 @@ impl Core {
     pub fn window_occupancy(&self) -> usize {
         self.window.len()
     }
+
+    /// Functionally fast-forward `n_insts` instructions: consume trace
+    /// entries without timing, crediting retirement and feeding each
+    /// memory access to `touch` (the sampling loop keeps the LLC warm
+    /// with it). Window/MSHR contents are left untouched — in-flight
+    /// misses complete at the next detailed interval, a documented
+    /// cold-start artifact of sampling (DESIGN.md §12).
+    pub fn functional_advance(&mut self, n_insts: u64, touch: &mut dyn FnMut(u64, bool)) -> u64 {
+        let mut done = 0u64;
+        while done < n_insts {
+            if self.bubbles_left > 0 {
+                let take = (self.bubbles_left as u64).min(n_insts - done);
+                self.bubbles_left -= take as u32;
+                done += take;
+                continue;
+            }
+            let entry = match self.pending.take() {
+                Some(e) => e,
+                None => {
+                    let e = self.trace.next_entry();
+                    if e.bubbles > 0 {
+                        self.pending = Some(e);
+                        self.bubbles_left = e.bubbles;
+                        continue;
+                    }
+                    e
+                }
+            };
+            touch(entry.line_addr, entry.is_write);
+            if entry.is_write {
+                self.stats.mem_writes += 1;
+            } else {
+                self.stats.mem_reads += 1;
+            }
+            done += 1;
+        }
+        self.stats.retired += done;
+        done
+    }
+
+    /// Checkpoint: full replayable core state. The trace source's words
+    /// travel in a length-prefixed sub-block so stateless sources (which
+    /// write nothing) stay framed correctly.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::{tags, Enc};
+        enc.tag(tags::CORE);
+        enc.u32(self.id);
+        enc.usize(self.window.len());
+        for &done in &self.window {
+            enc.bool(done);
+        }
+        enc.u64(self.head_seq);
+        enc.u64(self.next_seq);
+        enc.u32(self.bubbles_left);
+        match self.pending {
+            Some(e) => {
+                enc.bool(true);
+                enc.u32(e.bubbles);
+                enc.u64(e.line_addr);
+                enc.bool(e.is_write);
+            }
+            None => enc.bool(false),
+        }
+        let mut hits: Vec<(u64, u64)> = self.hit_queue.iter().map(|&Reverse(p)| p).collect();
+        hits.sort_unstable();
+        enc.usize(hits.len());
+        for (ready, seq) in hits {
+            enc.u64(ready);
+            enc.u64(seq);
+        }
+        self.mshr.export_state(enc);
+        enc.u64(self.stats.retired);
+        enc.u64(self.stats.cycles);
+        enc.u64(self.stats.mem_reads);
+        enc.u64(self.stats.mem_writes);
+        enc.u64(self.stats.llc_hit_loads);
+        enc.u64(self.stats.llc_miss_loads);
+        enc.opt_u64(self.stats.finished_at);
+        enc.u64(self.target);
+        let mut sub = Enc::new();
+        self.trace.export_state(&mut sub);
+        let words = sub.into_words();
+        enc.tag(tags::TRACE);
+        enc.usize(words.len());
+        enc.extend(&words);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::{tags, Dec};
+        dec.tag(tags::CORE)?;
+        if dec.u32()? != self.id {
+            return None;
+        }
+        let n = dec.usize()?;
+        if n > self.window_cap {
+            return None;
+        }
+        self.window.clear();
+        for _ in 0..n {
+            self.window.push_back(dec.bool()?);
+        }
+        self.head_seq = dec.u64()?;
+        self.next_seq = dec.u64()?;
+        self.bubbles_left = dec.u32()?;
+        self.pending = if dec.bool()? {
+            Some(TraceEntry {
+                bubbles: dec.u32()?,
+                line_addr: dec.u64()?,
+                is_write: dec.bool()?,
+            })
+        } else {
+            None
+        };
+        let hits = dec.usize()?;
+        self.hit_queue.clear();
+        for _ in 0..hits {
+            let ready = dec.u64()?;
+            let seq = dec.u64()?;
+            self.hit_queue.push(Reverse((ready, seq)));
+        }
+        self.mshr.import_state(dec)?;
+        self.stats.retired = dec.u64()?;
+        self.stats.cycles = dec.u64()?;
+        self.stats.mem_reads = dec.u64()?;
+        self.stats.mem_writes = dec.u64()?;
+        self.stats.llc_hit_loads = dec.u64()?;
+        self.stats.llc_miss_loads = dec.u64()?;
+        self.stats.finished_at = dec.opt_u64()?;
+        self.target = dec.u64()?;
+        dec.tag(tags::TRACE)?;
+        let len = dec.usize()?;
+        let sub = dec.take(len)?;
+        let mut sd = Dec::new(sub);
+        self.trace.import_state(&mut sd)?;
+        if !sd.finished() {
+            return None; // trace impl/source mismatch
+        }
+        Some(())
+    }
 }
 
 #[cfg(test)]
@@ -488,6 +627,60 @@ mod tests {
         // Hit issued at cycle 0 with latency 4: ready at 4, already past —
         // but it was consumed during ticking, so only check monotonicity.
         assert!(c2.next_event_at(10) >= 10);
+    }
+
+    #[test]
+    fn checkpoint_reexport_is_word_identical() {
+        use crate::sim::checkpoint::{Dec, Enc};
+        let script = || {
+            vec![
+                TraceEntry { bubbles: 2, line_addr: 42, is_write: false },
+                TraceEntry { bubbles: 0, line_addr: 7, is_write: true },
+                TraceEntry { bubbles: 1, line_addr: 9, is_write: false },
+            ]
+        };
+        let mut c = core_with(script());
+        let mut m = MockMem { hit_lines: vec![9], accepted: vec![], stall: false };
+        for now in 0..50 {
+            c.tick(now, &mut m);
+        }
+        let mut enc = Enc::new();
+        c.export_state(&mut enc);
+        let words = enc.into_words();
+        // Import into a fresh core, then re-export: the word stream must
+        // be identical (the Script trace uses the default no-op hooks, so
+        // its sub-block is empty on both sides).
+        let mut fresh = core_with(script());
+        let mut dec = Dec::new(&words);
+        fresh.import_state(&mut dec).unwrap();
+        assert!(dec.finished());
+        let mut enc2 = Enc::new();
+        fresh.export_state(&mut enc2);
+        assert_eq!(enc2.into_words(), words);
+        // Truncated streams fail instead of half-importing silently.
+        let mut short = Dec::new(&words[..words.len() - 1]);
+        assert!(core_with(script()).import_state(&mut short).is_none());
+    }
+
+    #[test]
+    fn functional_advance_consumes_exact_instruction_count() {
+        // Entries are 3 insts (2 bubbles + 1 mem) / 1 inst / 2 insts.
+        let mut c = core_with(vec![
+            TraceEntry { bubbles: 2, line_addr: 10, is_write: false },
+            TraceEntry { bubbles: 0, line_addr: 11, is_write: true },
+            TraceEntry { bubbles: 1, line_addr: 12, is_write: false },
+        ]);
+        let mut touched = Vec::new();
+        let done = c.functional_advance(6, &mut |line, w| touched.push((line, w)));
+        assert_eq!(done, 6);
+        assert_eq!(c.stats.retired, 6);
+        assert_eq!(touched, vec![(10, false), (11, true), (12, false)]);
+        // Partial bubble runs carry over: 1 more inst is the next entry's
+        // first bubble, no memory touch.
+        touched.clear();
+        assert_eq!(c.functional_advance(1, &mut |line, w| touched.push((line, w))), 1);
+        assert!(touched.is_empty());
+        assert_eq!(c.stats.retired, 7);
     }
 
     #[test]

@@ -78,6 +78,44 @@ impl MshrFile {
             self.live -= 1;
         }
     }
+
+    /// Checkpoint: slots are written in slab order — the linear allocate
+    /// scan makes slot positions part of the replayable state.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::MSHR);
+        enc.usize(self.slots.len());
+        for s in &self.slots {
+            enc.u64(s.line);
+            enc.bool(s.live);
+            enc.usize(s.waiters.len());
+            for &w in &s.waiters {
+                enc.u64(w);
+            }
+        }
+        enc.usize(self.live);
+        enc.u64(self.merges);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::MSHR)?;
+        if dec.usize()? != self.slots.len() {
+            return None; // capacity is config-derived shape
+        }
+        for s in self.slots.iter_mut() {
+            s.line = dec.u64()?;
+            s.live = dec.bool()?;
+            let n = dec.usize()?;
+            s.waiters.clear();
+            for _ in 0..n {
+                s.waiters.push(dec.u64()?);
+            }
+        }
+        self.live = dec.usize()?;
+        self.merges = dec.u64()?;
+        Some(())
+    }
 }
 
 #[cfg(test)]

@@ -130,6 +130,48 @@ impl Bank {
         self.state == BankState::Closed && self.autopre_at.is_none()
     }
 
+    /// Checkpoint: full FSM + timestamp state, fixed field order
+    /// ([`crate::sim::checkpoint`] identity contract).
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::BANK);
+        match self.state {
+            BankState::Closed => {
+                enc.u64(0);
+                enc.u32(0);
+            }
+            BankState::Opened { row } => {
+                enc.u64(1);
+                enc.u32(row);
+            }
+        }
+        enc.u64(self.act_at);
+        enc.u64(self.pre_at);
+        enc.u64(self.rd_at);
+        enc.u64(self.wr_at);
+        enc.u64(self.act_cycle);
+        enc.opt_u64(self.autopre_at);
+        enc.u32(self.open_owner);
+        enc.u64(self.tras_eff);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::BANK)?;
+        let opened = dec.bool()?;
+        let row = dec.u32()?;
+        self.state = if opened { BankState::Opened { row } } else { BankState::Closed };
+        self.act_at = dec.u64()?;
+        self.pre_at = dec.u64()?;
+        self.rd_at = dec.u64()?;
+        self.wr_at = dec.u64()?;
+        self.act_cycle = dec.u64()?;
+        self.autopre_at = dec.opt_u64()?;
+        self.open_owner = dec.u32()?;
+        self.tras_eff = dec.u64()?;
+        Some(())
+    }
+
     /// Earliest-ready surface for the event kernel
     /// ([`crate::sim::engine`]): the cycle at which this bank's pending
     /// auto-precharge resolves, if one is armed. The per-command

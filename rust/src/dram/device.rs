@@ -94,6 +94,55 @@ impl Rank {
         now >= self.next_refresh_at
     }
 
+    /// Checkpoint: banks in index order, then the rank-level constraint
+    /// state including the raw tFAW ring (head + fill level), so the
+    /// sliding-window gate resumes mid-window exactly.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::RANK);
+        enc.usize(self.banks.len());
+        for b in &self.banks {
+            b.export_state(enc);
+        }
+        enc.u64(self.act_at);
+        for &f in &self.faw {
+            enc.u64(f);
+        }
+        enc.usize(self.faw_head);
+        enc.usize(self.faw_count);
+        enc.u64(self.rd_at);
+        enc.u64(self.wr_at);
+        enc.u64(self.ref_busy_until);
+        enc.u64(self.next_refresh_at);
+        enc.u64(self.refresh_count);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::RANK)?;
+        if dec.usize()? != self.banks.len() {
+            return None; // bank count is config-derived shape
+        }
+        for b in self.banks.iter_mut() {
+            b.import_state(dec)?;
+        }
+        self.act_at = dec.u64()?;
+        for f in self.faw.iter_mut() {
+            *f = dec.u64()?;
+        }
+        self.faw_head = dec.usize()?;
+        self.faw_count = dec.usize()?;
+        if self.faw_head >= 4 || self.faw_count > 4 {
+            return None;
+        }
+        self.rd_at = dec.u64()?;
+        self.wr_at = dec.u64()?;
+        self.ref_busy_until = dec.u64()?;
+        self.next_refresh_at = dec.u64()?;
+        self.refresh_count = dec.u64()?;
+        Some(())
+    }
+
     /// Bank index of the open bank with the oldest activation, if any
     /// (the refresh drain closes banks in this order).
     pub fn oldest_open_bank(&self) -> Option<usize> {
@@ -251,6 +300,34 @@ impl Channel {
         }
     }
 
+    /// Checkpoint: all mutable channel state (ranks + bus gates). The
+    /// `timing`/`org` members are construction-derived and therefore
+    /// covered by the warmup fingerprint, not the snapshot.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::CHANNEL);
+        enc.usize(self.ranks.len());
+        for r in &self.ranks {
+            r.export_state(enc);
+        }
+        enc.u64(self.data_bus_until);
+        enc.u64(self.ccd_at);
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::CHANNEL)?;
+        if dec.usize()? != self.ranks.len() {
+            return None; // rank count is config-derived shape
+        }
+        for r in self.ranks.iter_mut() {
+            r.import_state(dec)?;
+        }
+        self.data_bus_until = dec.u64()?;
+        self.ccd_at = dec.u64()?;
+        Some(())
+    }
+
     /// Resolve auto-precharges across the channel; calls `on_close(rank,
     /// bank, row, owner, close_cycle, act_cycle)` for each bank that closed.
     pub fn tick_autopre<F: FnMut(u32, u32, u32, u32, u64, u64)>(&mut self, now: u64, mut on_close: F) {
@@ -387,6 +464,51 @@ mod tests {
         let t = c.earliest_issue(CommandKind::Read, &l);
         assert!(!c.can_issue(CommandKind::Read, &l, t - 1));
         assert!(c.can_issue(CommandKind::Read, &l, t));
+    }
+
+    #[test]
+    fn checkpoint_round_trip_preserves_constraint_state() {
+        use crate::sim::checkpoint::{Dec, Enc};
+        let mut c = ch();
+        let t = Timing::default();
+        // Drive the channel into a non-trivial state: a partially filled
+        // tFAW window, an open row, a pending auto-precharge, and busy
+        // bus gates.
+        for i in 0..3u32 {
+            c.issue(
+                Command { kind: CommandKind::Activate, loc: loc(i, 1) },
+                i as u64 * t.trrd,
+                11,
+                28,
+                0,
+            );
+        }
+        c.issue(Command { kind: CommandKind::ReadAp, loc: loc(0, 1) }, 11, 11, 28, 0);
+        c.issue(Command { kind: CommandKind::Write, loc: loc(1, 1) }, 15, 11, 28, 0);
+
+        let mut enc = Enc::new();
+        c.export_state(&mut enc);
+        let words = enc.into_words();
+
+        let mut fresh = ch();
+        let mut dec = Dec::new(&words);
+        fresh.import_state(&mut dec).expect("import must succeed");
+        assert!(dec.finished());
+
+        // Re-export must be word-identical and the wake bounds must agree.
+        let mut enc2 = Enc::new();
+        fresh.export_state(&mut enc2);
+        assert_eq!(words, enc2.into_words());
+        for kind in [CommandKind::Activate, CommandKind::Read, CommandKind::Write] {
+            for b in 0..4u32 {
+                let l = loc(b, 1);
+                assert_eq!(c.earliest_issue(kind, &l), fresh.earliest_issue(kind, &l));
+            }
+        }
+
+        // A rank-count mismatch must be rejected, not mis-sliced.
+        let mut tiny = Channel::new(&DramOrg { ranks: 1, ..DramOrg::default() }, &t);
+        assert!(tiny.import_state(&mut Dec::new(&words)).is_none());
     }
 
     #[test]

@@ -216,6 +216,49 @@ impl Mechanism for ChargeCache {
         // Refresh replenishes rows but ChargeCache does not track it
         // (that is NUAT's domain); nothing to do.
     }
+
+    fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        enc.usize(self.tables.len());
+        for t in &self.tables {
+            enc.usize(t.entries.len());
+            for e in &t.entries {
+                enc.bool(e.valid);
+                enc.u64(e.key);
+                enc.u64(e.inserted_at);
+                enc.u64(e.lru);
+            }
+            enc.u64(t.stamp);
+        }
+        enc.u64(self.next_sweep);
+        enc.u64(self.bip_rng.state());
+        enc.u64(self.hits);
+        enc.u64(self.lookups);
+        enc.u64(self.inserts);
+    }
+
+    fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        if dec.usize()? != self.tables.len() {
+            return None; // replica count is config-derived shape
+        }
+        for t in self.tables.iter_mut() {
+            if dec.usize()? != t.entries.len() {
+                return None;
+            }
+            for e in t.entries.iter_mut() {
+                e.valid = dec.bool()?;
+                e.key = dec.u64()?;
+                e.inserted_at = dec.u64()?;
+                e.lru = dec.u64()?;
+            }
+            t.stamp = dec.u64()?;
+        }
+        self.next_sweep = dec.u64()?;
+        self.bip_rng = XorShift64::from_state(dec.u64()?);
+        self.hits = dec.u64()?;
+        self.lookups = dec.u64()?;
+        self.inserts = dec.u64()?;
+        Some(())
+    }
 }
 
 #[cfg(test)]

@@ -208,6 +208,15 @@ pub trait Mechanism: Send {
     fn on_precharge(&mut self, now: u64, core: u32, key: RowKey);
     /// Called after each all-bank REF completes on `rank`.
     fn on_refresh(&mut self, now: u64, rank: u32, refresh_count: u64);
+
+    /// Checkpoint hook: stateless mechanisms (baseline, LL-DRAM) keep
+    /// the defaults, which write/consume nothing.
+    fn export_state(&self, _enc: &mut crate::sim::checkpoint::Enc) {}
+
+    /// Restore what [`Mechanism::export_state`] wrote.
+    fn import_state(&mut self, _dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        Some(())
+    }
 }
 
 /// Baseline: standard timing always.
@@ -290,6 +299,16 @@ impl Mechanism for CombinedMech {
     fn on_refresh(&mut self, now: u64, rank: u32, refresh_count: u64) {
         self.cc.on_refresh(now, rank, refresh_count);
         self.nuat.on_refresh(now, rank, refresh_count);
+    }
+
+    fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        self.cc.export_state(enc);
+        self.nuat.export_state(enc);
+    }
+
+    fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        self.cc.import_state(dec)?;
+        self.nuat.import_state(dec)
     }
 }
 

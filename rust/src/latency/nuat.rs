@@ -104,6 +104,27 @@ impl Mechanism for Nuat {
     fn on_refresh(&mut self, _now: u64, rank: u32, refresh_count: u64) {
         self.ref_count[rank as usize] = refresh_count;
     }
+
+    fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        enc.usize(self.ref_count.len());
+        for &c in &self.ref_count {
+            enc.u64(c);
+        }
+        enc.u64(self.hits);
+        enc.u64(self.lookups);
+    }
+
+    fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        if dec.usize()? != self.ref_count.len() {
+            return None; // rank count is config-derived shape
+        }
+        for c in self.ref_count.iter_mut() {
+            *c = dec.u64()?;
+        }
+        self.hits = dec.u64()?;
+        self.lookups = dec.u64()?;
+        Some(())
+    }
 }
 
 #[cfg(test)]

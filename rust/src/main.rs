@@ -322,12 +322,17 @@ fn main() -> Result<()> {
         return cmd_params();
     }
     if let Some(replacement) = args.spec.deprecated {
-        eprintln!(
-            "warning: `{}` is deprecated; use `chargecache {replacement}`. Simulation \
-             results are bit-identical via the scenario engine, but the CSV now lands \
-             at results/scenario_<name>.csv with axis-path headers.",
-            args.command
-        );
+        // Once per process: embedders (and future multi-command drivers)
+        // reuse this path, and one deprecation nudge per run is enough.
+        static DEPRECATED: std::sync::Once = std::sync::Once::new();
+        DEPRECATED.call_once(|| {
+            eprintln!(
+                "warning: `{}` is deprecated; use `chargecache {replacement}`. Simulation \
+                 results are bit-identical via the scenario engine, but the CSV now lands \
+                 at results/scenario_<name>.csv with axis-path headers.",
+                args.command
+            );
+        });
     }
     // Worker-count pin for every parallel_map fan-out (reproducible
     // benchmarking); 0 keeps the PALLAS_THREADS / machine fallback.
@@ -383,15 +388,27 @@ fn cmd_help(args: &Args) -> Result<()> {
 
 fn cmd_params() -> Result<()> {
     let reg = schema::registry();
-    println!("--set parameters ({} total, from the exhaustive registry):\n", reg.defs().len());
-    let rows: Vec<Vec<String>> = reg
-        .defs()
-        .iter()
-        .map(|d| {
-            vec![d.path.to_string(), d.kind.describe(), d.default.clone(), d.doc.to_string()]
-        })
-        .collect();
-    print_table(&["path", "type", "default", "description"], &rows);
+    println!("--set parameters ({} total, from the exhaustive registry):", reg.defs().len());
+    // Grouped by dotted-path prefix in registry (first-appearance) order;
+    // paths without a dot collect under "top-level".
+    let mut groups: Vec<(&str, Vec<&schema::ParamDef>)> = Vec::new();
+    for def in reg.defs() {
+        let prefix = def.path.split_once('.').map_or("top-level", |(head, _)| head);
+        match groups.iter_mut().find(|(p, _)| *p == prefix) {
+            Some((_, defs)) => defs.push(def),
+            None => groups.push((prefix, vec![def])),
+        }
+    }
+    for (prefix, defs) in &groups {
+        println!("\n[{prefix}]");
+        let rows: Vec<Vec<String>> = defs
+            .iter()
+            .map(|d| {
+                vec![d.path.to_string(), d.kind.describe(), d.default.clone(), d.doc.to_string()]
+            })
+            .collect();
+        print_table(&["path", "type", "default", "description"], &rows);
+    }
     Ok(())
 }
 

@@ -1,0 +1,434 @@
+//! Simulation-state snapshot/restore (DESIGN.md §12).
+//!
+//! A checkpoint captures the **complete mutable state** of a [`System`]
+//! at a phase boundary — cores (including trace cursors and RNG state),
+//! LLC, MSHRs, slab request queues, controllers, mechanism tables with
+//! their expiry clocks, and analysis trackers — as a flat `u64` word
+//! stream. The encoding is serde-free and versioned; `f64`s travel as
+//! IEEE-754 bit patterns (the same discipline as the result cache), so a
+//! run restored from a snapshot is **bit-identical** to an uninterrupted
+//! one.
+//!
+//! ## Identity contract
+//!
+//! For any config/mechanism/workload triple:
+//!
+//! ```text
+//! run()  ≡  { run_warmup(); capture → fresh System → restore; run_measure() }
+//! ```
+//!
+//! What a snapshot does *not* contain, and why that is sound:
+//!
+//! * **Immutable shape** — queue capacities, table geometries, core and
+//!   channel counts all derive from the config; restore targets a fresh
+//!   `System` built from the same warmup-relevant config slice, which
+//!   [`SimSnapshot::restore_into`] enforces via the warmup fingerprint.
+//! * **`WakeIndex`** — the event kernel tolerates *early* wake bounds
+//!   (a too-early wake is a no-op tick), so the restored system keeps
+//!   its fresh all-hot-at-0 index; every bound is recomputed on first
+//!   tick. See [`crate::sim::wake`].
+//! * **`BankEngine`** — a pure index over queue contents and open rows;
+//!   the controller rebuilds it exactly from the restored queues
+//!   (mirroring its `debug_assert_consistent` invariant).
+//! * **Scratch buffers** — per-tick vectors (`fill_scratch`, drained-write
+//!   lists, completion out-params) are empty at phase boundaries.
+//!
+//! Word streams are strictly sequential: every component writes a section
+//! tag first, and import fails (`None`) on any tag, version, or shape
+//! mismatch — callers fall back to a cold run, never a corrupt one.
+
+use crate::latency::MechanismKind;
+use crate::sim::system::System;
+
+/// Bump when the word-stream layout changes; decode refuses other
+/// versions (the caller re-simulates instead).
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Section tags (ASCII-packed) — cheap structural checks so a truncated
+/// or shifted stream fails fast instead of misassigning words.
+pub mod tags {
+    pub const SYSTEM: u64 = 0x5359_5354; // "SYST"
+    pub const CORE: u64 = 0x434F_5245; // "CORE"
+    pub const TRACE: u64 = 0x5452_4143; // "TRAC"
+    pub const MSHR: u64 = 0x4D53_4852; // "MSHR"
+    pub const LLC: u64 = 0x4C4C_4343; // "LLCC"
+    pub const HIER: u64 = 0x4849_4552; // "HIER"
+    pub const MC: u64 = 0x4D43_5452; // "MCTR"
+    pub const QUEUE: u64 = 0x5155_4555; // "QUEU"
+    pub const SINK: u64 = 0x53494E_4B; // "SINK"
+    pub const POLICY: u64 = 0x504F_4C49; // "POLI"
+    pub const MECH: u64 = 0x4D45_4348; // "MECH"
+    pub const RLTL: u64 = 0x524C_544C; // "RLTL"
+    pub const REUSE: u64 = 0x5255_5345; // "RUSE"
+    pub const CHANNEL: u64 = 0x4348_414E; // "CHAN"
+    pub const RANK: u64 = 0x52_414E4B; // "RANK"
+    pub const BANK: u64 = 0x42_414E4B; // "BANK"
+}
+
+/// Append-only word-stream encoder.
+#[derive(Debug, Default)]
+pub struct Enc {
+    words: Vec<u64>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Self { words: Vec::new() }
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.words.push(v);
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.words.push(v as u64);
+    }
+
+    #[inline]
+    pub fn usize(&mut self, v: usize) {
+        self.words.push(v as u64);
+    }
+
+    #[inline]
+    pub fn bool(&mut self, v: bool) {
+        self.words.push(v as u64);
+    }
+
+    /// IEEE-754 bit pattern — never a decimal round-trip.
+    #[inline]
+    pub fn f64(&mut self, v: f64) {
+        self.words.push(v.to_bits());
+    }
+
+    #[inline]
+    pub fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.words.push(1);
+                self.words.push(x);
+            }
+            None => self.words.push(0),
+        }
+    }
+
+    #[inline]
+    pub fn opt_u32(&mut self, v: Option<u32>) {
+        self.opt_u64(v.map(|x| x as u64));
+    }
+
+    /// Section marker (see [`tags`]).
+    #[inline]
+    pub fn tag(&mut self, t: u64) {
+        self.words.push(t);
+    }
+
+    /// Append a pre-encoded word block verbatim (length-prefixed
+    /// sub-streams: the caller writes the length separately).
+    pub fn extend(&mut self, words: &[u64]) {
+        self.words.extend_from_slice(words);
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn into_words(self) -> Vec<u64> {
+        self.words
+    }
+}
+
+/// Strictly-sequential word-stream decoder. Every getter returns `None`
+/// past the end; [`Dec::tag`] additionally fails on a value mismatch.
+#[derive(Debug)]
+pub struct Dec<'a> {
+    words: &'a [u64],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(words: &'a [u64]) -> Self {
+        Self { words, pos: 0 }
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Option<u64> {
+        let v = self.words.get(self.pos).copied()?;
+        self.pos += 1;
+        Some(v)
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Option<u32> {
+        u32::try_from(self.u64()?).ok()
+    }
+
+    #[inline]
+    pub fn usize(&mut self) -> Option<usize> {
+        usize::try_from(self.u64()?).ok()
+    }
+
+    #[inline]
+    pub fn bool(&mut self) -> Option<bool> {
+        match self.u64()? {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn f64(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+
+    #[inline]
+    pub fn opt_u64(&mut self) -> Option<Option<u64>> {
+        match self.u64()? {
+            0 => Some(None),
+            1 => Some(Some(self.u64()?)),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn opt_u32(&mut self) -> Option<Option<u32>> {
+        match self.opt_u64()? {
+            None => Some(None),
+            Some(x) => u32::try_from(x).ok().map(Some),
+        }
+    }
+
+    /// Expect section tag `t` next; any other value is a format error.
+    #[inline]
+    pub fn tag(&mut self, t: u64) -> Option<()> {
+        if self.u64()? == t {
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    /// Take the next `n` words as a sub-stream (length-prefixed blocks).
+    pub fn take(&mut self, n: usize) -> Option<&'a [u64]> {
+        let sub = self.words.get(self.pos..self.pos.checked_add(n)?)?;
+        self.pos += n;
+        Some(sub)
+    }
+
+    /// True once every word has been consumed — imports require this so
+    /// a component that reads too little fails instead of shifting the
+    /// stream for its successors.
+    pub fn finished(&self) -> bool {
+        self.pos == self.words.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.words.len() - self.pos
+    }
+}
+
+/// One captured warmed-up simulation state, plus the identity needed to
+/// decide which runs may legally fork from it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimSnapshot {
+    /// [`crate::config::SystemConfig::warmup_fingerprint`] of the run
+    /// that produced this snapshot — restore refuses any other.
+    pub warmup_fingerprint: u64,
+    pub mechanism: MechanismKind,
+    pub workload: String,
+    /// CPU cycle at capture (the warmup boundary).
+    pub cpu_cycle: u64,
+    /// The [`System::export_state`] word stream.
+    pub words: Vec<u64>,
+}
+
+impl SimSnapshot {
+    /// Capture `sys`'s complete mutable state (call at a phase boundary,
+    /// i.e. right after warmup).
+    pub fn capture(sys: &System) -> Self {
+        Self {
+            warmup_fingerprint: sys.warmup_fingerprint(),
+            mechanism: sys.kind(),
+            workload: sys.workload().to_string(),
+            cpu_cycle: sys.cpu_cycle(),
+            words: sys.export_state(),
+        }
+    }
+
+    /// Overwrite `sys`'s mutable state from this snapshot. `None` (and
+    /// `sys` possibly half-written — discard it) when the snapshot does
+    /// not belong to `sys`'s warmup identity or the stream is corrupt;
+    /// callers fall back to a cold run.
+    pub fn restore_into(&self, sys: &mut System) -> Option<()> {
+        if self.warmup_fingerprint != sys.warmup_fingerprint()
+            || self.mechanism != sys.kind()
+            || self.workload != sys.workload()
+        {
+            return None;
+        }
+        sys.import_state(&self.words)
+    }
+
+    /// On-disk JSON form. Every word is an exact decimal `u64` token —
+    /// [`crate::coordinator::json`] parses the full 64-bit range without
+    /// rounding through `f64`.
+    pub fn encode(&self) -> String {
+        let mut out = String::with_capacity(128 + self.words.len() * 12);
+        out.push_str("{\n");
+        out.push_str(&format!("  \"version\": {SNAPSHOT_VERSION},\n"));
+        out.push_str(&format!(
+            "  \"warmup_fingerprint\": {},\n",
+            self.warmup_fingerprint
+        ));
+        out.push_str(&format!("  \"mechanism\": \"{}\",\n", self.mechanism.name()));
+        out.push_str(&format!("  \"workload\": \"{}\",\n", escape(&self.workload)));
+        out.push_str(&format!("  \"cpu_cycle\": {},\n", self.cpu_cycle));
+        out.push_str("  \"words\": [");
+        for (i, w) in self.words.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&w.to_string());
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+
+    /// Parse [`SimSnapshot::encode`] output. `None` on any malformed,
+    /// truncated, or wrong-version document.
+    pub fn decode(text: &str) -> Option<Self> {
+        let v = crate::coordinator::json::parse_root(text)?;
+        if v.field("version")?.u64()? != SNAPSHOT_VERSION {
+            return None;
+        }
+        let words = v
+            .field("words")?
+            .arr()?
+            .iter()
+            .map(|w| w.u64())
+            .collect::<Option<Vec<u64>>>()?;
+        Some(Self {
+            warmup_fingerprint: v.field("warmup_fingerprint")?.u64()?,
+            mechanism: MechanismKind::parse(v.field("mechanism")?.str()?)?,
+            workload: v.field("workload")?.str()?.to_string(),
+            cpu_cycle: v.field("cpu_cycle")?.u64()?,
+            words,
+        })
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            c => vec![c],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enc_dec_round_trip_every_primitive() {
+        let mut e = Enc::new();
+        e.tag(tags::SYSTEM);
+        e.u64(u64::MAX);
+        e.u32(7);
+        e.usize(42);
+        e.bool(true);
+        e.bool(false);
+        e.f64(-0.0);
+        e.f64(1.5);
+        e.opt_u64(None);
+        e.opt_u64(Some(3));
+        e.opt_u32(Some(9));
+        let words = e.into_words();
+        let mut d = Dec::new(&words);
+        assert_eq!(d.tag(tags::SYSTEM), Some(()));
+        assert_eq!(d.u64(), Some(u64::MAX));
+        assert_eq!(d.u32(), Some(7));
+        assert_eq!(d.usize(), Some(42));
+        assert_eq!(d.bool(), Some(true));
+        assert_eq!(d.bool(), Some(false));
+        // -0.0 must survive as its bit pattern, not collapse to +0.0.
+        assert_eq!(d.f64().map(f64::to_bits), Some((-0.0f64).to_bits()));
+        assert_eq!(d.f64(), Some(1.5));
+        assert_eq!(d.opt_u64(), Some(None));
+        assert_eq!(d.opt_u64(), Some(Some(3)));
+        assert_eq!(d.opt_u32(), Some(Some(9)));
+        assert!(d.finished());
+        assert_eq!(d.u64(), None, "past-the-end read fails");
+    }
+
+    #[test]
+    fn tag_mismatch_and_bad_bool_fail() {
+        let words = [tags::CORE, 5];
+        let mut d = Dec::new(&words);
+        assert_eq!(d.tag(tags::MSHR), None);
+        let mut d2 = Dec::new(&words[1..]);
+        assert_eq!(d2.bool(), None, "5 is not a bool");
+    }
+
+    #[test]
+    fn take_slices_subblocks() {
+        let words = [3u64, 10, 20, 30, 99];
+        let mut d = Dec::new(&words);
+        let n = d.usize().unwrap();
+        let sub = d.take(n).unwrap();
+        assert_eq!(sub, &[10, 20, 30]);
+        assert_eq!(d.u64(), Some(99));
+        assert!(d.finished());
+        let mut short = Dec::new(&[5u64]);
+        assert!(short.take(2).is_none(), "over-long take fails");
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_extreme_words() {
+        let snap = SimSnapshot {
+            warmup_fingerprint: 0xDEAD_BEEF_1234_5678,
+            mechanism: MechanismKind::ChargeCacheNuat,
+            workload: "m4".to_string(),
+            cpu_cycle: 123_456,
+            // 0x8000... is (-0.0f64).to_bits(): the sign-bit-set pattern
+            // that a float round-trip would mangle.
+            words: vec![0, u64::MAX, (-0.0f64).to_bits(), 1],
+        };
+        let text = snap.encode();
+        let back = SimSnapshot::decode(&text).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_corruption() {
+        let snap = SimSnapshot {
+            warmup_fingerprint: 1,
+            mechanism: MechanismKind::Baseline,
+            workload: "s0".to_string(),
+            cpu_cycle: 10,
+            words: vec![1, 2, 3],
+        };
+        let good = snap.encode();
+        assert!(SimSnapshot::decode(&good).is_some());
+        // Wrong version.
+        let v2 = good.replace("\"version\": 1", "\"version\": 999");
+        assert!(SimSnapshot::decode(&v2).is_none());
+        // Truncated document.
+        assert!(SimSnapshot::decode(&good[..good.len() / 2]).is_none());
+        // Unknown mechanism.
+        let bad_mech = good.replace("\"baseline\"", "\"bogus\"");
+        assert!(SimSnapshot::decode(&bad_mech).is_none());
+        // Non-integer word.
+        let bad_word = good.replace("[1,2,3]", "[1,2.5,3]");
+        assert!(SimSnapshot::decode(&bad_word).is_none());
+        assert!(SimSnapshot::decode("").is_none());
+    }
+}

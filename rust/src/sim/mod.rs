@@ -2,12 +2,16 @@
 //! event-driven loop kernel, plus the result/statistics types every
 //! experiment consumes.
 
+pub mod checkpoint;
 pub mod engine;
+pub mod sample;
 pub mod shard;
 pub mod stats;
 pub mod system;
 pub mod wake;
 
+pub use checkpoint::SimSnapshot;
 pub use engine::LoopMode;
+pub use sample::SampleSummary;
 pub use stats::SimResult;
 pub use system::System;

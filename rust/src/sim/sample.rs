@@ -1,0 +1,129 @@
+//! SimPoint-style interval sampling (Sherwood et al., ASPLOS'02 lineage):
+//! statistics for runs that simulate fixed-length detailed intervals
+//! separated by functional fast-forward.
+//!
+//! The sampling loop itself lives in [`System::run_sampled`]; this module
+//! owns the summary arithmetic. Each detailed interval contributes one
+//! system-IPC sample (instructions retired by all cores / interval
+//! cycles) and — when the interval served at least one DRAM read — one
+//! mean-read-latency sample (bus cycles). The summary reports the sample
+//! means with 95% confidence half-widths under the usual normal
+//! approximation, `1.96 * s / sqrt(n)` with `s` the (n-1)-denominator
+//! standard deviation. Intervals are taken at a fixed period rather than
+//! randomly, so the CI is exact only under the stationarity assumption
+//! SimPoint-style sampling always makes; the pinning test in
+//! tests/checkpoint.rs checks the estimates against full runs.
+//!
+//! All arithmetic here is plain `f64` on already-collected samples — the
+//! simulation's own control flow never consults these values, so they
+//! cannot perturb bit-identity of the detailed intervals.
+//!
+//! [`System::run_sampled`]: crate::sim::system::System
+
+/// Summary of one sampled measured region, attached to
+/// [`SimResult::sampled`](crate::sim::stats::SimResult::sampled).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleSummary {
+    /// Number of detailed intervals simulated.
+    pub intervals: u64,
+    /// Instructions retired inside detailed intervals.
+    pub detailed_insts: u64,
+    /// Instructions fast-forwarded between intervals.
+    pub skipped_insts: u64,
+    /// Mean per-interval system IPC.
+    pub ipc_mean: f64,
+    /// 95% confidence half-width of `ipc_mean`.
+    pub ipc_ci95: f64,
+    /// Mean per-interval read latency (bus cycles; 0 if no interval
+    /// served a read).
+    pub latency_mean: f64,
+    /// 95% confidence half-width of `latency_mean`.
+    pub latency_ci95: f64,
+}
+
+impl SampleSummary {
+    /// Build the summary from per-interval samples.
+    pub fn from_samples(
+        ipc: &[f64],
+        latency: &[f64],
+        detailed_insts: u64,
+        skipped_insts: u64,
+    ) -> Self {
+        let (ipc_mean, ipc_ci95) = mean_ci95(ipc);
+        let (latency_mean, latency_ci95) = mean_ci95(latency);
+        Self {
+            intervals: ipc.len() as u64,
+            detailed_insts,
+            skipped_insts,
+            ipc_mean,
+            ipc_ci95,
+            latency_mean,
+            latency_ci95,
+        }
+    }
+
+    /// Fraction of retired instructions that were simulated in detail.
+    pub fn detail_fraction(&self) -> f64 {
+        let total = self.detailed_insts + self.skipped_insts;
+        if total == 0 {
+            return 0.0;
+        }
+        self.detailed_insts as f64 / total as f64
+    }
+}
+
+/// Sample mean and 95% confidence half-width (`1.96 * s / sqrt(n)`,
+/// sample standard deviation). Empty input: `(0, 0)`; a single sample
+/// has no spread estimate, so its half-width is 0.
+pub fn mean_ci95(samples: &[f64]) -> (f64, f64) {
+    let n = samples.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return (mean, 0.0);
+    }
+    let var =
+        samples.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0);
+    (mean, 1.96 * var.sqrt() / (n as f64).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_ci_of_constant_samples_is_tight() {
+        let (m, ci) = mean_ci95(&[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(ci, 0.0);
+    }
+
+    #[test]
+    fn mean_ci_matches_hand_computation() {
+        // Samples 1..=4: mean 2.5, sample variance 5/3.
+        let (m, ci) = mean_ci95(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        let expect = 1.96 * (5.0f64 / 3.0).sqrt() / 2.0;
+        assert!((ci - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_safe() {
+        assert_eq!(mean_ci95(&[]), (0.0, 0.0));
+        assert_eq!(mean_ci95(&[7.25]), (7.25, 0.0));
+    }
+
+    #[test]
+    fn summary_accounts_for_detail_fraction() {
+        let s = SampleSummary::from_samples(&[1.0, 3.0], &[], 250, 750);
+        assert_eq!(s.intervals, 2);
+        assert_eq!(s.ipc_mean, 2.0);
+        assert_eq!(s.latency_mean, 0.0);
+        assert_eq!(s.latency_ci95, 0.0);
+        assert!((s.detail_fraction() - 0.25).abs() < 1e-12);
+        let empty = SampleSummary::from_samples(&[], &[], 0, 0);
+        assert_eq!(empty.detail_fraction(), 0.0);
+    }
+}

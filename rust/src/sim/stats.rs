@@ -3,6 +3,7 @@
 use crate::analysis::rltl::RLTL_INTERVALS_MS;
 use crate::controller::McStats;
 use crate::energy::EnergyBreakdown;
+use crate::sim::sample::SampleSummary;
 
 /// Everything one simulation run produces.
 ///
@@ -30,6 +31,10 @@ pub struct SimResult {
     /// LLC behaviour.
     pub llc_hits: u64,
     pub llc_misses: u64,
+    /// Interval-sampling summary when the run used `sample.*`
+    /// ([`crate::sim::sample`]); `None` for full-detail runs. The other
+    /// fields then cover only the detailed intervals.
+    pub sampled: Option<SampleSummary>,
 }
 
 impl SimResult {
@@ -122,6 +127,7 @@ mod tests {
             total_insts: 1000,
             llc_hits: 0,
             llc_misses: 0,
+            sampled: None,
         }
     }
 

@@ -22,14 +22,15 @@ use crate::dram::command::Loc;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::latency::MechanismKind;
 use crate::sim::engine::{self, EventDriven, LoopMode};
+use crate::sim::sample::SampleSummary;
 use crate::sim::shard::{worker_loop, EnqMsg, EpochOut, ShardSlot, ShardState};
 use crate::sim::stats::SimResult;
 use crate::sim::wake::WakeIndex;
 use crate::trace::{profile::multicore_mix, Profile, SynthTrace, TraceSource};
 
 /// Completion predicate for a measured region. A plain function pointer
-/// (not a generic) so the warmup/measure phase driver can hand it
-/// through a `dyn FnMut` advance callback.
+/// (not a generic) so [`System::advance_region`] can dispatch between
+/// loop drivers without monomorphizing each phase.
 type DoneFn = fn(&System) -> bool;
 
 /// Writeback ids live in the upper id half-space so they can never
@@ -378,26 +379,165 @@ impl System {
 
     /// Run warmup + measured region; returns the result.
     ///
-    /// Time is advanced by the single-threaded event kernel, the strict
-    /// per-cycle oracle, or — when the shard plan selects two or more
-    /// shards — the channel-sharded parallel loop ([`advance_sharded`]).
-    /// All three produce bit-identical results; `--sim-threads 1` (the
-    /// default) is the exact pre-existing event path.
+    /// Exactly `{ run_warmup(); run_measure() }` — the checkpoint layer
+    /// ([`crate::sim::checkpoint`]) relies on that equivalence to fork
+    /// sweep legs from a shared warmed-up snapshot.
+    pub fn run(&mut self) -> SimResult {
+        self.run_warmup();
+        self.run_measure()
+    }
+
+    /// Advance `[start, end)` with the configured loop: the
+    /// single-threaded event kernel, the strict per-cycle oracle, or —
+    /// when the shard plan selects two or more shards — the
+    /// channel-sharded parallel loop ([`advance_sharded`]). All three
+    /// produce bit-identical results; `--sim-threads 1` (the default) is
+    /// the exact pre-existing event path.
     ///
     /// [`advance_sharded`]: System::advance_sharded
-    pub fn run(&mut self) -> SimResult {
+    fn advance_region(&mut self, start: u64, end: u64, done: DoneFn) -> u64 {
         let mode = self.cfg.loop_mode;
         let shards = self.shard_plan();
-        let measure_start = if shards >= 2 {
-            self.measure_phases(&mut move |sys, start, end, done| {
-                sys.advance_sharded(shards, start, end, done)
-            })
+        if shards >= 2 {
+            self.advance_sharded(shards, start, end, done)
         } else {
-            self.measure_phases(&mut move |sys, start, end, done| {
-                engine::advance(sys, mode, start, end, done)
-            })
-        };
-        self.collect(measure_start)
+            engine::advance(self, mode, start, end, done)
+        }
+    }
+
+    /// Warmup phase: caches, HCRAC, and DRAM state get warm. Advances
+    /// from the current clock to `warmup_cpu_cycles`; stats are reset by
+    /// [`System::run_measure`]. The boundary between the two phases is
+    /// the capture/restore point for
+    /// [`crate::sim::checkpoint::SimSnapshot`].
+    pub fn run_warmup(&mut self) {
+        let start = self.cpu_cycle;
+        let warmup_end = self.cfg.warmup_cpu_cycles;
+        self.cpu_cycle = self.advance_region(start, warmup_end, |_| false);
+    }
+
+    /// Measured region: reset stats, run to the configured horizon (or
+    /// instruction targets), and assemble the result. With
+    /// `sample.detail_cycles` set (fixed-time mode only), the region is
+    /// sampled: fixed-length detailed intervals separated by functional
+    /// fast-forward (see [`crate::sim::sample`]).
+    pub fn run_measure(&mut self) -> SimResult {
+        for core in &mut self.cores {
+            core.reset_stats();
+            core.target = self.cfg.insts_per_core;
+        }
+        for mc in &mut self.hier.mcs {
+            mc.reset_stats();
+        }
+        self.hier.llc.reset_stats();
+        let measure_start = self.cpu_cycle;
+
+        // Fixed-time: run exactly `measure_cycles` (the stable basis for
+        // multiprogrammed comparisons). Fixed-work: run until every core
+        // reaches its instruction target (hard cap guards against
+        // pathological stalls).
+        let mut sampled = None;
+        match self.cfg.measure_cycles {
+            Some(n) => {
+                for core in &mut self.cores {
+                    core.target = 0; // no finish target in fixed-time mode
+                }
+                let end = measure_start + n;
+                if self.cfg.sample.detail_cycles > 0 {
+                    sampled = Some(self.run_sampled(measure_start, end));
+                } else {
+                    self.cpu_cycle = self.advance_region(measure_start, end, |_| false);
+                }
+            }
+            None => {
+                assert_eq!(
+                    self.cfg.sample.detail_cycles, 0,
+                    "interval sampling requires fixed-time mode (measure.cycles)"
+                );
+                let cap = measure_start
+                    + self.cfg.insts_per_core * 400
+                    + 10 * self.cfg.warmup_cpu_cycles;
+                self.cpu_cycle = self.advance_region(measure_start, cap, |s| {
+                    s.cores.iter().all(|c| c.stats.finished_at.is_some())
+                });
+            }
+        }
+        let mut result = self.collect(measure_start);
+        result.sampled = sampled;
+        result
+    }
+
+    /// SimPoint-style interval sampling over a fixed-time region:
+    /// simulate `sample.detail_cycles` in detail, then functionally
+    /// fast-forward each core at its interval IPC (touching the LLC so
+    /// its contents stay warm, no DRAM timing) to the next period
+    /// boundary. Per-interval IPC/latency samples feed the confidence
+    /// intervals in [`SampleSummary`]; DESIGN.md §12 documents the error
+    /// model.
+    fn run_sampled(&mut self, measure_start: u64, end: u64) -> SampleSummary {
+        let detail = self.cfg.sample.detail_cycles;
+        let period = self.cfg.sample.period_cycles;
+        assert!(
+            period > detail,
+            "sample.period_cycles ({period}) must exceed sample.detail_cycles ({detail})"
+        );
+        let n_cores = self.cores.len();
+        let mut ipc_samples = Vec::new();
+        let mut lat_samples = Vec::new();
+        let mut detailed_insts = 0u64;
+        let mut skipped_insts = 0u64;
+        let mut retired0 = vec![0u64; n_cores];
+        let mut now = measure_start;
+        while now < end {
+            let d_end = (now + detail).min(end);
+            let d_cycles = d_end - now;
+            for (r, c) in retired0.iter_mut().zip(&self.cores) {
+                *r = c.stats.retired;
+            }
+            let (lat_sum0, lat_cnt0) = self.read_latency_totals();
+            self.cpu_cycle = self.advance_region(now, d_end, |_| false);
+            now = d_end;
+            let per_core: Vec<u64> = self
+                .cores
+                .iter()
+                .zip(&retired0)
+                .map(|(c, &r0)| c.stats.retired - r0)
+                .collect();
+            let d_insts: u64 = per_core.iter().sum();
+            detailed_insts += d_insts;
+            ipc_samples.push(d_insts as f64 / d_cycles as f64);
+            let (lat_sum, lat_cnt) = self.read_latency_totals();
+            if lat_cnt > lat_cnt0 {
+                lat_samples.push((lat_sum - lat_sum0) as f64 / (lat_cnt - lat_cnt0) as f64);
+            }
+            let skip_cycles = (period - detail).min(end - now);
+            if skip_cycles == 0 {
+                continue;
+            }
+            // Integer IPC extrapolation keeps the skip deterministic
+            // (u128 intermediate: insts x cycles can exceed 64 bits).
+            let hier = &mut self.hier;
+            for (ci, core) in self.cores.iter_mut().enumerate() {
+                let skip =
+                    ((per_core[ci] as u128 * skip_cycles as u128) / d_cycles as u128) as u64;
+                skipped_insts += core.functional_advance(skip, &mut |line, is_write| {
+                    let _ = hier.llc.access(line, is_write);
+                });
+                // The functional jump changed core state behind the wake
+                // index: start the next interval hot (early is harmless).
+                self.wake.set(ci, 0);
+            }
+            now += skip_cycles;
+            self.cpu_cycle = now;
+        }
+        SampleSummary::from_samples(&ipc_samples, &lat_samples, detailed_insts, skipped_insts)
+    }
+
+    /// Aggregate read-latency counters across channels (bus cycles).
+    fn read_latency_totals(&self) -> (u64, u64) {
+        self.hier.mcs.iter().fold((0, 0), |(s, c), mc| {
+            (s + mc.stats().read_latency_sum, c + mc.stats().read_latency_cnt)
+        })
     }
 
     /// Shard count for this run: `sim.threads` from the config when set,
@@ -415,50 +555,6 @@ impl System {
             crate::coordinator::runner::sim_threads()
         };
         req.max(1).min(self.hier.mcs.len())
-    }
-
-    /// Warmup + measured region through the given advance callback;
-    /// returns the measured region's start cycle for [`System::collect`].
-    fn measure_phases(
-        &mut self,
-        adv: &mut dyn FnMut(&mut System, u64, u64, DoneFn) -> u64,
-    ) -> u64 {
-        // Warmup: caches, HCRAC, and DRAM state get warm; stats reset after.
-        let start = self.cpu_cycle;
-        let warmup_end = self.cfg.warmup_cpu_cycles;
-        self.cpu_cycle = adv(self, start, warmup_end, |_| false);
-        for core in &mut self.cores {
-            core.reset_stats();
-            core.target = self.cfg.insts_per_core;
-        }
-        for mc in &mut self.hier.mcs {
-            mc.reset_stats();
-        }
-        self.hier.llc.reset_stats();
-        let measure_start = self.cpu_cycle;
-
-        // Measured region. Fixed-time: run exactly `measure_cycles` (the
-        // stable basis for multiprogrammed comparisons). Fixed-work: run
-        // until every core reaches its instruction target (hard cap
-        // guards against pathological stalls).
-        match self.cfg.measure_cycles {
-            Some(n) => {
-                for core in &mut self.cores {
-                    core.target = 0; // no finish target in fixed-time mode
-                }
-                let end = measure_start + n;
-                self.cpu_cycle = adv(self, measure_start, end, |_| false);
-            }
-            None => {
-                let cap = measure_start
-                    + self.cfg.insts_per_core * 400
-                    + 10 * self.cfg.warmup_cpu_cycles;
-                self.cpu_cycle = adv(self, measure_start, cap, |s| {
-                    s.cores.iter().all(|c| c.stats.finished_at.is_some())
-                });
-            }
-        }
-        measure_start
     }
 
     /// Assemble the [`SimResult`] after the measured region.
@@ -529,7 +625,126 @@ impl System {
             total_insts,
             llc_hits: self.hier.llc.hits,
             llc_misses: self.hier.llc.misses,
+            sampled: None,
         }
+    }
+
+    /// The mechanism this system simulates.
+    pub fn kind(&self) -> MechanismKind {
+        self.kind
+    }
+
+    /// Current CPU cycle (the warmup boundary right after
+    /// [`System::run_warmup`]).
+    pub fn cpu_cycle(&self) -> u64 {
+        self.cpu_cycle
+    }
+
+    /// The warmup identity of this run — see
+    /// [`crate::config::SystemConfig::warmup_fingerprint`].
+    pub fn warmup_fingerprint(&self) -> u64 {
+        self.cfg.warmup_fingerprint(self.kind)
+    }
+
+    /// Checkpoint: the complete mutable state, in a fixed component
+    /// order. The [`WakeIndex`] is deliberately excluded — a fresh
+    /// all-hot-at-0 index is a legal (conservative) starting point, per
+    /// the wake contract — and `completions` is an empty scratch buffer
+    /// between ticks.
+    pub fn export_state(&self) -> Vec<u64> {
+        use crate::sim::checkpoint::{tags, Enc};
+        let mut enc = Enc::new();
+        enc.tag(tags::SYSTEM);
+        enc.u64(self.cpu_cycle);
+        enc.usize(self.cores.len());
+        for core in &self.cores {
+            core.export_state(&mut enc);
+        }
+        enc.tag(tags::HIER);
+        self.hier.llc.export_state(&mut enc);
+        enc.usize(self.hier.mcs.len());
+        for mc in &self.hier.mcs {
+            mc.export_state(&mut enc);
+        }
+        enc.u64(self.hier.bus_now);
+        // In-flight slab verbatim (slot order pins future generational
+        // ids; stale slot contents are part of the identity).
+        enc.usize(self.hier.inflight.slots.len());
+        for s in &self.hier.inflight.slots {
+            enc.u32(s.generation);
+            enc.bool(s.live);
+            enc.u32(s.core);
+            enc.u64(s.line);
+        }
+        enc.usize(self.hier.inflight.free.len());
+        for &f in &self.hier.inflight.free {
+            enc.u32(f);
+        }
+        enc.u64(self.hier.next_writeback_id);
+        enc.usize(self.hier.enqueued.len());
+        for &e in &self.hier.enqueued {
+            enc.bool(e);
+        }
+        enc.into_words()
+    }
+
+    /// Restore from [`System::export_state`] words. `None` (with `self`
+    /// possibly half-written — discard it) on any shape mismatch or
+    /// corrupt stream. On success the system is at the captured clock
+    /// with a fresh, all-hot wake index.
+    pub fn import_state(&mut self, words: &[u64]) -> Option<()> {
+        use crate::sim::checkpoint::{tags, Dec};
+        let mut dec = Dec::new(words);
+        let dec = &mut dec;
+        dec.tag(tags::SYSTEM)?;
+        self.cpu_cycle = dec.u64()?;
+        if dec.usize()? != self.cores.len() {
+            return None; // core count is config-derived shape
+        }
+        for core in self.cores.iter_mut() {
+            core.import_state(dec)?;
+        }
+        dec.tag(tags::HIER)?;
+        self.hier.llc.import_state(dec)?;
+        if dec.usize()? != self.hier.mcs.len() {
+            return None;
+        }
+        for mc in self.hier.mcs.iter_mut() {
+            mc.import_state(dec)?;
+        }
+        self.hier.bus_now = dec.u64()?;
+        let n_slots = dec.usize()?;
+        self.hier.inflight.slots.clear();
+        for _ in 0..n_slots {
+            let generation = dec.u32()?;
+            let live = dec.bool()?;
+            let core = dec.u32()?;
+            let line = dec.u64()?;
+            self.hier.inflight.slots.push(InflightSlot { generation, live, core, line });
+        }
+        let n_free = dec.usize()?;
+        self.hier.inflight.free.clear();
+        for _ in 0..n_free {
+            let f = dec.u32()?;
+            if f as usize >= n_slots {
+                return None;
+            }
+            self.hier.inflight.free.push(f);
+        }
+        self.hier.next_writeback_id = dec.u64()?;
+        if dec.usize()? != self.hier.enqueued.len() {
+            return None;
+        }
+        for e in self.hier.enqueued.iter_mut() {
+            *e = dec.bool()?;
+        }
+        if !dec.finished() {
+            return None; // trailing garbage is corruption
+        }
+        self.completions.clear();
+        // Fresh all-hot index: every first tick is at worst a no-op.
+        self.wake = WakeIndex::new(self.cores.len() + self.hier.mcs.len());
+        Some(())
     }
 
     /// Channel-sharded event loop (see [`crate::sim::shard`]): the
@@ -1018,6 +1233,71 @@ mod tests {
         assert_eq!(slab.remove(b), Some((2, 0x200)));
         // Slab read ids never reach the writeback half-space.
         assert_eq!(c & WRITEBACK_ID_BASE, 0);
+    }
+
+    /// The checkpoint identity contract, at system granularity:
+    /// `run()` must equal `{ run_warmup(); capture -> fresh -> restore;
+    /// run_measure() }` bit for bit, in both loop modes. The full matrix
+    /// (mechanisms, shards, randomized configs) lives in
+    /// tests/checkpoint.rs; this is the in-crate smoke check.
+    #[test]
+    fn checkpoint_fork_matches_uninterrupted_run() {
+        use crate::sim::checkpoint::SimSnapshot;
+        let mut cfg = quick_cfg(0);
+        cfg.warmup_cpu_cycles = 20_000;
+        cfg.measure_cycles = Some(40_000);
+        let p = Profile::by_name("mcf").unwrap();
+        for mode in [LoopMode::StrictTick, LoopMode::EventDriven] {
+            cfg.loop_mode = mode;
+            let full = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+
+            let mut warm = System::new(&cfg, MechanismKind::ChargeCache, &[p]);
+            warm.run_warmup();
+            let snap = SimSnapshot::capture(&warm);
+            let mut forked = System::new(&cfg, MechanismKind::ChargeCache, &[p]);
+            snap.restore_into(&mut forked).expect("snapshot belongs to this identity");
+            assert_eq!(forked.cpu_cycle(), snap.cpu_cycle);
+            let r = forked.run_measure();
+            assert_eq!(full, r, "{mode:?}: forked leg diverged from the cold run");
+
+            // A corrupt word stream must be rejected, not half-applied.
+            let mut bad = snap.clone();
+            bad.words.truncate(bad.words.len() / 2);
+            assert!(bad.restore_into(&mut System::new(
+                &cfg,
+                MechanismKind::ChargeCache,
+                &[p]
+            ))
+            .is_none());
+        }
+    }
+
+    /// Interval sampling: the sampled IPC estimate must land near the
+    /// full detailed run, detailed+skipped instruction accounting must
+    /// add up, and the summary must carry usable confidence intervals.
+    #[test]
+    fn sampled_run_tracks_full_run_ipc() {
+        let mut cfg = quick_cfg(0);
+        cfg.warmup_cpu_cycles = 20_000;
+        cfg.measure_cycles = Some(200_000);
+        let p = Profile::by_name("gcc").unwrap();
+        let full = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        assert!(full.sampled.is_none(), "sampling off by default");
+
+        cfg.sample.detail_cycles = 10_000;
+        cfg.sample.period_cycles = 20_000;
+        let r = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        let s = r.sampled.expect("sampling was enabled");
+        assert_eq!(s.intervals, 10); // 200k cycles / 20k period
+        assert!(s.detailed_insts > 0 && s.skipped_insts > 0);
+        let rel = (s.ipc_mean - full.ipc()).abs() / full.ipc();
+        assert!(
+            rel < 0.25,
+            "sampled IPC {} strayed from full-run IPC {} (rel err {rel:.3})",
+            s.ipc_mean,
+            full.ipc()
+        );
+        assert!(s.ipc_ci95 >= 0.0 && s.latency_mean > 0.0);
     }
 
     #[test]

@@ -88,6 +88,26 @@ impl FileTrace {
 }
 
 impl TraceSource for FileTrace {
+    fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        // Entries are loaded from the file path (immutable shape); only
+        // the replay cursor is runtime state. The length guards against
+        // restoring onto a different trace file.
+        enc.usize(self.entries.len());
+        enc.usize(self.pos);
+    }
+
+    fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        if dec.usize()? != self.entries.len() {
+            return None;
+        }
+        let pos = dec.usize()?;
+        if pos >= self.entries.len() {
+            return None;
+        }
+        self.pos = pos;
+        Some(())
+    }
+
     fn next_entry(&mut self) -> TraceEntry {
         let e = self.entries[self.pos];
         self.pos = (self.pos + 1) % self.entries.len();

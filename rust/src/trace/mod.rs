@@ -29,4 +29,16 @@ pub struct TraceEntry {
 /// Infinite instruction-stream source.
 pub trait TraceSource: Send {
     fn next_entry(&mut self) -> TraceEntry;
+
+    /// Serialize replay-cursor state for checkpointing. Stateless (or
+    /// test-only) sources keep the default, which writes nothing; the
+    /// core wraps these words in a length-prefixed block, so exports and
+    /// imports stay paired even across differing implementations.
+    fn export_state(&self, _enc: &mut crate::sim::checkpoint::Enc) {}
+
+    /// Restore what [`TraceSource::export_state`] wrote. The default
+    /// consumes nothing; `None` signals a corrupt stream.
+    fn import_state(&mut self, _dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        Some(())
+    }
 }

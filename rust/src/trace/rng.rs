@@ -32,6 +32,18 @@ impl XorShift64 {
     pub fn f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
+
+    /// Raw internal state (checkpointing).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild from a [`XorShift64::state`] value **without** the seed
+    /// scrambling `new` applies — the restored stream continues exactly
+    /// where the captured one left off.
+    pub fn from_state(state: u64) -> Self {
+        Self { state }
+    }
 }
 
 #[cfg(test)]
@@ -59,6 +71,18 @@ mod tests {
         let mut r = XorShift64::new(3);
         for _ in 0..1000 {
             assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn from_state_resumes_the_stream_exactly() {
+        let mut a = XorShift64::new(42);
+        for _ in 0..10 {
+            a.next_u64();
+        }
+        let mut b = XorShift64::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
         }
     }
 

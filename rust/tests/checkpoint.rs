@@ -1,0 +1,165 @@
+//! Checkpointed warmup forking (DESIGN.md §12): a leg forked from a
+//! warmed-up snapshot must be bit-identical to the same leg run cold —
+//! across mechanisms, loop modes, and shard counts — and the job graph's
+//! fork groups must reuse (not re-simulate) the shared warmup.
+
+use chargecache::config::SystemConfig;
+use chargecache::coordinator::jobs::{JobEngine, JobGraph, JobSpec};
+use chargecache::latency::MechanismKind;
+use chargecache::sim::engine::LoopMode;
+use chargecache::sim::{SimResult, SimSnapshot, System};
+use chargecache::trace::Profile;
+
+fn small_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.insts_per_core = 4_000;
+    cfg.warmup_cpu_cycles = 2_000;
+    cfg
+}
+
+/// Run the system cold, then again as warmup + capture +
+/// restore-into-fresh + measure, and return both results.
+fn cold_and_forked(build: impl Fn() -> System) -> (SimResult, SimResult) {
+    let cold = build().run();
+    let mut warm = build();
+    warm.run_warmup();
+    let snap = SimSnapshot::capture(&warm);
+    let mut fresh = build();
+    snap.restore_into(&mut fresh).expect("identity triple matches a same-config system");
+    (cold, fresh.run_measure())
+}
+
+#[test]
+fn fork_matches_cold_across_mechanisms() {
+    let p = Profile::by_name("mcf").unwrap();
+    for mech in MechanismKind::all() {
+        let cfg = small_cfg();
+        let (cold, forked) = cold_and_forked(|| System::new(&cfg, mech, &[p]));
+        assert_eq!(cold, forked, "{mech:?}: forked run drifted from the cold run");
+    }
+}
+
+#[test]
+fn fork_matches_cold_across_loop_modes_and_shards() {
+    let cases =
+        [(LoopMode::StrictTick, 1usize), (LoopMode::EventDriven, 1), (LoopMode::EventDriven, 2)];
+    for (mode, shards) in cases {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 4;
+        cfg.insts_per_core = 2_000;
+        cfg.warmup_cpu_cycles = 2_000;
+        cfg.measure_cycles = Some(6_000);
+        cfg.loop_mode = mode;
+        cfg.sim_threads = shards;
+        let mech = MechanismKind::ChargeCache;
+        let (cold, forked) = cold_and_forked(|| System::new_mix(&cfg, mech, 0));
+        assert_eq!(cold, forked, "{mode:?} at {shards} shard(s): forked run drifted");
+    }
+}
+
+#[test]
+fn snapshot_json_round_trips_and_rejects_corruption() {
+    let p = Profile::by_name("mcf").unwrap();
+    let cfg = small_cfg();
+    let mech = MechanismKind::ChargeCache;
+    let cold = System::new(&cfg, mech, &[p]).run();
+
+    let mut warm = System::new(&cfg, mech, &[p]);
+    warm.run_warmup();
+    let snap = SimSnapshot::capture(&warm);
+    let text = snap.encode();
+
+    let decoded = SimSnapshot::decode(&text).expect("encoded snapshot decodes");
+    assert_eq!(decoded, snap, "JSON round-trip must be lossless (exact u64 word tokens)");
+    let mut fresh = System::new(&cfg, mech, &[p]);
+    decoded.restore_into(&mut fresh).expect("decoded snapshot restores");
+    assert_eq!(cold, fresh.run_measure(), "decoded-snapshot fork drifted from the cold run");
+
+    // Truncation is detected at decode; a well-formed snapshot for a
+    // different identity is detected at restore.
+    assert!(SimSnapshot::decode(&text[..text.len() / 2]).is_none());
+    let mut other = System::new(&cfg, MechanismKind::Baseline, &[p]);
+    assert!(snap.restore_into(&mut other).is_none(), "mechanism mismatch must refuse to restore");
+}
+
+/// The acceptance demo: a 6-leg `measure_cycles` sweep shares one warmup,
+/// so the job graph simulates the warmup once and forks it six times —
+/// >= 5x fewer simulated warmup cycles than the naive path — while
+/// staying bit-identical to the unforked sweep.
+#[test]
+fn job_graph_fork_groups_reuse_5x_warmup_cycles() {
+    let legs = 6u64;
+    let warmup = 1_000u64;
+    let run = |fork: bool| {
+        let mut eng = JobEngine::new();
+        let mut g = JobGraph::new();
+        let tickets: Vec<_> = (0..legs)
+            .map(|k| {
+                let mut cfg = SystemConfig::default();
+                cfg.insts_per_core = 2_000;
+                cfg.warmup_cpu_cycles = warmup;
+                cfg.measure_cycles = Some(1_500 + 250 * k);
+                cfg.checkpoint.warmup_fork = fork;
+                g.submit(JobSpec::single(cfg, MechanismKind::ChargeCache, 0))
+            })
+            .collect();
+        let results = eng.run(g);
+        let out: Vec<SimResult> = tickets.iter().map(|&t| results.get(t).clone()).collect();
+        (out, eng.stats())
+    };
+
+    let (cold, cold_stats) = run(false);
+    assert_eq!(cold_stats.warmup_forks, 0);
+    assert_eq!(cold_stats.warmup_sims, 0);
+
+    let (forked, stats) = run(true);
+    assert_eq!(cold, forked, "forked sweep drifted from the cold sweep");
+    assert_eq!(stats.warmup_sims, 1, "one shared warmup simulation for the whole group");
+    assert_eq!(stats.warmup_forks, legs);
+    assert_eq!(stats.warmup_cycles_simulated, warmup);
+    assert_eq!(stats.warmup_cycles_forked, legs * warmup);
+    assert!(
+        stats.warmup_cycles_forked >= 5 * stats.warmup_cycles_simulated,
+        "fork group must reuse >= 5x the warmup cycles it simulates"
+    );
+}
+
+/// Sampling knobs are outside the warmup identity, so a full-detail
+/// warmup snapshot also serves sampled legs; the sampled estimate must
+/// land near the full-detail measurement.
+#[test]
+fn sampled_leg_forks_from_full_detail_snapshot() {
+    let p = Profile::by_name("mcf").unwrap();
+    let mech = MechanismKind::ChargeCache;
+    let mut full = SystemConfig::default();
+    full.warmup_cpu_cycles = 2_000;
+    full.measure_cycles = Some(20_000);
+
+    let mut warm = System::new(&full, mech, &[p]);
+    warm.run_warmup();
+    let snap = SimSnapshot::capture(&warm);
+
+    let mut full_sys = System::new(&full, mech, &[p]);
+    snap.restore_into(&mut full_sys).expect("restore into full-detail leg");
+    let full_res = full_sys.run_measure();
+    assert!(full_res.sampled.is_none(), "full-detail runs carry no sampling summary");
+
+    let mut sampled_cfg = full.clone();
+    sampled_cfg.sample.detail_cycles = 2_000;
+    sampled_cfg.sample.period_cycles = 5_000;
+    let mut sampled_sys = System::new(&sampled_cfg, mech, &[p]);
+    snap.restore_into(&mut sampled_sys).expect("sampling knobs are outside warmup identity");
+    let sampled_res = sampled_sys.run_measure();
+
+    let s = sampled_res.sampled.expect("sampled run carries a summary");
+    assert!(s.intervals >= 2, "expected several detailed intervals, got {}", s.intervals);
+    assert!(s.detailed_insts > 0 && s.skipped_insts > 0);
+    let frac = s.detail_fraction();
+    assert!(frac > 0.0 && frac < 1.0, "detail fraction {frac} must be a strict tradeoff");
+    let full_ipc = full_res.ipc();
+    assert!(
+        s.ipc_mean > 0.5 * full_ipc && s.ipc_mean < 2.0 * full_ipc,
+        "sampled IPC {} strayed from full-detail IPC {full_ipc}",
+        s.ipc_mean
+    );
+}

@@ -10,7 +10,7 @@ use chargecache::dram::command::Loc;
 use chargecache::latency::chargecache::ChargeCache;
 use chargecache::latency::{Mechanism, MechanismKind, RowKey};
 use chargecache::sim::engine::{advance, LoopMode};
-use chargecache::sim::System;
+use chargecache::sim::{SimSnapshot, System};
 use chargecache::trace::XorShift64;
 
 /// Run `body` for `cases` random seeds; panic messages carry the seed.
@@ -412,6 +412,43 @@ fn prop_sharded_delivery_times_match_event_mode() {
             "sharded run drifted from event mode ({} shards, seed {seed})",
             cfg.sim_threads
         );
+    });
+}
+
+/// The checkpoint identity contract (DESIGN.md §12) under randomized
+/// configs: warmup + capture + restore-into-fresh + measure must be
+/// bit-identical to the uninterrupted run, across random mechanisms,
+/// schedulers, row policies, core/channel counts, loop modes, and
+/// trace seeds — including snapshots that detour through the JSON
+/// codec, as disk-cached ones do.
+#[test]
+fn prop_forked_runs_match_cold_runs() {
+    property(6, |rng, seed| {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 2 + 2 * rng.below(2) as usize; // 2 or 4
+        cfg.dram.channels = [2, 4, 8][rng.below(3) as usize];
+        cfg.mc.scheduler = SchedulerKind::all()[rng.below(3) as usize];
+        cfg.mc.row_policy = if rng.below(2) == 0 { RowPolicy::Open } else { RowPolicy::Closed };
+        cfg.insts_per_core = 2_000 + rng.below(2_000);
+        cfg.warmup_cpu_cycles = 1_000 + rng.below(2_000);
+        cfg.loop_mode =
+            if rng.below(2) == 0 { LoopMode::EventDriven } else { LoopMode::StrictTick };
+        cfg.seed = seed;
+        let kind = MechanismKind::all()[rng.below(5) as usize];
+        let mix = rng.below(8) as usize;
+
+        let cold = System::new_mix(&cfg, kind, mix).run();
+
+        let mut warm = System::new_mix(&cfg, kind, mix);
+        warm.run_warmup();
+        let mut snap = SimSnapshot::capture(&warm);
+        if rng.below(2) == 0 {
+            snap = SimSnapshot::decode(&snap.encode()).expect("codec round-trip");
+        }
+        let mut fresh = System::new_mix(&cfg, kind, mix);
+        snap.restore_into(&mut fresh).expect("same-config restore");
+        let forked = fresh.run_measure();
+        assert_eq!(cold, forked, "forked run drifted from cold ({kind:?}, seed {seed})");
     });
 }
 
