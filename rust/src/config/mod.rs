@@ -363,6 +363,55 @@ impl Default for CheckpointConfig {
     }
 }
 
+/// Deterministic retention-fault injection ([`crate::controller::fault`]).
+/// Off by default; when enabled, a seeded per-row hash assigns
+/// weak-retention profiles whose true safe window is shorter than the
+/// ChargeCache caching duration, so a reduced-timing ACT past that window
+/// raises a detectable timing violation. Everything derives from
+/// `(seed, row, cycle)` hashing — no shared RNG stream — so sharded runs
+/// stay bit-identical to single-threaded ones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch (registry: `fault.enabled`). With this off the
+    /// fault path is never consulted and results are bit-identical to a
+    /// build without the subsystem.
+    pub enabled: bool,
+    /// Weak-row density in parts per million of row addresses
+    /// (registry: `fault.weak_ppm`).
+    pub weak_ppm: u64,
+    /// A weak row's true safe window as a percentage of the ChargeCache
+    /// caching duration (registry: `fault.retention_pct`).
+    pub retention_pct: u64,
+    /// Temperature-drift event period in milliseconds; 0 disables drift
+    /// (registry: `fault.drift_interval_ms`). Hot intervals are picked by
+    /// hashing the interval index, so they are shard-invariant.
+    pub drift_interval_ms: f64,
+    /// Weak-row safe window during a hot drift interval, as a percentage
+    /// of the caching duration (registry: `fault.drift_retention_pct`).
+    pub drift_retention_pct: u64,
+    /// Mitigation guard band: once a row is blacklisted, reduced timing
+    /// is only honored while its age is within this percentage of the
+    /// caching duration (registry: `fault.guard_band_pct`).
+    pub guard_band_pct: u64,
+    /// Violations on one row before it is blacklisted
+    /// (registry: `fault.blacklist_threshold`).
+    pub blacklist_threshold: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            weak_ppm: 1000,
+            retention_pct: 60,
+            drift_interval_ms: 0.0,
+            drift_retention_pct: 35,
+            guard_band_pct: 50,
+            blacklist_threshold: 2,
+        }
+    }
+}
+
 /// Full system configuration for one simulation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -408,6 +457,8 @@ pub struct SystemConfig {
     /// Warmup-checkpoint forking in the job graph (registry:
     /// `checkpoint.*`).
     pub checkpoint: CheckpointConfig,
+    /// Deterministic retention-fault injection (registry: `fault.*`).
+    pub fault: FaultConfig,
 }
 
 impl Default for SystemConfig {
@@ -430,6 +481,7 @@ impl Default for SystemConfig {
             sim_threads: 0,
             sample: SampleConfig::default(),
             checkpoint: CheckpointConfig::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -507,6 +559,7 @@ impl SystemConfig {
             sim_threads,
             sample,
             checkpoint,
+            fault,
         } = self;
         let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
         let Timing {
@@ -560,6 +613,15 @@ impl SystemConfig {
         } = nuat;
         let SampleConfig { detail_cycles, period_cycles } = sample;
         let CheckpointConfig { warmup_fork, min_fork_group } = checkpoint;
+        let FaultConfig {
+            enabled,
+            weak_ppm,
+            retention_pct,
+            drift_interval_ms,
+            drift_retention_pct,
+            guard_band_pct,
+            blacklist_threshold,
+        } = fault;
 
         let mut h = Fingerprint::new();
         // DramOrg.
@@ -670,6 +732,17 @@ impl SystemConfig {
         h.push_u64(*period_cycles);
         h.push_u64(*warmup_fork as u64);
         h.push_usize(*min_fork_group);
+        // Fault injection rewrites timing grants when enabled, so every
+        // knob is simulation-relevant; all are hashed unconditionally to
+        // keep the registry round-trip invariant (every settable param
+        // moves the hash) even while `fault.enabled` is off.
+        h.push_u64(*enabled as u64);
+        h.push_u64(*weak_ppm);
+        h.push_u64(*retention_pct);
+        h.push_f64(*drift_interval_ms);
+        h.push_u64(*drift_retention_pct);
+        h.push_u64(*guard_band_pct);
+        h.push_u64(*blacklist_threshold);
         h.finish()
     }
 
@@ -704,6 +777,12 @@ impl SystemConfig {
         c.measure_cycles = None;
         c.sample = SampleConfig::default();
         c.checkpoint = CheckpointConfig::default();
+        // Fault injection rewrites warmup-phase timing grants when
+        // enabled, so the whole block is warmup-relevant then; disabled,
+        // none of its knobs are ever read and they canonicalize away.
+        if !c.fault.enabled {
+            c.fault = FaultConfig::default();
+        }
         let reads_cc =
             matches!(mechanism, MechanismKind::ChargeCache | MechanismKind::ChargeCacheNuat);
         let reads_nuat = matches!(mechanism, MechanismKind::Nuat | MechanismKind::ChargeCacheNuat);
@@ -904,6 +983,41 @@ mod tests {
                 c.checkpoint.min_fork_group = 3;
                 c
             },
+            {
+                let mut c = a.clone();
+                c.fault.enabled = true;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.fault.weak_ppm = 50_000;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.fault.retention_pct = 40;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.fault.drift_interval_ms = 0.5;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.fault.drift_retention_pct = 20;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.fault.guard_band_pct = 25;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.fault.blacklist_threshold = 1;
+                c
+            },
         ];
         for p in perturbations {
             let fp = p.fingerprint();
@@ -934,6 +1048,9 @@ mod tests {
             |c| c.checkpoint.warmup_fork = false,
             |c| c.checkpoint.min_fork_group = 7,
             |c| c.mechanism = MechanismKind::Nuat,
+            // Disabled fault knobs are never read during warmup.
+            |c| c.fault.weak_ppm = 123_456,
+            |c| c.fault.guard_band_pct = 99,
         ] {
             let mut c = a.clone();
             tweak(&mut c);
@@ -953,6 +1070,12 @@ mod tests {
             |c| c.loop_mode = LoopMode::StrictTick,
             |c| c.sim_threads = 4,
             |c| c.chargecache.duration_ms = 2.0,
+            // Enabled fault injection rewrites warmup-phase grants.
+            |c| c.fault.enabled = true,
+            |c| {
+                c.fault.enabled = true;
+                c.fault.weak_ppm = 123_456;
+            },
         ] {
             let mut c = a.clone();
             tweak(&mut c);

@@ -23,8 +23,8 @@ use std::sync::OnceLock;
 
 use crate::bail;
 use crate::config::{
-    ChargeCacheConfig, CheckpointConfig, CpuConfig, DramGeneration, DramOrg, HcracPolicy,
-    HcracSharing, McConfig, NuatConfig, RowPolicy, SampleConfig, SystemConfig, Timing,
+    ChargeCacheConfig, CheckpointConfig, CpuConfig, DramGeneration, DramOrg, FaultConfig,
+    HcracPolicy, HcracSharing, McConfig, NuatConfig, RowPolicy, SampleConfig, SystemConfig, Timing,
 };
 use crate::controller::{SchedulerKind, SCHEDULER_NAMES};
 use crate::error::Result;
@@ -349,6 +349,7 @@ fn build() -> Vec<ParamDef> {
         sim_threads,
         sample,
         checkpoint,
+        fault,
     } = SystemConfig::default();
     let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
     let Timing {
@@ -402,6 +403,15 @@ fn build() -> Vec<ParamDef> {
     } = nuat;
     let SampleConfig { detail_cycles, period_cycles } = sample;
     let CheckpointConfig { warmup_fork, min_fork_group } = checkpoint;
+    let FaultConfig {
+        enabled: fault_enabled,
+        weak_ppm,
+        retention_pct,
+        drift_interval_ms,
+        drift_retention_pct,
+        guard_band_pct,
+        blacklist_threshold,
+    } = fault;
 
     let mut defs: Vec<ParamDef> = Vec::new();
     // DramOrg.
@@ -665,6 +675,56 @@ fn build() -> Vec<ParamDef> {
         "Legs sharing a warmup identity before a snapshot is built",
         checkpoint.min_fork_group,
     );
+    // FaultConfig.
+    choice_param!(
+        defs,
+        "fault.enabled",
+        fault_enabled,
+        "Deterministic retention-fault injection (seeded, off by default)",
+        fault.enabled,
+    );
+    scalar_param!(
+        defs,
+        "fault.weak_ppm",
+        weak_ppm,
+        "Weak-row density in parts per million of row addresses",
+        fault.weak_ppm,
+    );
+    scalar_param!(
+        defs,
+        "fault.retention_pct",
+        retention_pct,
+        "Weak row's true safe window as % of the caching duration",
+        fault.retention_pct,
+    );
+    scalar_param!(
+        defs,
+        "fault.drift_interval_ms",
+        drift_interval_ms,
+        "Temperature-drift event period in milliseconds (0 = no drift)",
+        fault.drift_interval_ms,
+    );
+    scalar_param!(
+        defs,
+        "fault.drift_retention_pct",
+        drift_retention_pct,
+        "Weak row's safe window during a hot drift interval (% of duration)",
+        fault.drift_retention_pct,
+    );
+    scalar_param!(
+        defs,
+        "fault.guard_band_pct",
+        guard_band_pct,
+        "Blacklisted rows keep reduced timing only within this % of the duration",
+        fault.guard_band_pct,
+    );
+    scalar_param!(
+        defs,
+        "fault.blacklist_threshold",
+        blacklist_threshold,
+        "Violations on one row before the mitigation blacklists it",
+        fault.blacklist_threshold,
+    );
     defs
 }
 
@@ -773,9 +833,10 @@ mod tests {
         let reg = registry();
         // One def per config field (6 dram org + generation + 15 timing +
         // 6 mc + 8 cpu + 7 chargecache + 3 nuat + 2 sample +
-        // 2 checkpoint + 8 top-level incl. sim.threads). If this count
-        // moved, update it together with the new field's ParamDef.
-        assert_eq!(reg.defs().len(), 58, "registry must cover every SystemConfig field");
+        // 2 checkpoint + 7 fault + 8 top-level incl. sim.threads). If
+        // this count moved, update it together with the new field's
+        // ParamDef.
+        assert_eq!(reg.defs().len(), 65, "registry must cover every SystemConfig field");
         let base = SystemConfig::default();
         for def in reg.defs() {
             // The recorded default is the default config's value.

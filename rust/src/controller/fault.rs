@@ -1,0 +1,335 @@
+//! Deterministic retention-fault model and timing-violation guard.
+//!
+//! ChargeCache's safety argument assumes every row precharged within the
+//! caching duration tolerates reduced tRCD/tRAS. Retention and timing
+//! margins actually vary per cell, row, and temperature (Hassan's
+//! leakage characterization; AL-DRAM), so this module injects the
+//! counter-examples: a seeded per-row hash marks a configurable fraction
+//! of rows *weak*, with a true safe window shorter than the caching
+//! duration, optionally shrunk further during deterministic
+//! temperature-drift intervals. A reduced-timing ACT past a weak row's
+//! true window is a **timing violation** — detectable (ECC-class) but
+//! costly: the access replays at full timing and the row is evicted from
+//! the mechanism table ([`crate::latency::Mechanism::on_violation`]).
+//!
+//! The guard side is the adaptive mitigation: per-row violation counters
+//! feed a blacklist, and blacklisted rows keep reduced timing only
+//! within a configurable guard band of the caching duration
+//! (`fault.guard_band_pct`) — the knob the guard-band scenario sweeps
+//! against performance.
+//!
+//! **Determinism under sharding.** Every decision derives from
+//! `(seed, RowKey, cycle)` via stateless hashing plus per-channel history
+//! (`last_pre`); there is no shared sequential RNG stream whose draw
+//! order could depend on thread interleaving. [`FaultState`] lives in
+//! each channel's [`super::CommandSink`], and the channel-sharded loop
+//! delivers each channel a bit-identical command stream at any shard
+//! count, so N-shard runs match 1-shard runs bit for bit.
+
+use std::collections::HashMap;
+
+use crate::config::SystemConfig;
+use crate::latency::RowKey;
+
+/// Outcome of checking a reduced-timing grant against the fault model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultCheck {
+    /// The row is strong, or within its true safe window: grant stands.
+    Safe,
+    /// Blacklisted row past the mitigation guard band: the grant is
+    /// clamped to full timing *before* issue — no violation occurs.
+    Suppress,
+    /// Weak row past its true safe window: the reduced access fails
+    /// detectably and must replay at full timing.
+    Violation,
+}
+
+/// SplitMix64 finalizer — a stateless avalanche hash, so weak-row
+/// assignment and drift scheduling are pure functions of their inputs.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+const WEAK_SALT: u64 = 0x57EA_4B0B;
+const DRIFT_SALT: u64 = 0xD21F_7A0C;
+
+/// Per-channel fault-injection state: the ground-truth retention model
+/// (invisible to the controller proper) plus the guard's learned
+/// per-row violation counters and blacklist.
+pub struct FaultState {
+    enabled: bool,
+    seed: u64,
+    weak_ppm: u64,
+    /// Full timing the mitigation falls back to.
+    trcd_std: u64,
+    tras_std: u64,
+    /// A weak row's true safe window, in bus cycles.
+    safe_window: u64,
+    /// Safe window during a hot drift interval.
+    drift_window: u64,
+    /// Drift interval length in bus cycles (0 = no drift).
+    drift_interval: u64,
+    /// Blacklisted rows keep reduced timing only within this age.
+    guard_window: u64,
+    blacklist_threshold: u64,
+    /// Last precharge cycle per weak row (ground-truth charge age).
+    last_pre: HashMap<u64, u64>,
+    /// Guard state: violations observed per row; rows at or past the
+    /// threshold carry `blacklisted = true`.
+    violations: HashMap<u64, (u64, bool)>,
+}
+
+impl FaultState {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let duration = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        let f = &cfg.fault;
+        Self {
+            enabled: f.enabled,
+            seed: cfg.seed,
+            weak_ppm: f.weak_ppm,
+            trcd_std: cfg.timing.trcd,
+            tras_std: cfg.timing.tras,
+            safe_window: duration * f.retention_pct / 100,
+            drift_window: duration * f.drift_retention_pct / 100,
+            drift_interval: cfg.timing.ms_to_cycles(f.drift_interval_ms),
+            guard_window: duration * f.guard_band_pct / 100,
+            blacklist_threshold: f.blacklist_threshold.max(1),
+            last_pre: HashMap::new(),
+            violations: HashMap::new(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Full (non-reduced) timing for suppressed grants.
+    pub fn full_timing(&self) -> (u64, u64) {
+        (self.trcd_std, self.tras_std)
+    }
+
+    /// Ground truth: is this row weak? Pure hash of `(seed, key)`.
+    #[inline]
+    pub fn is_weak(&self, key: RowKey) -> bool {
+        mix64(self.seed ^ WEAK_SALT ^ key.0) % 1_000_000 < self.weak_ppm
+    }
+
+    /// Ground truth: a weak row's safe window at `now` — shrunk during
+    /// hot drift intervals, which are picked by hashing the interval
+    /// index (shard-invariant: depends only on the cycle).
+    #[inline]
+    fn safe_window_at(&self, now: u64) -> u64 {
+        if self.drift_interval > 0
+            && mix64(self.seed ^ DRIFT_SALT ^ (now / self.drift_interval)) % 4 == 0
+        {
+            self.drift_window
+        } else {
+            self.safe_window
+        }
+    }
+
+    /// Record a precharge: the row's cells are replenished now. Only
+    /// weak rows are tracked, so the map stays proportional to the weak
+    /// fraction of the touched footprint.
+    #[inline]
+    pub fn note_precharge(&mut self, now: u64, key: RowKey) {
+        if self.enabled && self.is_weak(key) {
+            self.last_pre.insert(key.0, now);
+        }
+    }
+
+    /// Check a reduced-timing grant for `key` at `now`. Call only when
+    /// the mechanism actually granted reduced timing.
+    pub fn check(&self, now: u64, key: RowKey) -> FaultCheck {
+        if !self.is_weak(key) {
+            return FaultCheck::Safe;
+        }
+        let age = match self.last_pre.get(&key.0) {
+            Some(&t) => now.saturating_sub(t),
+            // No recorded precharge (e.g. entry predates fault tracking):
+            // charge age is unknown but at most the mechanism's own
+            // bound; treat as fresh rather than inventing a violation.
+            None => return FaultCheck::Safe,
+        };
+        if self.is_blacklisted(key) && age > self.guard_window {
+            return FaultCheck::Suppress;
+        }
+        if age > self.safe_window_at(now) {
+            return FaultCheck::Violation;
+        }
+        FaultCheck::Safe
+    }
+
+    #[inline]
+    fn is_blacklisted(&self, key: RowKey) -> bool {
+        self.violations.get(&key.0).is_some_and(|&(_, b)| b)
+    }
+
+    /// Count a violation against `key`; returns true when this crossing
+    /// of the threshold newly blacklists the row.
+    pub fn record_violation(&mut self, key: RowKey) -> bool {
+        let e = self.violations.entry(key.0).or_insert((0, false));
+        e.0 += 1;
+        if !e.1 && e.0 >= self.blacklist_threshold {
+            e.1 = true;
+            return true;
+        }
+        false
+    }
+
+    /// Checkpoint hook: the learned guard state and charge ages survive
+    /// warmup forking. Maps are written in sorted key order so the word
+    /// stream is deterministic.
+    pub fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
+        use crate::sim::checkpoint::tags;
+        enc.tag(tags::FAULT);
+        let mut pre: Vec<(u64, u64)> = self.last_pre.iter().map(|(&k, &v)| (k, v)).collect();
+        pre.sort_unstable();
+        enc.usize(pre.len());
+        for (k, v) in pre {
+            enc.u64(k);
+            enc.u64(v);
+        }
+        let mut vio: Vec<(u64, u64, bool)> =
+            self.violations.iter().map(|(&k, &(n, b))| (k, n, b)).collect();
+        vio.sort_unstable();
+        enc.usize(vio.len());
+        for (k, n, b) in vio {
+            enc.u64(k);
+            enc.u64(n);
+            enc.bool(b);
+        }
+    }
+
+    pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
+        use crate::sim::checkpoint::tags;
+        dec.tag(tags::FAULT)?;
+        let n = dec.usize()?;
+        self.last_pre = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let k = dec.u64()?;
+            let v = dec.u64()?;
+            self.last_pre.insert(k, v);
+        }
+        let n = dec.usize()?;
+        self.violations = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let k = dec.u64()?;
+            let c = dec.u64()?;
+            let b = dec.bool()?;
+            self.violations.insert(k, (c, b));
+        }
+        Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn faulty_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.fault.enabled = true;
+        cfg.fault.weak_ppm = 1_000_000; // every row weak
+        cfg.fault.retention_pct = 50;
+        cfg.fault.blacklist_threshold = 2;
+        cfg.fault.guard_band_pct = 25;
+        cfg
+    }
+
+    fn key(row: u32) -> RowKey {
+        RowKey::new(0, 0, row)
+    }
+
+    #[test]
+    fn weak_assignment_is_deterministic_and_density_scaled() {
+        let mut cfg = SystemConfig::default();
+        cfg.fault.enabled = true;
+        cfg.fault.weak_ppm = 100_000; // 10%
+        let a = FaultState::new(&cfg);
+        let b = FaultState::new(&cfg);
+        let weak: usize = (0..10_000).filter(|&r| a.is_weak(key(r))).count();
+        // ~10% with hash noise.
+        assert!((500..2000).contains(&weak), "weak count {weak} far from 10%");
+        for r in 0..1000 {
+            assert_eq!(a.is_weak(key(r)), b.is_weak(key(r)), "assignment must be pure");
+        }
+        // A different seed draws a different weak set.
+        cfg.seed ^= 0xDEAD;
+        let c = FaultState::new(&cfg);
+        assert!((0..10_000).any(|r| a.is_weak(key(r)) != c.is_weak(key(r))));
+    }
+
+    #[test]
+    fn violation_past_safe_window_and_blacklist_guard() {
+        let cfg = faulty_cfg();
+        let dur = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        let mut f = FaultState::new(&cfg);
+        let k = key(3);
+        assert!(f.is_weak(k));
+        f.note_precharge(0, k);
+        // Inside the 50% true window: safe.
+        assert_eq!(f.check(dur / 4, k), FaultCheck::Safe);
+        // Past it (but within the caching duration): violation.
+        assert_eq!(f.check(dur * 3 / 4, k), FaultCheck::Violation);
+        // Two violations blacklist the row.
+        assert!(!f.record_violation(k));
+        assert!(f.record_violation(k), "second violation crosses the threshold");
+        assert!(!f.record_violation(k), "already blacklisted");
+        // Blacklisted: past the 25% guard band the grant is suppressed
+        // instead of violating...
+        assert_eq!(f.check(dur / 2, k), FaultCheck::Suppress);
+        // ...and within it, still honored.
+        assert_eq!(f.check(dur / 8, k), FaultCheck::Safe);
+    }
+
+    #[test]
+    fn unknown_charge_age_is_not_a_violation() {
+        let cfg = faulty_cfg();
+        let f = FaultState::new(&cfg);
+        assert_eq!(f.check(1 << 40, key(9)), FaultCheck::Safe);
+    }
+
+    #[test]
+    fn drift_intervals_shrink_the_window_deterministically() {
+        let mut cfg = faulty_cfg();
+        cfg.fault.drift_interval_ms = 0.1;
+        cfg.fault.drift_retention_pct = 10;
+        let f = FaultState::new(&cfg);
+        let interval = cfg.timing.ms_to_cycles(0.1);
+        let dur = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        // Roughly a quarter of intervals are hot; pure in the index.
+        let hot: Vec<bool> =
+            (0..64).map(|i| f.safe_window_at(i * interval) == dur / 10).collect();
+        assert!(hot.iter().any(|&h| h), "some interval must run hot");
+        assert!(hot.iter().any(|&h| !h), "some interval must run cool");
+        let again: Vec<bool> =
+            (0..64).map(|i| f.safe_window_at(i * interval) == dur / 10).collect();
+        assert_eq!(hot, again);
+    }
+
+    #[test]
+    fn state_round_trips_through_checkpoint() {
+        let cfg = faulty_cfg();
+        let mut f = FaultState::new(&cfg);
+        f.note_precharge(10, key(1));
+        f.note_precharge(20, key(2));
+        f.record_violation(key(1));
+        f.record_violation(key(1));
+        let mut enc = crate::sim::checkpoint::Enc::default();
+        f.export_state(&mut enc);
+        let words = enc.into_words();
+        let mut g = FaultState::new(&cfg);
+        let mut dec = crate::sim::checkpoint::Dec::new(&words);
+        g.import_state(&mut dec).expect("round trip");
+        assert!(dec.finished());
+        assert_eq!(g.last_pre, f.last_pre);
+        assert_eq!(g.violations, f.violations);
+        assert!(g.is_blacklisted(key(1)));
+    }
+}

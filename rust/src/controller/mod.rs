@@ -24,6 +24,7 @@
 //! then its ACT/PRE pass.
 
 pub mod bank_engine;
+pub mod fault;
 pub mod mapping;
 pub mod policy;
 pub mod queue;

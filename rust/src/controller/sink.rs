@@ -14,6 +14,8 @@ use crate::analysis::{ReuseTracker, RltlTracker};
 use crate::config::SystemConfig;
 use crate::latency::{build_mechanism, Mechanism, MechanismKind, RowKey, TimingGrant};
 
+use super::fault::{FaultCheck, FaultState};
+
 /// How a request's first DRAM command classified it (row-buffer outcome).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReqClass {
@@ -42,6 +44,17 @@ pub struct McStats {
     pub wq_forwards: u64,
     /// Enqueue rejections (queue full) — backpressure signal.
     pub rejects: u64,
+    /// Reduced-timing ACTs past a weak row's true safe window
+    /// ([`super::fault`]); each replays at full timing.
+    pub timing_violations: u64,
+    /// Violations whose row was actually evicted from the mechanism
+    /// table (the entry can already be gone, e.g. swept).
+    pub mitigation_evictions: u64,
+    /// Reduced grants clamped to full timing by the blacklist guard
+    /// band before issue (no violation occurred).
+    pub guard_suppressed: u64,
+    /// Rows newly blacklisted after crossing the violation threshold.
+    pub rows_blacklisted: u64,
 }
 
 /// Single funnel for ACT/PRE/REF/column events: owns the latency
@@ -51,6 +64,9 @@ pub struct CommandSink {
     pub rltl: RltlTracker,
     pub reuse: ReuseTracker,
     pub stats: McStats,
+    /// Retention-fault model + timing-violation guard (`fault.*`; inert
+    /// when disabled).
+    pub fault: FaultState,
 }
 
 impl CommandSink {
@@ -60,6 +76,7 @@ impl CommandSink {
             rltl: RltlTracker::new(cfg.timing.tck_ns),
             reuse: ReuseTracker::new(),
             stats: McStats::default(),
+            fault: FaultState::new(cfg),
         }
     }
 
@@ -69,9 +86,45 @@ impl CommandSink {
     }
 
     /// An ACT is being issued for `core`'s request: mechanism lookup
-    /// (ChargeCache/NUAT timing grant), RLTL + reuse tracking, stats.
+    /// (ChargeCache/NUAT timing grant), fault/guard check on reduced
+    /// grants, RLTL + reuse tracking, stats.
     pub fn on_activate(&mut self, now: u64, core: u32, key: RowKey) -> TimingGrant {
-        let grant = self.mech.on_activate(now, core, key);
+        let mut grant = self.mech.on_activate(now, core, key);
+        if grant.reduced && self.fault.enabled() {
+            match self.fault.check(now, key) {
+                FaultCheck::Safe => {}
+                FaultCheck::Suppress => {
+                    // Blacklist guard band: issue at full timing instead
+                    // of risking a repeat violation on a known-weak row.
+                    let (trcd, tras) = self.fault.full_timing();
+                    grant = TimingGrant {
+                        trcd,
+                        tras,
+                        reduced: false,
+                    };
+                    self.stats.guard_suppressed += 1;
+                }
+                FaultCheck::Violation => {
+                    // The reduced ACT failed on a decayed weak row: evict
+                    // it from the mechanism table and replay at full
+                    // timing (the wasted reduced attempt plus a full
+                    // tRCD), counting toward the adaptive blacklist.
+                    self.stats.timing_violations += 1;
+                    if self.mech.on_violation(now, core, key) {
+                        self.stats.mitigation_evictions += 1;
+                    }
+                    if self.fault.record_violation(key) {
+                        self.stats.rows_blacklisted += 1;
+                    }
+                    let (trcd_std, tras_std) = self.fault.full_timing();
+                    grant = TimingGrant {
+                        trcd: trcd_std + grant.trcd,
+                        tras: tras_std,
+                        reduced: false,
+                    };
+                }
+            }
+        }
         self.rltl.on_activate(now, key);
         self.reuse.on_activate(key);
         self.stats.acts += 1;
@@ -85,6 +138,7 @@ impl CommandSink {
     /// mechanism insert, RLTL close, open-time accounting.
     pub fn on_precharge(&mut self, now: u64, owner: u32, key: RowKey, act_cycle: u64) {
         self.mech.on_precharge(now, owner, key);
+        self.fault.note_precharge(now, key);
         self.rltl.on_precharge(now, key);
         self.stats.precharges += 1;
         self.stats.bank_open_cycles += now.saturating_sub(act_cycle);
@@ -146,9 +200,14 @@ impl CommandSink {
             s.bank_open_cycles,
             s.wq_forwards,
             s.rejects,
+            s.timing_violations,
+            s.mitigation_evictions,
+            s.guard_suppressed,
+            s.rows_blacklisted,
         ] {
             enc.u64(v);
         }
+        self.fault.export_state(enc);
     }
 
     pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
@@ -174,9 +233,14 @@ impl CommandSink {
             &mut s.bank_open_cycles,
             &mut s.wq_forwards,
             &mut s.rejects,
+            &mut s.timing_violations,
+            &mut s.mitigation_evictions,
+            &mut s.guard_suppressed,
+            &mut s.rows_blacklisted,
         ] {
             *v = dec.u64()?;
         }
+        self.fault.import_state(dec)?;
         Some(())
     }
 }
@@ -223,6 +287,107 @@ mod tests {
         assert_eq!(sink.stats.reads, 1);
         assert_eq!(sink.stats.writes, 1);
         assert_eq!(sink.stats.read_latency_sum, 26);
+    }
+
+    fn faulty_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.fault.enabled = true;
+        cfg.fault.weak_ppm = 1_000_000; // every row weak
+        cfg.fault.retention_pct = 50;
+        cfg.fault.guard_band_pct = 50;
+        cfg.fault.blacklist_threshold = 1;
+        cfg
+    }
+
+    #[test]
+    fn violation_replays_at_full_timing_and_evicts() {
+        let cfg = faulty_cfg();
+        let dur = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        let mut sink = CommandSink::new(&cfg, MechanismKind::ChargeCache);
+        let key = RowKey::new(0, 2, 5);
+        sink.on_activate(0, 0, key);
+        sink.on_precharge(10, 0, key, 0);
+        // Past the 50% true safe window but still inside the caching
+        // duration: the HCRAC grants reduced timing, the fault model
+        // catches it.
+        let g = sink.on_activate(10 + dur * 3 / 4, 0, key);
+        assert!(!g.reduced, "violation must clamp the grant");
+        assert!(g.trcd > cfg.timing.trcd, "replay pays the wasted reduced attempt");
+        assert_eq!(g.tras, cfg.timing.tras);
+        assert_eq!(sink.stats.timing_violations, 1);
+        assert_eq!(sink.stats.mitigation_evictions, 1);
+        assert_eq!(sink.stats.rows_blacklisted, 1);
+        assert_eq!(sink.stats.acts_reduced, 0);
+        // The row was evicted: the next ACT misses the HCRAC entirely.
+        let g2 = sink.on_activate(11 + dur * 3 / 4, 0, key);
+        assert!(!g2.reduced);
+        assert_eq!(g2.trcd, cfg.timing.trcd);
+        assert_eq!(sink.stats.timing_violations, 1, "no fault check on a full-timing grant");
+    }
+
+    #[test]
+    fn blacklisted_row_is_guard_suppressed_not_violated() {
+        let cfg = faulty_cfg();
+        let dur = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        let mut sink = CommandSink::new(&cfg, MechanismKind::ChargeCache);
+        let key = RowKey::new(0, 2, 5);
+        sink.on_activate(0, 0, key);
+        sink.on_precharge(10, 0, key, 0);
+        sink.on_activate(10 + dur * 3 / 4, 0, key); // violation → blacklist
+        // Re-cache the row, then come back past the guard band again:
+        // this time the guard clamps the grant before issue.
+        let t1 = 10 + dur;
+        sink.on_precharge(t1, 0, key, t1 - 5);
+        let g = sink.on_activate(t1 + dur * 3 / 4, 0, key);
+        assert!(!g.reduced);
+        assert_eq!((g.trcd, g.tras), (cfg.timing.trcd, cfg.timing.tras));
+        assert_eq!(sink.stats.guard_suppressed, 1);
+        assert_eq!(sink.stats.timing_violations, 1, "suppression prevents the repeat violation");
+        // Within the guard band the reduced grant is still honored.
+        let t2 = t1 + dur;
+        sink.on_precharge(t2, 0, key, t2 - 5);
+        assert!(sink.on_activate(t2 + dur / 4, 0, key).reduced);
+    }
+
+    #[test]
+    fn disabled_faults_leave_grants_untouched() {
+        let mut cfg = faulty_cfg();
+        cfg.fault.enabled = false;
+        let dur = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        let mut sink = CommandSink::new(&cfg, MechanismKind::ChargeCache);
+        let key = RowKey::new(0, 2, 5);
+        sink.on_activate(0, 0, key);
+        sink.on_precharge(10, 0, key, 0);
+        let g = sink.on_activate(10 + dur * 3 / 4, 0, key);
+        assert!(g.reduced, "fault model must be inert when disabled");
+        assert_eq!(sink.stats.timing_violations, 0);
+        assert_eq!(sink.stats.guard_suppressed, 0);
+    }
+
+    #[test]
+    fn fault_state_round_trips_through_sink_checkpoint() {
+        let cfg = faulty_cfg();
+        let dur = cfg.timing.ms_to_cycles(cfg.chargecache.duration_ms);
+        let mut sink = CommandSink::new(&cfg, MechanismKind::ChargeCache);
+        let key = RowKey::new(0, 2, 5);
+        sink.on_activate(0, 0, key);
+        sink.on_precharge(10, 0, key, 0);
+        sink.on_activate(10 + dur * 3 / 4, 0, key); // violation → blacklist
+        let mut enc = crate::sim::checkpoint::Enc::default();
+        sink.export_state(&mut enc);
+        let words = enc.into_words();
+        let mut sink2 = CommandSink::new(&cfg, MechanismKind::ChargeCache);
+        let mut dec = crate::sim::checkpoint::Dec::new(&words);
+        sink2.import_state(&mut dec).expect("sink round trip");
+        assert!(dec.finished());
+        assert_eq!(sink2.stats, sink.stats);
+        // The blacklist survived: re-cache and return past the guard
+        // band — suppressed, not violated.
+        let t1 = 10 + dur;
+        sink2.on_precharge(t1, 0, key, t1 - 5);
+        sink2.on_activate(t1 + dur * 3 / 4, 0, key);
+        assert_eq!(sink2.stats.guard_suppressed, 1);
+        assert_eq!(sink2.stats.timing_violations, 1);
     }
 
     #[test]

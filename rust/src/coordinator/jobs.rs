@@ -184,6 +184,15 @@ pub struct CacheStats {
     /// CPU cycles of warmup forked legs skipped by restoring a snapshot —
     /// what the naive path would have re-simulated.
     pub warmup_cycles_forked: u64,
+    /// Job attempts retried after a panic (each job runs under
+    /// `catch_unwind` with bounded retry + backoff).
+    pub retries: u64,
+    /// Jobs that still failed after every retry; their legs are reported
+    /// through [`JobResults::failures`] instead of aborting the sweep.
+    pub failed: u64,
+    /// Corrupt on-disk cache entries renamed aside (`.bad`) so they are
+    /// preserved for inspection instead of re-read as misses forever.
+    pub quarantined: u64,
 }
 
 impl CacheStats {
@@ -197,7 +206,7 @@ impl CacheStats {
     /// the warmup clause is appended after the original text so older
     /// greps keep matching).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "job graph: submitted {}, deduped {}, cache hits {} (memory {}, disk {}), simulated {} — {} redundant legs eliminated; warmup: {} forked, {} simulated ({} cycles reused, {} simulated)",
             self.submitted,
             self.deduped,
@@ -210,7 +219,14 @@ impl CacheStats {
             self.warmup_sims,
             self.warmup_cycles_forked,
             self.warmup_cycles_simulated,
-        )
+        );
+        if self.quarantined > 0 {
+            s.push_str(&format!("; {} quarantined", self.quarantined));
+        }
+        if self.retries > 0 || self.failed > 0 {
+            s.push_str(&format!("; faults: {} retried, {} failed", self.retries, self.failed));
+        }
+        s
     }
 }
 
@@ -262,6 +278,22 @@ impl SimCache {
         })
     }
 
+    /// Rename a corrupt cache file aside as `{name}.bad` (best-effort) so
+    /// it is preserved for inspection and, crucially, never re-read: a
+    /// corrupt entry left in place would decode-fail on every invocation
+    /// and the re-simulated insert could race its own overwrite.
+    fn quarantine(&mut self, path: &std::path::Path) {
+        self.stats.quarantined += 1;
+        let mut bad = path.as_os_str().to_os_string();
+        bad.push(".bad");
+        if std::fs::rename(path, &bad).is_err() {
+            // Read-only dir: removing also fails, and the entry simply
+            // stays a (counted) miss.
+            let _ = std::fs::remove_file(path);
+        }
+        eprintln!("warning: quarantined corrupt result-cache entry {}", path.display());
+    }
+
     /// Look `key` up: memory first, then disk. Counts the hit.
     fn get(&mut self, key: &JobKey) -> Option<Arc<SimResult>> {
         if let Some(r) = self.map.get(key) {
@@ -269,8 +301,15 @@ impl SimCache {
             return Some(r.clone());
         }
         let path = self.disk_path(key)?;
-        let text = std::fs::read_to_string(path).ok()?;
-        let result = diskjson::decode_result(&text)?;
+        let mut text = std::fs::read_to_string(&path).ok()?;
+        crate::faulthooks::maybe_corrupt_cache_entry(&mut text);
+        let result = match diskjson::decode_result(&text) {
+            Some(r) => r,
+            None => {
+                self.quarantine(&path);
+                return None;
+            }
+        };
         // A decoded file must actually describe this key's simulation:
         // the fingerprint in the file name hashes only the config, so a
         // renamed/forged file (or a PROFILES reorder in a build that
@@ -327,8 +366,15 @@ impl SimCache {
             return Some(s.clone());
         }
         let path = self.snapshot_path(key)?;
-        let text = std::fs::read_to_string(path).ok()?;
-        let snap = SimSnapshot::decode(&text)?;
+        let mut text = std::fs::read_to_string(&path).ok()?;
+        crate::faulthooks::maybe_corrupt_checkpoint(&mut text);
+        let snap = match SimSnapshot::decode(&text) {
+            Some(s) => s,
+            None => {
+                self.quarantine(&path);
+                return None;
+            }
+        };
         if snap.warmup_fingerprint != key.warmup_fingerprint
             || snap.mechanism != key.mechanism
             || snap.workload != expected_workload(key.workload)
@@ -381,6 +427,40 @@ fn mech_slug(m: MechanismKind) -> &'static str {
 /// [`JobResults`] of the graph run that issued it.
 #[derive(Debug, Clone, Copy)]
 pub struct JobTicket(usize);
+
+/// Attempts beyond the first a panicking job gets before it is reported
+/// as failed, and the linear backoff between them.
+const JOB_RETRIES: u32 = 2;
+const BACKOFF_MS: u64 = 25;
+
+/// Per-job panic isolation: run `f` under `catch_unwind`, retrying up to
+/// [`JOB_RETRIES`] times with linear backoff. Returns the value plus the
+/// number of retries consumed, or the final panic message — a panicking
+/// job must never take down the worker scope (and with it every other
+/// leg of the sweep).
+fn run_isolated<T>(f: impl Fn() -> T) -> (std::result::Result<T, String>, u64) {
+    let mut last = String::new();
+    for attempt in 0..=JOB_RETRIES {
+        if attempt > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(BACKOFF_MS * attempt as u64));
+        }
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(&f)) {
+            Ok(v) => return (Ok(v), attempt as u64),
+            Err(p) => last = panic_message(p.as_ref()),
+        }
+    }
+    (Err(last), JOB_RETRIES as u64)
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// A batch of submitted jobs, deduped by [`JobKey`] at submission time.
 #[derive(Default)]
@@ -482,24 +562,39 @@ impl JobGraph {
         }
 
         // Phase 1: simulate each group's shared warmup once, in parallel.
+        // A build that panics through its retries degrades its legs to
+        // cold runs (they simulate their own warmup) — never an abort.
         if !to_build.is_empty() {
             let specs = &self.specs;
             let groups_ref = &groups;
             let build = &to_build;
             let built = parallel_map(build.len(), |j| {
                 let (_, legs) = &groups_ref[build[j]];
-                let mut sys = specs[legs[0]].build_system();
-                sys.run_warmup();
-                SimSnapshot::capture(&sys)
+                run_isolated(|| {
+                    crate::faulthooks::maybe_inject_job_panic();
+                    let mut sys = specs[legs[0]].build_system();
+                    sys.run_warmup();
+                    SimSnapshot::capture(&sys)
+                })
             });
-            for (j, snap) in built.into_iter().enumerate() {
+            for (j, (snap, retries)) in built.into_iter().enumerate() {
                 let (key, legs) = &groups[to_build[j]];
-                cache.stats.warmup_sims += 1;
-                cache.stats.warmup_cycles_simulated += self.specs[legs[0]].cfg.warmup_cpu_cycles;
-                let arc = Arc::new(snap);
-                cache.insert_snapshot(*key, arc.clone());
-                for &i in legs {
-                    snap_for.insert(i, arc.clone());
+                cache.stats.retries += retries;
+                match snap {
+                    Ok(snap) => {
+                        cache.stats.warmup_sims += 1;
+                        cache.stats.warmup_cycles_simulated +=
+                            self.specs[legs[0]].cfg.warmup_cpu_cycles;
+                        let arc = Arc::new(snap);
+                        cache.insert_snapshot(*key, arc.clone());
+                        for &i in legs {
+                            snap_for.insert(i, arc.clone());
+                        }
+                    }
+                    Err(e) => eprintln!(
+                        "warning: warmup build panicked after retries ({e}); {} legs run cold",
+                        legs.len()
+                    ),
                 }
             }
         }
@@ -517,13 +612,32 @@ impl JobGraph {
         let snaps = &snap_for;
         let results = parallel_map(order.len(), |j| {
             let i = order[j];
-            match snaps.get(&i) {
-                Some(s) => specs[i].run_forked(s),
-                None => (specs[i].run(), false),
-            }
+            run_isolated(|| {
+                crate::faulthooks::maybe_inject_job_panic();
+                match snaps.get(&i) {
+                    Some(s) => specs[i].run_forked(s),
+                    None => (specs[i].run(), false),
+                }
+            })
         });
-        for (j, (r, forked)) in results.into_iter().enumerate() {
+        let mut failures = Vec::new();
+        for (j, (res, retries)) in results.into_iter().enumerate() {
             let i = to_run[j];
+            cache.stats.retries += retries;
+            let (r, forked) = match res {
+                Ok(v) => v,
+                Err(error) => {
+                    // The leg exhausted its retries: report it and leave
+                    // its slot empty so the rest of the sweep completes.
+                    cache.stats.failed += 1;
+                    failures.push(JobFailure {
+                        workload: expected_workload(self.specs[i].workload),
+                        mechanism: self.specs[i].mechanism.label(),
+                        error,
+                    });
+                    continue;
+                }
+            };
             let warmup = self.specs[i].cfg.warmup_cpu_cycles;
             if forked {
                 cache.stats.warmup_forks += 1;
@@ -538,10 +652,7 @@ impl JobGraph {
             slots[i] = Some(arc);
         }
 
-        JobResults {
-            tickets: self.tickets,
-            unique: slots.into_iter().map(|s| s.expect("every slot filled")).collect(),
-        }
+        JobResults { tickets: self.tickets, unique: slots, failures }
     }
 
     /// Run every submission independently — no dedup, no cache reads or
@@ -553,24 +664,67 @@ impl JobGraph {
         cache.stats.simulated += self.tickets.len() as u64;
         let specs = &self.specs;
         let tickets = &self.tickets;
-        let results = parallel_map(tickets.len(), |j| specs[tickets[j]].run());
-        JobResults {
-            tickets: (0..self.tickets.len()).collect(),
-            unique: results.into_iter().map(Arc::new).collect(),
+        let results = parallel_map(tickets.len(), |j| {
+            run_isolated(|| {
+                crate::faulthooks::maybe_inject_job_panic();
+                specs[tickets[j]].run()
+            })
+        });
+        let mut unique = Vec::with_capacity(results.len());
+        let mut failures = Vec::new();
+        for (j, (res, retries)) in results.into_iter().enumerate() {
+            cache.stats.retries += retries;
+            match res {
+                Ok(r) => unique.push(Some(Arc::new(r))),
+                Err(error) => {
+                    cache.stats.failed += 1;
+                    let spec = &self.specs[self.tickets[j]];
+                    failures.push(JobFailure {
+                        workload: expected_workload(spec.workload),
+                        mechanism: spec.mechanism.label(),
+                        error,
+                    });
+                    unique.push(None);
+                }
+            }
         }
+        JobResults { tickets: (0..self.tickets.len()).collect(), unique, failures }
     }
 }
 
+/// One leg that exhausted its retries; surfaced in sweep summaries and
+/// failure reports instead of aborting the suite.
+#[derive(Debug, Clone)]
+pub struct JobFailure {
+    pub workload: String,
+    pub mechanism: &'static str,
+    pub error: String,
+}
+
 /// Results of one graph run: redeem [`JobTicket`]s for shared
-/// [`SimResult`]s.
+/// [`SimResult`]s. Legs that panicked through every retry leave an
+/// empty slot and an entry in [`JobResults::failures`].
 pub struct JobResults {
     tickets: Vec<usize>,
-    unique: Vec<Arc<SimResult>>,
+    unique: Vec<Option<Arc<SimResult>>>,
+    failures: Vec<JobFailure>,
 }
 
 impl JobResults {
+    /// Redeem a ticket. Panics if that leg failed after every retry —
+    /// callers that tolerate holes use [`JobResults::try_get`].
     pub fn get(&self, t: JobTicket) -> &SimResult {
-        self.unique[self.tickets[t.0]].as_ref()
+        self.try_get(t).expect("job leg failed after retries (see JobResults::failures)")
+    }
+
+    /// Redeem a ticket; `None` if the leg failed after every retry.
+    pub fn try_get(&self, t: JobTicket) -> Option<&SimResult> {
+        self.unique[self.tickets[t.0]].as_deref()
+    }
+
+    /// Legs that exhausted their retries in this graph run.
+    pub fn failures(&self) -> &[JobFailure] {
+        &self.failures
     }
 }
 
@@ -626,7 +780,7 @@ impl Default for JobEngine {
 ///   is bit-identity, and decimal printing cannot guarantee it
 ///   (`json::Val` keeps numeric tokens raw, so full-range `u64` bit
 ///   patterns never round through `f64`);
-/// * `McStats` is a fixed-order 14-integer array per channel;
+/// * `McStats` is a fixed-order 18-integer array per channel;
 /// * `EnergyBreakdown` is a fixed-order 5-integer (bits) array.
 ///
 /// Any parse failure — wrong version, unknown mechanism label, malformed
@@ -657,7 +811,11 @@ mod diskjson {
     /// v3: results carry the interval-sampling summary
     /// (`SimResult::sampled`) as the fixed-order 7-integer `sampled`
     /// array (empty = not sampled); v2 entries lack the field.
-    pub const VERSION: u64 = 3;
+    ///
+    /// v4: `McStats` grew the four fault-injection counters
+    /// (timing_violations, mitigation_evictions, guard_suppressed,
+    /// rows_blacklisted), so the per-channel array is 18 integers.
+    pub const VERSION: u64 = 4;
 
     // ---- encoding ----
 
@@ -682,7 +840,7 @@ mod diskjson {
     fn mc_array(m: &McStats) -> String {
         // Fixed field order; bump VERSION if it ever changes.
         format!(
-            "[{},{},{},{},{},{},{},{},{},{},{},{},{},{}]",
+            "[{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}]",
             m.acts,
             m.acts_reduced,
             m.reads,
@@ -696,7 +854,11 @@ mod diskjson {
             m.read_latency_cnt,
             m.bank_open_cycles,
             m.wq_forwards,
-            m.rejects
+            m.rejects,
+            m.timing_violations,
+            m.mitigation_evictions,
+            m.guard_suppressed,
+            m.rows_blacklisted
         )
     }
 
@@ -753,7 +915,7 @@ mod diskjson {
 
     fn decode_mc(v: &Val) -> Option<McStats> {
         let f = u64_vec(v)?;
-        if f.len() != 14 {
+        if f.len() != 18 {
             return None;
         }
         Some(McStats {
@@ -771,6 +933,10 @@ mod diskjson {
             bank_open_cycles: f[11],
             wq_forwards: f[12],
             rejects: f[13],
+            timing_violations: f[14],
+            mitigation_evictions: f[15],
+            guard_suppressed: f[16],
+            rows_blacklisted: f[17],
         })
     }
 
@@ -1128,6 +1294,74 @@ mod tests {
         assert_eq!(res.get(t), cold_res.get(tc));
 
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_isolated_retries_then_succeeds_or_reports() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let n = AtomicU32::new(0);
+        let (res, retries) = run_isolated(|| {
+            if n.fetch_add(1, Ordering::SeqCst) < 2 {
+                panic!("flaky");
+            }
+            42
+        });
+        assert_eq!(res.unwrap(), 42);
+        assert_eq!(retries, 2);
+
+        let (res, retries) = run_isolated(|| -> u32 { panic!("always broken") });
+        assert_eq!(res.unwrap_err(), "always broken");
+        assert_eq!(retries, JOB_RETRIES as u64);
+    }
+
+    #[test]
+    fn corrupt_result_entry_is_quarantined_not_a_permanent_miss() {
+        let dir = std::env::temp_dir().join(format!("cc_quarantine_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let spec = tiny_single(MechanismKind::Baseline, 3);
+        let mut cache = SimCache::with_disk(&dir).unwrap();
+        let mut g = JobGraph::new();
+        g.submit(spec.clone());
+        g.run(&mut cache);
+        let path = cache.disk_path(&spec.key()).unwrap();
+        std::fs::write(&path, "{\"version\": 4, \"wor").unwrap();
+
+        let mut fresh = SimCache::with_disk(&dir).unwrap();
+        let mut g = JobGraph::new();
+        let t = g.submit(spec.clone());
+        let res = g.run(&mut fresh);
+        assert_eq!(fresh.stats.disk_hits, 0);
+        assert_eq!(fresh.stats.quarantined, 1, "corrupt entry must be quarantined");
+        assert_eq!(fresh.stats.simulated, 1, "and the job re-simulated");
+        assert_eq!(res.get(t).workload, PROFILES[3].name);
+        // The corrupt bytes were preserved aside and a fresh entry
+        // published in place, so the next engine hits clean.
+        let mut bad = path.as_os_str().to_os_string();
+        bad.push(".bad");
+        assert!(std::path::PathBuf::from(bad).exists());
+        let mut third = SimCache::with_disk(&dir).unwrap();
+        let mut g = JobGraph::new();
+        g.submit(spec);
+        g.run(&mut third);
+        assert_eq!(third.stats.disk_hits, 1);
+        assert_eq!(third.stats.quarantined, 0);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn summary_appends_fault_clauses_only_when_present() {
+        let mut s = CacheStats::default();
+        assert!(!s.summary().contains("faults:"));
+        assert!(!s.summary().contains("quarantined"));
+        s.retries = 3;
+        s.failed = 1;
+        s.quarantined = 2;
+        let line = s.summary();
+        assert!(line.starts_with("job graph: "), "clauses stay on the stable line");
+        assert!(line.contains("; 2 quarantined"));
+        assert!(line.ends_with("; faults: 3 retried, 1 failed"));
     }
 
     #[test]

@@ -75,13 +75,25 @@ impl Val {
 
 /// Parse one JSON document; trailing non-whitespace is a parse failure.
 pub fn parse_root(text: &str) -> Option<Val> {
+    parse_root_at(text).ok()
+}
+
+/// Like [`parse_root`], but a failure reports the byte offset the parser
+/// stopped at — the position of (or just after) the offending input —
+/// so loaders can surface a structured file + offset error instead of a
+/// generic "malformed JSON".
+pub fn parse_root_at(text: &str) -> std::result::Result<Val, u64> {
     let mut p = Parser::new(text);
-    let v = p.value()?;
-    p.ws();
-    if p.i == p.s.len() {
-        Some(v)
-    } else {
-        None
+    match p.value() {
+        Some(v) => {
+            p.ws();
+            if p.i == p.s.len() {
+                Ok(v)
+            } else {
+                Err(p.i as u64)
+            }
+        }
+        None => Err(p.i as u64),
     }
 }
 
@@ -326,6 +338,16 @@ mod tests {
         assert!(matches!(v.field("nil"), Some(Val::Null)));
         assert_eq!(v.field("xs").unwrap().arr().unwrap().len(), 0);
         assert!(v.field("missing").is_none());
+    }
+
+    #[test]
+    fn parse_failures_report_the_stop_offset() {
+        // Truncated object: the cursor stops where the next key should
+        // start (byte 9, just past the comma).
+        assert_eq!(parse_root_at("{\"a\": 12,").unwrap_err(), 9);
+        // Trailing garbage: the cursor stops at the garbage itself.
+        assert_eq!(parse_root_at("{} trailing").unwrap_err(), 3);
+        assert!(parse_root_at("{\"a\": 1}").is_ok());
     }
 
     #[test]

@@ -27,7 +27,7 @@ use std::collections::HashMap;
 
 use crate::config::schema;
 use crate::config::SystemConfig;
-use crate::error::{Context, Result};
+use crate::error::{Context, Result, SimError};
 use crate::latency::{MechanismKind, TimingTable};
 use crate::runtime::charge_model::timing_table_or_analytic;
 use crate::trace::PROFILES;
@@ -35,7 +35,7 @@ use crate::{bail, ensure};
 
 use super::experiments::ExperimentScale;
 use super::jobs::{JobEngine, JobGraph, JobSpec, JobTicket, WorkloadId};
-use super::json::{parse_root, Val};
+use super::json::{parse_root_at, Val};
 
 /// Base machine preset a scenario starts from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -184,7 +184,18 @@ impl ScenarioSpec {
     /// workload names, derive rules) are checked here; registry paths
     /// and value types are checked in [`ScenarioSpec::expand`].
     pub fn parse(text: &str) -> Result<Self> {
-        let root = parse_root(text).context("scenario spec: malformed JSON")?;
+        Self::parse_named(text, "scenario spec")
+    }
+
+    /// [`ScenarioSpec::parse`] for a spec read from `file`: malformed
+    /// JSON — truncated download, stray comma — reports the file and the
+    /// byte offset the parser stopped at ([`SimError::ParseAt`]).
+    pub fn parse_named(text: &str, file: &str) -> Result<Self> {
+        let root = parse_root_at(text).map_err(|offset| SimError::ParseAt {
+            file: file.to_string(),
+            offset,
+            msg: "malformed JSON".to_string(),
+        })?;
         let obj = root.entries().context("scenario spec: top level must be a JSON object")?;
         check_keys(obj, SPEC_KEYS, "scenario spec")?;
 
@@ -629,6 +640,10 @@ pub struct ScenarioRun {
     pub rows: Vec<ScenarioRow>,
     pub points: usize,
     pub legs_submitted: usize,
+    /// Legs that panicked through every retry ([`JobResults::failures`]):
+    /// their units are dropped from the affected rows (a row with no
+    /// surviving units is omitted) and the sweep still completes.
+    pub failed_legs: usize,
 }
 
 impl ScenarioPlan {
@@ -694,28 +709,47 @@ impl ScenarioPlan {
             .collect();
         let legs_submitted = graph.submitted_len();
         let res = eng.run(graph);
+        let failed_legs = res.failures().len();
+        for f in res.failures() {
+            eprintln!(
+                "warning: leg failed after retries: {} / {} — {}",
+                f.workload, f.mechanism, f.error
+            );
+        }
 
         let mut rows = Vec::with_capacity(self.points.len() * self.mechanisms.len());
         for (pi, point) in self.points.iter().enumerate() {
             for (mi, &mech) in self.mechanisms.iter().enumerate() {
                 let mut sum = 0.0;
+                let mut units = 0usize;
                 for ui in 0..self.units.len() {
                     let bt = match self.baseline {
                         BaselineMode::Shared => shared_base[ui],
                         BaselineMode::PerPoint => point_base[pi][ui],
                     };
-                    let tb: f64 = res.get(bt).core_ipc.iter().sum();
-                    let tc: f64 = res.get(mech_tickets[pi][mi][ui]).core_ipc.iter().sum();
+                    // A failed leg (baseline or mechanism side) drops this
+                    // unit from the row instead of aborting the sweep.
+                    let (Some(base), Some(with_mech)) =
+                        (res.try_get(bt), res.try_get(mech_tickets[pi][mi][ui]))
+                    else {
+                        continue;
+                    };
+                    let tb: f64 = base.core_ipc.iter().sum();
+                    let tc: f64 = with_mech.core_ipc.iter().sum();
                     sum += tc / tb;
+                    units += 1;
+                }
+                if units == 0 {
+                    continue;
                 }
                 rows.push(ScenarioRow {
                     coords: point.coords.clone(),
                     mechanism: mech,
-                    speedup: sum / self.units.len() as f64,
+                    speedup: sum / units as f64,
                 });
             }
         }
-        ScenarioRun { rows, points: self.points.len(), legs_submitted }
+        ScenarioRun { rows, points: self.points.len(), legs_submitted, failed_legs }
     }
 }
 

@@ -11,6 +11,15 @@ pub enum SimError {
     Io(std::io::Error),
     /// Malformed input: a trace line, CLI option, or metadata field.
     Parse(String),
+    /// Malformed input pinned to a source location: truncated or corrupt
+    /// trace/scenario files report the file and byte offset instead of
+    /// panicking or losing the position in a generic message.
+    ParseAt {
+        file: String,
+        /// Byte offset of the offending input within `file`.
+        offset: u64,
+        msg: String,
+    },
     /// Anything else worth a message (artifact loading, config errors).
     Msg(String),
 }
@@ -28,6 +37,9 @@ impl fmt::Display for SimError {
         match self {
             SimError::Io(e) => write!(f, "io error: {e}"),
             SimError::Parse(m) => write!(f, "parse error: {m}"),
+            SimError::ParseAt { file, offset, msg } => {
+                write!(f, "parse error in {file} at byte {offset}: {msg}")
+            }
             SimError::Msg(m) => f.write_str(m),
         }
     }
@@ -135,6 +147,16 @@ mod tests {
         ));
         let e = r.with_context(|| "loading thing".to_string()).unwrap_err();
         assert!(e.to_string().contains("loading thing"));
+    }
+
+    #[test]
+    fn parse_at_reports_file_and_offset() {
+        let e = SimError::ParseAt {
+            file: "traces/x.trace".into(),
+            offset: 137,
+            msg: "bad hex address".into(),
+        };
+        assert_eq!(e.to_string(), "parse error in traces/x.trace at byte 137: bad hex address");
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Test-only fault hooks for the coordinator's recovery paths.
+//!
+//! Each hook is a global injection budget: while a budget is positive,
+//! the corresponding failure fires and the budget decrements; at zero
+//! the hook is inert (the production default — budgets start at zero
+//! and cost one relaxed atomic load per check). Budgets arm either from
+//! the environment at first use — `PALLAS_FAULT_JOB_PANICS`,
+//! `PALLAS_FAULT_CORRUPT_CACHE`, `PALLAS_FAULT_CORRUPT_CKPT`,
+//! `PALLAS_FAULT_TRUNCATE_TRACE`, each an integer count — or
+//! programmatically via the `set_*` functions (tests must serialize on a
+//! lock: budgets are process-global).
+//!
+//! These inject **harness** faults (job panics, corrupt cache bytes,
+//! truncated trace reads) to prove every recovery path actually runs:
+//! retry + failure report, quarantine, structured parse errors. They are
+//! unrelated to the simulated machine's `fault.*` retention model
+//! (`controller::fault`), which is a config-fingerprinted part of the
+//! experiment, not a harness fault.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Once;
+
+static JOB_PANICS: AtomicI64 = AtomicI64::new(0);
+static CORRUPT_CACHE: AtomicI64 = AtomicI64::new(0);
+static CORRUPT_CKPT: AtomicI64 = AtomicI64::new(0);
+static TRUNCATE_TRACE: AtomicI64 = AtomicI64::new(0);
+
+static ENV_ARMED: Once = Once::new();
+
+fn arm_from_env() {
+    ENV_ARMED.call_once(|| {
+        for (var, slot) in [
+            ("PALLAS_FAULT_JOB_PANICS", &JOB_PANICS),
+            ("PALLAS_FAULT_CORRUPT_CACHE", &CORRUPT_CACHE),
+            ("PALLAS_FAULT_CORRUPT_CKPT", &CORRUPT_CKPT),
+            ("PALLAS_FAULT_TRUNCATE_TRACE", &TRUNCATE_TRACE),
+        ] {
+            if let Some(n) = std::env::var(var).ok().and_then(|v| v.parse::<i64>().ok()) {
+                slot.fetch_add(n, Ordering::SeqCst);
+            }
+        }
+    });
+}
+
+/// Consume one unit of `slot`'s budget; false when exhausted.
+fn take(slot: &AtomicI64) -> bool {
+    arm_from_env();
+    if slot.load(Ordering::Relaxed) <= 0 {
+        return false;
+    }
+    slot.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| if v > 0 { Some(v - 1) } else { None })
+        .is_ok()
+}
+
+/// Panic (to be caught by the job engine's `catch_unwind`) while the
+/// job-panic budget lasts. Call sites sit inside `run_isolated`, so a
+/// budget of N produces N caught panics, exercising retry/backoff.
+pub fn maybe_inject_job_panic() {
+    if take(&JOB_PANICS) {
+        panic!("injected job fault (PALLAS_FAULT_JOB_PANICS)");
+    }
+}
+
+/// Corrupt a just-read result-cache entry in memory, as if the file's
+/// bytes had rotted: the decode fails and the quarantine path runs.
+pub fn maybe_corrupt_cache_entry(text: &mut String) {
+    if take(&CORRUPT_CACHE) {
+        corrupt_middle_byte(text);
+    }
+}
+
+/// Same, for a warmup-checkpoint entry.
+pub fn maybe_corrupt_checkpoint(text: &mut String) {
+    if take(&CORRUPT_CKPT) {
+        corrupt_middle_byte(text);
+    }
+}
+
+/// Truncate a just-read trace file to half its bytes, exercising the
+/// structured parse-error path (file + byte offset, no panic).
+pub fn maybe_truncate_trace(text: &mut String) {
+    if take(&TRUNCATE_TRACE) {
+        let mut cut = text.len() / 2;
+        while cut > 0 && !text.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        text.truncate(cut);
+    }
+}
+
+/// Overwrite the middle byte with `!` — invalid in any JSON context
+/// outside a string literal, so the decode deterministically fails
+/// (flipping a digit could silently decode to a *different* value,
+/// which is exactly the wrong kind of fault to inject here).
+fn corrupt_middle_byte(text: &mut String) {
+    let mut bytes = std::mem::take(text).into_bytes();
+    if !bytes.is_empty() {
+        let mid = bytes.len() / 2;
+        bytes[mid] = b'!';
+    }
+    *text = String::from_utf8(bytes).unwrap_or_default();
+}
+
+/// Programmatic budget setters for tests (which must hold a shared lock
+/// — budgets are process-global and the test harness is parallel).
+pub fn set_job_panics(n: i64) {
+    arm_from_env();
+    JOB_PANICS.store(n, Ordering::SeqCst);
+}
+
+pub fn set_corrupt_cache(n: i64) {
+    arm_from_env();
+    CORRUPT_CACHE.store(n, Ordering::SeqCst);
+}
+
+pub fn set_corrupt_checkpoint(n: i64) {
+    arm_from_env();
+    CORRUPT_CKPT.store(n, Ordering::SeqCst);
+}
+
+pub fn set_truncate_trace(n: i64) {
+    arm_from_env();
+    TRUNCATE_TRACE.store(n, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Budgets are process-global; every test touching them serializes
+    // here (integration tests in tests/faults.rs use their own lock —
+    // separate process, separate statics).
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn budgets_decrement_to_inert() {
+        let _g = LOCK.lock().unwrap();
+        set_corrupt_cache(2);
+        let mut a = String::from("0123456789");
+        maybe_corrupt_cache_entry(&mut a);
+        assert_eq!(a, "01234!6789");
+        let mut b = String::from("0123456789");
+        maybe_corrupt_cache_entry(&mut b);
+        assert_eq!(b, "01234!6789");
+        let mut c = String::from("0123456789");
+        maybe_corrupt_cache_entry(&mut c);
+        assert_eq!(c, "0123456789", "exhausted budget must be inert");
+        set_corrupt_cache(0);
+    }
+
+    #[test]
+    fn injected_panic_is_catchable_and_bounded() {
+        let _g = LOCK.lock().unwrap();
+        set_job_panics(1);
+        let r = std::panic::catch_unwind(maybe_inject_job_panic);
+        assert!(r.is_err(), "budgeted call must panic");
+        maybe_inject_job_panic(); // budget exhausted: no panic
+        set_job_panics(0);
+    }
+
+    #[test]
+    fn trace_truncation_halves_on_a_char_boundary() {
+        let _g = LOCK.lock().unwrap();
+        set_truncate_trace(1);
+        let mut t = String::from("R 0x1000\nW 0x2000\n");
+        maybe_truncate_trace(&mut t);
+        assert_eq!(t.len(), 9);
+        maybe_truncate_trace(&mut t);
+        assert_eq!(t.len(), 9, "budget spent");
+        set_truncate_trace(0);
+    }
+}

@@ -93,6 +93,19 @@ impl CoreTable {
         *victim = Entry { valid: true, key: key.0, inserted_at: now, lru };
     }
 
+    /// Drop `key`'s entry if present (violation mitigation). Returns
+    /// true if a valid entry was evicted.
+    fn invalidate(&mut self, key: RowKey) -> bool {
+        let base = self.set_index(key) * self.ways;
+        for e in &mut self.entries[base..base + self.ways] {
+            if e.valid && e.key == key.0 {
+                e.valid = false;
+                return true;
+            }
+        }
+        false
+    }
+
     /// Periodic sweep: drop entries older than `max_age`.
     fn invalidate_older_than(&mut self, now: u64, max_age: u64) {
         for e in &mut self.entries {
@@ -215,6 +228,14 @@ impl Mechanism for ChargeCache {
     fn on_refresh(&mut self, _now: u64, _rank: u32, _refresh_count: u64) {
         // Refresh replenishes rows but ChargeCache does not track it
         // (that is NUAT's domain); nothing to do.
+    }
+
+    fn on_violation(&mut self, _now: u64, core: u32, key: RowKey) -> bool {
+        // Evict from the replica that produced the violating grant. With
+        // per-core replicas another core may still hold the row; the
+        // sink-level blacklist catches repeat offenders globally.
+        let idx = self.table_idx(core);
+        self.tables[idx].invalidate(key)
     }
 
     fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {
@@ -344,6 +365,19 @@ mod tests {
         assert!(!t.lookup(k(1), 4, 1000), "LRU entry evicted");
         assert!(t.lookup(k(2), 4, 1000));
         assert!(t.lookup(k(3), 4, 1000));
+    }
+
+    #[test]
+    fn violation_evicts_the_entry() {
+        let mut c = cc();
+        c.on_precharge(0, 0, key(6));
+        assert!(c.on_activate(10, 0, key(6)).reduced);
+        assert!(c.on_violation(10, 0, key(6)), "entry was cached, must evict");
+        assert!(!c.on_activate(11, 0, key(6)).reduced, "evicted row must miss");
+        assert!(!c.on_violation(12, 0, key(6)), "nothing left to evict");
+        // The next precharge re-inserts it as usual.
+        c.on_precharge(20, 0, key(6));
+        assert!(c.on_activate(30, 0, key(6)).reduced);
     }
 
     #[test]

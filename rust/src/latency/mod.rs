@@ -209,6 +209,16 @@ pub trait Mechanism: Send {
     /// Called after each all-bank REF completes on `rank`.
     fn on_refresh(&mut self, now: u64, rank: u32, refresh_count: u64);
 
+    /// A reduced-timing grant for `key` turned out to violate the row's
+    /// true safe window ([`crate::controller::fault`]): the mechanism
+    /// must stop granting reduced timing for it until the next
+    /// precharge. Returns true if a cached entry was actually evicted.
+    /// Mechanisms without a table (baseline, NUAT, LL-DRAM) keep the
+    /// default no-op.
+    fn on_violation(&mut self, _now: u64, _core: u32, _key: RowKey) -> bool {
+        false
+    }
+
     /// Checkpoint hook: stateless mechanisms (baseline, LL-DRAM) keep
     /// the defaults, which write/consume nothing.
     fn export_state(&self, _enc: &mut crate::sim::checkpoint::Enc) {}
@@ -299,6 +309,13 @@ impl Mechanism for CombinedMech {
     fn on_refresh(&mut self, now: u64, rank: u32, refresh_count: u64) {
         self.cc.on_refresh(now, rank, refresh_count);
         self.nuat.on_refresh(now, rank, refresh_count);
+    }
+
+    fn on_violation(&mut self, now: u64, core: u32, key: RowKey) -> bool {
+        // No short-circuit: both components must drop the row.
+        let a = self.cc.on_violation(now, core, key);
+        let b = self.nuat.on_violation(now, core, key);
+        a | b
     }
 
     fn export_state(&self, enc: &mut crate::sim::checkpoint::Enc) {

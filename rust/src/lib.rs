@@ -42,6 +42,7 @@ pub mod cpu;
 pub mod dram;
 pub mod energy;
 pub mod error;
+pub mod faulthooks;
 pub mod latency;
 pub mod runtime;
 pub mod sim;

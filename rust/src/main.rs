@@ -805,7 +805,7 @@ fn cmd_scenario(args: &Args, eng: &mut JobEngine) -> Result<()> {
         }
         let text = std::fs::read_to_string(file)
             .with_context(|| format!("reading scenario spec {file:?}"))?;
-        let spec = ScenarioSpec::parse(&text)?;
+        let spec = ScenarioSpec::parse_named(&text, file)?;
         run_scenario_spec(spec, args, eng)?;
     }
     Ok(())
@@ -873,6 +873,12 @@ fn render_scenario(plan: &ScenarioPlan, run: &ScenarioRun) -> Result<()> {
         plan.units.len(),
         run.legs_submitted
     );
+    if run.failed_legs > 0 {
+        println!(
+            "WARNING: {} leg(s) failed after retries — affected rows cover surviving units only",
+            run.failed_legs
+        );
+    }
     let mut headers: Vec<&str> = plan.axes.iter().map(|a| a.as_str()).collect();
     headers.push("mechanism");
     headers.push("speedup");
@@ -976,6 +982,15 @@ fn cmd_run(args: &Args, eng: &mut JobEngine) -> Result<()> {
         result.mc.iter().map(|m| m.row_conflicts).sum::<u64>()
     );
     println!("avg read latency : {:.1} bus cycles", result.avg_read_latency());
+    if cfg.fault.enabled {
+        println!(
+            "faults    : {} violations ({} evicted), {} guard-suppressed, {} rows blacklisted",
+            result.timing_violations(),
+            result.mitigation_evictions(),
+            result.guard_suppressed(),
+            result.rows_blacklisted()
+        );
+    }
     println!("1ms-RLTL  : {}", pct(result.rltl_at_ms(1.0)));
     println!(
         "DRAM energy: {:.1} uJ (bg {:.1}, act {:.1}, rd {:.1}, wr {:.1}, ref {:.1})",

@@ -42,7 +42,10 @@ use crate::sim::system::System;
 
 /// Bump when the word-stream layout changes; decode refuses other
 /// versions (the caller re-simulates instead).
-pub const SNAPSHOT_VERSION: u64 = 1;
+///
+/// v2: CommandSink gained the fault-injection state section and four
+/// violation/mitigation stat counters.
+pub const SNAPSHOT_VERSION: u64 = 2;
 
 /// Section tags (ASCII-packed) — cheap structural checks so a truncated
 /// or shifted stream fails fast instead of misassigning words.
@@ -63,6 +66,7 @@ pub mod tags {
     pub const CHANNEL: u64 = 0x4348_414E; // "CHAN"
     pub const RANK: u64 = 0x52_414E4B; // "RANK"
     pub const BANK: u64 = 0x42_414E4B; // "BANK"
+    pub const FAULT: u64 = 0x4641_554C; // "FAUL"
 }
 
 /// Append-only word-stream encoder.

@@ -41,11 +41,82 @@
 //! as under the single-threaded loop.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::controller::{Completion, MemController, Request};
 use crate::dram::command::Loc;
 use crate::sim::wake::WakeIndex;
+
+/// Process-wide count of hung-shard flags raised by [`Watchdog`]
+/// (telemetry; a flag never alters simulation state or results).
+static HUNG_SHARDS: AtomicU64 = AtomicU64::new(0);
+
+/// Hung-shard flags raised so far in this process.
+pub fn hung_shards() -> u64 {
+    HUNG_SHARDS.load(Ordering::Relaxed)
+}
+
+/// Default watchdog threshold: `PALLAS_WATCHDOG_MS` (0 disables),
+/// falling back to 10 s — far beyond any epoch's real compute, so a
+/// flag means a worker is genuinely stuck, not slow.
+fn watchdog_threshold_ms() -> u64 {
+    static MS: OnceLock<u64> = OnceLock::new();
+    *MS.get_or_init(|| {
+        std::env::var("PALLAS_WATCHDOG_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(10_000)
+    })
+}
+
+/// Stall detector for one epoch-barrier wait: the coordinator polls it
+/// from the yield path while waiting on a worker's acknowledgement, and
+/// if the wait outlives the threshold the shard is flagged (once per
+/// wait) on stderr and in [`hung_shards`]. Detection only — the wait
+/// itself continues, so results are unaffected.
+pub struct Watchdog {
+    shard: usize,
+    threshold_ms: u64,
+    start: Option<Instant>,
+    fired: bool,
+}
+
+impl Watchdog {
+    /// Watchdog for a wait on `shard`, thresholded from the environment.
+    pub fn new(shard: usize) -> Self {
+        Self::with_threshold(shard, watchdog_threshold_ms())
+    }
+
+    /// Explicit threshold (tests); `ms == 0` disables.
+    pub fn with_threshold(shard: usize, ms: u64) -> Self {
+        Self { shard, threshold_ms: ms, start: None, fired: false }
+    }
+
+    /// Poll from a wait loop's slow path (every few thousand spins — the
+    /// clock is only read here). The first poll stamps the start time.
+    pub fn poll(&mut self) {
+        if self.fired || self.threshold_ms == 0 {
+            return;
+        }
+        let now = Instant::now();
+        match self.start {
+            None => self.start = Some(now),
+            Some(t0) => {
+                if now.duration_since(t0).as_millis() as u64 >= self.threshold_ms {
+                    self.fired = true;
+                    HUNG_SHARDS.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "warning: watchdog — shard {} has not acknowledged its epoch in {} ms (hung worker?)",
+                        self.shard, self.threshold_ms
+                    );
+                }
+            }
+        }
+    }
+
+    /// Whether this wait was flagged.
+    pub fn fired(&self) -> bool {
+        self.fired
+    }
+}
 
 /// A core→channel request crossing a shard boundary: enqueued on the
 /// coordinator at bus cycle `bus`, delivered to the owning shard at the
@@ -203,5 +274,35 @@ pub fn worker_loop(mut st: ShardState, slot: &ShardSlot) -> ShardState {
             std::mem::swap(&mut *shared, &mut out);
         }
         slot.done.store(e, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watchdog_flags_a_stalled_wait_once() {
+        let before = hung_shards();
+        let mut wd = Watchdog::with_threshold(3, 1);
+        assert!(!wd.fired());
+        wd.poll(); // stamps the start time
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        wd.poll();
+        assert!(wd.fired(), "threshold elapsed: the wait must be flagged");
+        let after = hung_shards();
+        assert!(after > before, "the global flag counter must move");
+        wd.poll();
+        wd.poll();
+        assert!(wd.fired(), "one flag per wait; further polls are no-ops");
+    }
+
+    #[test]
+    fn zero_threshold_disables_the_watchdog() {
+        let mut wd = Watchdog::with_threshold(0, 0);
+        wd.poll();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        wd.poll();
+        assert!(!wd.fired());
     }
 }

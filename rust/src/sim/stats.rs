@@ -83,6 +83,28 @@ impl SimResult {
         self.energy.total_nj() / self.total_insts.max(1) as f64
     }
 
+    /// Timing violations across channels (`fault.*` injection): reduced
+    /// ACTs past a weak row's true safe window, each replayed at full
+    /// timing.
+    pub fn timing_violations(&self) -> u64 {
+        self.mc.iter().map(|m| m.timing_violations).sum()
+    }
+
+    /// Violations whose row was evicted from the mechanism table.
+    pub fn mitigation_evictions(&self) -> u64 {
+        self.mc.iter().map(|m| m.mitigation_evictions).sum()
+    }
+
+    /// Reduced grants clamped to full timing by the blacklist guard band.
+    pub fn guard_suppressed(&self) -> u64 {
+        self.mc.iter().map(|m| m.guard_suppressed).sum()
+    }
+
+    /// Rows blacklisted by the adaptive guard across channels.
+    pub fn rows_blacklisted(&self) -> u64 {
+        self.mc.iter().map(|m| m.rows_blacklisted).sum()
+    }
+
     /// Mean read latency in bus cycles.
     pub fn avg_read_latency(&self) -> f64 {
         let (sum, cnt) = self

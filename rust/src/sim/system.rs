@@ -23,7 +23,7 @@ use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::latency::MechanismKind;
 use crate::sim::engine::{self, EventDriven, LoopMode};
 use crate::sim::sample::SampleSummary;
-use crate::sim::shard::{worker_loop, EnqMsg, EpochOut, ShardSlot, ShardState};
+use crate::sim::shard::{worker_loop, EnqMsg, EpochOut, ShardSlot, ShardState, Watchdog};
 use crate::sim::stats::SimResult;
 use crate::sim::wake::WakeIndex;
 use crate::trace::{profile::multicore_mix, Profile, SynthTrace, TraceSource};
@@ -856,10 +856,17 @@ impl System {
                         if shard_bound[s] <= now {
                             let slot = &slots[s - 1];
                             let mut spins = 0u32;
+                            let mut watchdog = Watchdog::new(s);
                             while slot.done.load(Ordering::Acquire) != epoch {
                                 spins += 1;
                                 if spins > 1_000 {
                                     std::thread::yield_now();
+                                    // Clock reads only on the (rare) deep
+                                    // stall path: a healthy worker acks
+                                    // within the first few spins.
+                                    if spins & 0xFFF == 0 {
+                                        watchdog.poll();
+                                    }
                                 } else {
                                     std::hint::spin_loop();
                                 }

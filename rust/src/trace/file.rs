@@ -4,11 +4,11 @@
 //! `3 0x44 W`. `gen-traces` writes these; `simulate --trace-file` replays
 //! them (looping at EOF, like Ramulator's trace wrap-around).
 
-use std::io::{BufRead, BufWriter, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use crate::bail;
-use crate::error::{Context, Result};
+use crate::error::{Context, Result, SimError};
 
 use super::{TraceEntry, TraceSource};
 
@@ -64,16 +64,36 @@ pub struct FileTrace {
 
 impl FileTrace {
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
-        let f = std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let path = path.as_ref();
+        let mut text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        crate::faulthooks::maybe_truncate_trace(&mut text);
+        Self::from_text(&text, &path.display().to_string())
+    }
+
+    /// Parse trace text, attributing any malformed line — including one
+    /// cut short by a truncated read — to `file` at its byte offset
+    /// ([`SimError::ParseAt`]); never a panic. Offsets assume `\n` line
+    /// endings (what [`write_trace`] emits).
+    pub fn from_text(text: &str, file: &str) -> Result<Self> {
         let mut entries = Vec::new();
-        for line in std::io::BufReader::new(f).lines() {
-            if let Some(e) = parse_line(&line?)? {
-                entries.push(e);
+        let mut offset = 0u64;
+        for line in text.lines() {
+            match parse_line(line) {
+                Ok(Some(e)) => entries.push(e),
+                Ok(None) => {}
+                Err(e) => {
+                    return Err(SimError::ParseAt {
+                        file: file.to_string(),
+                        offset,
+                        msg: e.to_string(),
+                    })
+                }
             }
+            offset += line.len() as u64 + 1;
         }
         if entries.is_empty() {
-            bail!("empty trace file");
+            bail!("empty trace file {file}");
         }
         Ok(Self { entries, pos: 0 })
     }
@@ -133,6 +153,24 @@ mod tests {
         assert_eq!(parse_line("").unwrap(), None);
         assert!(parse_line("x y").is_err());
         assert!(parse_line("1 0x10 Q").is_err());
+    }
+
+    #[test]
+    fn truncated_input_reports_file_and_byte_offset() {
+        // A read cut off mid-token: the error names the file and the
+        // byte offset of the offending line, and nothing panics.
+        let text = "# header\n7 0x1a2b\n3 0x";
+        let err = FileTrace::from_text(text, "t.trace").unwrap_err();
+        match err {
+            SimError::ParseAt { ref file, offset, ref msg } => {
+                assert_eq!(file, "t.trace");
+                assert_eq!(offset, 18, "offset of the truncated line");
+                assert!(msg.contains("bad hex address"), "{msg:?}");
+            }
+            other => panic!("expected ParseAt, got {other:?}"),
+        }
+        // A clean prefix still loads.
+        assert_eq!(FileTrace::from_text("# header\n7 0x1a2b\n", "t.trace").unwrap().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Fault-injection robustness (DESIGN.md §13): the seeded retention-fault
+//! model must stay bit-deterministic across loop modes and shard counts,
+//! disabled `fault.*` knobs must be invisible, and every harness recovery
+//! path — retry/backoff, per-leg failure reports, cache quarantine,
+//! structured parse errors — must actually run under injected faults,
+//! never panicking and never serving a wrong result.
+
+use std::sync::Mutex;
+
+use chargecache::config::SystemConfig;
+use chargecache::coordinator::jobs::{JobEngine, JobGraph, JobSpec};
+use chargecache::coordinator::scenario::ScenarioSpec;
+use chargecache::coordinator::ExperimentScale;
+use chargecache::error::SimError;
+use chargecache::faulthooks;
+use chargecache::latency::MechanismKind;
+use chargecache::sim::engine::LoopMode;
+use chargecache::sim::{SimResult, System};
+use chargecache::trace::file::{write_trace, FileTrace};
+use chargecache::trace::{Profile, SynthTrace};
+
+const GUARD_BAND: &str = include_str!("../../examples/scenarios/guard_band.json");
+
+/// Fault-hook budgets are process-global; every test that arms them (or
+/// reads files another armed test could corrupt) serializes here.
+static HOOKS: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    HOOKS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A worst-case fault config: every row weak with a zero safe window, so
+/// the first ChargeCache hit on any row is a guaranteed violation, and a
+/// zero guard band, so blacklisted rows are guard-suppressed thereafter.
+fn faulty_mix_cfg(mode: LoopMode, shards: usize) -> SystemConfig {
+    let mut cfg = SystemConfig::eight_core();
+    cfg.dram.channels = 4;
+    cfg.insts_per_core = 6_000;
+    cfg.warmup_cpu_cycles = 3_000;
+    cfg.loop_mode = mode;
+    cfg.sim_threads = shards;
+    cfg.fault.enabled = true;
+    cfg.fault.weak_ppm = 1_000_000;
+    cfg.fault.retention_pct = 0;
+    cfg.fault.guard_band_pct = 0;
+    cfg.fault.blacklist_threshold = 1;
+    cfg
+}
+
+fn tiny_single(workload: usize) -> JobSpec {
+    let mut cfg = SystemConfig::single_core();
+    cfg.insts_per_core = 1_500;
+    cfg.warmup_cpu_cycles = 500;
+    cfg.checkpoint.warmup_fork = false;
+    JobSpec::single(cfg, MechanismKind::ChargeCache, workload)
+}
+
+#[test]
+fn fault_on_runs_are_bit_identical_across_loop_modes_and_shards() {
+    let run = |mode, shards| {
+        System::new_mix(&faulty_mix_cfg(mode, shards), MechanismKind::ChargeCache, 1).run()
+    };
+    let strict = run(LoopMode::StrictTick, 1);
+    assert!(strict.timing_violations() > 0, "injected weak rows must actually violate");
+    assert!(strict.mitigation_evictions() > 0, "violations must evict their HCRAC entries");
+    assert!(strict.rows_blacklisted() > 0, "threshold 1 must blacklist violating rows");
+    let t1 = run(LoopMode::EventDriven, 1);
+    assert_eq!(strict, t1, "strict vs event drift with faults enabled");
+    for shards in [2usize, 4] {
+        let tn = run(LoopMode::EventDriven, shards);
+        assert_eq!(t1, tn, "{shards}-shard fault-on run drifted from 1-shard");
+    }
+}
+
+#[test]
+fn disabled_fault_knobs_are_invisible() {
+    // With `fault.enabled` off, every other fault.* knob must be inert:
+    // the run is bit-identical to one at the default fault config.
+    let run = |mutate: &dyn Fn(&mut SystemConfig)| {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 4;
+        cfg.insts_per_core = 4_000;
+        cfg.warmup_cpu_cycles = 2_000;
+        mutate(&mut cfg);
+        System::new_mix(&cfg, MechanismKind::ChargeCache, 0).run()
+    };
+    let default = run(&|_| {});
+    let weird = run(&|c| {
+        c.fault.weak_ppm = 999_999;
+        c.fault.retention_pct = 0;
+        c.fault.drift_interval_ms = 0.5;
+        c.fault.drift_retention_pct = 1;
+        c.fault.guard_band_pct = 3;
+        c.fault.blacklist_threshold = 9;
+    });
+    assert_eq!(default, weird, "fault.* with fault.enabled=off perturbed the simulation");
+}
+
+#[test]
+fn injected_job_panic_retries_then_succeeds_bit_identically() {
+    let _g = lock();
+    let mut clean_eng = JobEngine::new();
+    let mut g = JobGraph::new();
+    let t = g.submit(tiny_single(0));
+    let clean: SimResult = clean_eng.run(g).get(t).clone();
+
+    faulthooks::set_job_panics(1);
+    let mut eng = JobEngine::new();
+    let mut g = JobGraph::new();
+    let t = g.submit(tiny_single(0));
+    let results = eng.run(g);
+    faulthooks::set_job_panics(0);
+
+    assert_eq!(results.try_get(t), Some(&clean), "retried leg drifted from a clean run");
+    assert!(results.failures().is_empty());
+    let s = eng.stats();
+    assert_eq!(s.retries, 1);
+    assert_eq!(s.failed, 0);
+    assert!(
+        s.summary().contains("faults: 1 retried, 0 failed"),
+        "summary must surface retry counters: {}",
+        s.summary()
+    );
+}
+
+#[test]
+fn exhausted_retries_report_failures_without_aborting() {
+    let _g = lock();
+    // Two legs, three attempts each: a budget of 6 panics fails both
+    // deterministically regardless of worker interleaving.
+    faulthooks::set_job_panics(6);
+    let mut eng = JobEngine::new();
+    let mut g = JobGraph::new();
+    let t0 = g.submit(tiny_single(0));
+    let t1 = g.submit(tiny_single(1));
+    let results = eng.run(g);
+    faulthooks::set_job_panics(0);
+
+    assert!(results.try_get(t0).is_none() && results.try_get(t1).is_none());
+    assert_eq!(results.failures().len(), 2);
+    for f in results.failures() {
+        assert!(f.error.contains("injected job fault"), "unexpected panic message: {}", f.error);
+        assert!(!f.workload.is_empty() && !f.mechanism.is_empty());
+    }
+    let s = eng.stats();
+    assert_eq!(s.failed, 2);
+    assert_eq!(s.retries, 4, "each failed leg burned its two retries");
+    assert!(s.summary().contains("faults: 4 retried, 2 failed"), "{}", s.summary());
+}
+
+#[test]
+fn corrupted_disk_entries_quarantine_and_resimulate_bit_identically() {
+    let _g = lock();
+    let dir = std::env::temp_dir().join(format!("cc_faults_disk_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let submit = |g: &mut JobGraph| (0..3).map(|w| g.submit(tiny_single(w))).collect::<Vec<_>>();
+
+    let mut first = JobEngine::with_disk(&dir).unwrap();
+    let mut g = JobGraph::new();
+    let tickets = submit(&mut g);
+    let res = first.run(g);
+    let clean: Vec<SimResult> = tickets.iter().map(|&t| res.get(t).clone()).collect();
+
+    // Rot every persisted entry: clobber the middle byte (fuzz-style; a
+    // flip landing in a string field degrades to an identity-mismatch
+    // miss, one landing anywhere else breaks the decode outright).
+    let mut corrupted = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] = b'!';
+        std::fs::write(&path, &bytes).unwrap();
+        corrupted += 1;
+    }
+    assert_eq!(corrupted, 3, "expected one persisted entry per leg");
+
+    let mut second = JobEngine::with_disk(&dir).unwrap();
+    let mut g = JobGraph::new();
+    let tickets = submit(&mut g);
+    let res = second.run(g);
+    for (i, &t) in tickets.iter().enumerate() {
+        assert_eq!(
+            res.get(t),
+            &clean[i],
+            "corrupt entry must fall back to an identical cold run, never a wrong result"
+        );
+    }
+    let s = second.stats();
+    assert_eq!(s.disk_hits, 0, "no corrupt entry may be served");
+    assert_eq!(s.simulated, 3, "every leg re-simulates");
+    assert!(s.quarantined >= 1, "structural corruption must quarantine at least one file");
+    let bads = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| e.as_ref().unwrap().path().to_string_lossy().ends_with(".bad"))
+        .count();
+    assert_eq!(bads as u64, s.quarantined, "each quarantined entry is preserved as .bad");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scenario_spec_fuzz_never_panics_and_pins_the_offset() {
+    // Every truncation parses to a structured error or a valid spec —
+    // never a panic — and ParseAt offsets stay within the input.
+    for cut in 0..GUARD_BAND.len() {
+        match ScenarioSpec::parse_named(&GUARD_BAND[..cut], "guard_band.json") {
+            Ok(_) => {}
+            Err(SimError::ParseAt { ref file, offset, .. }) => {
+                assert_eq!(file, "guard_band.json");
+                assert!(offset <= cut as u64, "offset {offset} past the {cut}-byte input");
+            }
+            Err(_) => {} // vocabulary/shape errors are fine too
+        }
+    }
+    // Byte flips: clobbering any single position must fail cleanly or
+    // parse to some spec, never panic.
+    let bytes = GUARD_BAND.as_bytes();
+    for i in 0..bytes.len() {
+        let mut m = bytes.to_vec();
+        m[i] = b'!';
+        let text = String::from_utf8(m).unwrap();
+        let _ = ScenarioSpec::parse_named(&text, "f");
+    }
+}
+
+#[test]
+fn trace_text_fuzz_reports_offsets_and_never_panics() {
+    let mut text = String::from("# chargecache trace\n");
+    for i in 0..40u64 {
+        if i % 3 == 0 {
+            text.push_str(&format!("{} {:#x} W\n", i % 8, 0x40 * i + 7));
+        } else {
+            text.push_str(&format!("{} {:#x}\n", i % 8, 0x100 + i));
+        }
+    }
+    assert_eq!(FileTrace::from_text(&text, "f.trace").unwrap().len(), 40);
+    for cut in 0..text.len() {
+        match FileTrace::from_text(&text[..cut], "f.trace") {
+            Ok(t) => assert!(t.len() <= 40),
+            Err(SimError::ParseAt { offset, .. }) => {
+                assert!((offset as usize) < text.len(), "offset {offset} out of range");
+            }
+            Err(e) => assert!(e.to_string().contains("empty trace"), "{e}"),
+        }
+    }
+}
+
+#[test]
+fn injected_trace_truncation_is_a_structured_error_not_a_panic() {
+    let _g = lock();
+    let dir = std::env::temp_dir().join(format!("cc_faults_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.trace");
+    let p = Profile::by_name("mcf").unwrap();
+    let mut src = SynthTrace::new(p, 7, 0);
+    write_trace(&path, &mut src, 400).unwrap();
+    assert_eq!(FileTrace::load(&path).unwrap().len(), 400);
+
+    faulthooks::set_truncate_trace(1);
+    let r = FileTrace::load(&path);
+    faulthooks::set_truncate_trace(0);
+    match r {
+        // The half-way cut can land exactly on a line boundary...
+        Ok(t) => assert!(t.len() < 400, "truncated read must drop entries"),
+        // ...but normally lands mid-token and must name file + offset.
+        Err(e) => {
+            let s = e.to_string();
+            assert!(
+                s.contains("parse error in") && s.contains("t.trace"),
+                "expected a structured parse error, got: {s}"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_with_injected_panics_completes_with_a_failure_report() {
+    let _g = lock();
+    let spec = ScenarioSpec::parse(
+        r#"{ "name": "t", "mechanisms": ["cc"],
+             "axes": [ { "param": "chargecache.entries_per_core", "values": [64, 256] } ] }"#,
+    )
+    .unwrap();
+    let scale = ExperimentScale {
+        insts_per_core: 1_000,
+        warmup_cycles: 500,
+        mixes: 1,
+        ..ExperimentScale::default()
+    };
+    let plan = spec.expand(&scale).unwrap();
+
+    // A budget larger than every attempt of every leg: the whole sweep
+    // fails, yet run_with must return a complete report, not abort.
+    faulthooks::set_job_panics(1_000);
+    let mut eng = JobEngine::new();
+    let run = plan.run_with(&mut eng);
+    faulthooks::set_job_panics(0);
+
+    assert!(run.rows.is_empty(), "every unit failed, so no row survives");
+    assert!(run.failed_legs >= 2);
+    let s = eng.stats();
+    assert_eq!(s.failed as usize, run.failed_legs);
+    assert!(s.retries >= 2 * s.failed, "each failed leg burned its retries");
+    assert!(s.summary().contains("faults:"), "summary must surface fault counters");
+}
