@@ -9,12 +9,14 @@
 //! * default — the full suite; rewrites `BENCH_engine.json` at the repo
 //!   root with the strict-vs-event figures, the event-mode 4-core-mix
 //!   rate, the per-policy controller-tick rates, the warmup-forking
-//!   sweep ratio, and the shard-scaling rows (64-core/8-channel mix at
-//!   1/2/4/8 channel shards).
-//! * `--check` (CI regression gate) — runs only the event-mode
-//!   4-core-mix figure and compares it against the committed
-//!   `BENCH_engine.json`; exits nonzero on a >20% regression. Every
-//!   verdict line names the baseline's class (provisional /
+//!   sweep ratio, the shard-scaling rows (64-core/8-channel mix at
+//!   1/2/4/8 channel shards), and the wake-wheel rows (the same mix
+//!   under wheel vs heap, plus the direct index microbench at 1/8/64
+//!   components).
+//! * `--check` (CI regression gate) — runs the event-mode 4-core-mix
+//!   figure and the wake-index microbench and compares them against the
+//!   committed `BENCH_engine.json`; exits nonzero on a >20% regression.
+//!   Every verdict line names the baseline's class (provisional /
 //!   workstation / CI-recorded); a missing or provisional baseline
 //!   (`cycles_per_sec` absent or 0) passes but warns loudly on stderr
 //!   that the gate is unarmed.
@@ -33,6 +35,7 @@ use chargecache::dram::command::Loc;
 use chargecache::latency::chargecache::ChargeCache;
 use chargecache::latency::{Mechanism, MechanismKind, RowKey};
 use chargecache::sim::engine::LoopMode;
+use chargecache::sim::wake::{WakeImpl, WakeIndex};
 use chargecache::sim::{SimResult, System};
 use chargecache::trace::{Profile, SynthTrace, TraceSource, XorShift64};
 
@@ -181,7 +184,97 @@ fn main() {
     let memo = bench_suite_memo();
     let fork = bench_warmup_fork();
     let shard_rows = bench_shard_scaling();
-    engine_vs_strict_tick(&policy_tick_cps, &memo, &fork, &shard_rows);
+    let wake = bench_wake_wheel();
+    engine_vs_strict_tick(&policy_tick_cps, &memo, &fork, &shard_rows, &wake);
+}
+
+/// Wake-wheel figures for `BENCH_engine.json`: the 64-core/8-channel mix
+/// end-to-end under wheel vs heap, plus the direct index microbench.
+struct WakeWheelFigures {
+    mix_wheel_cps: f64,
+    mix_heap_cps: f64,
+    /// `(components, wheel_events_per_sec, heap_events_per_sec)`.
+    rows: Vec<(usize, f64, f64)>,
+}
+
+/// Drive one [`WakeIndex`] through the event kernel's operation mix —
+/// advance to the minimum, drain the due batch, re-arm every drained id,
+/// clamp a random id down (the completion-delivery pattern) — and return
+/// drained events per second. The op sequence is identical for both
+/// implementations (seeded RNG), so the two rates are comparable.
+fn wake_events_rate(imp: WakeImpl, n: usize, rounds: u64, reps: u32) -> f64 {
+    let mut events = 0u64;
+    let r = harness::bench(&format!("hotpath/wake_{}_{n}c", imp.name()), 1, reps, || {
+        let mut idx = WakeIndex::with_impl(n, imp);
+        let mut rng = XorShift64::new(9);
+        let mut due: Vec<u32> = Vec::new();
+        let mut drained = 0u64;
+        loop {
+            let now = idx.min_bound();
+            due.clear();
+            idx.drain_due(now, &mut due);
+            due.sort_unstable();
+            due.dedup();
+            drained += due.len() as u64;
+            for &id in &due {
+                idx.set(id as usize, now + 1 + rng.below(200));
+            }
+            // External clamp-down on a random component, like a
+            // completion landing mid-sleep.
+            let id = rng.below(n as u64) as usize;
+            let clamp = now + 1 + rng.below(16);
+            idx.set(id, idx.bound(id).min(clamp));
+            if drained >= rounds {
+                break;
+            }
+        }
+        events = drained;
+    });
+    r.report_throughput(events as f64, "events");
+    events as f64 / r.mean.as_secs_f64()
+}
+
+/// The wheel-vs-heap rows: end-to-end 64-core/8-channel mix cycles/s on
+/// each implementation (bit-identity re-asserted — the equivalence suite
+/// pins it, but a drifted perf run would poison the figure), and the
+/// direct microbench at 1/8/64 components.
+fn bench_wake_wheel() -> WakeWheelFigures {
+    let mut mix_cps = [0.0f64; 2];
+    let mut baseline: Option<SimResult> = None;
+    for (i, imp) in [WakeImpl::Wheel, WakeImpl::Heap].into_iter().enumerate() {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 64;
+        cfg.dram.channels = 8;
+        cfg.insts_per_core = 10_000;
+        cfg.warmup_cpu_cycles = 5_000;
+        cfg.wake_impl = imp;
+        let mut res: Option<SimResult> = None;
+        let r = harness::bench(&format!("hotpath/mix64_8ch_wake_{}", imp.name()), 1, 2, || {
+            res = Some(System::new_mix(&cfg, MechanismKind::ChargeCache, 1).run());
+        });
+        let res = res.unwrap();
+        r.report_throughput(res.cpu_cycles as f64, "cpu-cycles");
+        mix_cps[i] = res.cpu_cycles as f64 / r.mean.as_secs_f64();
+        match &baseline {
+            None => baseline = Some(res),
+            Some(b) => assert_eq!(b, &res, "wheel and heap runs drifted"),
+        }
+    }
+    let rows = [1usize, 8, 64]
+        .into_iter()
+        .map(|n| {
+            let wheel = wake_events_rate(WakeImpl::Wheel, n, 400_000, 3);
+            let heap = wake_events_rate(WakeImpl::Heap, n, 400_000, 3);
+            (n, wheel, heap)
+        })
+        .collect::<Vec<_>>();
+    println!(
+        "wake wheel vs heap on mix64_8ch: {:.2}x ({:.2}M vs {:.2}M sim-cycles/s)",
+        mix_cps[0] / mix_cps[1].max(1e-9),
+        mix_cps[0] / 1e6,
+        mix_cps[1] / 1e6
+    );
+    WakeWheelFigures { mix_wheel_cps: mix_cps[0], mix_heap_cps: mix_cps[1], rows }
 }
 
 /// Warmup-forking figures for `BENCH_engine.json`.
@@ -365,18 +458,22 @@ fn bench_mix4_event(reps: u32) -> (f64, u64, f64) {
     (mix_cycles as f64 / wall, mix_cycles, wall)
 }
 
-/// Pull `four_core_mix_event.cycles_per_sec` out of the committed JSON
-/// without a JSON dependency (the bench writes the file, so the shape is
-/// under our control).
-fn extract_mix_rate(json: &str) -> Option<f64> {
-    let obj = json.split("\"four_core_mix_event\"").nth(1)?;
-    let after = obj.split("\"cycles_per_sec\":").nth(1)?;
+/// Pull `section.field` out of the committed JSON without a JSON
+/// dependency (the bench writes the file, so the shape is under our
+/// control): the first occurrence of `"field":` after `"section"`.
+fn extract_rate(json: &str, section: &str, field: &str) -> Option<f64> {
+    let obj = json.split(&format!("\"{section}\"")).nth(1)?;
+    let after = obj.split(&format!("\"{field}\":")).nth(1)?;
     let num: String = after
         .trim_start()
         .chars()
         .take_while(|c| c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
         .collect();
     num.parse().ok()
+}
+
+fn extract_mix_rate(json: &str) -> Option<f64> {
+    extract_rate(json, "four_core_mix_event", "cycles_per_sec")
 }
 
 /// `--check`: the CI regression gate on the event-mode 4-core-mix rate.
@@ -433,6 +530,47 @@ fn check_against_committed() {
              sim-cycles/s; run `cargo bench --bench hotpath` on CI to record a real baseline"
         ),
     }
+
+    // The wake_wheel section: the direct index microbench (events/s at
+    // 1/8/64 components, both implementations — cheap enough to always
+    // measure and print), gated on the 64-component wheel rate against
+    // the committed figure under the same CI-recorded-baseline rule.
+    let mut wheel_64 = 0.0;
+    for n in [1usize, 8, 64] {
+        let wheel = wake_events_rate(WakeImpl::Wheel, n, 200_000, 2);
+        let heap = wake_events_rate(WakeImpl::Heap, n, 200_000, 2);
+        println!(
+            "bench-check: wake {n}c — wheel {wheel:.0} events/s, heap {heap:.0} events/s ({:.2}x)",
+            wheel / heap.max(1e-9)
+        );
+        if n == 64 {
+            wheel_64 = wheel;
+        }
+    }
+    let wake_base = committed
+        .as_deref()
+        .and_then(|s| extract_rate(s, "wake_wheel", "wheel_events_per_sec_64"))
+        .filter(|b| *b > 0.0);
+    match wake_base {
+        Some(base) => {
+            let ratio = wheel_64 / base;
+            println!(
+                "bench-check: wake_wheel 64c {wheel_64:.0} events/s vs committed {base:.0} ({ratio:.2}x)"
+            );
+            if ratio < 0.8 && ci_recorded {
+                eprintln!(
+                    "bench-check: FAIL ({class} baseline) — wheel 64-component event rate \
+                     fell >20% below the CI-recorded baseline"
+                );
+                std::process::exit(1);
+            }
+            println!("bench-check: wake_wheel PASS ({class} baseline)");
+        }
+        None => eprintln!(
+            "bench-check: wake_wheel PASS (provisional baseline) — no committed \
+             wheel_events_per_sec_64; the wake gate is NOT armed. Measured {wheel_64:.0} events/s"
+        ),
+    }
 }
 
 /// The event kernel vs the per-cycle loop on the memory-bound `mcf`
@@ -445,6 +583,7 @@ fn engine_vs_strict_tick(
     memo: &SuiteMemoFigures,
     fork: &WarmupForkFigures,
     shard_rows: &[(usize, f64, u64, f64)],
+    wake: &WakeWheelFigures,
 ) {
     let insts = 150_000u64;
     let run_mode = |mode: LoopMode, label: &str| -> (f64, SimResult) {
@@ -500,6 +639,18 @@ fn engine_vs_strict_tick(
         (Some((_, one, _, _)), Some((_, four, _, _))) if *one > 0.0 => four / one,
         _ => 0.0,
     };
+    let wake_rows_json = wake
+        .rows
+        .iter()
+        .map(|(n, wheel, heap)| {
+            format!(
+                "      {{ \"components\": {n}, \"wheel_events_per_sec\": {wheel:.0}, \
+                 \"heap_events_per_sec\": {heap:.0} }}"
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let wheel_eps_64 = wake.rows.iter().find(|r| r.0 == 64).map(|r| r.1).unwrap_or(0.0);
     let json = format!(
         "{{\n  \"bench\": \"engine_vs_strict_tick\",\n  \"workload\": \"mcf\",\n  \
          \"mechanism\": \"ChargeCache\",\n  \"insts_per_core\": {insts},\n  \
@@ -520,6 +671,10 @@ fn engine_vs_strict_tick(
          \"warmup_cycles_reused\": {}, \"warmup_cycles_simulated\": {} }},\n  \
          \"shard_scaling\": {{ \"workload\": \"mix64_8ch\", \"insts_per_core\": 10000, \
          \"speedup_at_4\": {shard_speedup_4:.3}, \"rows\": [\n{shard_json}\n    ] }},\n  \
+         \"wake_wheel\": {{ \"workload\": \"mix64_8ch\", \"insts_per_core\": 10000, \
+         \"mix_wheel_cycles_per_sec\": {:.0}, \"mix_heap_cycles_per_sec\": {:.0}, \
+         \"mix_speedup\": {:.3}, \"wheel_events_per_sec_64\": {wheel_eps_64:.0}, \
+         \"rows\": [\n{wake_rows_json}\n    ] }},\n  \
          \"policies\": {{\n{policies_json}\n  }}\n}}\n",
         strict.cpu_cycles,
         event.cpu_cycles,
@@ -538,6 +693,9 @@ fn engine_vs_strict_tick(
         fork.wall_ratio(),
         fork.warmup_cycles_reused,
         fork.warmup_cycles_simulated,
+        wake.mix_wheel_cps,
+        wake.mix_heap_cps,
+        wake.mix_wheel_cps / wake.mix_heap_cps.max(1e-9),
     );
     match std::fs::write(BENCH_JSON_PATH, &json) {
         Ok(()) => println!("wrote {BENCH_JSON_PATH}"),

@@ -8,6 +8,7 @@ pub mod schema;
 use crate::controller::SchedulerKind;
 use crate::latency::MechanismKind;
 use crate::sim::engine::LoopMode;
+use crate::sim::wake::WakeImpl;
 
 /// DRAM organization (DDR3-1600, Table 1).
 #[derive(Debug, Clone, PartialEq)]
@@ -452,6 +453,14 @@ pub struct SystemConfig {
     /// bit-identical to single-threaded ones by construction
     /// ([`crate::sim::shard`]), so this knob trades wall-clock only.
     pub sim_threads: usize,
+    /// Wake-index implementation for the event kernel (registry:
+    /// `sim.wake_impl`). `Auto` (default) defers to the process-wide
+    /// `PALLAS_WAKE_IMPL` knob and resolves to the hierarchical timing
+    /// wheel; `Heap` forces the lazily-pruned binary heap kept as the
+    /// differential-testing oracle. Both produce bit-identical results
+    /// by the one-sided wake contract ([`crate::sim::wake`]), so this
+    /// knob trades wall-clock only.
+    pub wake_impl: WakeImpl,
     /// Interval sampling of the measured region (registry: `sample.*`).
     pub sample: SampleConfig,
     /// Warmup-checkpoint forking in the job graph (registry:
@@ -479,6 +488,7 @@ impl Default for SystemConfig {
             seed: 42,
             loop_mode: LoopMode::EventDriven,
             sim_threads: 0,
+            wake_impl: WakeImpl::Auto,
             sample: SampleConfig::default(),
             checkpoint: CheckpointConfig::default(),
             fault: FaultConfig::default(),
@@ -557,6 +567,7 @@ impl SystemConfig {
             seed,
             loop_mode,
             sim_threads,
+            wake_impl,
             sample,
             checkpoint,
             fault,
@@ -721,6 +732,15 @@ impl SystemConfig {
         // loop_mode: the equivalence tests must never compare a cached
         // result against itself.
         h.push_usize(*sim_threads);
+        // Wheel and heap wake indices are bit-identical by the one-sided
+        // wake contract, but the choice is hashed for the same reason as
+        // loop_mode: the wheel-vs-heap equivalence tests must never
+        // compare a cached result against itself.
+        h.push_u64(match wake_impl {
+            WakeImpl::Auto => 0,
+            WakeImpl::Wheel => 1,
+            WakeImpl::Heap => 2,
+        });
         // Sampling replaces stretches of the measured region with
         // functional fast-forward, so sampled and full results are NOT
         // interchangeable. Checkpoint forking is bit-identical to cold
@@ -957,6 +977,16 @@ mod tests {
                 c
             },
             {
+                let mut c = a.clone();
+                c.wake_impl = WakeImpl::Heap;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.wake_impl = WakeImpl::Wheel;
+                c
+            },
+            {
                 // Same timing table, different generation label: the tag
                 // itself must move the hash (registry round-trip).
                 let mut c = a.clone();
@@ -1069,6 +1099,7 @@ mod tests {
             |c| c.cpu.cores = 2,
             |c| c.loop_mode = LoopMode::StrictTick,
             |c| c.sim_threads = 4,
+            |c| c.wake_impl = WakeImpl::Heap,
             |c| c.chargecache.duration_ms = 2.0,
             // Enabled fault injection rewrites warmup-phase grants.
             |c| c.fault.enabled = true,

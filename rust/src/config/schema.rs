@@ -30,6 +30,7 @@ use crate::controller::{SchedulerKind, SCHEDULER_NAMES};
 use crate::error::Result;
 use crate::latency::{MechanismKind, MECHANISM_NAMES};
 use crate::sim::engine::LoopMode;
+use crate::sim::wake::WakeImpl;
 
 /// Value shape of one parameter (drives parsing and `params` output).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -228,6 +229,16 @@ impl Choice for LoopMode {
     }
 }
 
+impl Choice for WakeImpl {
+    const CHOICES: &'static [&'static str] = &WakeImpl::NAMES;
+    fn to_name(self) -> &'static str {
+        self.name()
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        WakeImpl::parse(&s.to_ascii_lowercase())
+    }
+}
+
 fn scalar_kind<T: Scalar>(_: &T) -> ParamKind {
     T::KIND
 }
@@ -347,6 +358,7 @@ fn build() -> Vec<ParamDef> {
         seed,
         loop_mode,
         sim_threads,
+        wake_impl,
         sample,
         checkpoint,
         fault,
@@ -645,6 +657,13 @@ fn build() -> Vec<ParamDef> {
         "Shard count for the channel-sharded event loop (0 = --sim-threads/PALLAS_SIM_THREADS)",
         sim_threads,
     );
+    choice_param!(
+        defs,
+        "sim.wake_impl",
+        wake_impl,
+        "Wake-index implementation: timing wheel or heap oracle (auto = PALLAS_WAKE_IMPL)",
+        wake_impl,
+    );
     // SampleConfig.
     scalar_param!(
         defs,
@@ -833,10 +852,10 @@ mod tests {
         let reg = registry();
         // One def per config field (6 dram org + generation + 15 timing +
         // 6 mc + 8 cpu + 7 chargecache + 3 nuat + 2 sample +
-        // 2 checkpoint + 7 fault + 8 top-level incl. sim.threads). If
-        // this count moved, update it together with the new field's
-        // ParamDef.
-        assert_eq!(reg.defs().len(), 65, "registry must cover every SystemConfig field");
+        // 2 checkpoint + 7 fault + 9 top-level incl. sim.threads and
+        // sim.wake_impl). If this count moved, update it together with
+        // the new field's ParamDef.
+        assert_eq!(reg.defs().len(), 66, "registry must cover every SystemConfig field");
         let base = SystemConfig::default();
         for def in reg.defs() {
             // The recorded default is the default config's value.

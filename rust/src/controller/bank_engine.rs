@@ -8,13 +8,23 @@
 //! scratch bitmap per call). This index maintains the answer
 //! incrementally, O(1) per queue/row transition:
 //!
-//! * **enqueue/dequeue** — a per-bank `row -> queued-count` map is
+//! * **enqueue/dequeue** — a per-bank `row -> queued-count` table is
 //!   updated, and the open-row-hit counter bumps when the request's row
 //!   matches the bank's open row;
-//! * **ACT** — the hit counter is reseeded from the row map (one hash
-//!   lookup);
+//! * **ACT** — the hit counter is reseeded from the row table (one
+//!   probe);
 //! * **PRE** (explicit, auto, or refresh-drain) — the hit counter drops
 //!   to zero.
+//!
+//! The row tables used to be per-bank `HashMap<u32, u32>`s, which put a
+//! SipHash invocation and a heap-allocated bucket walk on the hottest
+//! controller path. They are now dense open-addressed tables ([`RowTable`])
+//! keyed by the packed u64 [`RowKey`]: multiply-shift hashing, linear
+//! probing with backward-shift deletion (no tombstones), and a per-bank
+//! generation stamp so a full reset ([`BankEngine::clear`], used when a
+//! sweep leg replays controller state) is O(banks) with **zero
+//! reallocation** — stale slots die by stamp mismatch, not by rewriting
+//! the slot array.
 //!
 //! The controller is the single writer: every path that moves a request
 //! or a row must notify the engine, and `debug_assert_consistent`
@@ -24,23 +34,191 @@
 use std::collections::HashMap;
 
 use crate::dram::command::Loc;
+use crate::latency::RowKey;
+
+/// One row-count slot. Live only while `gen` matches its table's
+/// generation; `Default` (gen 0) is dead for every table generation.
+#[derive(Debug, Clone, Copy, Default)]
+struct Slot {
+    key: u64,
+    count: u32,
+    gen: u32,
+}
+
+/// One bank's open-addressed `RowKey -> queued-count` table.
+///
+/// Power-of-two capacity, grown at 1/2 load so a probe chain always
+/// terminates at a dead slot. Deletion backward-shifts the chain
+/// (Knuth 6.4 algorithm R), keeping lookups tombstone-free.
+#[derive(Debug, Clone)]
+struct RowTable {
+    slots: Vec<Slot>,
+    /// Capacity minus one (capacity is a power of two).
+    mask: usize,
+    /// Live (distinct-row) slots.
+    len: usize,
+    /// Current generation; bumped by `clear`.
+    gen: u32,
+}
+
+impl RowTable {
+    fn new(cap: usize) -> Self {
+        let cap = cap.next_power_of_two().max(8);
+        Self { slots: vec![Slot::default(); cap], mask: cap - 1, len: 0, gen: 1 }
+    }
+
+    /// Multiply-shift (Fibonacci) hashing: packed `RowKey`s differ in a
+    /// handful of low row bits within one bank, and the high product
+    /// bits spread exactly those.
+    #[inline]
+    fn home(&self, key: u64) -> usize {
+        let shift = 64 - (self.mask + 1).trailing_zeros();
+        (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> shift) as usize
+    }
+
+    #[inline]
+    fn live(&self, i: usize) -> bool {
+        self.slots[i].gen == self.gen
+    }
+
+    fn find(&self, key: u64) -> Option<usize> {
+        let mut i = self.home(key);
+        loop {
+            if !self.live(i) {
+                return None;
+            }
+            if self.slots[i].key == key {
+                return Some(i);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn get(&self, key: u64) -> u32 {
+        self.find(key).map(|i| self.slots[i].count).unwrap_or(0)
+    }
+
+    fn inc(&mut self, key: u64) {
+        if 2 * (self.len + 1) > self.slots.len() {
+            self.grow();
+        }
+        let mut i = self.home(key);
+        loop {
+            if !self.live(i) {
+                self.slots[i] = Slot { key, count: 1, gen: self.gen };
+                self.len += 1;
+                return;
+            }
+            if self.slots[i].key == key {
+                self.slots[i].count += 1;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Decrement `key`, removing its slot at zero. Returns false if the
+    /// key was untracked (the caller debug-asserts on that).
+    fn dec(&mut self, key: u64) -> bool {
+        let Some(i) = self.find(key) else {
+            return false;
+        };
+        if self.slots[i].count > 1 {
+            self.slots[i].count -= 1;
+        } else {
+            self.remove_at(i);
+        }
+        true
+    }
+
+    /// Backward-shift deletion: walk the probe chain after the hole and
+    /// pull back every entry whose home lies at or before the hole, so
+    /// no chain is ever split by a dead slot.
+    fn remove_at(&mut self, mut i: usize) {
+        self.len -= 1;
+        let mut j = i;
+        loop {
+            j = (j + 1) & self.mask;
+            if !self.live(j) {
+                break;
+            }
+            let h = self.home(self.slots[j].key);
+            // `j` may backfill the hole at `i` unless its home lies in
+            // the cyclic interval (i, j] — moving such an entry would
+            // break its own probe chain.
+            let d_ij = j.wrapping_sub(i) & self.mask;
+            let d_hj = j.wrapping_sub(h) & self.mask;
+            if d_hj >= d_ij {
+                self.slots[i] = self.slots[j];
+                i = j;
+            }
+        }
+        self.slots[i].gen = self.gen.wrapping_sub(1);
+    }
+
+    fn grow(&mut self) {
+        let cap = self.slots.len() * 2;
+        let old = std::mem::replace(&mut self.slots, vec![Slot::default(); cap]);
+        let old_gen = self.gen;
+        self.mask = cap - 1;
+        self.gen = 1;
+        self.len = 0;
+        for s in old {
+            if s.gen == old_gen {
+                let mut i = self.home(s.key);
+                while self.live(i) {
+                    i = (i + 1) & self.mask;
+                }
+                self.slots[i] = Slot { key: s.key, count: s.count, gen: self.gen };
+                self.len += 1;
+            }
+        }
+    }
+
+    /// O(1) reset: everything stamped with an older generation is dead.
+    /// (On the astronomically distant stamp wraparound, fall back to a
+    /// real wipe so an ancient slot can never resurrect.)
+    fn clear(&mut self) {
+        self.len = 0;
+        if self.gen == u32::MAX {
+            self.slots.fill(Slot::default());
+            self.gen = 1;
+        } else {
+            self.gen += 1;
+        }
+    }
+
+    fn iter_live(&self) -> impl Iterator<Item = (u64, u32)> + '_ {
+        self.slots.iter().filter(|s| s.gen == self.gen).map(|s| (s.key, s.count))
+    }
+}
 
 /// Incremental per-bank view over the request queues.
 #[derive(Debug, Clone)]
 pub struct BankEngine {
     banks_per_rank: usize,
+    /// Stamped into every key (same qualification as the controller's
+    /// own `row_key`), so table contents are debug-checkable RowKeys.
+    channel: u32,
     /// Per (rank, bank): queued-request count per row, both queues.
-    rows: Vec<HashMap<u32, u32>>,
+    tables: Vec<RowTable>,
     /// Per (rank, bank): queued requests hitting the currently open row.
     open_hits: Vec<u32>,
 }
 
 impl BankEngine {
-    pub fn new(ranks: usize, banks_per_rank: usize) -> Self {
+    /// `cap_hint` is the controller's total queue capacity (read +
+    /// write): distinct queued rows per bank can never exceed it, and
+    /// the per-bank tables start sized for an even spread (growing on
+    /// the fly for skewed ones).
+    pub fn new(ranks: usize, banks_per_rank: usize, channel: u32, cap_hint: usize) -> Self {
+        let banks = (ranks * banks_per_rank).max(1);
+        let per_bank = 2 * (cap_hint / banks).max(4);
         Self {
             banks_per_rank,
-            rows: vec![HashMap::new(); ranks * banks_per_rank],
-            open_hits: vec![0; ranks * banks_per_rank],
+            channel,
+            tables: vec![RowTable::new(per_bank); banks],
+            open_hits: vec![0; banks],
         }
     }
 
@@ -49,11 +227,17 @@ impl BankEngine {
         rank as usize * self.banks_per_rank + bank as usize
     }
 
+    #[inline]
+    fn key(&self, rank: u32, bank: u32, row: u32) -> u64 {
+        RowKey::new_in_channel(self.channel, rank, bank, row).0
+    }
+
     /// A request entered a queue. `open_row` is its bank's open row at
     /// enqueue time.
     pub fn on_enqueue(&mut self, loc: &Loc, open_row: Option<u32>) {
         let i = self.idx(loc.rank, loc.bank);
-        *self.rows[i].entry(loc.row).or_insert(0) += 1;
+        let key = self.key(loc.rank, loc.bank, loc.row);
+        self.tables[i].inc(key);
         if open_row == Some(loc.row) {
             self.open_hits[i] += 1;
         }
@@ -64,23 +248,20 @@ impl BankEngine {
     /// the row; auto-precharge resolution reports separately).
     pub fn on_dequeue(&mut self, loc: &Loc, open_row: Option<u32>) {
         let i = self.idx(loc.rank, loc.bank);
-        match self.rows[i].get_mut(&loc.row) {
-            Some(n) if *n > 1 => *n -= 1,
-            Some(_) => {
-                self.rows[i].remove(&loc.row);
-            }
-            None => debug_assert!(false, "dequeue of untracked request at {loc:?}"),
-        }
+        let key = self.key(loc.rank, loc.bank, loc.row);
+        let tracked = self.tables[i].dec(key);
+        debug_assert!(tracked, "dequeue of untracked request at {loc:?}");
         if open_row == Some(loc.row) {
             debug_assert!(self.open_hits[i] > 0, "open-hit underflow at {loc:?}");
             self.open_hits[i] -= 1;
         }
     }
 
-    /// An ACT opened `row`: reseed the hit counter from the row index.
+    /// An ACT opened `row`: reseed the hit counter from the row table.
     pub fn on_row_opened(&mut self, rank: u32, bank: u32, row: u32) {
         let i = self.idx(rank, bank);
-        self.open_hits[i] = self.rows[i].get(&row).copied().unwrap_or(0);
+        let key = self.key(rank, bank, row);
+        self.open_hits[i] = self.tables[i].get(key);
     }
 
     /// A PRE (explicit, auto, or refresh-drain) closed the bank's row.
@@ -96,6 +277,25 @@ impl BankEngine {
         self.open_hits[self.idx(rank, bank)] > 0
     }
 
+    /// Drop every row count and hit counter without reallocating: the
+    /// generation stamps advance, the slot arrays stay. Used when a
+    /// restored/replayed controller re-derives the index from its queues.
+    pub fn clear(&mut self) {
+        for t in &mut self.tables {
+            t.clear();
+        }
+        self.open_hits.fill(0);
+    }
+
+    /// Per-(rank, bank) `row -> count` export (test/debug hook; the hot
+    /// path never materializes maps).
+    pub fn snapshot_rows(&self) -> Vec<HashMap<u32, u32>> {
+        self.tables
+            .iter()
+            .map(|t| t.iter_live().map(|(k, c)| (RowKey(k).row(), c)).collect())
+            .collect()
+    }
+
     /// Re-derive both indexes from first principles and compare (test
     /// hook: catches any controller path that forgot a notification).
     pub fn debug_assert_consistent<'a>(
@@ -103,7 +303,7 @@ impl BankEngine {
         requests: impl Iterator<Item = &'a crate::controller::Request>,
         open_row_of: impl Fn(u32, u32) -> Option<u32>,
     ) {
-        let mut rows = vec![HashMap::new(); self.rows.len()];
+        let mut rows: Vec<HashMap<u32, u32>> = vec![HashMap::new(); self.tables.len()];
         let mut hits = vec![0u32; self.open_hits.len()];
         for req in requests {
             let i = self.idx(req.loc.rank, req.loc.bank);
@@ -112,8 +312,21 @@ impl BankEngine {
                 hits[i] += 1;
             }
         }
-        debug_assert_eq!(rows, self.rows, "row index diverged from queues");
+        debug_assert_eq!(rows, self.snapshot_rows(), "row index diverged from queues");
         debug_assert_eq!(hits, self.open_hits, "open-hit counters diverged");
+        #[cfg(debug_assertions)]
+        for (i, t) in self.tables.iter().enumerate() {
+            let (rank, bank) =
+                ((i / self.banks_per_rank) as u32, (i % self.banks_per_rank) as u32);
+            for (k, count) in t.iter_live() {
+                debug_assert!(count > 0, "zero-count slot survived removal");
+                debug_assert_eq!(
+                    k,
+                    self.key(rank, bank, RowKey(k).row()),
+                    "key bucketed under the wrong bank table"
+                );
+            }
+        }
     }
 }
 
@@ -127,7 +340,7 @@ mod tests {
 
     #[test]
     fn enqueue_dequeue_tracks_open_hits() {
-        let mut e = BankEngine::new(1, 8);
+        let mut e = BankEngine::new(1, 8, 0, 64);
         e.on_enqueue(&loc(0, 5), None);
         assert!(!e.open_row_has_hit(0, 0));
         e.on_row_opened(0, 0, 5);
@@ -141,7 +354,7 @@ mod tests {
 
     #[test]
     fn act_reseeds_from_queued_rows() {
-        let mut e = BankEngine::new(1, 8);
+        let mut e = BankEngine::new(1, 8, 0, 64);
         e.on_enqueue(&loc(3, 7), None);
         e.on_enqueue(&loc(3, 7), None);
         e.on_enqueue(&loc(3, 9), None);
@@ -155,11 +368,65 @@ mod tests {
 
     #[test]
     fn close_zeroes_hits_regardless_of_queue() {
-        let mut e = BankEngine::new(2, 4);
+        let mut e = BankEngine::new(2, 4, 0, 64);
         e.on_enqueue(&Loc { channel: 0, rank: 1, bank: 2, row: 4, col: 0 }, None);
         e.on_row_opened(1, 2, 4);
         assert!(e.open_row_has_hit(1, 2));
         e.on_row_closed(1, 2);
         assert!(!e.open_row_has_hit(1, 2));
+    }
+
+    #[test]
+    fn table_grows_past_its_hint_and_survives_generation_reset() {
+        // Skew every request into one bank so the 8-slot initial table
+        // must grow several times, then reset and re-populate: a stale
+        // generation's rows must never resurrect.
+        let mut e = BankEngine::new(1, 2, 3, 8);
+        for row in 0..200u32 {
+            e.on_enqueue(&loc(1, row), None);
+        }
+        e.on_enqueue(&loc(1, 7), None);
+        let snap = e.snapshot_rows();
+        assert_eq!(snap[1].len(), 200);
+        assert_eq!(snap[1][&7], 2);
+        e.on_row_opened(0, 1, 7);
+        assert!(e.open_row_has_hit(0, 1));
+        e.clear();
+        assert!(!e.open_row_has_hit(0, 1));
+        assert!(e.snapshot_rows().iter().all(|m| m.is_empty()));
+        e.on_enqueue(&loc(1, 7), None);
+        let snap = e.snapshot_rows();
+        assert_eq!(snap[1][&7], 1, "post-clear count must restart from zero");
+        e.on_row_opened(0, 1, 7);
+        assert!(e.open_row_has_hit(0, 1));
+    }
+
+    #[test]
+    fn backward_shift_deletion_keeps_probe_chains_intact() {
+        // Fill one bank with enough rows to force collisions, then
+        // remove in an order that exercises chain backfill, verifying
+        // every surviving row stays findable with the right count.
+        let mut e = BankEngine::new(1, 1, 0, 8);
+        for row in 0..64u32 {
+            e.on_enqueue(&loc(0, row), None);
+            e.on_enqueue(&loc(0, row), None);
+        }
+        for row in (0..64u32).step_by(3) {
+            e.on_dequeue(&loc(0, row), None);
+            e.on_dequeue(&loc(0, row), None);
+        }
+        let snap = &e.snapshot_rows()[0];
+        for row in 0..64u32 {
+            if row % 3 == 0 {
+                assert!(!snap.contains_key(&row), "removed row {row} resurrected");
+            } else {
+                assert_eq!(snap[&row], 2, "row {row} lost by backward shift");
+            }
+        }
+        // Reseed-by-ACT still probes correctly after the deletions.
+        e.on_row_opened(0, 0, 4);
+        assert!(e.open_row_has_hit(0, 0));
+        e.on_row_opened(0, 0, 3);
+        assert!(!e.open_row_has_hit(0, 0));
     }
 }

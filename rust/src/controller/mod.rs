@@ -105,7 +105,12 @@ impl MemController {
             wq: RequestQueue::new(cfg.mc.write_queue),
             sink: CommandSink::new(cfg, kind),
             policy: build_policy(cfg.mc.scheduler),
-            engine: BankEngine::new(cfg.dram.ranks, cfg.dram.banks),
+            engine: BankEngine::new(
+                cfg.dram.ranks,
+                cfg.dram.banks,
+                channel,
+                cfg.mc.read_queue + cfg.mc.write_queue,
+            ),
             row_policy: cfg.mc.row_policy,
             write_drain: false,
             wq_hi: cfg.mc.write_hi_watermark,
@@ -724,12 +729,14 @@ impl MemController {
         }
         self.wq_drained.clear();
         // Re-derive the BankEngine index from restored queues + open rows
-        // (mirror of the enqueue path).
-        let mut engine = BankEngine::new(self.dev.org.ranks, self.dev.org.banks);
-        for req in self.rq.iter().chain(self.wq.iter()) {
-            engine.on_enqueue(&req.loc, self.dev.bank(&req.loc).open_row());
+        // (mirror of the enqueue path). Generation-stamped reset: the
+        // tables are wiped in O(banks) and refilled in place, so a sweep
+        // leg's replay allocates nothing.
+        let Self { engine, rq, wq, dev, .. } = self;
+        engine.clear();
+        for req in rq.iter().chain(wq.iter()) {
+            engine.on_enqueue(&req.loc, dev.bank(&req.loc).open_row());
         }
-        self.engine = engine;
         Some(())
     }
 

@@ -14,7 +14,15 @@
 //!   on the earliest bus cycle at which either pass could issue anything.
 //!   Early bounds cost a no-op tick; a late bound would silently break
 //!   the strict-tick equivalence, so every policy's bound is attacked by
-//!   `tests/prop.rs::prop_wake_bound_is_never_late_for_any_policy`.
+//!   `tests/prop.rs::prop_wake_bound_is_never_late_for_any_policy`. The
+//!   bound feeds the wake index (`sim::wake` — timing wheel or heap
+//!   oracle) through `MemController::next_event_at`; the one-sided
+//!   contract there is exactly this one, so a policy correct against the
+//!   property test is correct under either index implementation.
+//!
+//! Policies consult the [`BankEngine`]'s flat per-bank row tables (open
+//! row, queued-row hit counts) rather than scanning queues; see
+//! `controller::bank_engine` for the open-addressed layout.
 //!
 //! Three policies ship:
 //!

@@ -29,7 +29,7 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::SystemConfig;
 use crate::error::{Context, Result};
@@ -49,13 +49,28 @@ pub enum WorkloadId {
 }
 
 impl WorkloadId {
-    /// Short slug for on-disk cache file names (`s3`, `m12`).
-    fn slug(&self) -> String {
-        match self {
+    /// Short slug for on-disk cache file names (`s3`, `m12`), interned.
+    fn slug(&self) -> &'static str {
+        static SLUGS: InternTable = OnceLock::new();
+        intern(&SLUGS, *self, || match self {
             WorkloadId::Single(w) => format!("s{w}"),
             WorkloadId::Mix(m) => format!("m{m}"),
-        }
+        })
     }
+}
+
+/// Per-[`WorkloadId`] string interner. The slug and workload label are
+/// rebuilt on every cache probe, disk-path computation, and validation
+/// of every leg, but the set of distinct values is tiny (one per
+/// workload or mix index), so the first request builds the string once
+/// and leaks it — the same `Box::leak` discipline the `--set` override
+/// registry uses — and every later request is a map hit handing out the
+/// `&'static str`, no allocation.
+type InternTable = OnceLock<Mutex<HashMap<WorkloadId, &'static str>>>;
+
+fn intern(table: &InternTable, w: WorkloadId, build: impl FnOnce() -> String) -> &'static str {
+    let mut map = table.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    *map.entry(w).or_insert_with(|| &*Box::leak(build().into_boxed_str()))
 }
 
 /// The memoization key: everything a simulation's result depends on.
@@ -411,11 +426,13 @@ impl SimCache {
 
 /// The `SimResult::workload` label a key's simulation produces (what
 /// `System::new`/`new_mix` stamp); disk loads are validated against it.
-fn expected_workload(w: WorkloadId) -> String {
-    match w {
+/// Interned like [`WorkloadId::slug`].
+fn expected_workload(w: WorkloadId) -> &'static str {
+    static LABELS: InternTable = OnceLock::new();
+    intern(&LABELS, w, || match w {
         WorkloadId::Single(i) => PROFILES[i].name.to_string(),
         WorkloadId::Mix(m) => format!("mix{m:02}"),
-    }
+    })
 }
 
 fn mech_slug(m: MechanismKind) -> &'static str {
@@ -696,7 +713,7 @@ impl JobGraph {
 /// failure reports instead of aborting the suite.
 #[derive(Debug, Clone)]
 pub struct JobFailure {
-    pub workload: String,
+    pub workload: &'static str,
     pub mechanism: &'static str,
     pub error: String,
 }

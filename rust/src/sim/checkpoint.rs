@@ -25,11 +25,13 @@
 //!   [`SimSnapshot::restore_into`] enforces via the warmup fingerprint.
 //! * **`WakeIndex`** — the event kernel tolerates *early* wake bounds
 //!   (a too-early wake is a no-op tick), so the restored system keeps
-//!   its fresh all-hot-at-0 index; every bound is recomputed on first
-//!   tick. See [`crate::sim::wake`].
+//!   a fresh all-hot-at-0 index (wheel or heap, per `sim.wake_impl`);
+//!   every bound is recomputed on first tick. See [`crate::sim::wake`].
 //! * **`BankEngine`** — a pure index over queue contents and open rows;
-//!   the controller rebuilds it exactly from the restored queues
-//!   (mirroring its `debug_assert_consistent` invariant).
+//!   the controller rebuilds it exactly from the restored queues via a
+//!   generation-stamped table reset (O(banks), no reallocation — a
+//!   sweep leg's restore reuses the tables in place), mirroring its
+//!   `debug_assert_consistent` invariant.
 //! * **Scratch buffers** — per-tick vectors (`fill_scratch`, drained-write
 //!   lists, completion out-params) are empty at phase boundaries.
 //!

@@ -62,9 +62,10 @@ pub trait EventDriven {
     /// (the wake-time contract above). `u64::MAX` means "only an already
     /// scheduled wake of another component can unblock this one".
     /// Takes `&mut self` so implementations may serve the answer from an
-    /// incrementally maintained structure (the lazily-pruned
-    /// [`crate::sim::wake::WakeIndex`]) instead of rescanning every
-    /// component per jump.
+    /// incrementally maintained structure (the
+    /// [`crate::sim::wake::WakeIndex`] — a hierarchical timing wheel by
+    /// default, with the lazily-pruned heap as the selectable oracle)
+    /// instead of rescanning every component per jump.
     fn next_wake(&mut self, now: u64) -> u64;
 }
 

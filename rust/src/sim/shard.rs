@@ -46,7 +46,7 @@ use std::time::Instant;
 
 use crate::controller::{Completion, MemController, Request};
 use crate::dram::command::Loc;
-use crate::sim::wake::WakeIndex;
+use crate::sim::wake::{WakeImpl, WakeIndex};
 
 /// Process-wide count of hung-shard flags raised by [`Watchdog`]
 /// (telemetry; a flag never alters simulation state or results).
@@ -162,20 +162,25 @@ pub struct ShardState {
     pub base: usize,
     pub mcs: Vec<MemController>,
     /// Per-local-channel wake bounds, **bus-cycle** domain — maintained
-    /// by the same rules as the sequential loop's controller entries.
+    /// by the same rules as the sequential loop's controller entries,
+    /// on the same implementation (wheel or heap oracle) the
+    /// coordinator's index runs on.
     pub wake: WakeIndex,
+    /// Scratch for each epoch's batch of due local channels.
+    due: Vec<u32>,
 }
 
 impl ShardState {
     /// Build a shard over `mcs`, every channel hot at bus cycle 0 — an
     /// early bound is a no-op tick, so starting hot is always sound.
-    pub fn new(base: usize, mcs: Vec<MemController>) -> Self {
-        let wake = WakeIndex::new(mcs.len());
-        Self { base, mcs, wake }
+    pub fn new(base: usize, mcs: Vec<MemController>, imp: WakeImpl) -> Self {
+        let wake = WakeIndex::with_impl(mcs.len(), imp);
+        Self { base, mcs, wake, due: Vec::new() }
     }
 
     /// Run one epoch at bus cycle `bus`: deliver inbound enqueues, tick
-    /// every due channel in ascending order, publish outputs into `out`.
+    /// every due channel in ascending order (the batch comes from one
+    /// `drain_due` traversal), publish outputs into `out`.
     pub fn run_epoch(&mut self, inbox: &mut Vec<EnqMsg>, bus: u64, out: &mut EpochOut) {
         out.clear();
         for m in inbox.drain(..) {
@@ -187,10 +192,13 @@ impl ShardState {
             let clamped = self.wake.bound(li).min(m.bus + 1);
             self.wake.set(li, clamped);
         }
-        for li in 0..self.mcs.len() {
-            if self.wake.bound(li) > bus {
-                continue;
-            }
+        let mut due = std::mem::take(&mut self.due);
+        due.clear();
+        self.wake.drain_due(bus, &mut due);
+        due.sort_unstable();
+        due.dedup();
+        for &li in &due {
+            let li = li as usize;
             let ch = (self.base + li) as u32;
             let mc = &mut self.mcs[li];
             mc.tick(bus, &mut out.completions);
@@ -199,9 +207,12 @@ impl ShardState {
             }
             let (rq, wq) = mc.occupancy();
             out.occ.push((ch, rq as u32, wq as u32));
+            // Re-set every drained channel (the drain consumed its index
+            // entry): a fresh bound, always `>= bus + 1`.
             let b = mc.next_event_at(bus + 1).max(bus + 1);
             self.wake.set(li, b);
         }
+        self.due = due;
         out.min_bound_bus = self.wake.min_bound();
     }
 }

@@ -4,9 +4,13 @@
 //!
 //! Time is advanced by the event kernel ([`crate::sim::engine`]): each
 //! component surfaces its next wake cycle through the incrementally
-//! maintained [`WakeIndex`] and the clock fast-forwards to the global
-//! minimum; components whose cached bound lies in the future are not
-//! even ticked (their ticks are no-ops by the wake contract).
+//! maintained [`WakeIndex`] (a hierarchical timing wheel by default,
+//! the lazily-pruned heap as the differential oracle — `sim.wake_impl`)
+//! and the clock fast-forwards to the global minimum; components whose
+//! cached bound lies in the future are not even ticked (their ticks are
+//! no-ops by the wake contract). Each visited cycle drains its whole
+//! batch of due components in one index traversal, so dispatch is
+//! amortized per bus boundary instead of per event.
 //! [`crate::sim::LoopMode::StrictTick`] keeps the original per-cycle
 //! loop — every controller and every core, every cycle, with no index
 //! bookkeeping — as the differential oracle; both modes produce
@@ -26,6 +30,8 @@ use crate::sim::sample::SampleSummary;
 use crate::sim::shard::{worker_loop, EnqMsg, EpochOut, ShardSlot, ShardState, Watchdog};
 use crate::sim::stats::SimResult;
 use crate::sim::wake::WakeIndex;
+#[cfg(test)]
+use crate::sim::wake::WakeImpl;
 use crate::trace::{profile::multicore_mix, Profile, SynthTrace, TraceSource};
 
 /// Completion predicate for a measured region. A plain function pointer
@@ -181,6 +187,11 @@ pub struct System {
     /// Cached wake bounds, CPU-cycle domain: cores at ids `0..cores`,
     /// controllers at ids `cores..cores + channels`.
     wake: WakeIndex,
+    /// Scratch for the per-cycle batch of due component ids.
+    due_scratch: Vec<u32>,
+    /// Scratch for the per-cycle due-core list (drained cores plus
+    /// completion-woken ones).
+    core_scratch: Vec<u32>,
 }
 
 impl System {
@@ -232,7 +243,7 @@ impl System {
         let mcs: Vec<MemController> = (0..cfg.dram.channels)
             .map(|ch| MemController::new(cfg, kind, ch as u32))
             .collect();
-        let wake = WakeIndex::new(cores.len() + mcs.len());
+        let wake = WakeIndex::with_impl(cores.len() + mcs.len(), cfg.wake_impl);
         Self {
             cfg: cfg.clone(),
             kind,
@@ -250,6 +261,8 @@ impl System {
             workload,
             completions: Vec::new(),
             wake,
+            due_scratch: Vec::new(),
+            core_scratch: Vec::new(),
         }
     }
 
@@ -319,26 +332,43 @@ impl System {
     /// bus boundary first — completions land before cores tick — then
     /// cores in index order), but a component whose cached wake bound is
     /// still in the future is skipped outright: by the wake contract its
-    /// tick would be a no-op. Every mutation re-indexes its component:
+    /// tick would be a no-op. The cycle's entire due batch comes from
+    /// one [`WakeIndex::drain_due`] traversal (sorted + deduped, then
+    /// split into the core and controller segments), so dispatch is
+    /// amortized per visited cycle, not per component. Every mutation
+    /// re-indexes its component:
     ///
     /// * a **ticked** component gets a freshly computed bound;
-    /// * a **completion** marks its core hot at `now` (the core ticks
-    ///   later this same cycle, as in the strict order);
+    /// * a **completion** marks its core hot at `now` and joins it to
+    ///   the due batch (the core ticks later this same cycle, as in the
+    ///   strict order);
     /// * an **enqueue** (observed via `MemHierarchy::enqueued`) pulls the
     ///   target controller's bound down to the next bus boundary, where
-    ///   its tick recomputes the true bound.
+    ///   its tick recomputes the true bound;
+    /// * a controller drained at a **non-boundary** cycle (possible
+    ///   after a sampled fast-forward re-heats the index) is re-clamped
+    ///   to the next boundary — controllers only ever act on bus
+    ///   boundaries, so the clamp is exact, and it must be re-inserted
+    ///   because the drain consumed its index entry.
     fn tick_indexed(&mut self, now: u64) {
         let cpb = self.cfg.cpu.cpu_per_bus;
         let n_cores = self.cores.len();
         self.hier.bus_now = now / cpb;
+        let mut due = std::mem::take(&mut self.due_scratch);
+        let mut due_cores = std::mem::take(&mut self.core_scratch);
+        due.clear();
+        due_cores.clear();
+        self.wake.drain_due(now, &mut due);
+        due.sort_unstable();
+        due.dedup();
+        let split = due.partition_point(|&id| (id as usize) < n_cores);
+        due_cores.extend_from_slice(&due[..split]);
         if now % cpb == 0 {
             let bus = now / cpb;
             let mut completions = std::mem::take(&mut self.completions);
             completions.clear();
-            for ci in 0..self.hier.mcs.len() {
-                if self.wake.bound(n_cores + ci) > now {
-                    continue;
-                }
+            for &id in &due[split..] {
+                let ci = id as usize - n_cores;
                 self.hier.mcs[ci].tick(bus, &mut completions);
                 self.hier.enqueued[ci] = false;
                 let b = self.hier.mcs[ci].next_event_at(bus + 1).max(bus + 1);
@@ -349,20 +379,38 @@ impl System {
                     let woke = self.cores[core as usize].complete_line(line);
                     debug_assert!(woke, "completion filled no MSHR waiter");
                     if woke {
+                        // A bound still in the future means this core was
+                        // not part of the drained batch (nor woken by an
+                        // earlier completion this cycle): join it exactly
+                        // once.
+                        if self.wake.bound(core as usize) > now {
+                            due_cores.push(core);
+                        }
                         self.wake.set(core as usize, now);
                     }
                 }
             }
             self.completions = completions;
-        }
-        for i in 0..self.cores.len() {
-            if self.wake.bound(i) > now {
-                continue;
+        } else {
+            // Non-boundary cycle: controllers cannot act here. Their
+            // drained entries must be re-inserted at the next boundary
+            // or those wakes would be lost.
+            let next_bus_cpu = (now / cpb + 1).saturating_mul(cpb);
+            for &id in &due[split..] {
+                self.wake.set(id as usize, next_bus_cpu);
             }
+        }
+        // Completion-woken cores joined at the tail: restore ascending
+        // core order (the strict loop's visit order).
+        due_cores.sort_unstable();
+        for &id in &due_cores {
+            let i = id as usize;
             self.cores[i].tick(now, &mut self.hier);
             let bound = self.cores[i].next_event_at(now + 1);
             self.wake.set(i, bound);
         }
+        self.due_scratch = due;
+        self.core_scratch = due_cores;
         // Enqueues that landed during the core ticks: the controller can
         // first act on them at the next bus boundary (a conservative
         // early bound; its tick there recomputes the real one).
@@ -742,8 +790,12 @@ impl System {
             return None; // trailing garbage is corruption
         }
         self.completions.clear();
-        // Fresh all-hot index: every first tick is at worst a no-op.
-        self.wake = WakeIndex::new(self.cores.len() + self.hier.mcs.len());
+        self.due_scratch.clear();
+        self.core_scratch.clear();
+        // Fresh all-hot index (wheel or heap per config): every first
+        // tick is at worst a no-op.
+        self.wake =
+            WakeIndex::with_impl(self.cores.len() + self.hier.mcs.len(), self.cfg.wake_impl);
         Some(())
     }
 
@@ -797,7 +849,7 @@ impl System {
         for s in 0..shards {
             let take = chunk.min(remaining.len());
             let rest = remaining.split_off(take);
-            let st = ShardState::new(s * chunk, remaining);
+            let st = ShardState::new(s * chunk, remaining, self.cfg.wake_impl);
             remaining = rest;
             if s == 0 {
                 shard0 = Some(st);
@@ -901,14 +953,24 @@ impl System {
                         wq_lines: &mut wq_lines,
                         staged: &mut staged,
                     };
-                    for i in 0..n_cores {
-                        if self.wake.bound(i) > now {
-                            continue;
-                        }
+                    // Controllers are lent out (their coordinator-side
+                    // entries sit at `u64::MAX`), so one drain yields
+                    // exactly this cycle's due cores. Completion-woken
+                    // cores were re-set to `now` by `apply_epoch_out`
+                    // above, so they surface in the same batch.
+                    let mut due = std::mem::take(&mut self.due_scratch);
+                    due.clear();
+                    self.wake.drain_due(now, &mut due);
+                    due.sort_unstable();
+                    due.dedup();
+                    for &id in &due {
+                        let i = id as usize;
+                        debug_assert!(i < n_cores, "only cores live in the lent index");
                         self.cores[i].tick(now, &mut port);
                         let bound = self.cores[i].next_event_at(now + 1);
                         self.wake.set(i, bound);
                     }
+                    self.due_scratch = due;
                 }
                 // Trailing enqueue clamp at shard granularity: a staged
                 // message forces its shard's epoch at the next boundary,
@@ -1112,9 +1174,11 @@ impl EventDriven for System {
         }
     }
 
-    /// Global next-wake straight from the wake index: O(log n) amortized
-    /// instead of recomputing every core and controller bound per jump
-    /// (the controller bounds each cost a queue scan).
+    /// Global next-wake straight from the wake index — O(1) amortized
+    /// on the wheel (occupancy-bit scan from the cursor), O(log n) on
+    /// the heap oracle — instead of recomputing every core and
+    /// controller bound per jump (the controller bounds each cost a
+    /// queue scan).
     fn next_wake(&mut self, now: u64) -> u64 {
         self.wake.min_bound().max(now)
     }
@@ -1148,6 +1212,24 @@ mod tests {
             cfg.loop_mode = LoopMode::EventDriven;
             let b = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
             assert_eq!(a, b, "{name} diverged");
+        }
+    }
+
+    #[test]
+    fn wheel_and_heap_wake_indices_are_bit_identical() {
+        // Same invariant as the loop-mode check, along the other axis:
+        // the wake-index implementation must never be observable in
+        // results. The full mechanism × shard matrix lives in
+        // tests/engine_equiv.rs; this is the fast in-crate smoke check.
+        let mut cfg = quick_cfg(30_000);
+        cfg.warmup_cpu_cycles = 12_000;
+        for name in ["mcf", "gcc"] {
+            let p = Profile::by_name(name).unwrap();
+            cfg.wake_impl = WakeImpl::Wheel;
+            let a = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+            cfg.wake_impl = WakeImpl::Heap;
+            let b = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+            assert_eq!(a, b, "{name} diverged between wheel and heap");
         }
     }
 

@@ -1,4 +1,6 @@
-//! WakeIndex — indexed wake scheduling for the event kernel.
+//! Wake scheduling for the event kernel — a hierarchical timing wheel
+//! with the original lazily-pruned min-heap kept as a differential
+//! oracle.
 //!
 //! [`crate::sim::System::next_wake`] used to recompute every component's
 //! `next_event_at` bound on *every* event jump: O(cores + controllers)
@@ -8,19 +10,57 @@
 //! only when its component is ticked, and pulled down (never pushed up)
 //! when an external mutation could wake the component earlier — a
 //! completion delivered to a core, or an enqueue landing in a
-//! controller. The global minimum then costs O(log n) amortized via a
-//! lazily-pruned min-heap instead of a rescan.
+//! controller.
+//!
+//! Two interchangeable structures answer the global-minimum query behind
+//! the [`WakeIndex`] facade:
+//!
+//! * [`WakeWheel`] (default) — a hierarchical timing wheel: [`LEVELS`]
+//!   levels of [`SLOTS`] slots at power-of-two granularities (level `l`
+//!   buckets `2^(6l)` bus/CPU cycles per slot), covering a `2^48`-cycle
+//!   horizon with an overflow list beyond it. Insert, clamp-down, and
+//!   cursor advance are O(1) amortized; the minimum is found by
+//!   scanning per-level occupancy bitmasks, not by heap rebalancing.
+//! * [`WakeHeap`] (oracle) — the original lazily-pruned
+//!   `BinaryHeap<Reverse<(bound, id)>>`, O(log n) per operation with
+//!   occupancy-triggered compaction, kept selectable for differential
+//!   property tests, wheel-vs-heap equivalence rows, and benchmark
+//!   comparisons.
+//!
+//! [`WakeImpl`] selects between them: `sim.wake_impl` in the parameter
+//! registry, with the `auto` default deferring to `PALLAS_WAKE_IMPL`
+//! (`"heap"` selects the oracle; anything else means wheel).
 //!
 //! ## Soundness
 //!
 //! The event kernel's wake contract ([`crate::sim::engine`]) tolerates
 //! *early* bounds (a too-early wake is a no-op tick) but never *late*
-//! ones. The index preserves that one-sidedness: cached values start at
-//! 0 (hot), are only ever replaced by a freshly computed `next_event_at`
-//! immediately after the component ticked, or clamped *down* by an
-//! invalidation. Stale heap entries are harmless — an entry is trusted
-//! only while it matches the component's current cached bound; anything
-//! else is discarded when it surfaces.
+//! ones. Both implementations preserve that one-sidedness the same way:
+//! cached values start at 0 (hot), are only ever replaced by a freshly
+//! computed `next_event_at` immediately after the component ticked, or
+//! clamped *down* by an invalidation. `bounds` is the single source of
+//! truth; a heap entry or wheel slot entry is trusted only while it
+//! matches the component's current cached bound, and anything else is
+//! discarded when it surfaces. The wheel adds one invariant: every
+//! entry bucketed in a slot is `>= cursor`, and the cursor only ever
+//! advances to a value no greater than the smallest live slot entry, so
+//! a minimum scan can never skip a live bound. Bounds set *below* the
+//! cursor (re-heating after a sampled fast-forward, shard reassembly)
+//! are parked in a small `due` side list that the minimum query scans
+//! first — an early bound is free, so parking is always sound.
+//!
+//! ## Batched draining
+//!
+//! [`WakeIndex::drain_due`] pops every component whose bound is
+//! `<= now` in one call, so the event loop dispatches a whole bus
+//! boundary's wakes with one index traversal instead of one minimum
+//! query per component. The one-sided contract survives because a drain
+//! is a bulk pop of already-due entries: the caller must re-`set` every
+//! drained id to its next bound before the next query (every call site
+//! re-sets to `>= now + 1` or to a trailing clamp), exactly as it would
+//! after ticking that component under per-component popping. A drained
+//! id may appear twice (an id can own two live-looking entries after a
+//! set-away-and-back sequence), so callers sort + dedup the batch.
 //!
 //! The channel-sharded loop ([`crate::sim::shard`], DESIGN.md §11)
 //! reuses the same structure per shard: each `ShardState` holds a
@@ -32,23 +72,182 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::OnceLock;
 
-/// Cached per-component wake bounds with an O(log n) global minimum.
+/// log2 of the slot count per wheel level.
+pub const SLOT_BITS: usize = 6;
+/// Slots per wheel level (one occupancy `u64` per level).
+pub const SLOTS: usize = 1 << SLOT_BITS;
+/// Wheel levels; level `l` buckets `2^(SLOT_BITS * l)` cycles per slot.
+pub const LEVELS: usize = 8;
+/// Bits of horizon the bucketed levels cover; bounds at or beyond
+/// `cursor`'s `2^48`-cycle block boundary go to the overflow list.
+pub const HORIZON_BITS: usize = SLOT_BITS * LEVELS;
+
+const SLOT_MASK: u64 = (SLOTS - 1) as u64;
+
+/// Which wake-index structure the event kernel runs on.
+///
+/// Both implementations are bit-identical in simulation results (the
+/// engine-equivalence suite pins this); the choice only affects kernel
+/// speed. Hashed into the config fingerprint anyway — like `loop_mode`
+/// and `sim_threads` — so the equivalence tests can never compare a
+/// cached result against itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WakeImpl {
+    /// Defer to `PALLAS_WAKE_IMPL` (`"heap"` → heap, else wheel).
+    Auto,
+    /// Hierarchical timing wheel (the default resolution).
+    Wheel,
+    /// Lazily-pruned min-heap (the differential oracle).
+    Heap,
+}
+
+impl WakeImpl {
+    pub const NAMES: [&'static str; 3] = ["auto", "wheel", "heap"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WakeImpl::Auto => "auto",
+            WakeImpl::Wheel => "wheel",
+            WakeImpl::Heap => "heap",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(WakeImpl::Auto),
+            "wheel" => Some(WakeImpl::Wheel),
+            "heap" => Some(WakeImpl::Heap),
+            _ => None,
+        }
+    }
+
+    /// Collapse [`WakeImpl::Auto`] against the environment: the first
+    /// resolution reads `PALLAS_WAKE_IMPL` once (process-wide), the same
+    /// pattern `sim_threads: 0` uses for `PALLAS_SIM_THREADS`.
+    pub fn resolved(self) -> WakeImpl {
+        match self {
+            WakeImpl::Auto => {
+                static IMP: OnceLock<WakeImpl> = OnceLock::new();
+                *IMP.get_or_init(|| {
+                    match std::env::var("PALLAS_WAKE_IMPL").ok().as_deref() {
+                        Some("heap") => WakeImpl::Heap,
+                        _ => WakeImpl::Wheel,
+                    }
+                })
+            }
+            other => other,
+        }
+    }
+}
+
+/// Cached per-component wake bounds, dispatching the minimum/drain
+/// machinery to the configured implementation.
 ///
 /// Component ids are dense `0..n` (the [`crate::sim::System`] maps cores
 /// first, then controllers). A bound of `u64::MAX` means "only an
-/// external invalidation can wake this component" and gets no heap
-/// entry at all.
+/// external invalidation can wake this component" and gets no entry at
+/// all.
 #[derive(Debug)]
-pub struct WakeIndex {
-    /// Current bound per component — the single source of truth.
-    bounds: Vec<u64>,
-    /// Min-heap of `(bound, component)` snapshots; entries whose bound
-    /// no longer matches `bounds` are stale and lazily discarded.
-    heap: BinaryHeap<Reverse<(u64, u32)>>,
+pub enum WakeIndex {
+    Wheel(WakeWheel),
+    Heap(WakeHeap),
 }
 
 impl WakeIndex {
+    /// All `n` components start hot at cycle 0, on the wheel.
+    pub fn new(n: usize) -> Self {
+        WakeIndex::Wheel(WakeWheel::new(n))
+    }
+
+    /// All `n` components hot at 0, on the requested implementation
+    /// (`Auto` resolves through the environment).
+    pub fn with_impl(n: usize, imp: WakeImpl) -> Self {
+        match imp.resolved() {
+            WakeImpl::Heap => WakeIndex::Heap(WakeHeap::new(n)),
+            _ => WakeIndex::Wheel(WakeWheel::new(n)),
+        }
+    }
+
+    /// Which implementation this index runs on.
+    pub fn kind(&self) -> WakeImpl {
+        match self {
+            WakeIndex::Wheel(_) => WakeImpl::Wheel,
+            WakeIndex::Heap(_) => WakeImpl::Heap,
+        }
+    }
+
+    /// Number of indexed components.
+    pub fn len(&self) -> usize {
+        match self {
+            WakeIndex::Wheel(w) => w.len(),
+            WakeIndex::Heap(h) => h.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The cached bound of component `id`.
+    #[inline]
+    pub fn bound(&self, id: usize) -> u64 {
+        match self {
+            WakeIndex::Wheel(w) => w.bound(id),
+            WakeIndex::Heap(h) => h.bound(id),
+        }
+    }
+
+    /// Replace component `id`'s bound.
+    #[inline]
+    pub fn set(&mut self, id: usize, bound: u64) {
+        match self {
+            WakeIndex::Wheel(w) => w.set(id, bound),
+            WakeIndex::Heap(h) => h.set(id, bound),
+        }
+    }
+
+    /// The minimum cached bound over every component, or `u64::MAX` when
+    /// every component sleeps indefinitely.
+    #[inline]
+    pub fn min_bound(&mut self) -> u64 {
+        match self {
+            WakeIndex::Wheel(w) => w.min_bound(),
+            WakeIndex::Heap(h) => h.min_bound(),
+        }
+    }
+
+    /// Pop every id whose bound is `<= now` into `out` (appended; may
+    /// contain duplicates — callers sort + dedup). Contract: the caller
+    /// must re-`set` every drained id before the next query; every call
+    /// site re-sets to `>= now + 1` (a recomputed `next_event_at` or a
+    /// trailing clamp), so no live bound is ever lost.
+    #[inline]
+    pub fn drain_due(&mut self, now: u64, out: &mut Vec<u32>) {
+        match self {
+            WakeIndex::Wheel(w) => w.drain_due(now, out),
+            WakeIndex::Heap(h) => h.drain_due(now, out),
+        }
+    }
+}
+
+/// The original lazily-pruned min-heap index (differential oracle).
+///
+/// Every `set` pushes a `(bound, id)` snapshot; entries whose bound no
+/// longer matches `bounds` are stale and discarded when they surface.
+/// Occupancy-triggered compaction rebuilds the heap from `bounds` when
+/// stale churn grows it past `4n + 64` entries, pinning memory at
+/// O(components) even under adversarial clamp patterns.
+#[derive(Debug)]
+pub struct WakeHeap {
+    /// Current bound per component — the single source of truth.
+    bounds: Vec<u64>,
+    /// Min-heap of `(bound, component)` snapshots.
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+}
+
+impl WakeHeap {
     /// All `n` components start hot at cycle 0.
     pub fn new(n: usize) -> Self {
         let mut heap = BinaryHeap::with_capacity(2 * n + 8);
@@ -58,7 +257,6 @@ impl WakeIndex {
         Self { bounds: vec![0; n], heap }
     }
 
-    /// Number of indexed components.
     pub fn len(&self) -> usize {
         self.bounds.len()
     }
@@ -67,10 +265,15 @@ impl WakeIndex {
         self.bounds.is_empty()
     }
 
-    /// The cached bound of component `id`.
     #[inline]
     pub fn bound(&self, id: usize) -> u64 {
         self.bounds[id]
+    }
+
+    /// Heap entries currently held, live and stale (test hook for the
+    /// compaction bound).
+    pub fn heap_len(&self) -> usize {
+        self.heap.len()
     }
 
     /// Replace component `id`'s bound.
@@ -79,14 +282,29 @@ impl WakeIndex {
             return;
         }
         self.bounds[id] = bound;
-        if bound != u64::MAX {
-            self.heap.push(Reverse((bound, id as u32)));
+        if bound == u64::MAX {
+            return;
+        }
+        if self.heap.len() >= 4 * self.bounds.len() + 64 {
+            self.compact();
+        }
+        self.heap.push(Reverse((bound, id as u32)));
+    }
+
+    /// Drop every stale entry by rebuilding the heap from `bounds`.
+    /// Amortized free: triggered only after >= 3n + 64 stale pushes,
+    /// each of which already paid O(log n).
+    fn compact(&mut self) {
+        self.heap.clear();
+        for (id, &b) in self.bounds.iter().enumerate() {
+            if b != u64::MAX {
+                self.heap.push(Reverse((b, id as u32)));
+            }
         }
     }
 
-    /// The minimum cached bound over every component, or `u64::MAX` when
-    /// every component sleeps indefinitely. Amortized O(log n): each
-    /// discarded stale entry was paid for by the `set` that pushed it.
+    /// The minimum cached bound, amortized O(log n): each discarded
+    /// stale entry was paid for by the `set` that pushed it.
     pub fn min_bound(&mut self) -> u64 {
         while let Some(&Reverse((bound, id))) = self.heap.peek() {
             if self.bounds[id as usize] == bound {
@@ -96,79 +314,591 @@ impl WakeIndex {
         }
         u64::MAX
     }
+
+    /// Pop every id with a live bound `<= now` into `out` (duplicates
+    /// possible; see [`WakeIndex::drain_due`] for the re-set contract).
+    pub fn drain_due(&mut self, now: u64, out: &mut Vec<u32>) {
+        while let Some(&Reverse((bound, id))) = self.heap.peek() {
+            if bound > now {
+                break;
+            }
+            self.heap.pop();
+            if self.bounds[id as usize] == bound {
+                out.push(id);
+            }
+        }
+    }
+}
+
+/// Hierarchical timing wheel over bus/CPU-cycle bounds.
+///
+/// Level `l` (`0..LEVELS`) holds 64 slots of `2^(6l)` cycles each; a
+/// bound `b >= cursor` is bucketed at the smallest level whose slot
+/// field still distinguishes it from the cursor — i.e. the smallest `l`
+/// with `b >> 6(l+1) == cursor >> 6(l+1)` — giving exact (1-cycle)
+/// resolution inside the cursor's current 64-cycle window and coarser
+/// resolution further out. Bounds not within the cursor's `2^48` block
+/// go to `overflow`; bounds *below* the cursor go to the `due` side
+/// list (early wakes are free, so parking them unsorted is sound).
+///
+/// Minimum queries scan the level-0 occupancy mask from the cursor's
+/// slot, cascading coarser slots down as the cursor crosses their
+/// ranges; the cursor never advances past a live entry. Stale entries
+/// (bound no longer matching `bounds`) are dropped wherever they
+/// surface, and a `live`-entry counter triggers a full rebuild at
+/// `> 4n + 64` entries so set-heavy adversarial patterns cannot grow
+/// the wheel past O(components).
+#[derive(Debug)]
+pub struct WakeWheel {
+    /// Current bound per component — the single source of truth.
+    bounds: Vec<u64>,
+    /// `LEVELS * SLOTS` buckets of `(bound, id)` snapshots.
+    slots: Vec<Vec<(u64, u32)>>,
+    /// One occupancy bit per slot, per level.
+    occ: [u64; LEVELS],
+    /// Scan position: every slot entry is `>= cursor` when live.
+    cursor: u64,
+    /// Live-looking entries parked below the cursor.
+    due: Vec<(u64, u32)>,
+    /// Entries beyond the cursor's `2^HORIZON_BITS` block.
+    overflow: Vec<(u64, u32)>,
+    /// Total entries across `slots`, `due`, and `overflow`.
+    live: usize,
+}
+
+impl WakeWheel {
+    /// All `n` components start hot at cycle 0.
+    pub fn new(n: usize) -> Self {
+        let mut w = Self {
+            bounds: vec![0; n],
+            slots: vec![Vec::new(); LEVELS * SLOTS],
+            occ: [0; LEVELS],
+            cursor: 0,
+            due: Vec::new(),
+            overflow: Vec::new(),
+            live: 0,
+        };
+        for id in 0..n {
+            w.insert(0, id as u32);
+        }
+        w
+    }
+
+    pub fn len(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bounds.is_empty()
+    }
+
+    #[inline]
+    pub fn bound(&self, id: usize) -> u64 {
+        self.bounds[id]
+    }
+
+    /// Entries currently held, live and stale (test hook for the
+    /// compaction bound).
+    pub fn entry_count(&self) -> usize {
+        self.live
+    }
+
+    /// Replace component `id`'s bound.
+    pub fn set(&mut self, id: usize, bound: u64) {
+        if self.bounds[id] == bound {
+            return;
+        }
+        self.bounds[id] = bound;
+        if bound == u64::MAX {
+            return;
+        }
+        if self.live >= 4 * self.bounds.len() + 64 {
+            self.compact();
+        }
+        self.insert(bound, id as u32);
+    }
+
+    /// Bucket `(b, id)`: below the cursor → `due`; within the cursor's
+    /// `2^48` block → the smallest level whose slot field distinguishes
+    /// `b` from the cursor; otherwise → `overflow`. O(LEVELS) worst
+    /// case, O(1) for near-future bounds (the common case).
+    fn insert(&mut self, b: u64, id: u32) {
+        self.live += 1;
+        if b < self.cursor {
+            self.due.push((b, id));
+            return;
+        }
+        for l in 0..LEVELS {
+            let shift = SLOT_BITS * (l + 1);
+            if (b >> shift) == (self.cursor >> shift) {
+                let s = ((b >> (SLOT_BITS * l)) & SLOT_MASK) as usize;
+                self.slots[l * SLOTS + s].push((b, id));
+                self.occ[l] |= 1u64 << s;
+                return;
+            }
+        }
+        self.overflow.push((b, id));
+    }
+
+    /// Drop every stale entry by rebuilding the wheel from `bounds`
+    /// (cursor unchanged). Amortized free, same argument as the heap's
+    /// compaction.
+    fn compact(&mut self) {
+        for l in 0..LEVELS {
+            let mut m = self.occ[l];
+            while m != 0 {
+                let s = m.trailing_zeros() as usize;
+                self.slots[l * SLOTS + s].clear();
+                m &= m - 1;
+            }
+            self.occ[l] = 0;
+        }
+        self.due.clear();
+        self.overflow.clear();
+        self.live = 0;
+        for id in 0..self.bounds.len() {
+            let b = self.bounds[id];
+            if b != u64::MAX {
+                self.insert(b, id as u32);
+            }
+        }
+    }
+
+    /// Prune the `due` side list and return its minimum live bound.
+    fn due_min(&mut self) -> u64 {
+        let Self { bounds, due, live, .. } = self;
+        let mut min = u64::MAX;
+        let mut i = 0;
+        while i < due.len() {
+            let (b, id) = due[i];
+            if bounds[id as usize] != b {
+                due.swap_remove(i);
+                *live -= 1;
+            } else {
+                min = min.min(b);
+                i += 1;
+            }
+        }
+        min
+    }
+
+    /// The minimum live bound bucketed in the wheel levels / overflow,
+    /// advancing the cursor to it (entries are left in place — this is
+    /// a peek). Returns `u64::MAX` when the wheel is empty.
+    fn wheel_min(&mut self) -> u64 {
+        'outer: loop {
+            // Level 0: exact-cycle slots of the cursor's 64-cycle
+            // window, scanned ascending via the occupancy mask.
+            let w0 = (self.cursor >> SLOT_BITS) << SLOT_BITS;
+            let cs0 = (self.cursor & SLOT_MASK) as u32;
+            loop {
+                let masked = self.occ[0] & (!0u64 << cs0);
+                if masked == 0 {
+                    break;
+                }
+                let s = masked.trailing_zeros() as usize;
+                let expected = w0 + s as u64;
+                let Self { bounds, slots, due, live, .. } = self;
+                let slot = &mut slots[s];
+                let mut i = 0;
+                while i < slot.len() {
+                    let (b, id) = slot[i];
+                    if bounds[id as usize] != b {
+                        slot.swap_remove(i);
+                        *live -= 1;
+                    } else if b != expected {
+                        // Live but left over from an older window (its
+                        // newer copy sits in `due`): park it there too —
+                        // a live bound is never dropped.
+                        let e = slot.swap_remove(i);
+                        due.push(e);
+                    } else {
+                        i += 1;
+                    }
+                }
+                if slot.is_empty() {
+                    self.occ[0] &= !(1u64 << s);
+                    continue;
+                }
+                self.cursor = expected;
+                return expected;
+            }
+            // Cascade: rebucket the lowest cursor-path slot (the coarser
+            // slot whose range contains the cursor) down a level, then
+            // rescan — its entries may fall anywhere from the current
+            // window up, so the cursor must not move yet.
+            for l in 1..LEVELS {
+                let csl = ((self.cursor >> (SLOT_BITS * l)) & SLOT_MASK) as usize;
+                if self.occ[l] & (1u64 << csl) == 0 {
+                    continue;
+                }
+                self.occ[l] &= !(1u64 << csl);
+                let entries = std::mem::take(&mut self.slots[l * SLOTS + csl]);
+                self.live -= entries.len();
+                let mut moved = false;
+                for (b, id) in entries {
+                    if self.bounds[id as usize] != b {
+                        continue;
+                    }
+                    moved |= b >= self.cursor;
+                    // Re-bucketing lands strictly below level `l` (the
+                    // slot fields at `l` now match the cursor's), or in
+                    // `due` for sub-cursor strays.
+                    self.insert(b, id);
+                }
+                if moved {
+                    continue 'outer;
+                }
+            }
+            // Later slots, finest level first: the first live entry's
+            // slot start lower-bounds every remaining wheel entry, so
+            // the cursor may jump there before cascading the slot down.
+            for l in 1..LEVELS {
+                let csl = ((self.cursor >> (SLOT_BITS * l)) & SLOT_MASK) as u32;
+                loop {
+                    let masked = if csl >= 63 { 0 } else { self.occ[l] & (!0u64 << (csl + 1)) };
+                    if masked == 0 {
+                        break;
+                    }
+                    let s = masked.trailing_zeros() as usize;
+                    self.occ[l] &= !(1u64 << s);
+                    let entries = std::mem::take(&mut self.slots[l * SLOTS + s]);
+                    self.live -= entries.len();
+                    let wl = (self.cursor >> (SLOT_BITS * (l + 1))) << (SLOT_BITS * (l + 1));
+                    let slot_start = wl + ((s as u64) << (SLOT_BITS * l));
+                    let in_range = |b: u64| (b >> (SLOT_BITS * l)) == (slot_start >> (SLOT_BITS * l));
+                    let any = entries
+                        .iter()
+                        .any(|&(b, id)| self.bounds[id as usize] == b && in_range(b));
+                    if any {
+                        // Everything live outside the slot's range is an
+                        // older-window stray (provably `< slot_start`),
+                        // which `insert` routes to `due`.
+                        self.cursor = slot_start;
+                    }
+                    for (b, id) in entries {
+                        if self.bounds[id as usize] == b {
+                            self.insert(b, id);
+                        }
+                    }
+                    if any {
+                        continue 'outer;
+                    }
+                }
+            }
+            // Overflow: every bucketed level is clean, so the smallest
+            // live overflow bound (if any) is the wheel minimum. Jump
+            // the cursor to it and pull its 2^48 block into the levels.
+            if !self.overflow.is_empty() {
+                {
+                    let Self { bounds, overflow, live, .. } = self;
+                    let before = overflow.len();
+                    overflow.retain(|&(b, id)| bounds[id as usize] == b);
+                    *live -= before - overflow.len();
+                }
+                // Sub-cursor strays keep the cursor monotone by moving
+                // to `due` instead of becoming minimum candidates.
+                let mut i = 0;
+                while i < self.overflow.len() {
+                    if self.overflow[i].0 < self.cursor {
+                        let e = self.overflow.swap_remove(i);
+                        self.due.push(e);
+                    } else {
+                        i += 1;
+                    }
+                }
+                if let Some(min_b) = self.overflow.iter().map(|&(b, _)| b).min() {
+                    self.cursor = min_b;
+                    let mut i = 0;
+                    while i < self.overflow.len() {
+                        if (self.overflow[i].0 >> HORIZON_BITS) == (self.cursor >> HORIZON_BITS) {
+                            let (b, id) = self.overflow.swap_remove(i);
+                            self.live -= 1;
+                            self.insert(b, id);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    continue 'outer;
+                }
+            }
+            return u64::MAX;
+        }
+    }
+
+    /// The minimum cached bound over every component.
+    pub fn min_bound(&mut self) -> u64 {
+        let due = self.due_min();
+        let wheel = self.wheel_min();
+        due.min(wheel)
+    }
+
+    /// Pop every id with a live bound `<= now` into `out` (duplicates
+    /// possible; see [`WakeIndex::drain_due`] for the re-set contract).
+    pub fn drain_due(&mut self, now: u64, out: &mut Vec<u32>) {
+        {
+            let Self { bounds, due, live, .. } = self;
+            let mut i = 0;
+            while i < due.len() {
+                let (b, id) = due[i];
+                if bounds[id as usize] != b {
+                    due.swap_remove(i);
+                    *live -= 1;
+                } else if b <= now {
+                    out.push(id);
+                    due.swap_remove(i);
+                    *live -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        loop {
+            let m = self.wheel_min();
+            if m > now {
+                break;
+            }
+            // `wheel_min` left the cursor's level-0 slot holding exactly
+            // the live entries at bound `m`; take the whole bucket.
+            let s = (m & SLOT_MASK) as usize;
+            let slot = &mut self.slots[s];
+            let n = slot.len();
+            for (_, id) in slot.drain(..) {
+                out.push(id);
+            }
+            self.live -= n;
+            self.occ[0] &= !(1u64 << s);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn both(n: usize) -> [WakeIndex; 2] {
+        [WakeIndex::with_impl(n, WakeImpl::Wheel), WakeIndex::with_impl(n, WakeImpl::Heap)]
+    }
+
     #[test]
     fn fresh_index_is_hot_everywhere() {
-        let mut w = WakeIndex::new(3);
-        assert_eq!(w.len(), 3);
-        assert_eq!(w.min_bound(), 0);
-        assert_eq!(w.bound(2), 0);
+        for mut w in both(3) {
+            assert_eq!(w.len(), 3);
+            assert_eq!(w.min_bound(), 0, "{:?}", w.kind());
+            assert_eq!(w.bound(2), 0);
+        }
     }
 
     #[test]
     fn min_tracks_updates_and_prunes_stale_entries() {
-        let mut w = WakeIndex::new(3);
-        w.set(0, 10);
-        w.set(1, 7);
-        w.set(2, 30);
-        assert_eq!(w.min_bound(), 7);
-        w.set(1, 40); // the (7, 1) entry becomes stale
-        assert_eq!(w.min_bound(), 10);
-        w.set(0, 50);
-        assert_eq!(w.min_bound(), 30);
+        for mut w in both(3) {
+            w.set(0, 10);
+            w.set(1, 7);
+            w.set(2, 30);
+            assert_eq!(w.min_bound(), 7, "{:?}", w.kind());
+            w.set(1, 40); // the (7, 1) entry becomes stale
+            assert_eq!(w.min_bound(), 10);
+            w.set(0, 50);
+            assert_eq!(w.min_bound(), 30);
+        }
     }
 
     #[test]
     fn lowering_a_bound_takes_effect_immediately() {
-        let mut w = WakeIndex::new(2);
-        w.set(0, 100);
-        w.set(1, 200);
-        assert_eq!(w.min_bound(), 100);
-        w.set(1, 5);
-        assert_eq!(w.min_bound(), 5);
+        for mut w in both(2) {
+            w.set(0, 100);
+            w.set(1, 200);
+            assert_eq!(w.min_bound(), 100, "{:?}", w.kind());
+            w.set(1, 5);
+            assert_eq!(w.min_bound(), 5);
+        }
     }
 
     #[test]
     fn max_bound_means_never_self_wakes() {
-        let mut w = WakeIndex::new(2);
-        w.set(0, u64::MAX);
-        w.set(1, u64::MAX);
-        assert_eq!(w.min_bound(), u64::MAX);
-        w.set(0, 9);
-        assert_eq!(w.min_bound(), 9);
+        for mut w in both(2) {
+            w.set(0, u64::MAX);
+            w.set(1, u64::MAX);
+            assert_eq!(w.min_bound(), u64::MAX, "{:?}", w.kind());
+            w.set(0, 9);
+            assert_eq!(w.min_bound(), 9);
+        }
     }
 
     #[test]
     fn redundant_sets_are_noops() {
-        let mut w = WakeIndex::new(1);
-        w.set(0, 4);
-        w.set(0, 4);
-        w.set(0, 4);
-        assert_eq!(w.min_bound(), 4);
-        w.set(0, 6);
-        assert_eq!(w.min_bound(), 6);
+        for mut w in both(1) {
+            w.set(0, 4);
+            w.set(0, 4);
+            w.set(0, 4);
+            assert_eq!(w.min_bound(), 4, "{:?}", w.kind());
+            w.set(0, 6);
+            assert_eq!(w.min_bound(), 6);
+        }
     }
 
     #[test]
     fn interleaved_raise_lower_sequences_stay_consistent() {
-        // Exercise the lazy heap with a deterministic pseudo-random walk
-        // against a naive rescan oracle.
+        // Exercise both structures with a deterministic pseudo-random
+        // walk against a naive rescan oracle.
         let n = 8usize;
-        let mut w = WakeIndex::new(n);
-        let mut oracle = vec![0u64; n];
-        let mut state = 0x9E37_79B9u64;
-        for _ in 0..2000 {
+        for mut w in both(n) {
+            let mut oracle = vec![0u64; n];
+            let mut state = 0x9E37_79B9u64;
+            for _ in 0..2000 {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let id = (state >> 33) as usize % n;
+                let bound = if state % 17 == 0 { u64::MAX } else { state % 10_000 };
+                w.set(id, bound);
+                oracle[id] = bound;
+                assert_eq!(w.min_bound(), *oracle.iter().min().unwrap(), "{:?}", w.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn heap_stays_o_components_under_adversarial_clamps() {
+        // Alternate every component between two bounds forever: each
+        // flip pushes a fresh entry and strands a stale one. Compaction
+        // must pin the heap at O(components) regardless.
+        let n = 8usize;
+        let mut h = WakeHeap::new(n);
+        for round in 0..100_000u64 {
+            let id = (round % n as u64) as usize;
+            h.set(id, 1_000 + round % 2);
+            assert!(
+                h.heap_len() <= 4 * n + 64,
+                "heap grew past O(components): {} entries after round {round}",
+                h.heap_len()
+            );
+        }
+        assert_eq!(h.min_bound(), 1_000);
+    }
+
+    #[test]
+    fn wheel_stays_o_components_under_adversarial_clamps() {
+        let n = 8usize;
+        let mut w = WakeWheel::new(n);
+        for round in 0..100_000u64 {
+            let id = (round % n as u64) as usize;
+            w.set(id, 1_000 + round % 2);
+            assert!(
+                w.entry_count() <= 4 * n + 64,
+                "wheel grew past O(components): {} entries after round {round}",
+                w.entry_count()
+            );
+        }
+        assert_eq!(w.min_bound(), 1_000);
+    }
+
+    #[test]
+    fn drain_due_pops_exactly_the_due_set() {
+        for mut w in both(5) {
+            w.set(0, 10);
+            w.set(1, 25);
+            w.set(2, 25);
+            w.set(3, 40);
+            w.set(4, u64::MAX);
+            let mut out = Vec::new();
+            w.drain_due(25, &mut out);
+            out.sort_unstable();
+            out.dedup();
+            assert_eq!(out, vec![0, 1, 2], "{:?}", w.kind());
+            // Contract: every drained id is re-set past `now`.
+            for &id in &out {
+                w.set(id as usize, 100 + id as u64);
+            }
+            assert_eq!(w.min_bound(), 40);
+            out.clear();
+            w.drain_due(39, &mut out);
+            assert!(out.is_empty(), "{:?}", w.kind());
+            out.clear();
+            w.drain_due(200, &mut out);
+            out.sort_unstable();
+            out.dedup();
+            assert_eq!(out, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn wheel_handles_far_future_and_below_cursor_bounds() {
+        // Overflow horizon: a bound beyond the cursor's 2^48 block must
+        // surface once everything nearer is gone; re-heating a component
+        // below the advanced cursor (the sampled fast-forward pattern)
+        // must surface immediately.
+        let mut w = WakeWheel::new(3);
+        let far = 1u64 << 50;
+        w.set(0, 1_000);
+        w.set(1, far);
+        w.set(2, u64::MAX);
+        assert_eq!(w.min_bound(), 1_000);
+        w.set(0, u64::MAX);
+        assert_eq!(w.min_bound(), far, "overflow bound must surface");
+        // The cursor sits at `far`; park a bound far below it.
+        w.set(2, 500);
+        assert_eq!(w.min_bound(), 500, "below-cursor bound must win");
+        let mut out = Vec::new();
+        w.drain_due(600, &mut out);
+        assert_eq!(out, vec![2]);
+        w.set(2, far + 7);
+        assert_eq!(w.min_bound(), far);
+    }
+
+    #[test]
+    fn wheel_and_heap_agree_on_random_drain_streams() {
+        // Drive identical op sequences through both and require the
+        // same min at every step and the same (sorted, deduped) drain
+        // batches — the in-module twin of the tests/prop.rs suite.
+        let n = 16usize;
+        let mut wheel = WakeIndex::with_impl(n, WakeImpl::Wheel);
+        let mut heap = WakeIndex::with_impl(n, WakeImpl::Heap);
+        let mut now = 0u64;
+        let mut state = 0xDEAD_BEEFu64;
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for step in 0..4000 {
             state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
             let id = (state >> 33) as usize % n;
-            let bound = if state % 17 == 0 { u64::MAX } else { state % 10_000 };
-            w.set(id, bound);
-            oracle[id] = bound;
-            assert_eq!(w.min_bound(), *oracle.iter().min().unwrap());
+            let bound = match state % 11 {
+                0 => u64::MAX,
+                1 => now + ((state >> 7) % (1 << 52)), // overflow territory
+                2 => now.saturating_sub((state >> 9) % 100), // at/below now
+                _ => now + 1 + (state >> 9) % 500,
+            };
+            wheel.set(id, bound);
+            heap.set(id, bound);
+            assert_eq!(wheel.min_bound(), heap.min_bound(), "step {step}");
+            if state % 5 == 0 {
+                now = now.max(wheel.min_bound().min(now + (state >> 40) % 64));
+                a.clear();
+                b.clear();
+                wheel.drain_due(now, &mut a);
+                heap.drain_due(now, &mut b);
+                a.sort_unstable();
+                a.dedup();
+                b.sort_unstable();
+                b.dedup();
+                assert_eq!(a, b, "drain batches diverged at step {step}, now {now}");
+                for &id in &a {
+                    let nb = now + 1 + (u64::from(id) * 37) % 200;
+                    wheel.set(id as usize, nb);
+                    heap.set(id as usize, nb);
+                }
+                assert_eq!(wheel.min_bound(), heap.min_bound(), "post-drain step {step}");
+            }
         }
+    }
+
+    #[test]
+    fn wake_impl_parses_and_names_round_trip() {
+        for name in WakeImpl::NAMES {
+            let imp = WakeImpl::parse(name).unwrap();
+            assert_eq!(imp.name(), name);
+        }
+        assert_eq!(WakeImpl::parse("quadtree"), None);
+        // Resolution never yields Auto.
+        assert_ne!(WakeImpl::Auto.resolved(), WakeImpl::Auto);
+        assert_eq!(WakeImpl::Wheel.resolved(), WakeImpl::Wheel);
+        assert_eq!(WakeImpl::Heap.resolved(), WakeImpl::Heap);
     }
 }

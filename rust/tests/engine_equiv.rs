@@ -17,6 +17,7 @@ use chargecache::controller::SchedulerKind;
 use chargecache::coordinator::runner::parallel_map_threads;
 use chargecache::latency::MechanismKind;
 use chargecache::sim::engine::LoopMode;
+use chargecache::sim::wake::WakeImpl;
 use chargecache::sim::{SimResult, System};
 use chargecache::trace::Profile;
 
@@ -179,6 +180,43 @@ fn sharded_64_core_mix_is_bit_identical_across_shard_counts() {
         for shards in [2usize, 4, 8] {
             let tn = run(kind, LoopMode::EventDriven, shards);
             assert_identical(&t1, &tn, &format!("64-core/{}/{shards}-shard", kind.label()));
+        }
+    }
+}
+
+#[test]
+fn wake_wheel_matches_heap_oracle_across_mechanisms_and_shards() {
+    // The wake-impl axis of the equivalence matrix: the timing wheel as
+    // the production index, the lazily-pruned heap as the differential
+    // oracle, and strict-tick (which never consults the index) as
+    // ground truth. On the paper's large shape (64 cores, 8 channels)
+    // every mechanism must be bit-identical across heap vs wheel and
+    // across 1/2/4/8 wheel-backed shards — the wake index may only ever
+    // change *when* the kernel looks at a component, never what it sees.
+    let run = |kind: MechanismKind, imp: WakeImpl, mode: LoopMode, shards: usize| -> SimResult {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 64;
+        cfg.dram.channels = 8;
+        cfg.insts_per_core = 800;
+        cfg.warmup_cpu_cycles = 1_500;
+        cfg.loop_mode = mode;
+        cfg.sim_threads = shards;
+        cfg.wake_impl = imp;
+        System::new_mix(&cfg, kind, 1).run()
+    };
+    for kind in MECHS {
+        let strict = run(kind, WakeImpl::Heap, LoopMode::StrictTick, 1);
+        let heap = run(kind, WakeImpl::Heap, LoopMode::EventDriven, 1);
+        let wheel = run(kind, WakeImpl::Wheel, LoopMode::EventDriven, 1);
+        assert_identical(&strict, &heap, &format!("64-core/{}/heap-vs-strict", kind.label()));
+        assert_identical(&heap, &wheel, &format!("64-core/{}/wheel-vs-heap", kind.label()));
+        for shards in [2usize, 4, 8] {
+            let tn = run(kind, WakeImpl::Wheel, LoopMode::EventDriven, shards);
+            assert_identical(
+                &wheel,
+                &tn,
+                &format!("64-core/{}/wheel-{shards}-shard", kind.label()),
+            );
         }
     }
 }

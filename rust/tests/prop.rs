@@ -10,6 +10,7 @@ use chargecache::dram::command::Loc;
 use chargecache::latency::chargecache::ChargeCache;
 use chargecache::latency::{Mechanism, MechanismKind, RowKey};
 use chargecache::sim::engine::{advance, LoopMode};
+use chargecache::sim::wake::{WakeImpl, WakeIndex};
 use chargecache::sim::{SimSnapshot, System};
 use chargecache::trace::XorShift64;
 
@@ -379,6 +380,79 @@ fn prop_wake_index_is_never_later_than_full_rescan() {
             sys.assert_wake_bounds_conservative(now);
         }
     });
+}
+
+/// The timing wheel against the heap oracle, as plain data structures:
+/// identical random operation sequences (raises, clamps, `u64::MAX`
+/// parking, far-future overflow bounds, batched drains at a random
+/// monotone `now`) must produce identical `min_bound` values at every
+/// step and identical sorted-deduped drain batches. This is the direct
+/// differential form of the equivalence the engine tests observe
+/// end-to-end; component counts cover the degenerate single-entry
+/// index, one wheel slot's worth, and a multi-level population.
+#[test]
+fn prop_wheel_and_heap_agree_on_random_op_sequences() {
+    for n in [1usize, 3, 64, 257] {
+        property(8, |rng, seed| {
+            let mut wheel = WakeIndex::with_impl(n, WakeImpl::Wheel);
+            let mut heap = WakeIndex::with_impl(n, WakeImpl::Heap);
+            assert_eq!(wheel.kind(), WakeImpl::Wheel, "auto must not leak in");
+            assert_eq!(heap.kind(), WakeImpl::Heap);
+            let mut now = 0u64;
+            for step in 0..4_000u64 {
+                let id = rng.below(n as u64) as usize;
+                match rng.below(10) {
+                    // Mostly ordinary re-arms near the present...
+                    0..=5 => {
+                        let b = now + rng.below(500);
+                        wheel.set(id, b);
+                        heap.set(id, b);
+                    }
+                    // ...some parked forever...
+                    6 => {
+                        wheel.set(id, u64::MAX);
+                        heap.set(id, u64::MAX);
+                    }
+                    // ...some far beyond the wheel's bucketed horizon
+                    // (forces the overflow list)...
+                    7 => {
+                        let b = now + (1u64 << 50) + rng.below(1 << 20);
+                        wheel.set(id, b);
+                        heap.set(id, b);
+                    }
+                    // ...and some clamped below the current cursor (the
+                    // re-heat path sampling and shard reassembly take).
+                    _ => {
+                        let b = rng.below(now + 1);
+                        wheel.set(id, b);
+                        heap.set(id, b);
+                    }
+                }
+                assert_eq!(
+                    wheel.min_bound(),
+                    heap.min_bound(),
+                    "min diverged at step {step} (n {n}, seed {seed})"
+                );
+                if rng.below(4) == 0 {
+                    now += rng.below(300);
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    wheel.drain_due(now, &mut a);
+                    heap.drain_due(now, &mut b);
+                    a.sort_unstable();
+                    a.dedup();
+                    b.sort_unstable();
+                    b.dedup();
+                    assert_eq!(a, b, "drain diverged at step {step} (n {n}, seed {seed})");
+                    // Honor the drain contract: re-arm every drained id.
+                    for &id in &a {
+                        let nb = now + 1 + rng.below(200);
+                        wheel.set(id as usize, nb);
+                        heap.set(id as usize, nb);
+                    }
+                }
+            }
+        });
+    }
 }
 
 /// The epoch-barrier exchange contract of the channel-sharded loop
