@@ -413,6 +413,71 @@ impl Default for FaultConfig {
     }
 }
 
+/// Arrival process driving the open-loop traffic injector
+/// ([`crate::sim::traffic`]). `Closed` (the default) disables the
+/// subsystem entirely: no injector is built, no traffic RNG is drawn,
+/// and the run is bit-identical to one on a build without it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficMode {
+    /// Closed-loop trace replay through the cores (the paper's
+    /// methodology; the default).
+    Closed,
+    /// Deterministic arrivals at exactly `rate_rps`.
+    Det,
+    /// Poisson arrivals (exponential interarrivals) at `rate_rps`.
+    Poisson,
+    /// On/off bursts: Poisson arrivals inside exponential ON windows
+    /// (means `burst_on_us`/`burst_off_us`), silent between them, with
+    /// the ON rate scaled so the long-run average is `rate_rps`.
+    Burst,
+    /// 2-state Markov-modulated Poisson process: exponential sojourns
+    /// (mean `mmpp_sojourn_us`) alternating between a low and a high
+    /// rate with ratio `mmpp_ratio`, averaging `rate_rps`.
+    Mmpp,
+}
+
+/// Open-loop traffic injection ([`crate::sim::traffic`], DESIGN.md §14).
+/// Inactive unless `mode != closed`; injection runs only in the measured
+/// region (warmup is always closed-loop), so every `traffic.*` knob is
+/// canonicalized out of the warmup fingerprint and offered-load sweep
+/// legs share one warmed-up checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficConfig {
+    /// Arrival process (registry: `traffic.mode`).
+    pub mode: TrafficMode,
+    /// Aggregate offered load in requests/second, split evenly over the
+    /// per-core streams (registry: `traffic.rate_rps`).
+    pub rate_rps: f64,
+    /// Mean ON-window length in microseconds, burst mode
+    /// (registry: `traffic.burst_on_us`).
+    pub burst_on_us: f64,
+    /// Mean OFF-window length in microseconds, burst mode
+    /// (registry: `traffic.burst_off_us`).
+    pub burst_off_us: f64,
+    /// High-to-low rate ratio, MMPP mode (registry: `traffic.mmpp_ratio`).
+    pub mmpp_ratio: f64,
+    /// Mean state sojourn in microseconds, MMPP mode
+    /// (registry: `traffic.mmpp_sojourn_us`).
+    pub mmpp_sojourn_us: f64,
+    /// Seed for the SplitMix64 arrival streams — a domain independent of
+    /// the trace-generation `seed` (registry: `traffic.seed`).
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        Self {
+            mode: TrafficMode::Closed,
+            rate_rps: 50_000_000.0,
+            burst_on_us: 1.0,
+            burst_off_us: 4.0,
+            mmpp_ratio: 4.0,
+            mmpp_sojourn_us: 2.0,
+            seed: 7,
+        }
+    }
+}
+
 /// Full system configuration for one simulation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -468,6 +533,8 @@ pub struct SystemConfig {
     pub checkpoint: CheckpointConfig,
     /// Deterministic retention-fault injection (registry: `fault.*`).
     pub fault: FaultConfig,
+    /// Open-loop traffic injection (registry: `traffic.*`).
+    pub traffic: TrafficConfig,
 }
 
 impl Default for SystemConfig {
@@ -492,6 +559,7 @@ impl Default for SystemConfig {
             sample: SampleConfig::default(),
             checkpoint: CheckpointConfig::default(),
             fault: FaultConfig::default(),
+            traffic: TrafficConfig::default(),
         }
     }
 }
@@ -571,6 +639,7 @@ impl SystemConfig {
             sample,
             checkpoint,
             fault,
+            traffic,
         } = self;
         let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
         let Timing {
@@ -633,6 +702,15 @@ impl SystemConfig {
             guard_band_pct,
             blacklist_threshold,
         } = fault;
+        let TrafficConfig {
+            mode: traffic_mode,
+            rate_rps,
+            burst_on_us,
+            burst_off_us,
+            mmpp_ratio,
+            mmpp_sojourn_us,
+            seed: traffic_seed,
+        } = traffic;
 
         let mut h = Fingerprint::new();
         // DramOrg.
@@ -763,6 +841,23 @@ impl SystemConfig {
         h.push_u64(*drift_retention_pct);
         h.push_u64(*guard_band_pct);
         h.push_u64(*blacklist_threshold);
+        // Open-loop traffic replaces the request source in the measured
+        // region, so every knob is simulation-relevant; all are hashed
+        // unconditionally (registry round-trip invariant) even while
+        // `traffic.mode` is closed.
+        h.push_u64(match traffic_mode {
+            TrafficMode::Closed => 0,
+            TrafficMode::Det => 1,
+            TrafficMode::Poisson => 2,
+            TrafficMode::Burst => 3,
+            TrafficMode::Mmpp => 4,
+        });
+        h.push_f64(*rate_rps);
+        h.push_f64(*burst_on_us);
+        h.push_f64(*burst_off_us);
+        h.push_f64(*mmpp_ratio);
+        h.push_f64(*mmpp_sojourn_us);
+        h.push_u64(*traffic_seed);
         h.finish()
     }
 
@@ -780,6 +875,9 @@ impl SystemConfig {
     ///
     /// Excluded (canonicalized): `insts_per_core`, `measure_cycles`,
     /// `sample.*` and `checkpoint.*` (all measure/orchestration only),
+    /// `traffic.*` (warmup always runs closed-loop — injection starts at
+    /// the measurement boundary, so every offered-load leg of a
+    /// latency-vs-load sweep shares one warmed-up checkpoint),
     /// `temperature_c` (a label for externally derived timing
     /// reductions — the simulation never reads it; the reductions
     /// themselves are hashed via the mechanism blocks), and the
@@ -797,6 +895,10 @@ impl SystemConfig {
         c.measure_cycles = None;
         c.sample = SampleConfig::default();
         c.checkpoint = CheckpointConfig::default();
+        // Warmup always replays the closed-loop trace; the injector only
+        // exists from the measurement boundary on, so no traffic knob can
+        // reach warmed-up state.
+        c.traffic = TrafficConfig::default();
         // Fault injection rewrites warmup-phase timing grants when
         // enabled, so the whole block is warmup-relevant then; disabled,
         // none of its knobs are ever read and they canonicalize away.
@@ -1048,6 +1150,41 @@ mod tests {
                 c.fault.blacklist_threshold = 1;
                 c
             },
+            {
+                let mut c = a.clone();
+                c.traffic.mode = TrafficMode::Poisson;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.traffic.rate_rps = 100_000_000.0;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.traffic.burst_on_us = 2.0;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.traffic.burst_off_us = 8.0;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.traffic.mmpp_ratio = 9.0;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.traffic.mmpp_sojourn_us = 5.0;
+                c
+            },
+            {
+                let mut c = a.clone();
+                c.traffic.seed ^= 1;
+                c
+            },
         ];
         for p in perturbations {
             let fp = p.fingerprint();
@@ -1081,6 +1218,15 @@ mod tests {
             // Disabled fault knobs are never read during warmup.
             |c| c.fault.weak_ppm = 123_456,
             |c| c.fault.guard_band_pct = 99,
+            // Traffic injection starts at the measurement boundary, so
+            // no traffic knob — not even the mode — touches warmup.
+            |c| c.traffic.mode = TrafficMode::Poisson,
+            |c| {
+                c.traffic.mode = TrafficMode::Mmpp;
+                c.traffic.rate_rps = 123_000_000.0;
+                c.traffic.seed ^= 99;
+            },
+            |c| c.traffic.burst_on_us = 3.5,
         ] {
             let mut c = a.clone();
             tweak(&mut c);

@@ -25,6 +25,7 @@ use crate::bail;
 use crate::config::{
     ChargeCacheConfig, CheckpointConfig, CpuConfig, DramGeneration, DramOrg, FaultConfig,
     HcracPolicy, HcracSharing, McConfig, NuatConfig, RowPolicy, SampleConfig, SystemConfig, Timing,
+    TrafficConfig, TrafficMode,
 };
 use crate::controller::{SchedulerKind, SCHEDULER_NAMES};
 use crate::error::Result;
@@ -229,6 +230,29 @@ impl Choice for LoopMode {
     }
 }
 
+impl Choice for TrafficMode {
+    const CHOICES: &'static [&'static str] = &["closed", "det", "poisson", "burst", "mmpp"];
+    fn to_name(self) -> &'static str {
+        match self {
+            TrafficMode::Closed => "closed",
+            TrafficMode::Det => "det",
+            TrafficMode::Poisson => "poisson",
+            TrafficMode::Burst => "burst",
+            TrafficMode::Mmpp => "mmpp",
+        }
+    }
+    fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "closed" => Some(TrafficMode::Closed),
+            "det" | "deterministic" => Some(TrafficMode::Det),
+            "poisson" => Some(TrafficMode::Poisson),
+            "burst" | "onoff" => Some(TrafficMode::Burst),
+            "mmpp" => Some(TrafficMode::Mmpp),
+            _ => None,
+        }
+    }
+}
+
 impl Choice for WakeImpl {
     const CHOICES: &'static [&'static str] = &WakeImpl::NAMES;
     fn to_name(self) -> &'static str {
@@ -362,6 +386,7 @@ fn build() -> Vec<ParamDef> {
         sample,
         checkpoint,
         fault,
+        traffic,
     } = SystemConfig::default();
     let DramOrg { channels, ranks, banks, rows, row_bytes, line_bytes } = dram;
     let Timing {
@@ -424,6 +449,15 @@ fn build() -> Vec<ParamDef> {
         guard_band_pct,
         blacklist_threshold,
     } = fault;
+    let TrafficConfig {
+        mode: traffic_mode,
+        rate_rps,
+        burst_on_us,
+        burst_off_us,
+        mmpp_ratio,
+        mmpp_sojourn_us,
+        seed: traffic_seed,
+    } = traffic;
 
     let mut defs: Vec<ParamDef> = Vec::new();
     // DramOrg.
@@ -744,6 +778,56 @@ fn build() -> Vec<ParamDef> {
         "Violations on one row before the mitigation blacklists it",
         fault.blacklist_threshold,
     );
+    // TrafficConfig.
+    choice_param!(
+        defs,
+        "traffic.mode",
+        traffic_mode,
+        "Open-loop arrival process, or closed for trace replay (default)",
+        traffic.mode,
+    );
+    scalar_param!(
+        defs,
+        "traffic.rate_rps",
+        rate_rps,
+        "Aggregate offered load in requests/second (split over cores)",
+        traffic.rate_rps,
+    );
+    scalar_param!(
+        defs,
+        "traffic.burst_on_us",
+        burst_on_us,
+        "Mean ON-window length in microseconds (burst mode)",
+        traffic.burst_on_us,
+    );
+    scalar_param!(
+        defs,
+        "traffic.burst_off_us",
+        burst_off_us,
+        "Mean OFF-window length in microseconds (burst mode)",
+        traffic.burst_off_us,
+    );
+    scalar_param!(
+        defs,
+        "traffic.mmpp_ratio",
+        mmpp_ratio,
+        "High-to-low rate ratio (MMPP mode)",
+        traffic.mmpp_ratio,
+    );
+    scalar_param!(
+        defs,
+        "traffic.mmpp_sojourn_us",
+        mmpp_sojourn_us,
+        "Mean modulating-state sojourn in microseconds (MMPP mode)",
+        traffic.mmpp_sojourn_us,
+    );
+    scalar_param!(
+        defs,
+        "traffic.seed",
+        traffic_seed,
+        "Seed for the SplitMix64 arrival streams (independent of `seed`)",
+        traffic.seed,
+    );
     defs
 }
 
@@ -852,10 +936,10 @@ mod tests {
         let reg = registry();
         // One def per config field (6 dram org + generation + 15 timing +
         // 6 mc + 8 cpu + 7 chargecache + 3 nuat + 2 sample +
-        // 2 checkpoint + 7 fault + 9 top-level incl. sim.threads and
-        // sim.wake_impl). If this count moved, update it together with
-        // the new field's ParamDef.
-        assert_eq!(reg.defs().len(), 66, "registry must cover every SystemConfig field");
+        // 2 checkpoint + 7 fault + 7 traffic + 9 top-level incl.
+        // sim.threads and sim.wake_impl). If this count moved, update it
+        // together with the new field's ParamDef.
+        assert_eq!(reg.defs().len(), 73, "registry must cover every SystemConfig field");
         let base = SystemConfig::default();
         for def in reg.defs() {
             // The recorded default is the default config's value.

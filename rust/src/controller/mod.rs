@@ -131,6 +131,12 @@ impl MemController {
         &self.sink.stats
     }
 
+    /// Per-read latency histogram for this channel (recorded at column
+    /// issue; merged across channels into [`crate::sim::SimResult`]).
+    pub fn latency_hist(&self) -> &crate::sim::latency_hist::LatencyHist {
+        &self.sink.latency
+    }
+
     /// Row-level temporal locality tracker.
     pub fn rltl(&self) -> &RltlTracker {
         &self.sink.rltl

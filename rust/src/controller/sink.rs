@@ -13,6 +13,7 @@
 use crate::analysis::{ReuseTracker, RltlTracker};
 use crate::config::SystemConfig;
 use crate::latency::{build_mechanism, Mechanism, MechanismKind, RowKey, TimingGrant};
+use crate::sim::latency_hist::LatencyHist;
 
 use super::fault::{FaultCheck, FaultState};
 
@@ -64,6 +65,11 @@ pub struct CommandSink {
     pub rltl: RltlTracker,
     pub reuse: ReuseTracker,
     pub stats: McStats,
+    /// Per-read latency distribution over this channel ([`LatencyHist`]);
+    /// recorded for every read that issues a column command (closed- and
+    /// open-loop alike), merged across channels in
+    /// [`crate::sim::system::System::collect`].
+    pub latency: LatencyHist,
     /// Retention-fault model + timing-violation guard (`fault.*`; inert
     /// when disabled).
     pub fault: FaultState,
@@ -76,6 +82,7 @@ impl CommandSink {
             rltl: RltlTracker::new(cfg.timing.tck_ns),
             reuse: ReuseTracker::new(),
             stats: McStats::default(),
+            latency: LatencyHist::new(),
             fault: FaultState::new(cfg),
         }
     }
@@ -165,6 +172,7 @@ impl CommandSink {
             let lat = read_latency.expect("reads carry a latency sample");
             self.stats.read_latency_sum += lat;
             self.stats.read_latency_cnt += 1;
+            self.latency.record(lat);
         }
     }
 
@@ -173,6 +181,7 @@ impl CommandSink {
     pub fn reset_stats(&mut self) {
         self.stats = McStats::default();
         self.rltl.reset_counts();
+        self.latency.clear();
     }
 
     /// Checkpoint: mechanism tables (with their expiry clocks), both
@@ -208,6 +217,8 @@ impl CommandSink {
             enc.u64(v);
         }
         self.fault.export_state(enc);
+        enc.tag(tags::TRAFFIC);
+        self.latency.export_state(enc);
     }
 
     pub fn import_state(&mut self, dec: &mut crate::sim::checkpoint::Dec) -> Option<()> {
@@ -241,6 +252,8 @@ impl CommandSink {
             *v = dec.u64()?;
         }
         self.fault.import_state(dec)?;
+        dec.tag(tags::TRAFFIC)?;
+        self.latency.import_state(dec)?;
         Some(())
     }
 }

@@ -55,6 +55,18 @@ pub fn bar(value: f64, max: f64, width: usize) -> String {
     "#".repeat(n.min(width))
 }
 
+/// A log-scale ASCII bar for quantities spanning orders of magnitude
+/// (tail-latency curves): length proportional to `log(value/lo)` over
+/// `log(hi/lo)`, so a saturation knee shows as the bar running away.
+/// Empty when `value <= lo` or the range is degenerate.
+pub fn log_bar(value: f64, lo: f64, hi: f64, width: usize) -> String {
+    if lo <= 0.0 || hi <= lo || value <= lo {
+        return String::new();
+    }
+    let t = ((value / lo).ln() / (hi / lo).ln()).min(1.0);
+    "#".repeat(((t * width as f64).round() as usize).clamp(1, width))
+}
+
 /// Format a float with fixed decimals.
 pub fn f(v: f64, decimals: usize) -> String {
     format!("{v:.decimals$}")
@@ -83,6 +95,16 @@ mod tests {
         assert_eq!(bar(10.0, 10.0, 10), "##########");
         assert_eq!(bar(20.0, 10.0, 10), "##########"); // clamped
         assert_eq!(bar(1.0, 0.0, 10), "");
+    }
+
+    #[test]
+    fn log_bar_is_logarithmic() {
+        // One decade out of two -> half the bar.
+        assert_eq!(log_bar(100.0, 10.0, 1000.0, 10), "#####");
+        assert_eq!(log_bar(1000.0, 10.0, 1000.0, 10), "##########");
+        assert_eq!(log_bar(5000.0, 10.0, 1000.0, 10), "##########"); // clamped
+        assert_eq!(log_bar(10.0, 10.0, 1000.0, 10), ""); // at the floor
+        assert_eq!(log_bar(100.0, 0.0, 1000.0, 10), ""); // degenerate
     }
 
     #[test]

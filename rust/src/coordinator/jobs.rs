@@ -809,6 +809,7 @@ mod diskjson {
     use crate::coordinator::json::{parse_root, Val};
     use crate::energy::EnergyBreakdown;
     use crate::latency::MechanismKind;
+    use crate::sim::latency_hist::LatencySummary;
     use crate::sim::sample::SampleSummary;
     use crate::sim::SimResult;
 
@@ -832,7 +833,12 @@ mod diskjson {
     /// v4: `McStats` grew the four fault-injection counters
     /// (timing_violations, mitigation_evictions, guard_suppressed,
     /// rows_blacklisted), so the per-channel array is 18 integers.
-    pub const VERSION: u64 = 4;
+    ///
+    /// v5: results carry the per-request latency summary
+    /// (`SimResult::latency`) as the fixed-order 7-integer `latency`
+    /// array (empty = no reads in the window), and open-loop traffic
+    /// (`traffic.*`) changed what a fixed-time run can simulate.
+    pub const VERSION: u64 = 5;
 
     // ---- encoding ----
 
@@ -898,13 +904,32 @@ mod diskjson {
         }
     }
 
+    /// `SimResult::latency` as a fixed-order 7-integer array (empty when
+    /// no read completed in the window): p50, p95, p99, p999, the mean's
+    /// bit pattern, max, samples.
+    fn latency_array(l: &Option<LatencySummary>) -> String {
+        match l {
+            None => "[]".to_string(),
+            Some(l) => format!(
+                "[{},{},{},{},{},{},{}]",
+                l.p50,
+                l.p95,
+                l.p99,
+                l.p999,
+                l.mean.to_bits(),
+                l.max,
+                l.samples
+            ),
+        }
+    }
+
     pub fn encode_result(r: &SimResult) -> String {
         let mcs: Vec<String> = r.mc.iter().map(mc_array).collect();
         let e = &r.energy;
         let energy =
             bits_array(&[e.act_pre_nj, e.read_nj, e.write_nj, e.refresh_nj, e.background_nj]);
         format!(
-            "{{\n  \"version\": {VERSION},\n  \"workload\": \"{}\",\n  \"mechanism\": \"{}\",\n  \"core_ipc_bits\": {},\n  \"cpu_cycles\": {},\n  \"mc\": [{}],\n  \"rltl_bits\": {},\n  \"energy_bits\": {},\n  \"total_insts\": {},\n  \"llc_hits\": {},\n  \"llc_misses\": {},\n  \"sampled\": {}\n}}\n",
+            "{{\n  \"version\": {VERSION},\n  \"workload\": \"{}\",\n  \"mechanism\": \"{}\",\n  \"core_ipc_bits\": {},\n  \"cpu_cycles\": {},\n  \"mc\": [{}],\n  \"rltl_bits\": {},\n  \"energy_bits\": {},\n  \"total_insts\": {},\n  \"llc_hits\": {},\n  \"llc_misses\": {},\n  \"sampled\": {},\n  \"latency\": {}\n}}\n",
             escape(&r.workload),
             escape(r.mechanism),
             bits_array(&r.core_ipc),
@@ -915,7 +940,8 @@ mod diskjson {
             r.total_insts,
             r.llc_hits,
             r.llc_misses,
-            sampled_array(&r.sampled)
+            sampled_array(&r.sampled),
+            latency_array(&r.latency)
         )
     }
 
@@ -974,6 +1000,23 @@ mod diskjson {
         }
     }
 
+    fn decode_latency(v: &Val) -> Option<Option<LatencySummary>> {
+        let f = u64_vec(v)?;
+        match f.len() {
+            0 => Some(None),
+            7 => Some(Some(LatencySummary {
+                p50: f[0],
+                p95: f[1],
+                p99: f[2],
+                p999: f[3],
+                mean: f64::from_bits(f[4]),
+                max: f[5],
+                samples: f[6],
+            })),
+            _ => None,
+        }
+    }
+
     pub fn decode_result(text: &str) -> Option<SimResult> {
         let root = parse_root(text)?;
         if root.field("version")?.u64()? != VERSION {
@@ -1005,6 +1048,7 @@ mod diskjson {
             llc_hits: root.field("llc_hits")?.u64()?,
             llc_misses: root.field("llc_misses")?.u64()?,
             sampled: decode_sampled(root.field("sampled")?)?,
+            latency: decode_latency(root.field("latency")?)?,
         })
     }
 }

@@ -165,6 +165,12 @@ impl<'a> Parser<'a> {
         if self.i == int_start {
             return None;
         }
+        // JSON forbids leading zeros ("01", "-007"): the integer part is
+        // a lone 0 or starts with a nonzero digit. Accepting them would
+        // let a corrupted cache entry reparse as a different number.
+        if self.i - int_start > 1 && self.s[int_start] == b'0' {
+            return None;
+        }
         if self.s.get(self.i) == Some(&b'.') {
             self.i += 1;
             let frac_start = self.i;
@@ -354,6 +360,72 @@ mod tests {
     fn malformed_inputs_fail() {
         for bad in ["", "{", "[1,]", "{\"a\" 1}", "1 2", "truex", "{\"a\":}", "--1", "1."] {
             assert!(parse_root(bad).is_none(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn negative_exponents_parse() {
+        let v = parse_root("[1e-3, 2.5E-2, 1E+2, -4e-1]").unwrap();
+        let items = v.arr().unwrap();
+        assert_eq!(items[0].f64(), Some(1e-3));
+        assert_eq!(items[1].f64(), Some(2.5e-2));
+        assert_eq!(items[2].f64(), Some(100.0));
+        assert_eq!(items[3].f64(), Some(-0.4));
+        assert_eq!(items[0].u64(), None, "exponent token is not a u64");
+    }
+
+    #[test]
+    fn leading_zeros_are_rejected() {
+        for bad in ["01", "-01", "00", "[01]", "{\"a\": 007}", "01.5", "-00.5", "01e3"] {
+            assert!(parse_root(bad).is_none(), "{bad:?} should fail");
+        }
+        // A lone zero, zero-led fractions, and zero-led *exponent digits*
+        // (which JSON permits) all still parse.
+        assert_eq!(parse_root("0").unwrap().u64(), Some(0));
+        assert_eq!(parse_root("-0").unwrap().f64(), Some(-0.0));
+        assert_eq!(parse_root("0.5").unwrap().f64(), Some(0.5));
+        assert_eq!(parse_root("-0.5").unwrap().f64(), Some(-0.5));
+        assert_eq!(parse_root("10").unwrap().u64(), Some(10));
+        assert_eq!(parse_root("1e05").unwrap().f64(), Some(1e5));
+    }
+
+    #[test]
+    fn deeply_nested_arrays_parse() {
+        let depth = 64;
+        let text = format!("{}7{}", "[".repeat(depth), "]".repeat(depth));
+        let mut v = parse_root(&text).unwrap();
+        for _ in 0..depth {
+            v = match &v {
+                Val::Arr(items) => {
+                    assert_eq!(items.len(), 1);
+                    items[0].clone()
+                }
+                other => panic!("expected array, got {other:?}"),
+            };
+        }
+        assert_eq!(v.u64(), Some(7));
+    }
+
+    #[test]
+    fn histogram_scale_u64_arrays_round_trip() {
+        // The result cache stores latency-histogram state and the 7-slot
+        // latency summary as plain u64 arrays; emulate a full 1024-bucket
+        // dump mixing extremes and confirm every element survives exactly.
+        let vals: Vec<u64> = (0..1024u64)
+            .map(|i| match i % 4 {
+                0 => 0,
+                1 => u64::MAX,
+                2 => u64::MAX - i,
+                _ => 1u64 << (i % 63),
+            })
+            .collect();
+        let text =
+            format!("[{}]", vals.iter().map(u64::to_string).collect::<Vec<_>>().join(","));
+        let root = parse_root(&text).unwrap();
+        let items = root.arr().unwrap();
+        assert_eq!(items.len(), 1024);
+        for (item, v) in items.iter().zip(&vals) {
+            assert_eq!(item.u64(), Some(*v));
         }
     }
 

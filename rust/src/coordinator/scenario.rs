@@ -29,6 +29,7 @@ use crate::config::schema;
 use crate::config::SystemConfig;
 use crate::error::{Context, Result, SimError};
 use crate::latency::{MechanismKind, TimingTable};
+use crate::sim::latency_hist::LatencySummary;
 use crate::runtime::charge_model::timing_table_or_analytic;
 use crate::trace::PROFILES;
 use crate::{bail, ensure};
@@ -92,6 +93,12 @@ pub enum DeriveRule {
     /// Identical derivation, named for a temperature axis (the legacy
     /// temperature sweep at the paper's default 1 ms duration).
     CcTimingFromTemperature,
+    /// Marks the **offered-load axis** of a tail-latency study (an axis
+    /// over `traffic.rate_rps` in open-loop mode). Derives nothing — the
+    /// registry applies the rate directly — but rows along this axis
+    /// carry latency percentiles and the run reports each mechanism's
+    /// saturation knee ([`knee_load`]).
+    LatencyVsLoad,
 }
 
 impl DeriveRule {
@@ -99,6 +106,7 @@ impl DeriveRule {
         match s {
             "cc-timing-from-duration" => Some(DeriveRule::CcTimingFromDuration),
             "cc-timing-from-temperature" => Some(DeriveRule::CcTimingFromTemperature),
+            "latency-vs-load" => Some(DeriveRule::LatencyVsLoad),
             _ => None,
         }
     }
@@ -107,6 +115,7 @@ impl DeriveRule {
         match self {
             DeriveRule::CcTimingFromDuration => "cc-timing-from-duration",
             DeriveRule::CcTimingFromTemperature => "cc-timing-from-temperature",
+            DeriveRule::LatencyVsLoad => "latency-vs-load",
         }
     }
 }
@@ -374,12 +383,32 @@ impl ScenarioSpec {
                 self.name
             );
         }
+        let mut load_axis = None;
         for axis in &self.axes {
             ensure!(
                 axis.param != "mechanism",
                 "scenario {}: sweep mechanisms via the \"mechanisms\" list, not an axis",
                 self.name
             );
+            if axis.derive == Some(DeriveRule::LatencyVsLoad) {
+                ensure!(
+                    load_axis.is_none(),
+                    "scenario {}: at most one axis may derive latency-vs-load",
+                    self.name
+                );
+                // Knee detection interpolates in log-load, so every value
+                // must be a positive number.
+                for v in &axis.values {
+                    ensure!(
+                        v.parse::<f64>().is_ok_and(|f| f > 0.0 && f.is_finite()),
+                        "scenario {}: latency-vs-load axis {} needs positive numeric \
+                         values, got {v:?}",
+                        self.name,
+                        axis.param
+                    );
+                }
+                load_axis = Some(axis.param.clone());
+            }
         }
 
         let cores = self.base.cores();
@@ -435,8 +464,14 @@ impl ScenarioSpec {
                     reg.set(&mut cfg, &axis.param, value).with_context(|| {
                         format!("scenario {}: axis {}", self.name, axis.param)
                     })?;
-                    if axis.derive.is_some() {
-                        apply_derive(&mut cfg, &mut tables);
+                    match axis.derive {
+                        Some(
+                            DeriveRule::CcTimingFromDuration
+                            | DeriveRule::CcTimingFromTemperature,
+                        ) => apply_derive(&mut cfg, &mut tables),
+                        // latency-vs-load only tags the axis; the registry
+                        // already applied the rate.
+                        Some(DeriveRule::LatencyVsLoad) | None => {}
                     }
                     let mut coords = point.coords.clone();
                     coords.push((axis.param.clone(), value.clone()));
@@ -465,6 +500,7 @@ impl ScenarioSpec {
             mechanisms: self.mechanisms.clone(),
             baseline: self.baseline,
             axes: self.axes.iter().map(|a| a.param.clone()).collect(),
+            load_axis,
             base_cfg,
             points,
             units,
@@ -507,7 +543,7 @@ fn parse_axis(name: &str, item: &Val) -> Result<AxisSpec> {
         Some(s) => Some(DeriveRule::parse(s).with_context(|| {
             format!(
                 "scenario {name}: axis {param}: unknown derive rule {s:?} \
-                 (cc-timing-from-duration | cc-timing-from-temperature)"
+                 (cc-timing-from-duration | cc-timing-from-temperature | latency-vs-load)"
             )
         })?),
     };
@@ -619,6 +655,9 @@ pub struct ScenarioPlan {
     pub baseline: BaselineMode,
     /// Axis registry paths, spec order (table headers).
     pub axes: Vec<String>,
+    /// Registry path of the offered-load axis, when one axis carries the
+    /// `latency-vs-load` derive rule (tail-latency studies).
+    pub load_axis: Option<String>,
     pub base_cfg: SystemConfig,
     pub points: Vec<ScenarioPoint>,
     pub units: Vec<WorkloadId>,
@@ -630,8 +669,15 @@ pub struct ScenarioRow {
     pub coords: Vec<(String, String)>,
     pub mechanism: MechanismKind,
     /// Throughput speedup vs Baseline averaged over the workload units
-    /// (the sum-of-core-IPC ratio — the legacy sweeps' metric).
+    /// (the sum-of-core-IPC ratio — the legacy sweeps' metric). Open-loop
+    /// legs retire no instructions, so there this is the Baseline/mech
+    /// **p99 read-latency ratio** instead (still "higher is better").
     pub speedup: f64,
+    /// Read-latency summary of the mechanism legs, unit-averaged
+    /// ([`fold_latency`]); `None` when no unit recorded a read.
+    pub latency: Option<LatencySummary>,
+    /// Same for the Baseline (denominator) legs of this point.
+    pub base_latency: Option<LatencySummary>,
 }
 
 /// Results of one scenario run.
@@ -644,6 +690,106 @@ pub struct ScenarioRun {
     /// their units are dropped from the affected rows (a row with no
     /// surviving units is omitted) and the sweep still completes.
     pub failed_legs: usize,
+}
+
+/// Unit-average a set of per-leg latency summaries into one row value.
+/// Percentiles are arithmetic means (rounded to nearest) — the same
+/// equal-weight-per-unit convention as the speedup column — while `mean`
+/// is sample-weighted, `max` is the true max, and `samples` the total.
+fn fold_latency(units: &[LatencySummary]) -> Option<LatencySummary> {
+    if units.is_empty() {
+        return None;
+    }
+    let n = units.len() as u64;
+    let avg = |f: fn(&LatencySummary) -> u64| -> u64 {
+        (units.iter().map(f).sum::<u64>() + n / 2) / n
+    };
+    let samples: u64 = units.iter().map(|u| u.samples).sum();
+    let mean = if samples == 0 {
+        0.0
+    } else {
+        units.iter().map(|u| u.mean * u.samples as f64).sum::<f64>() / samples as f64
+    };
+    Some(LatencySummary {
+        p50: avg(|u| u.p50),
+        p95: avg(|u| u.p95),
+        p99: avg(|u| u.p99),
+        p999: avg(|u| u.p999),
+        mean,
+        max: units.iter().map(|u| u.max).max().unwrap_or(0),
+        samples,
+    })
+}
+
+/// Locate the saturation knee of a latency-vs-load curve: the offered
+/// load where p99 first crosses **2× the lowest-load p99**, linearly
+/// interpolated in log-load (open-loop sweeps are log-spaced, so the
+/// interpolation matches the axis geometry). `points` is
+/// `(offered load, p99)` sorted ascending by load; returns `None` when
+/// the curve never crosses (the system never saturates in the swept
+/// range) or fewer than two points exist.
+pub fn knee_load(points: &[(f64, u64)]) -> Option<f64> {
+    let &(_, base) = points.first()?;
+    if base == 0 {
+        return None;
+    }
+    let thresh = base as f64 * 2.0;
+    for w in points.windows(2) {
+        let ((x0, y0), (x1, y1)) =
+            ((w[0].0, w[0].1 as f64), (w[1].0, w[1].1 as f64));
+        if y0 < thresh && y1 >= thresh {
+            let t = if y1 > y0 { (thresh - y0) / (y1 - y0) } else { 1.0 };
+            return Some((x0.ln() + t * (x1.ln() - x0.ln())).exp());
+        }
+    }
+    None
+}
+
+impl ScenarioRun {
+    /// Per-curve knee loads over the `load_param` axis: the Baseline
+    /// denominator's curve first (from the first listed mechanism's
+    /// `base_latency` — identical across mechanisms at a given point),
+    /// then one entry per mechanism, each labelled for display. `None`
+    /// knee = that curve never saturated in the swept range.
+    pub fn knees(&self, load_param: &str) -> Vec<(String, Option<f64>)> {
+        let load_of = |row: &ScenarioRow| -> Option<f64> {
+            row.coords
+                .iter()
+                .find(|(p, _)| p == load_param)
+                .and_then(|(_, v)| v.parse().ok())
+        };
+        let curve = |pick: &dyn Fn(&ScenarioRow) -> Option<(f64, u64)>| -> Option<f64> {
+            let mut pts: Vec<(f64, u64)> = self.rows.iter().filter_map(|r| pick(r)).collect();
+            pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+            knee_load(&pts)
+        };
+        let mut out = Vec::new();
+        if let Some(first) = self.rows.first().map(|r| r.mechanism) {
+            out.push((
+                "Baseline".to_string(),
+                curve(&|r| {
+                    (r.mechanism == first).then_some(())?;
+                    Some((load_of(r)?, r.base_latency?.p99))
+                }),
+            ));
+        }
+        let mut seen: Vec<MechanismKind> = Vec::new();
+        for row in &self.rows {
+            if seen.contains(&row.mechanism) {
+                continue;
+            }
+            seen.push(row.mechanism);
+            let mech = row.mechanism;
+            out.push((
+                mech.label().to_string(),
+                curve(&|r| {
+                    (r.mechanism == mech).then_some(())?;
+                    Some((load_of(r)?, r.latency?.p99))
+                }),
+            ));
+        }
+        out
+    }
 }
 
 impl ScenarioPlan {
@@ -722,6 +868,8 @@ impl ScenarioPlan {
             for (mi, &mech) in self.mechanisms.iter().enumerate() {
                 let mut sum = 0.0;
                 let mut units = 0usize;
+                let mut mech_lat = Vec::new();
+                let mut base_lat = Vec::new();
                 for ui in 0..self.units.len() {
                     let bt = match self.baseline {
                         BaselineMode::Shared => shared_base[ui],
@@ -734,10 +882,25 @@ impl ScenarioPlan {
                     else {
                         continue;
                     };
+                    if let Some(l) = with_mech.latency {
+                        mech_lat.push(l);
+                    }
+                    if let Some(l) = base.latency {
+                        base_lat.push(l);
+                    }
                     let tb: f64 = base.core_ipc.iter().sum();
                     let tc: f64 = with_mech.core_ipc.iter().sum();
-                    sum += tc / tb;
-                    units += 1;
+                    if tb > 0.0 && tc > 0.0 {
+                        sum += tc / tb;
+                        units += 1;
+                    } else if let (Some(bl), Some(ml)) = (base.latency, with_mech.latency) {
+                        // Open-loop legs quiesce the cores (zero IPC on
+                        // both sides); rank by tail latency instead.
+                        if ml.p99 > 0 {
+                            sum += bl.p99 as f64 / ml.p99 as f64;
+                            units += 1;
+                        }
+                    }
                 }
                 if units == 0 {
                     continue;
@@ -746,6 +909,8 @@ impl ScenarioPlan {
                     coords: point.coords.clone(),
                     mechanism: mech,
                     speedup: sum / units as f64,
+                    latency: fold_latency(&mech_lat),
+                    base_latency: fold_latency(&base_lat),
                 });
             }
         }
@@ -903,9 +1068,102 @@ mod tests {
 
     #[test]
     fn derive_rules_round_trip_names() {
-        for rule in [DeriveRule::CcTimingFromDuration, DeriveRule::CcTimingFromTemperature] {
+        for rule in [
+            DeriveRule::CcTimingFromDuration,
+            DeriveRule::CcTimingFromTemperature,
+            DeriveRule::LatencyVsLoad,
+        ] {
             assert_eq!(DeriveRule::parse(rule.name()), Some(rule));
         }
         assert_eq!(DeriveRule::parse("nope"), None);
+    }
+
+    #[test]
+    fn load_axis_is_tagged_and_validated() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "name": "tail",
+              "set": { "traffic.mode": "poisson" },
+              "axes": [
+                { "param": "traffic.rate_rps", "derive": "latency-vs-load",
+                  "range": { "from": 1e7, "to": 1e9, "steps": 3, "spacing": "log" } }
+              ]
+            }"#,
+        )
+        .unwrap();
+        let plan = spec.expand(&tiny()).unwrap();
+        assert_eq!(plan.load_axis.as_deref(), Some("traffic.rate_rps"));
+        assert_eq!(plan.points.len(), 3);
+        // The derive rule must not perturb the config beyond the axis
+        // value the registry already applied.
+        assert!(plan.points[0].cfg().traffic.rate_rps > 0.0);
+
+        // Two load axes are ambiguous for knee detection.
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "name": "tail2",
+              "axes": [
+                { "param": "traffic.rate_rps", "derive": "latency-vs-load", "values": [1e7] },
+                { "param": "traffic.seed", "derive": "latency-vs-load", "values": [1] }
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert!(spec.expand(&tiny()).is_err());
+
+        // Non-positive load values can't be placed on a log axis.
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "name": "tail3",
+              "axes": [
+                { "param": "traffic.rate_rps", "derive": "latency-vs-load", "values": [0] }
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert!(spec.expand(&tiny()).is_err());
+    }
+
+    #[test]
+    fn knee_detection_interpolates_in_log_load() {
+        // Flat at 100 until 1e8, then doubles by 4e8: the 2x threshold
+        // (200) is crossed exactly at the 4e8 sample.
+        let curve = [(1e7, 100), (1e8, 100), (4e8, 200), (1e9, 900)];
+        let knee = knee_load(&curve).expect("curve crosses 2x");
+        assert!((knee - 4e8).abs() / 4e8 < 1e-9, "knee {knee}");
+
+        // Mid-segment crossing interpolates geometrically: threshold 200
+        // halfway (linearly in p99) between 100 @1e8 and 300 @1e9 lands
+        // at sqrt(1e8 * 1e9).
+        let curve = [(1e8, 100), (1e9, 300)];
+        let knee = knee_load(&curve).expect("crosses mid-segment");
+        let expect = (1e8f64 * 1e9).sqrt();
+        assert!((knee - expect).abs() / expect < 1e-9, "knee {knee} vs {expect}");
+
+        // Never saturates / degenerate inputs.
+        assert_eq!(knee_load(&[(1e7, 100), (1e9, 199)]), None);
+        assert_eq!(knee_load(&[(1e7, 100)]), None);
+        assert_eq!(knee_load(&[]), None);
+        assert_eq!(knee_load(&[(1e7, 0), (1e9, 50)]), None);
+    }
+
+    #[test]
+    fn fold_latency_averages_units() {
+        let s = |p99: u64, mean: f64, samples: u64| LatencySummary {
+            p50: p99 / 2,
+            p95: p99,
+            p99,
+            p999: p99 * 2,
+            mean,
+            max: p99 * 3,
+            samples,
+        };
+        assert_eq!(fold_latency(&[]), None);
+        let f = fold_latency(&[s(100, 40.0, 10), s(200, 80.0, 30)]).unwrap();
+        assert_eq!(f.p99, 150);
+        assert_eq!(f.max, 600);
+        assert_eq!(f.samples, 40);
+        // Sample-weighted mean: (40*10 + 80*30) / 40 = 70.
+        assert!((f.mean - 70.0).abs() < 1e-12);
     }
 }

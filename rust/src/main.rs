@@ -46,7 +46,7 @@
 use chargecache::config::{schema, SystemConfig};
 use chargecache::coordinator::cli::{self, Args, CommandSpec, FlagSpec};
 use chargecache::coordinator::experiments::{fig1_with, run_suite_with, ExperimentScale};
-use chargecache::coordinator::figures::{bar, f, pct, print_table, slug, write_csv};
+use chargecache::coordinator::figures::{bar, f, log_bar, pct, print_table, slug, write_csv};
 use chargecache::coordinator::jobs::{JobEngine, JobGraph, JobSpec};
 use chargecache::coordinator::scenario::{ScenarioPlan, ScenarioRun, ScenarioSpec, WorkloadSel};
 use chargecache::energy::HcracCost;
@@ -102,7 +102,11 @@ const SWEEP_FLAGS: &[FlagSpec] = &[
     FlagSpec::value("to", "X", "Range end"),
     FlagSpec::value("steps", "N", "Range point count"),
     FlagSpec::flag("log", "Logarithmic range spacing"),
-    FlagSpec::value("derive", "RULE", "cc-timing-from-duration | cc-timing-from-temperature"),
+    FlagSpec::value(
+        "derive",
+        "RULE",
+        "cc-timing-from-duration | cc-timing-from-temperature | latency-vs-load",
+    ),
     FlagSpec::value("mechanism", "NAME", "Mechanism to measure (default cc)"),
     FlagSpec::value("base", "PRESET", "single | eight | core count (default eight)"),
     FlagSpec::flag("shared-baseline", "One Baseline at the base config (legacy sweep semantics)"),
@@ -189,7 +193,9 @@ const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "sweep",
         aliases: &[],
-        summary: "Sweep parameters: a builtin (capacity | duration | temperature) or --param",
+        summary:
+            "Sweep parameters: a builtin (capacity | duration | temperature | tail-latency) \
+             or --param",
         positional: Some("BUILTIN"),
         flags: SWEEP_FLAGS,
         deprecated: None,
@@ -268,7 +274,12 @@ const TITLE: &str = "chargecache — ChargeCache (HPCA'16) reproduction\n\
   `figures` regenerates fig1 + fig4a/b + fig5 (1- and 8-core) + the\n\
   capacity sweep over ONE memoized job graph; `scenario FILE` runs any\n\
   declarative experiment grid (see examples/scenarios/) through the\n\
-  same graph, so shared legs simulate exactly once.";
+  same graph, so shared legs simulate exactly once.\n\
+\n\
+  `--set traffic.mode=<det|poisson|burst|mmpp>` switches the measured\n\
+  region to open-loop arrivals at `traffic.rate_rps` with per-request\n\
+  latency percentiles (see `params` for the traffic.* family and\n\
+  DESIGN.md §14); `sweep tail-latency` plots p99 against offered load.";
 
 /// Builtin sweeps: the checked-in scenario specs, embedded so they work
 /// from any working directory. `examples/scenarios/` is the source of
@@ -277,6 +288,7 @@ const BUILTIN_SCENARIOS: &[(&str, &str)] = &[
     ("capacity", include_str!("../../examples/scenarios/sweep_capacity.json")),
     ("duration", include_str!("../../examples/scenarios/sweep_duration.json")),
     ("temperature", include_str!("../../examples/scenarios/sweep_temperature.json")),
+    ("tail-latency", include_str!("../../examples/scenarios/tail_latency.json")),
 ];
 
 fn scale_from(args: &Args) -> Result<ExperimentScale> {
@@ -692,7 +704,9 @@ fn cmd_figures(args: &Args, eng: &mut JobEngine) -> Result<()> {
     println!();
     render_fig5(args, eng, true)?;
     println!();
-    run_builtin_scenario("capacity", args, eng)
+    run_builtin_scenario("capacity", args, eng)?;
+    println!();
+    run_builtin_scenario("tail-latency", args, eng)
 }
 
 /// `sweep` — a builtin scenario by name, or a one-axis scenario built
@@ -746,7 +760,7 @@ fn cmd_sweep(args: &Args, eng: &mut JobEngine) -> Result<()> {
             chargecache::coordinator::scenario::DeriveRule::parse(s).with_context(|| {
                 format!(
                     "unknown derive rule {s:?} \
-                     (cc-timing-from-duration | cc-timing-from-temperature)"
+                     (cc-timing-from-duration | cc-timing-from-temperature | latency-vs-load)"
                 )
             })?,
         ),
@@ -817,7 +831,9 @@ fn run_builtin_scenario(name: &str, args: &Args, eng: &mut JobEngine) -> Result<
         .find(|(n, _)| *n == name)
         .map(|(_, t)| *t)
         .with_context(|| {
-            format!("unknown builtin sweep {name:?} (capacity | duration | temperature)")
+            format!(
+                "unknown builtin sweep {name:?} (capacity | duration | temperature | tail-latency)"
+            )
         })?;
     run_scenario_spec(ScenarioSpec::parse(text).expect("builtin specs parse"), args, eng)
 }
@@ -879,9 +895,22 @@ fn render_scenario(plan: &ScenarioPlan, run: &ScenarioRun) -> Result<()> {
             run.failed_legs
         );
     }
+    let show_lat = run.rows.iter().any(|r| r.latency.is_some());
+    let tail = plan.load_axis.is_some();
+    // Log-scale p99 range for the tail-latency bar column.
+    let (lo, hi) = run
+        .rows
+        .iter()
+        .filter_map(|r| r.latency.map(|l| l.p99 as f64))
+        .fold((f64::INFINITY, 0.0f64), |(lo, hi), v| (lo.min(v), hi.max(v)));
     let mut headers: Vec<&str> = plan.axes.iter().map(|a| a.as_str()).collect();
     headers.push("mechanism");
     headers.push("speedup");
+    if show_lat {
+        headers.push("p50");
+        headers.push("p99");
+        headers.push("p99.9");
+    }
     headers.push("");
     let rows: Vec<Vec<String>> = run
         .rows
@@ -890,16 +919,48 @@ fn render_scenario(plan: &ScenarioPlan, run: &ScenarioRun) -> Result<()> {
             let mut row: Vec<String> = r.coords.iter().map(|(_, v)| v.clone()).collect();
             row.push(r.mechanism.label().to_string());
             row.push(f(r.speedup, 4));
-            row.push(bar(r.speedup - 1.0, 0.15, 30));
+            if show_lat {
+                match r.latency {
+                    Some(l) => {
+                        row.push(l.p50.to_string());
+                        row.push(l.p99.to_string());
+                        row.push(l.p999.to_string());
+                    }
+                    None => row.extend((0..3).map(|_| "-".to_string())),
+                }
+            }
+            // Tail studies chart p99 on a log scale (the saturation knee
+            // shows as the bar running away); plain sweeps keep the
+            // speedup bar.
+            row.push(match (tail, r.latency) {
+                (true, Some(l)) => log_bar(l.p99 as f64, lo / 2.0, hi, 30),
+                (true, None) => String::new(),
+                (false, _) => bar(r.speedup - 1.0, 0.15, 30),
+            });
             row
         })
         .collect();
     print_table(&headers, &rows);
+    if let Some(load_param) = &plan.load_axis {
+        println!();
+        for (label, knee) in run.knees(load_param) {
+            match knee {
+                Some(k) => println!(
+                    "{label}: saturation knee at ~{k:.3e} req/s \
+                     (p99 crosses 2x its low-load value)"
+                ),
+                None => println!("{label}: no knee in the swept range (p99 never doubled)"),
+            }
+        }
+    }
 
     let path = format!("results/scenario_{}.csv", slug(&plan.name));
     let mut csv_headers: Vec<&str> = plan.axes.iter().map(|a| a.as_str()).collect();
     csv_headers.push("mechanism");
     csv_headers.push("speedup");
+    if show_lat {
+        csv_headers.extend(["p50", "p95", "p99", "p999", "mean", "samples", "base_p99"]);
+    }
     let csv_rows: Vec<Vec<String>> = run
         .rows
         .iter()
@@ -907,6 +968,20 @@ fn render_scenario(plan: &ScenarioPlan, run: &ScenarioRun) -> Result<()> {
             let mut row: Vec<String> = r.coords.iter().map(|(_, v)| v.clone()).collect();
             row.push(r.mechanism.name().to_string());
             row.push(r.speedup.to_string());
+            if show_lat {
+                match r.latency {
+                    Some(l) => row.extend([
+                        l.p50.to_string(),
+                        l.p95.to_string(),
+                        l.p99.to_string(),
+                        l.p999.to_string(),
+                        l.mean.to_string(),
+                        l.samples.to_string(),
+                    ]),
+                    None => row.extend((0..6).map(|_| String::new())),
+                }
+                row.push(r.base_latency.map_or(String::new(), |l| l.p99.to_string()));
+            }
             row
         })
         .collect();

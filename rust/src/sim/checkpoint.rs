@@ -47,7 +47,10 @@ use crate::sim::system::System;
 ///
 /// v2: CommandSink gained the fault-injection state section and four
 /// violation/mitigation stat counters.
-pub const SNAPSHOT_VERSION: u64 = 2;
+///
+/// v3: CommandSink gained the per-request latency histogram section
+/// (tag `TRAFFIC`, sparse bucket encoding).
+pub const SNAPSHOT_VERSION: u64 = 3;
 
 /// Section tags (ASCII-packed) — cheap structural checks so a truncated
 /// or shifted stream fails fast instead of misassigning words.
@@ -69,6 +72,7 @@ pub mod tags {
     pub const RANK: u64 = 0x52_414E4B; // "RANK"
     pub const BANK: u64 = 0x42_414E4B; // "BANK"
     pub const FAULT: u64 = 0x4641_554C; // "FAUL"
+    pub const TRAFFIC: u64 = 0x5452_4646; // "TRFF"
 }
 
 /// Append-only word-stream encoder.

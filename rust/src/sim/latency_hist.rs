@@ -1,0 +1,362 @@
+//! Log-bucketed per-request latency histogram (DESIGN.md §14).
+//!
+//! Fixed geometry: 64 octaves × 16 sub-buckets = 1024 counters, flat in
+//! one pre-sized array, so recording is O(1) with **zero steady-state
+//! allocation** and merging is element-wise counter addition. Values
+//! below 16 land in exact unit buckets (octaves 0–3 degenerate to the
+//! identity, so buckets 16–63 are never produced); from 16 upward each
+//! octave `[2^k, 2^(k+1))` splits into 16 sub-buckets, bounding the
+//! relative quantile error at 1/16 ≈ 6.25% while covering the full
+//! `u64` range (`u64::MAX` maps to the last bucket, 1023).
+//!
+//! Quantiles use pure integer rank arithmetic (`rank = ceil(q·n)`,
+//! computed in `u128`) and report the **lower bound** of the bucket the
+//! cumulative count crosses the rank in — a deterministic, conservative
+//! estimate that is bit-identical however the per-channel histograms
+//! were merged, because counter addition is commutative. Merging is
+//! nonetheless performed in canonical (ascending channel) order, the
+//! same discipline every other cross-channel reduction in
+//! [`crate::sim::system::System::collect`] follows.
+
+use crate::sim::checkpoint::{Dec, Enc};
+
+/// Octaves (power-of-two magnitude classes) covered by the geometry.
+pub const OCTAVES: usize = 64;
+/// Sub-buckets per octave.
+pub const SUBS: usize = 16;
+/// Total counters — fixed for the lifetime of the format.
+pub const BUCKETS: usize = OCTAVES * SUBS;
+
+/// Bucket index for a latency value. Exact below 16; log-bucketed with
+/// 16 sub-buckets per octave above.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < 16 {
+        v as usize
+    } else {
+        let oct = 63 - v.leading_zeros() as usize; // >= 4
+        oct * SUBS + ((v >> (oct - 4)) & 0xF) as usize
+    }
+}
+
+/// Smallest value mapping to bucket `b` (the quantile estimate the
+/// histogram reports). Total over all 1024 indices; indices 16–63 are
+/// never produced by [`bucket_index`] but still map somewhere sane.
+#[inline]
+pub fn bucket_lower_bound(b: usize) -> u64 {
+    debug_assert!(b < BUCKETS);
+    if b < SUBS * 4 {
+        // Octaves 0–3: the exact region (only 0–15 are ever produced).
+        b as u64
+    } else {
+        let oct = (b / SUBS) as u32;
+        let sub = (b % SUBS) as u64;
+        (1u64 << oct) | (sub << (oct - 4))
+    }
+}
+
+/// Per-request latency histogram: fixed 1024-counter geometry plus the
+/// exact sum/max/count needed for the mean and extremes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    samples: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    /// The single allocation this type ever performs.
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], samples: 0, sum: 0, max: 0 }
+    }
+
+    /// Record one latency sample. O(1), allocation-free.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.samples += 1;
+        self.sum = self.sum.wrapping_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Element-wise merge of `other` into `self`. Callers merge shards
+    /// in canonical (ascending channel) order; the result is invariant
+    /// to that order because addition commutes, but the discipline keeps
+    /// every cross-channel reduction uniform.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.samples += other.samples;
+        self.sum = self.sum.wrapping_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Zero every counter (stats reset at the warmup boundary).
+    pub fn clear(&mut self) {
+        self.counts.fill(0);
+        self.samples = 0;
+        self.sum = 0;
+        self.max = 0;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of the recorded values (exact sum, not bucket-approximated).
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.samples as f64
+        }
+    }
+
+    /// Quantile `num/den` (e.g. 999/1000 for p99.9) as the lower bound
+    /// of the bucket containing the rank-`ceil(q·n)` sample. Integer
+    /// arithmetic throughout — bit-stable across platforms and merge
+    /// orders. Returns 0 on an empty histogram.
+    pub fn quantile(&self, num: u64, den: u64) -> u64 {
+        debug_assert!(num <= den && den > 0);
+        if self.samples == 0 {
+            return 0;
+        }
+        let rank =
+            ((self.samples as u128 * num as u128 + den as u128 - 1) / den as u128).max(1) as u64;
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_lower_bound(b);
+            }
+        }
+        // Unreachable when counters and `samples` agree; fall back to max.
+        self.max
+    }
+
+    /// The percentile/mean digest exported into
+    /// [`crate::sim::stats::SimResult::latency`]; `None` when nothing
+    /// was recorded (e.g. a write-only window).
+    pub fn summary(&self) -> Option<LatencySummary> {
+        if self.samples == 0 {
+            return None;
+        }
+        Some(LatencySummary {
+            p50: self.quantile(50, 100),
+            p95: self.quantile(95, 100),
+            p99: self.quantile(99, 100),
+            p999: self.quantile(999, 1000),
+            mean: self.mean(),
+            max: self.max,
+            samples: self.samples,
+        })
+    }
+
+    /// Checkpoint encoding: sparse `(bucket, count)` pairs — warmup-phase
+    /// histograms touch a handful of octaves, so sparse beats 1024 dense
+    /// words — then the exact aggregates.
+    pub fn export_state(&self, enc: &mut Enc) {
+        let nonzero = self.counts.iter().filter(|&&c| c != 0).count();
+        enc.usize(nonzero);
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c != 0 {
+                enc.usize(b);
+                enc.u64(c);
+            }
+        }
+        enc.u64(self.samples);
+        enc.u64(self.sum);
+        enc.u64(self.max);
+    }
+
+    /// Overwrite from [`LatencyHist::export_state`] words. `None` on any
+    /// out-of-range bucket or truncation (the stream is corrupt).
+    pub fn import_state(&mut self, dec: &mut Dec) -> Option<()> {
+        self.counts.fill(0);
+        let nonzero = dec.usize()?;
+        for _ in 0..nonzero {
+            let b = dec.usize()?;
+            if b >= BUCKETS {
+                return None;
+            }
+            self.counts[b] = dec.u64()?;
+        }
+        self.samples = dec.u64()?;
+        self.sum = dec.u64()?;
+        self.max = dec.u64()?;
+        Some(())
+    }
+}
+
+/// Percentile digest of one run's read-latency distribution, in DRAM bus
+/// cycles. Percentiles are bucket lower bounds (≤ 6.25% relative error);
+/// `mean` and `max` are exact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub mean: f64,
+    pub max: u64,
+    pub samples: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_lower_bound(bucket_index(v)), v);
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_bracket_every_magnitude() {
+        // lower_bound(bucket(v)) <= v, and the next bucket's bound is
+        // above v — across the whole u64 range including the extremes.
+        let probes = [
+            16u64,
+            17,
+            31,
+            32,
+            100,
+            1000,
+            65_535,
+            1 << 40,
+            (1 << 40) + 12345,
+            u64::MAX / 3,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for v in probes {
+            let b = bucket_index(v);
+            assert!(b < BUCKETS, "{v}: bucket {b} out of range");
+            let lo = bucket_lower_bound(b);
+            assert!(lo <= v, "{v}: lower bound {lo} exceeds value");
+            if b + 1 < BUCKETS && b >= 64 {
+                assert!(bucket_lower_bound(b + 1) > v, "{v}: not bracketed");
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1, "top value is the last bucket");
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // The reported quantile (bucket lower bound) underestimates by
+        // at most one sub-bucket width = 1/16 of the octave base.
+        for v in [100u64, 999, 12_345, 1 << 33] {
+            let lo = bucket_lower_bound(bucket_index(v));
+            let err = (v - lo) as f64 / v as f64;
+            assert!(err < 1.0 / 16.0 + 1e-12, "{v}: error {err}");
+        }
+    }
+
+    #[test]
+    fn quantiles_of_a_known_distribution() {
+        let mut h = LatencyHist::new();
+        // 100 samples: 1..=100 (all exact region is too narrow, use
+        // values small enough that bucketing error < 1 sub-bucket).
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.samples(), 100);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-12);
+        // p50 = 50th sample = 50; bucket lower bound of 50 is 48.
+        assert_eq!(h.quantile(50, 100), bucket_lower_bound(bucket_index(50)));
+        // p99 = 99th sample = 99 -> its bucket's lower bound (96).
+        assert_eq!(h.quantile(99, 100), bucket_lower_bound(bucket_index(99)));
+        // p100 = max's bucket.
+        assert_eq!(h.quantile(1, 1), bucket_lower_bound(bucket_index(100)));
+        // Minimum rank is clamped to 1, never 0.
+        assert_eq!(h.quantile(0, 100), bucket_lower_bound(bucket_index(1)));
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        let mut whole = LatencyHist::new();
+        for i in 0..1000u64 {
+            let v = (i * 2_654_435_761) % 100_000;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, whole);
+        assert_eq!(merged.summary(), whole.summary());
+        // Merge order cannot matter (addition commutes).
+        let mut rev = b.clone();
+        rev.merge(&a);
+        assert_eq!(rev, whole);
+    }
+
+    #[test]
+    fn empty_histogram_has_no_summary() {
+        let h = LatencyHist::new();
+        assert_eq!(h.summary(), None);
+        assert_eq!(h.quantile(99, 100), 0);
+        let mut c = LatencyHist::new();
+        c.record(5);
+        c.clear();
+        assert_eq!(c.summary(), None);
+        assert_eq!(c, h, "clear restores the empty state");
+    }
+
+    #[test]
+    fn checkpoint_round_trip_including_extremes() {
+        let mut h = LatencyHist::new();
+        for v in [0u64, 1, 15, 16, 17, 1000, 1 << 40, u64::MAX] {
+            h.record(v);
+            h.record(v);
+        }
+        let mut enc = Enc::new();
+        h.export_state(&mut enc);
+        let words = enc.into_words();
+        let mut back = LatencyHist::new();
+        back.record(77); // stale state must be overwritten
+        let mut dec = Dec::new(&words);
+        back.import_state(&mut dec).unwrap();
+        assert!(dec.finished());
+        assert_eq!(back, h);
+        // Corrupt bucket index fails cleanly.
+        let mut bad = words.clone();
+        bad[1] = BUCKETS as u64; // first sparse pair's bucket
+        assert!(LatencyHist::new().import_state(&mut Dec::new(&bad)).is_none());
+    }
+
+    #[test]
+    fn summary_fields_are_consistent() {
+        let mut h = LatencyHist::new();
+        for v in [10u64, 20, 30, 40, 5000] {
+            h.record(v);
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.samples, 5);
+        assert_eq!(s.max, 5000);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.p999);
+        assert!(s.p999 <= s.max);
+        assert!((s.mean - 1020.0).abs() < 1e-12);
+    }
+}

@@ -4,14 +4,17 @@
 
 pub mod checkpoint;
 pub mod engine;
+pub mod latency_hist;
 pub mod sample;
 pub mod shard;
 pub mod stats;
 pub mod system;
+pub mod traffic;
 pub mod wake;
 
 pub use checkpoint::SimSnapshot;
 pub use engine::LoopMode;
+pub use latency_hist::{LatencyHist, LatencySummary};
 pub use sample::SampleSummary;
 pub use stats::SimResult;
 pub use system::System;

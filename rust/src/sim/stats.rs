@@ -3,6 +3,7 @@
 use crate::analysis::rltl::RLTL_INTERVALS_MS;
 use crate::controller::McStats;
 use crate::energy::EnergyBreakdown;
+use crate::sim::latency_hist::LatencySummary;
 use crate::sim::sample::SampleSummary;
 
 /// Everything one simulation run produces.
@@ -35,6 +36,10 @@ pub struct SimResult {
     /// ([`crate::sim::sample`]); `None` for full-detail runs. The other
     /// fields then cover only the detailed intervals.
     pub sampled: Option<SampleSummary>,
+    /// Per-request read-latency distribution over the measured region
+    /// (bus cycles), merged across channels in canonical order. `None`
+    /// when no read completed in the window.
+    pub latency: Option<LatencySummary>,
 }
 
 impl SimResult {
@@ -150,6 +155,7 @@ mod tests {
             llc_hits: 0,
             llc_misses: 0,
             sampled: None,
+            latency: None,
         }
     }
 

@@ -18,7 +18,7 @@
 
 use std::sync::atomic::Ordering;
 
-use crate::config::SystemConfig;
+use crate::config::{SystemConfig, TrafficMode};
 use crate::controller::{AddressMapper, Completion, MapScheme, MemController, Request};
 use crate::cpu::core_model::{Core, MemPort};
 use crate::cpu::Llc;
@@ -26,9 +26,11 @@ use crate::dram::command::Loc;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::latency::MechanismKind;
 use crate::sim::engine::{self, EventDriven, LoopMode};
+use crate::sim::latency_hist::LatencyHist;
 use crate::sim::sample::SampleSummary;
 use crate::sim::shard::{worker_loop, EnqMsg, EpochOut, ShardSlot, ShardState, Watchdog};
 use crate::sim::stats::SimResult;
+use crate::sim::traffic::{InjectPort, TrafficInjector, TRAFFIC_ID_BASE};
 use crate::sim::wake::WakeIndex;
 #[cfg(test)]
 use crate::sim::wake::WakeImpl;
@@ -160,6 +162,39 @@ impl MemPort for MemHierarchy {
     }
 }
 
+/// Open-loop injection into the live hierarchy: traffic bypasses the LLC
+/// entirely (it models uncached demand arriving at the memory system),
+/// so admission is per-target-channel only — no cross-channel writeback
+/// headroom check, unlike [`MemPort::load`]. The mirror port
+/// ([`ShardedPort`]) evaluates the identical predicate.
+impl InjectPort for MemHierarchy {
+    fn try_inject(
+        &mut self,
+        line_addr: u64,
+        is_write: bool,
+        arrived_bus: u64,
+        id: u64,
+        _stream: u32,
+    ) -> bool {
+        let loc = self.mapper.map_line(line_addr);
+        let ch = loc.channel as usize;
+        if is_write {
+            if !self.mcs[ch].can_accept_write() {
+                return false;
+            }
+        } else if !self.mcs[ch].can_accept_read() {
+            return false;
+        }
+        self.enqueued[ch] = true;
+        let accepted = self.mcs[ch].enqueue(
+            Request { id, core: u32::MAX, loc, is_write, arrived: arrived_bus },
+            self.bus_now,
+        );
+        debug_assert!(accepted, "admission was pre-checked");
+        true
+    }
+}
+
 impl MemHierarchy {
     fn send_write(&mut self, line: u64) {
         let loc = self.mapper.map_line(line);
@@ -192,6 +227,16 @@ pub struct System {
     /// Scratch for the per-cycle due-core list (drained cores plus
     /// completion-woken ones).
     core_scratch: Vec<u32>,
+    /// Per-core synthetic profiles, kept for the open-loop injector's
+    /// arrival streams; empty for explicit-trace systems, which cannot
+    /// run open-loop.
+    open_profiles: Vec<Profile>,
+    /// Open-loop request injector (`traffic.mode != closed`), armed at
+    /// the measurement boundary by [`System::enable_open_loop`]. `None`
+    /// in closed-loop runs and throughout warmup; its presence is the
+    /// open-mode flag every loop path checks (cores quiesce, the wake
+    /// index gains the injector slot at `cores + channels`).
+    injector: Option<TrafficInjector>,
 }
 
 impl System {
@@ -207,7 +252,9 @@ impl System {
                     as Box<dyn TraceSource>
             })
             .collect();
-        Self::with_traces(cfg, kind, traces, workload)
+        let mut s = Self::with_traces(cfg, kind, traces, workload);
+        s.open_profiles = profiles.iter().map(|&p| *p).collect();
+        s
     }
 
     /// Build the paper's eight-core mix `mix_idx`.
@@ -263,6 +310,8 @@ impl System {
             wake,
             due_scratch: Vec::new(),
             core_scratch: Vec::new(),
+            open_profiles: Vec::new(),
+            injector: None,
         }
     }
 
@@ -317,14 +366,22 @@ impl System {
                 mc.tick(bus, &mut completions);
             }
             for c in completions.drain(..) {
+                if c.req_id & TRAFFIC_ID_BASE != 0 {
+                    continue; // open-loop traffic: latency recorded at the column
+                }
                 if let Some((core, line)) = self.hier.inflight.remove(c.req_id) {
                     self.cores[core as usize].complete_line(line);
                 }
             }
             self.completions = completions;
+            if let Some(inj) = self.injector.as_mut() {
+                inj.pump(bus, &mut self.hier);
+            }
         }
-        for core in &mut self.cores {
-            core.tick(now, &mut self.hier);
+        if self.injector.is_none() {
+            for core in &mut self.cores {
+                core.tick(now, &mut self.hier);
+            }
         }
     }
 
@@ -353,6 +410,8 @@ impl System {
     fn tick_indexed(&mut self, now: u64) {
         let cpb = self.cfg.cpu.cpu_per_bus;
         let n_cores = self.cores.len();
+        let n_ch = self.hier.mcs.len();
+        let open = self.injector.is_some();
         self.hier.bus_now = now / cpb;
         let mut due = std::mem::take(&mut self.due_scratch);
         let mut due_cores = std::mem::take(&mut self.core_scratch);
@@ -369,16 +428,24 @@ impl System {
             completions.clear();
             for &id in &due[split..] {
                 let ci = id as usize - n_cores;
+                if ci >= n_ch {
+                    // The injector's slot: its entry was consumed by the
+                    // drain; the unconditional pump below re-arms it.
+                    continue;
+                }
                 self.hier.mcs[ci].tick(bus, &mut completions);
                 self.hier.enqueued[ci] = false;
                 let b = self.hier.mcs[ci].next_event_at(bus + 1).max(bus + 1);
                 self.wake.set(n_cores + ci, b.saturating_mul(cpb));
             }
             for c in completions.drain(..) {
+                if c.req_id & TRAFFIC_ID_BASE != 0 {
+                    continue; // open-loop traffic: latency recorded at the column
+                }
                 if let Some((core, line)) = self.hier.inflight.remove(c.req_id) {
                     let woke = self.cores[core as usize].complete_line(line);
                     debug_assert!(woke, "completion filled no MSHR waiter");
-                    if woke {
+                    if woke && !open {
                         // A bound still in the future means this core was
                         // not part of the drained batch (nor woken by an
                         // earlier completion this cycle): join it exactly
@@ -391,6 +458,14 @@ impl System {
                 }
             }
             self.completions = completions;
+            // Pump at every visited boundary, matching the strict loop
+            // (a boundary with nothing due is a no-op; the wake bound
+            // guarantees every acting boundary is visited).
+            if let Some(inj) = self.injector.as_mut() {
+                inj.pump(bus, &mut self.hier);
+                let b = inj.next_event_bus(bus);
+                self.wake.set(n_cores + n_ch, b.saturating_mul(cpb));
+            }
         } else {
             // Non-boundary cycle: controllers cannot act here. Their
             // drained entries must be re-inserted at the next boundary
@@ -401,13 +476,17 @@ impl System {
             }
         }
         // Completion-woken cores joined at the tail: restore ascending
-        // core order (the strict loop's visit order).
-        due_cores.sort_unstable();
-        for &id in &due_cores {
-            let i = id as usize;
-            self.cores[i].tick(now, &mut self.hier);
-            let bound = self.cores[i].next_event_at(now + 1);
-            self.wake.set(i, bound);
+        // core order (the strict loop's visit order). Open-loop runs
+        // quiesce the cores: their drained entries are simply dropped
+        // (never re-inserted), parking them for the rest of the region.
+        if !open {
+            due_cores.sort_unstable();
+            for &id in &due_cores {
+                let i = id as usize;
+                self.cores[i].tick(now, &mut self.hier);
+                let bound = self.cores[i].next_event_at(now + 1);
+                self.wake.set(i, bound);
+            }
         }
         self.due_scratch = due;
         self.core_scratch = due_cores;
@@ -479,6 +558,9 @@ impl System {
         }
         self.hier.llc.reset_stats();
         let measure_start = self.cpu_cycle;
+        if self.cfg.traffic.mode != TrafficMode::Closed {
+            self.enable_open_loop(measure_start);
+        }
 
         // Fixed-time: run exactly `measure_cycles` (the stable basis for
         // multiprogrammed comparisons). Fixed-work: run until every core
@@ -513,6 +595,36 @@ impl System {
         let mut result = self.collect(measure_start);
         result.sampled = sampled;
         result
+    }
+
+    /// Switch the measured region to open-loop traffic: build the
+    /// injector over the per-core profiles, arm it at the measurement
+    /// boundary (warmup always runs closed-loop), and rebuild the wake
+    /// index with one extra slot for the injector — all-hot is a legal
+    /// (conservative) start per the wake contract. The cores are
+    /// quiesced from here on: the loop paths drop their wake entries and
+    /// never tick them, so the injector's arrival processes are the only
+    /// request source in the region.
+    fn enable_open_loop(&mut self, measure_start: u64) {
+        assert!(
+            self.cfg.measure_cycles.is_some(),
+            "open-loop traffic requires fixed-time mode (measure.cycles)"
+        );
+        assert_eq!(
+            self.cfg.sample.detail_cycles, 0,
+            "open-loop traffic is incompatible with interval sampling"
+        );
+        assert!(
+            !self.open_profiles.is_empty(),
+            "open-loop traffic requires synthetic profiles (not explicit traces)"
+        );
+        let mut inj = TrafficInjector::new(&self.cfg, &self.open_profiles);
+        inj.start(measure_start / self.cfg.cpu.cpu_per_bus);
+        self.injector = Some(inj);
+        self.wake = WakeIndex::with_impl(
+            self.cores.len() + self.hier.mcs.len() + 1,
+            self.cfg.wake_impl,
+        );
     }
 
     /// SimPoint-style interval sampling over a fixed-time region:
@@ -662,6 +774,14 @@ impl System {
                 None => c.stats.retired.min(self.cfg.insts_per_core),
             })
             .sum();
+
+        // Per-request latency: merge the per-channel histograms in
+        // canonical (ascending channel) order. `None` when no read
+        // issued a column command in the window.
+        let mut lat = LatencyHist::new();
+        for mc in &self.hier.mcs {
+            lat.merge(mc.latency_hist());
+        }
         SimResult {
             workload: self.workload.clone(),
             mechanism: self.kind.label(),
@@ -674,6 +794,7 @@ impl System {
             llc_hits: self.hier.llc.hits,
             llc_misses: self.hier.llc.misses,
             sampled: None,
+            latency: lat.summary(),
         }
     }
 
@@ -792,6 +913,10 @@ impl System {
         self.completions.clear();
         self.due_scratch.clear();
         self.core_scratch.clear();
+        // Snapshots are always captured at the (closed-loop) warmup
+        // boundary; a stale injector from a previous measured region
+        // must not leak into the restored run.
+        self.injector = None;
         // Fresh all-hot index (wheel or heap per config): every first
         // tick is at worst a no-op.
         self.wake =
@@ -815,6 +940,8 @@ impl System {
         let cpb = self.cfg.cpu.cpu_per_bus;
         let n_cores = self.cores.len();
         let n_ch = self.hier.mcs.len();
+        let open = self.injector.is_some();
+        let inj_slot = n_cores + n_ch;
         let chunk = (n_ch + shards - 1) / shards;
         let shards = (n_ch + chunk - 1) / chunk; // drop empty tail shards
         let rq_cap = self.cfg.mc.read_queue;
@@ -965,12 +1092,40 @@ impl System {
                     due.dedup();
                     for &id in &due {
                         let i = id as usize;
-                        debug_assert!(i < n_cores, "only cores live in the lent index");
+                        if i >= n_cores {
+                            // The injector's slot (controllers sit at
+                            // u64::MAX): drained at a non-boundary, it
+                            // must be re-armed or its wake is lost; the
+                            // boundary pump below recomputes it.
+                            debug_assert!(
+                                open && i == inj_slot,
+                                "only cores and the injector live in the lent index"
+                            );
+                            if now % cpb != 0 {
+                                self.wake.set(i, (now / cpb + 1).saturating_mul(cpb));
+                            }
+                            continue;
+                        }
+                        if open {
+                            continue; // cores quiesced under open-loop traffic
+                        }
                         self.cores[i].tick(now, &mut port);
                         let bound = self.cores[i].next_event_at(now + 1);
                         self.wake.set(i, bound);
                     }
                     self.due_scratch = due;
+                    // Pump at every visited boundary, after the epoch
+                    // barrier delivered this cycle's completions and
+                    // refreshed the queue mirrors — the same post-
+                    // completion position as the sequential loops.
+                    if now % cpb == 0 {
+                        if let Some(inj) = self.injector.as_mut() {
+                            let bus = now / cpb;
+                            inj.pump(bus, &mut port);
+                            let b = inj.next_event_bus(bus);
+                            self.wake.set(inj_slot, b.saturating_mul(cpb));
+                        }
+                    }
                 }
                 // Trailing enqueue clamp at shard granularity: a staged
                 // message forces its shard's epoch at the next boundary,
@@ -1043,10 +1198,13 @@ impl System {
         wq_lines: &mut [Vec<Loc>],
     ) {
         for c in &out.completions {
+            if c.req_id & TRAFFIC_ID_BASE != 0 {
+                continue; // open-loop traffic: latency recorded at the column
+            }
             if let Some((core, line)) = self.hier.inflight.remove(c.req_id) {
                 let woke = self.cores[core as usize].complete_line(line);
                 debug_assert!(woke, "completion filled no MSHR waiter");
-                if woke {
+                if woke && self.injector.is_none() {
                     self.wake.set(core as usize, now);
                 }
             }
@@ -1158,6 +1316,49 @@ impl MemPort for ShardedPort<'_> {
             self.send_write(victim);
         }
         Ok(())
+    }
+}
+
+/// The mirror of [`InjectPort for MemHierarchy`]: identical per-channel
+/// admission against the occupancy mirrors, identical forwarding
+/// decision against the write-queue location mirror (a forwarded read
+/// consumes no read-queue slot at delivery), and the accepted request is
+/// staged for the owning shard's next epoch — exactly when a live
+/// enqueue at this boundary would first be schedulable.
+impl InjectPort for ShardedPort<'_> {
+    fn try_inject(
+        &mut self,
+        line_addr: u64,
+        is_write: bool,
+        arrived_bus: u64,
+        id: u64,
+        _stream: u32,
+    ) -> bool {
+        let loc = self.mapper.map_line(line_addr);
+        let ch = loc.channel as usize;
+        if is_write {
+            if self.wq_len[ch] >= self.wq_cap {
+                return false;
+            }
+            self.wq_len[ch] += 1;
+            self.wq_lines[ch].push(loc);
+        } else {
+            if self.rq_len[ch] >= self.rq_cap {
+                return false;
+            }
+            let fwd = self.wq_lines[ch].iter().any(|w| {
+                w.rank == loc.rank && w.bank == loc.bank && w.row == loc.row && w.col == loc.col
+            });
+            if !fwd {
+                self.rq_len[ch] += 1;
+            }
+        }
+        self.staged[ch / self.chunk].push(EnqMsg {
+            ch: loc.channel,
+            bus: self.bus_now,
+            req: Request { id, core: u32::MAX, loc, is_write, arrived: arrived_bus },
+        });
+        true
     }
 }
 
@@ -1387,6 +1588,73 @@ mod tests {
             full.ipc()
         );
         assert!(s.ipc_ci95 >= 0.0 && s.latency_mean > 0.0);
+    }
+
+    /// Open-loop traffic: the bit-identity invariant extends to the
+    /// injected region (strict vs event here; the shard × wake-impl
+    /// matrix lives in tests/engine_equiv.rs), and the merged histogram
+    /// must surface ordered percentiles.
+    #[test]
+    fn open_loop_modes_are_bit_identical_and_record_latency() {
+        let mut cfg = quick_cfg(0);
+        cfg.warmup_cpu_cycles = 20_000;
+        cfg.measure_cycles = Some(100_000);
+        cfg.traffic.mode = TrafficMode::Poisson;
+        cfg.traffic.rate_rps = 20_000_000.0;
+        let p = Profile::by_name("mcf").unwrap();
+        cfg.loop_mode = LoopMode::StrictTick;
+        let a = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+        cfg.loop_mode = LoopMode::EventDriven;
+        let b = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+        assert_eq!(a, b, "open-loop strict vs event diverged");
+        let lat = a.latency.expect("open-loop run must record latency");
+        assert!(lat.samples > 100, "expected arrivals at 20M rps, got {}", lat.samples);
+        assert!(lat.p50 <= lat.p95 && lat.p95 <= lat.p99 && lat.p99 <= lat.max);
+        assert!(lat.mean > 0.0);
+        // Cores are quiesced: the injector is the only request source.
+        assert_eq!(a.total_insts, 0, "open-loop measure must not retire instructions");
+    }
+
+    /// The subsystem's reason to exist: past the service capacity the
+    /// arrival FIFO backs up and the intended-arrival latency stamps
+    /// make the tail explode, where a closed-loop run would simply
+    /// self-throttle.
+    #[test]
+    fn overload_explodes_the_latency_tail() {
+        let mut cfg = quick_cfg(0);
+        cfg.warmup_cpu_cycles = 20_000;
+        cfg.measure_cycles = Some(100_000);
+        cfg.traffic.mode = TrafficMode::Det;
+        let p = Profile::by_name("mcf").unwrap();
+        cfg.traffic.rate_rps = 5_000_000.0;
+        let light = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        cfg.traffic.rate_rps = 400_000_000.0;
+        let heavy = System::new(&cfg, MechanismKind::Baseline, &[p]).run();
+        let l = light.latency.expect("light run records latency");
+        let h = heavy.latency.expect("heavy run records latency");
+        assert!(
+            h.p99 > l.p99.saturating_mul(4),
+            "overload p99 {} vs light p99 {}",
+            h.p99,
+            l.p99
+        );
+        assert!(h.samples > l.samples, "heavier load must admit more requests");
+    }
+
+    /// Satellite guarantee, in-crate smoke form (the pinned cross-mode
+    /// row lives in tests/engine_equiv.rs): with `traffic.mode = closed`
+    /// the other traffic knobs are inert — same results bit for bit.
+    #[test]
+    fn traffic_knobs_do_not_perturb_closed_loop_runs() {
+        let cfg = quick_cfg(30_000);
+        let p = Profile::by_name("gcc").unwrap();
+        let a = System::new(&cfg, MechanismKind::ChargeCache, &[p]).run();
+        let mut loud = cfg.clone();
+        loud.traffic.rate_rps = 123_456_789.0;
+        loud.traffic.seed = 99;
+        loud.traffic.mmpp_ratio = 16.0;
+        let b = System::new(&loud, MechanismKind::ChargeCache, &[p]).run();
+        assert_eq!(a, b, "closed-loop run perturbed by inert traffic knobs");
     }
 
     #[test]

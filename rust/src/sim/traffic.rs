@@ -1,0 +1,536 @@
+//! Open-loop traffic injection (DESIGN.md §14).
+//!
+//! Closed-loop replay (the paper's methodology) couples the arrival rate
+//! to the memory system's own service rate: a saturated controller stalls
+//! the cores, which stops issuing requests. That can never observe the
+//! question the ROADMAP's north star asks — *at what offered load does
+//! the tail latency explode?* — because the offered load is not a free
+//! variable. This module makes it one: a [`TrafficInjector`] draws
+//! request arrival times from a pluggable stochastic process at a
+//! configured rate ([`TrafficConfig::rate_rps`]), takes addresses from
+//! the same synthetic profiles the cores replay
+//! ([`crate::trace::synth::SynthTrace`]), and enqueues directly at the
+//! memory controllers through an [`InjectPort`]. Requests that cannot be
+//! admitted wait in an unbounded arrival FIFO — so under overload the
+//! queueing delay (and hence the latency tail) grows without bound,
+//! which is exactly the knee the latency-vs-load scenarios detect.
+//!
+//! ## Determinism
+//!
+//! All randomness comes from per-stream [`SplitMix64`] generators seeded
+//! from `traffic.seed` — a domain disjoint from the XorShift64 streams
+//! driving the synthetic traces, so enabling the subsystem cannot
+//! perturb a closed-loop run. Arrival times are absolute `f64` bus
+//! cycles computed by an identical operation sequence in every loop
+//! mode; the injector acts only at visited bus-cycle boundaries, drains
+//! streams in ascending stream order, and admits backlog strictly
+//! head-first. Because its wake bound covers every boundary at which it
+//! would act (next arrival, or the very next boundary while backlog is
+//! pending), the strict-tick, event-driven, and channel-sharded loops
+//! all observe the same injection sequence — bit-identical percentiles
+//! at any `--sim-threads` count on either wake implementation.
+
+use std::collections::VecDeque;
+
+use crate::config::{SystemConfig, TrafficConfig, TrafficMode};
+use crate::trace::synth::SynthTrace;
+use crate::trace::TraceSource;
+
+/// Request-id namespace for injected traffic. Disjoint from core ids
+/// (generation<<32|slot, generation capped at 2^31) and writeback ids
+/// (`1 << 63`): completions carrying this bit bypass the in-flight slab
+/// entirely (fire-and-forget — latency is recorded controller-side).
+pub const TRAFFIC_ID_BASE: u64 = 1 << 62;
+
+/// Domain-separation salt for traffic RNG seeding ("TRAF" twice) — keeps
+/// the streams independent of every other seeded domain in the system.
+const TRAFFIC_SEED_SALT: u64 = 0x5452_4146_5452_4146;
+
+/// SplitMix64 (Steele et al.): the arrival-process RNG. Tiny state, full
+/// 64-bit period, and trivially seedable into independent streams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)` with 53 mantissa bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponential draw with the given mean (inverse-CDF; `u = 0` maps
+    /// to 0, never infinity, because `ln(1 - u)` sees `1.0`).
+    #[inline]
+    fn exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.next_f64()).ln()
+    }
+}
+
+/// One arrival due for injection but not yet admitted by its channel.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    line_addr: u64,
+    is_write: bool,
+    /// Intended arrival bus cycle — becomes `Request::arrived`, so the
+    /// measured latency includes time spent waiting in this FIFO.
+    arrived_bus: u64,
+    stream: u32,
+}
+
+/// Where the injector hands admitted requests to: implemented by the
+/// live memory hierarchy and by the sharded coordinator's mirror port,
+/// with identical admission predicates on both sides.
+pub trait InjectPort {
+    /// Admit one traffic request, or refuse (`false`) when the owning
+    /// channel cannot accept it at this boundary; the injector holds it
+    /// and retries at the next boundary (head-of-line order).
+    fn try_inject(
+        &mut self,
+        line_addr: u64,
+        is_write: bool,
+        arrived_bus: u64,
+        id: u64,
+        stream: u32,
+    ) -> bool;
+}
+
+/// One per-core arrival stream: a seeded arrival process over that
+/// core's synthetic address profile (same region as the core, so the
+/// injected traffic exercises the state warmup built).
+struct ArrivalStream {
+    trace: SynthTrace,
+    rng: SplitMix64,
+    mode: TrafficMode,
+    /// Absolute bus cycle of the next arrival (fractional).
+    t: f64,
+    /// Mean interarrival while the stream is emitting, bus cycles:
+    /// det/poisson use it directly; burst uses it for the ON state;
+    /// MMPP's two rates are `ia_lo`/`ia_hi`.
+    ia_on: f64,
+    ia_lo: f64,
+    ia_hi: f64,
+    /// Mean modulating-state window lengths, bus cycles.
+    on_len: f64,
+    off_len: f64,
+    sojourn: f64,
+    /// Modulating state (burst: ON; MMPP: high-rate) and its end time.
+    state_hi: bool,
+    state_end: f64,
+}
+
+impl ArrivalStream {
+    /// Advance `t` to the next arrival. Window truncation + redraw is
+    /// exact for exponential interarrivals (memorylessness), so the
+    /// burst/MMPP processes have their nominal rates.
+    fn advance(&mut self) {
+        match self.mode {
+            TrafficMode::Closed => unreachable!("closed mode never builds streams"),
+            TrafficMode::Det => self.t += self.ia_on,
+            TrafficMode::Poisson => {
+                let d = self.rng.exp(self.ia_on);
+                self.t += d;
+            }
+            TrafficMode::Burst => loop {
+                if self.state_hi {
+                    let cand = self.t + self.rng.exp(self.ia_on);
+                    if cand <= self.state_end {
+                        self.t = cand;
+                        return;
+                    }
+                    self.t = self.state_end;
+                    self.state_hi = false;
+                    self.state_end = self.t + self.rng.exp(self.off_len);
+                } else {
+                    self.t = self.state_end;
+                    self.state_hi = true;
+                    self.state_end = self.t + self.rng.exp(self.on_len);
+                }
+            },
+            TrafficMode::Mmpp => loop {
+                let ia = if self.state_hi { self.ia_hi } else { self.ia_lo };
+                let cand = self.t + self.rng.exp(ia);
+                if cand <= self.state_end {
+                    self.t = cand;
+                    return;
+                }
+                self.t = self.state_end;
+                self.state_hi = !self.state_hi;
+                self.state_end = self.t + self.rng.exp(self.sojourn);
+            },
+        }
+    }
+}
+
+/// The open-loop request injector: one arrival stream per core, a global
+/// head-first admission FIFO, and monotonically increasing traffic ids.
+pub struct TrafficInjector {
+    streams: Vec<ArrivalStream>,
+    backlog: VecDeque<Pending>,
+    next_seq: u64,
+    started: bool,
+    /// Arrivals generated / requests admitted (telemetry).
+    pub generated: u64,
+    pub injected: u64,
+}
+
+impl TrafficInjector {
+    /// Build the per-core streams for `cfg.traffic` over the same
+    /// per-core profiles (and address regions) the closed-loop cores
+    /// replay. Panics on a degenerate process configuration — zero or
+    /// negative rate, or zero-length modulating windows — which would
+    /// otherwise spin forever drawing empty windows.
+    pub fn new(cfg: &SystemConfig, profiles: &[crate::trace::profile::Profile]) -> Self {
+        let t = &cfg.traffic;
+        assert!(t.mode != TrafficMode::Closed, "no injector in closed-loop mode");
+        assert!(t.rate_rps > 0.0, "traffic.rate_rps must be positive");
+        if t.mode == TrafficMode::Burst {
+            assert!(
+                t.burst_on_us > 0.0 && t.burst_off_us > 0.0,
+                "traffic.burst_on_us/burst_off_us must be positive"
+            );
+        }
+        if t.mode == TrafficMode::Mmpp {
+            assert!(t.mmpp_ratio > 0.0, "traffic.mmpp_ratio must be positive");
+            assert!(t.mmpp_sojourn_us > 0.0, "traffic.mmpp_sojourn_us must be positive");
+        }
+        let bus_per_sec = 1e9 / cfg.timing.tck_ns;
+        let n = profiles.len().max(1) as f64;
+        let stream_rate = t.rate_rps / n; // requests/sec per stream
+        let ia_mean = bus_per_sec / stream_rate; // bus cycles
+        // Burst: Poisson at rate/duty inside exponential ON windows, so
+        // the long-run average still hits the configured rate.
+        let duty = t.burst_on_us / (t.burst_on_us + t.burst_off_us);
+        // MMPP-2 with equal mean sojourns: (r_lo + r_hi)/2 = stream rate.
+        let r_lo = 2.0 * stream_rate / (1.0 + t.mmpp_ratio);
+        let r_hi = t.mmpp_ratio * r_lo;
+        let streams = profiles
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ArrivalStream {
+                trace: SynthTrace::new(
+                    p,
+                    t.seed ^ TRAFFIC_SEED_SALT ^ ((i as u64) << 8),
+                    i as u64,
+                ),
+                rng: SplitMix64::new(
+                    t.seed
+                        ^ TRAFFIC_SEED_SALT
+                        ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                ),
+                mode: t.mode,
+                t: 0.0,
+                ia_on: if t.mode == TrafficMode::Burst { ia_mean * duty } else { ia_mean },
+                ia_lo: bus_per_sec / r_lo,
+                ia_hi: bus_per_sec / r_hi,
+                on_len: t.burst_on_us * 1e-6 * bus_per_sec,
+                off_len: t.burst_off_us * 1e-6 * bus_per_sec,
+                sojourn: t.mmpp_sojourn_us * 1e-6 * bus_per_sec,
+                state_hi: t.mode == TrafficMode::Burst, // MMPP starts low
+                state_end: 0.0,
+            })
+            .collect();
+        Self {
+            streams,
+            backlog: VecDeque::new(),
+            next_seq: 0,
+            started: false,
+            generated: 0,
+            injected: 0,
+        }
+    }
+
+    /// Arm the streams at the measurement boundary: warmup always runs
+    /// closed-loop, so injection begins here and nowhere else. Each
+    /// stream's clock starts at `start_bus` and its first arrival is
+    /// drawn immediately.
+    pub fn start(&mut self, start_bus: u64) {
+        assert!(!self.started, "injector started twice");
+        self.started = true;
+        for s in &mut self.streams {
+            s.t = start_bus as f64;
+            s.state_end = match s.mode {
+                TrafficMode::Burst => s.t + s.rng.exp(s.on_len),
+                TrafficMode::Mmpp => s.t + s.rng.exp(s.sojourn),
+                _ => f64::INFINITY,
+            };
+            s.advance();
+        }
+    }
+
+    pub fn started(&self) -> bool {
+        self.started
+    }
+
+    /// Requests waiting for admission.
+    pub fn backlog_len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    /// Run the injector at a visited bus-cycle boundary: collect every
+    /// arrival due by `bus` (ascending stream order — the canonical tie
+    /// break within a boundary), then admit backlog head-first until a
+    /// channel refuses. Identical in every loop mode because each mode
+    /// visits every boundary this method would act at.
+    pub fn pump<P: InjectPort>(&mut self, bus: u64, port: &mut P) {
+        debug_assert!(self.started, "pump before start");
+        let now = bus as f64;
+        for (i, s) in self.streams.iter_mut().enumerate() {
+            while s.t <= now {
+                let arrived_bus = s.t as u64;
+                let e = s.trace.next_entry();
+                self.backlog.push_back(Pending {
+                    line_addr: e.line_addr,
+                    is_write: e.is_write,
+                    arrived_bus,
+                    stream: i as u32,
+                });
+                self.generated += 1;
+                s.advance();
+            }
+        }
+        while let Some(p) = self.backlog.front().copied() {
+            let id = TRAFFIC_ID_BASE | self.next_seq;
+            if !port.try_inject(p.line_addr, p.is_write, p.arrived_bus, id, p.stream) {
+                break;
+            }
+            self.next_seq += 1;
+            self.injected += 1;
+            self.backlog.pop_front();
+        }
+    }
+
+    /// Next bus cycle at which [`TrafficInjector::pump`] must run: the
+    /// very next boundary while backlog is pending admission, else the
+    /// first boundary at or after the earliest stream arrival.
+    pub fn next_event_bus(&self, bus: u64) -> u64 {
+        if !self.backlog.is_empty() {
+            return bus + 1;
+        }
+        let mut next = f64::INFINITY;
+        for s in &self.streams {
+            next = next.min(s.t);
+        }
+        if next.is_finite() {
+            (next.ceil() as u64).max(bus + 1)
+        } else {
+            u64::MAX
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::profile::Profile;
+
+    fn open_cfg(mode: TrafficMode, rate: f64) -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.traffic.mode = mode;
+        cfg.traffic.rate_rps = rate;
+        cfg
+    }
+
+    fn profiles(cfg: &SystemConfig, name: &str) -> Vec<Profile> {
+        let p = *Profile::by_name(name).unwrap();
+        vec![p; cfg.cpu.cores]
+    }
+
+    /// Port that admits everything and logs the injection order.
+    #[derive(Default)]
+    struct OpenPort {
+        seen: Vec<(u64, u64, bool, u32)>, // (id, arrived, is_write, stream)
+    }
+
+    impl InjectPort for OpenPort {
+        fn try_inject(
+            &mut self,
+            _line: u64,
+            is_write: bool,
+            arrived_bus: u64,
+            id: u64,
+            stream: u32,
+        ) -> bool {
+            self.seen.push((id, arrived_bus, is_write, stream));
+            true
+        }
+    }
+
+    /// Port that refuses everything — arrivals accumulate in the FIFO.
+    struct ClosedPort;
+
+    impl InjectPort for ClosedPort {
+        fn try_inject(&mut self, _: u64, _: bool, _: u64, _: u64, _: u32) -> bool {
+            false
+        }
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        for mode in [TrafficMode::Det, TrafficMode::Poisson, TrafficMode::Burst, TrafficMode::Mmpp]
+        {
+            let cfg = open_cfg(mode, 50_000_000.0);
+            let ps = profiles(&cfg, "mcf");
+            let mut a = TrafficInjector::new(&cfg, &ps);
+            let mut b = TrafficInjector::new(&cfg, &ps);
+            a.start(1000);
+            b.start(1000);
+            let (mut pa, mut pb) = (OpenPort::default(), OpenPort::default());
+            for bus in 1000..6000 {
+                a.pump(bus, &mut pa);
+                b.pump(bus, &mut pb);
+            }
+            assert_eq!(pa.seen, pb.seen, "{mode:?}");
+            assert!(!pa.seen.is_empty(), "{mode:?}: no arrivals at 50M rps");
+        }
+    }
+
+    #[test]
+    fn sparse_boundary_visits_see_the_same_sequence() {
+        // Event-mode discipline: only visit the boundaries the injector
+        // asks for. The injection sequence must match strict per-cycle
+        // pumping exactly.
+        let cfg = open_cfg(TrafficMode::Poisson, 20_000_000.0);
+        let ps = profiles(&cfg, "mcf");
+        let mut strict = TrafficInjector::new(&cfg, &ps);
+        let mut event = TrafficInjector::new(&cfg, &ps);
+        strict.start(0);
+        event.start(0);
+        let (mut pa, mut pb) = (OpenPort::default(), OpenPort::default());
+        for bus in 0..20_000u64 {
+            strict.pump(bus, &mut pa);
+        }
+        let mut bus = 0u64;
+        while bus < 20_000 {
+            event.pump(bus, &mut pb);
+            let next = event.next_event_bus(bus);
+            assert!(next > bus, "wake bound must advance");
+            bus = next;
+        }
+        assert_eq!(pa.seen, pb.seen);
+    }
+
+    #[test]
+    fn arrival_rate_approximates_the_configured_rate() {
+        // 80M rps at 800M bus cycles/s = 0.1 arrivals/cycle; over 100k
+        // cycles expect ~10k arrivals (±15% for the stochastic modes).
+        for mode in [TrafficMode::Det, TrafficMode::Poisson, TrafficMode::Burst, TrafficMode::Mmpp]
+        {
+            let cfg = open_cfg(mode, 80_000_000.0);
+            let ps = profiles(&cfg, "mcf");
+            let mut inj = TrafficInjector::new(&cfg, &ps);
+            inj.start(0);
+            let mut port = OpenPort::default();
+            for bus in 0..100_000u64 {
+                inj.pump(bus, &mut port);
+            }
+            let n = port.seen.len() as f64;
+            assert!(
+                (n - 10_000.0).abs() < 1_500.0,
+                "{mode:?}: {n} arrivals, expected ~10000"
+            );
+        }
+    }
+
+    #[test]
+    fn backlog_holds_refused_requests_in_arrival_order() {
+        let cfg = open_cfg(TrafficMode::Det, 80_000_000.0);
+        let ps = profiles(&cfg, "mcf");
+        let mut inj = TrafficInjector::new(&cfg, &ps);
+        inj.start(0);
+        for bus in 0..1000u64 {
+            inj.pump(bus, &mut ClosedPort);
+        }
+        let held = inj.backlog_len();
+        assert!(held > 50, "det @ 0.1/cycle over 1000 cycles: {held}");
+        assert_eq!(inj.injected, 0);
+        assert_eq!(inj.generated as usize, held);
+        // Admission drains strictly head-first with intended (not
+        // admission) arrival stamps, monotone within the stream.
+        let mut port = OpenPort::default();
+        inj.pump(1000, &mut port);
+        assert_eq!(inj.backlog_len(), 0);
+        let arrivals: Vec<u64> = port.seen.iter().map(|s| s.1).collect();
+        let mut sorted = arrivals.clone();
+        sorted.sort_unstable();
+        assert_eq!(arrivals, sorted, "single-stream backlog preserves arrival order");
+        assert!(*arrivals.last().unwrap() < 1000, "stamps are intended arrivals");
+        // Ids are dense and namespaced.
+        for (i, s) in port.seen.iter().enumerate() {
+            assert_eq!(s.0, TRAFFIC_ID_BASE | i as u64);
+        }
+    }
+
+    #[test]
+    fn streams_split_the_rate_across_cores() {
+        let mut cfg = open_cfg(TrafficMode::Det, 80_000_000.0);
+        cfg.cpu.cores = 4;
+        let ps = profiles(&cfg, "mcf");
+        let mut inj = TrafficInjector::new(&cfg, &ps);
+        inj.start(0);
+        let mut port = OpenPort::default();
+        for bus in 0..100_000u64 {
+            inj.pump(bus, &mut port);
+        }
+        // Aggregate still ~10k; each stream carries ~2.5k.
+        let n = port.seen.len() as f64;
+        assert!((n - 10_000.0).abs() < 500.0, "total {n}");
+        for s in 0..4u32 {
+            let per = port.seen.iter().filter(|e| e.3 == s).count() as f64;
+            assert!((per - 2_500.0).abs() < 200.0, "stream {s}: {per}");
+        }
+    }
+
+    #[test]
+    fn seed_moves_the_stochastic_arrivals() {
+        let cfg_a = open_cfg(TrafficMode::Poisson, 40_000_000.0);
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.traffic.seed ^= 1;
+        let ps = profiles(&cfg_a, "mcf");
+        let mut a = TrafficInjector::new(&cfg_a, &ps);
+        let mut b = TrafficInjector::new(&cfg_b, &ps);
+        a.start(0);
+        b.start(0);
+        let (mut pa, mut pb) = (OpenPort::default(), OpenPort::default());
+        for bus in 0..10_000u64 {
+            a.pump(bus, &mut pa);
+            b.pump(bus, &mut pb);
+        }
+        assert_ne!(pa.seen, pb.seen);
+    }
+
+    #[test]
+    fn next_event_bus_covers_every_acting_boundary() {
+        let cfg = open_cfg(TrafficMode::Mmpp, 10_000_000.0);
+        let ps = profiles(&cfg, "omnetpp");
+        let mut inj = TrafficInjector::new(&cfg, &ps);
+        inj.start(0);
+        // With an empty backlog the bound is the next arrival's ceiling.
+        let bound = inj.next_event_bus(0);
+        assert!(bound >= 1);
+        let mut port = OpenPort::default();
+        inj.pump(bound, &mut port);
+        assert!(!port.seen.is_empty(), "bound must land on the arrival");
+        // With backlog pending, the bound is the very next boundary.
+        for bus in bound + 1..bound + 500 {
+            inj.pump(bus, &mut ClosedPort);
+        }
+        if inj.backlog_len() > 0 {
+            assert_eq!(inj.next_event_bus(bound + 500), bound + 501);
+        }
+    }
+}

@@ -12,7 +12,7 @@
 //! asymmetric reduction configs, which is why `diskjson::VERSION` was
 //! bumped with the change.
 
-use chargecache::config::{RowPolicy, SystemConfig};
+use chargecache::config::{RowPolicy, SystemConfig, TrafficMode};
 use chargecache::controller::SchedulerKind;
 use chargecache::coordinator::runner::parallel_map_threads;
 use chargecache::latency::MechanismKind;
@@ -244,6 +244,69 @@ fn sharding_ignores_strict_tick_and_uneven_channel_splits() {
     let strict8 = run(LoopMode::StrictTick, 8, 1);
     let uneven = run(LoopMode::EventDriven, 8, 3);
     assert_identical(&strict8, &uneven, "3-shards-over-8-channels");
+}
+
+#[test]
+fn closed_loop_rows_ignore_every_traffic_knob() {
+    // `traffic.mode = closed` (the default) must leave the closed-loop
+    // pipeline bit-identical no matter what the other traffic.* knobs
+    // say: the injector only exists in open mode, and its RNG draws from
+    // its own SplitMix64 domain, so the synth trace streams never see a
+    // perturbed sequence. This is the upgrade-safety row — configs that
+    // predate the traffic subsystem must reproduce exactly.
+    let run = |touch: bool, mode: LoopMode| -> SimResult {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 4;
+        cfg.insts_per_core = 8_000;
+        cfg.warmup_cpu_cycles = 4_000;
+        cfg.loop_mode = mode;
+        if touch {
+            cfg.traffic.rate_rps = 123_456_789.0;
+            cfg.traffic.seed = 999;
+            cfg.traffic.burst_on_us = 2.5;
+            cfg.traffic.mmpp_ratio = 9.0;
+        }
+        System::new_mix(&cfg, MechanismKind::ChargeCache, 1).run()
+    };
+    for mode in [LoopMode::StrictTick, LoopMode::EventDriven] {
+        let pristine = run(false, mode);
+        let touched = run(true, mode);
+        assert_identical(&pristine, &touched, &format!("{mode:?}/traffic-knobs"));
+    }
+}
+
+#[test]
+fn open_loop_percentiles_are_bit_identical_across_modes_wakes_and_shards() {
+    // The open-loop injector joins the determinism matrix: Poisson
+    // arrivals over 8 channels must produce the same latency histogram —
+    // hence the same percentiles — under the strict per-cycle oracle,
+    // the event loop with either wake index, and 1/2/4/8 channel shards.
+    let run = |imp: WakeImpl, mode: LoopMode, shards: usize| -> SimResult {
+        let mut cfg = SystemConfig::eight_core();
+        cfg.cpu.cores = 8;
+        cfg.dram.channels = 8;
+        cfg.insts_per_core = 800;
+        cfg.warmup_cpu_cycles = 2_000;
+        cfg.measure_cycles = Some(60_000);
+        cfg.loop_mode = mode;
+        cfg.sim_threads = shards;
+        cfg.wake_impl = imp;
+        cfg.traffic.mode = TrafficMode::Poisson;
+        cfg.traffic.rate_rps = 60_000_000.0;
+        System::new_mix(&cfg, MechanismKind::ChargeCache, 0).run()
+    };
+    let strict = run(WakeImpl::Heap, LoopMode::StrictTick, 1);
+    let lat = strict.latency.expect("open-loop run records read latencies");
+    assert!(lat.samples > 0, "no reads completed in the open-loop window");
+    assert_eq!(strict.total_insts, 0, "open-loop measure must quiesce the cores");
+    let heap = run(WakeImpl::Heap, LoopMode::EventDriven, 1);
+    let wheel = run(WakeImpl::Wheel, LoopMode::EventDriven, 1);
+    assert_identical(&strict, &heap, "open-loop/heap-vs-strict");
+    assert_identical(&heap, &wheel, "open-loop/wheel-vs-heap");
+    for shards in [2usize, 4, 8] {
+        let tn = run(WakeImpl::Wheel, LoopMode::EventDriven, shards);
+        assert_identical(&wheel, &tn, &format!("open-loop/{shards}-shard"));
+    }
 }
 
 #[test]
